@@ -1,0 +1,123 @@
+//! END-TO-END validation driver (DESIGN.md §5, EXPERIMENTS.md): proves the
+//! full three-layer stack composes —
+//!
+//!   L1 Pallas scoring kernel  →  L2 JAX pipeline  →  `make artifacts`
+//!   (HLO text)  →  Rust PJRT runtime  →  RSCH hot path  →  QSCH →
+//!   discrete-event cluster simulation  →  the paper's metric table.
+//!
+//! The XLA scorer serves *every* node/group scoring call on the scheduling
+//! hot path; the same run is repeated with the native Rust scorer and the
+//! two must agree decision-for-decision (bitwise-equal metrics), which is
+//! the strongest composition check available.
+//!
+//! Run with: `cargo run --release --example e2e_cluster_sim`
+//! (requires `make artifacts` first)
+
+use kant::config::{training_cluster, Scale};
+use kant::experiments::jwtd_buckets;
+use kant::job::workload::WorkloadGen;
+use kant::metrics::report::{bucket_comparison, fmt_ms, pct, table};
+use kant::qsch::Qsch;
+use kant::rsch::{Rsch, RschConfig};
+use kant::runtime::XlaBackend;
+use kant::sim::{run, SimConfig};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let seed = 7;
+    // A real workload slice on the small-scale training cluster: 1,024
+    // GPUs, ~12 simulated hours at 95% offered load.
+    let mut env = training_cluster(Scale::Small, seed, 0.95);
+    env.horizon_ms = 12 * 3_600_000;
+    let jobs = WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms);
+    let sim_cfg = SimConfig {
+        horizon_ms: env.horizon_ms + 12 * 3_600_000,
+        ..SimConfig::default()
+    };
+    println!(
+        "e2e: {} nodes / {} GPUs, {} jobs over {}",
+        env.state.nodes.len(),
+        env.state.total_gpus(),
+        jobs.len(),
+        fmt_ms(env.horizon_ms as f64)
+    );
+
+    // ---- Arm 1: XLA scorer on the hot path ----
+    let mut backend = XlaBackend::new("artifacts")
+        .map_err(|e| anyhow::anyhow!("{e:#}\nrun `make artifacts` first"))?;
+    backend.warmup()?;
+    let mut state = env.state.clone();
+    let mut qsch = Qsch::new(kant::qsch::policy::QschConfig::default(), env.ledger.clone());
+    let mut rsch = Rsch::with_backend(RschConfig::default(), &state, Box::new(backend));
+    let t0 = Instant::now();
+    let xla_out = run(&mut state, &mut qsch, &mut rsch, jobs.clone(), &sim_cfg);
+    let xla_wall = t0.elapsed();
+    println!(
+        "xla arm: {} in {:.1}s wall ({} nodes scored, backend={})",
+        "done",
+        xla_wall.as_secs_f64(),
+        xla_out.rsch_stats.nodes_scored,
+        rsch.backend_name(),
+    );
+
+    // ---- Arm 2: native scorer, identical inputs ----
+    let mut state2 = env.state.clone();
+    let mut qsch2 = Qsch::new(kant::qsch::policy::QschConfig::default(), env.ledger.clone());
+    let mut rsch2 = Rsch::new(RschConfig::default(), &state2);
+    let t0 = Instant::now();
+    let native_out = run(&mut state2, &mut qsch2, &mut rsch2, jobs, &sim_cfg);
+    let native_wall = t0.elapsed();
+    println!(
+        "native arm: done in {:.1}s wall ({} nodes scored)",
+        native_wall.as_secs_f64(),
+        native_out.rsch_stats.nodes_scored
+    );
+
+    // ---- The paper's headline metric table ----
+    let rows = vec![
+        vec![
+            "xla-scorer".to_string(),
+            pct(xla_out.metrics.gar_median(200)),
+            pct(xla_out.metrics.sor_final()),
+            pct(xla_out.metrics.gfr_avg()),
+            xla_out.metrics.jobs_finished.to_string(),
+            format!("{:.1}s", xla_wall.as_secs_f64()),
+        ],
+        vec![
+            "native-scorer".to_string(),
+            pct(native_out.metrics.gar_median(200)),
+            pct(native_out.metrics.sor_final()),
+            pct(native_out.metrics.gfr_avg()),
+            native_out.metrics.jobs_finished.to_string(),
+            format!("{:.1}s", native_wall.as_secs_f64()),
+        ],
+    ];
+    println!(
+        "{}",
+        table(
+            "E2E — full-stack run, XLA vs native scorer (must agree)",
+            &["scorer", "GAR", "SOR", "GFR", "finished", "wall"],
+            &rows
+        )
+    );
+    let arms = vec![
+        (
+            "xla",
+            jwtd_buckets(&xla_out.store, xla_out.end_ms).summaries(),
+        ),
+        (
+            "native",
+            jwtd_buckets(&native_out.store, native_out.end_ms).summaries(),
+        ),
+    ];
+    println!("{}", bucket_comparison("JWTD by size", &arms, fmt_ms));
+
+    // Decision-level agreement: same schedule ⇒ identical metrics.
+    let agree = (xla_out.metrics.sor_final() - native_out.metrics.sor_final()).abs() < 1e-9
+        && xla_out.metrics.jobs_finished == native_out.metrics.jobs_finished
+        && xla_out.end_ms == native_out.end_ms;
+    println!("scorer-parity (decision-identical runs): {agree}");
+    anyhow::ensure!(agree, "XLA and native scorers diverged");
+    println!("E2E OK");
+    Ok(())
+}

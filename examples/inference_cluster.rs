@@ -1,0 +1,14 @@
+//! §5.2 multi-tenant inference clusters: quota management on the
+//! heterogeneous i2 cluster (Figures 10-12), its GAR/SOR/GFR time series
+//! (Figures 13-14), and the GFR-vs-scale comparison (Figure 15).
+//!
+//! Run with: `cargo run --release --example inference_cluster`
+
+use kant::experiments::{fig10_11_12, fig13_14, fig15};
+
+fn main() {
+    let seed = 42;
+    println!("{}", fig10_11_12(seed));
+    println!("{}", fig13_14(seed));
+    println!("{}", fig15(seed));
+}

@@ -1,0 +1,73 @@
+//! Quickstart: build a small cluster, submit a handful of jobs through the
+//! public API (QSCH → RSCH), and read the paper's metrics.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
+use kant::cluster::ids::{GpuTypeId, JobId, TenantId};
+use kant::cluster::tenant::{QuotaLedger, QuotaMode};
+use kant::job::spec::{JobKind, JobSpec, Priority};
+use kant::metrics::report::{fmt_ms, headline, pct};
+use kant::qsch::policy::QschConfig;
+use kant::qsch::Qsch;
+use kant::rsch::{Rsch, RschConfig};
+use kant::sim::{run, SimConfig};
+
+fn main() {
+    // A 2-spine × 2-group × 8-node cluster of 8-GPU boards = 256 GPUs.
+    let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("quickstart", 2, 2, 8));
+    println!(
+        "cluster: {} nodes / {} GPUs / {} NodeNetGroups",
+        state.nodes.len(),
+        state.total_gpus(),
+        state.fabric.num_groups()
+    );
+
+    // Two tenants with shared quotas.
+    let mut ledger = QuotaLedger::new(2, 1, QuotaMode::Shared);
+    ledger.set_limit(TenantId(0), GpuTypeId(0), 160);
+    ledger.set_limit(TenantId(1), GpuTypeId(0), 96);
+
+    // Kant defaults: Backfill queueing + E-Binpack placement + two-level
+    // NodeNetGroup scheduling + incremental snapshots.
+    let mut qsch = Qsch::new(QschConfig::default(), ledger);
+    let mut rsch = Rsch::new(RschConfig::default(), &state);
+
+    // A mixed workload: one big distributed training gang, a few small
+    // training jobs, and an HA inference deployment.
+    let mut jobs = vec![
+        JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Training, GpuTypeId(0), 8, 8)
+            .with_times(0, 30 * 60_000)
+            .with_priority(Priority::HIGH),
+        JobSpec::homogeneous(JobId(2), TenantId(0), JobKind::Training, GpuTypeId(0), 1, 4)
+            .with_times(10_000, 20 * 60_000),
+        JobSpec::homogeneous(JobId(3), TenantId(1), JobKind::Training, GpuTypeId(0), 1, 2)
+            .with_times(15_000, 10 * 60_000),
+        JobSpec::homogeneous(JobId(4), TenantId(1), JobKind::Inference, GpuTypeId(0), 6, 1)
+            .with_times(20_000, 60 * 60_000),
+        JobSpec::homogeneous(JobId(5), TenantId(0), JobKind::Training, GpuTypeId(0), 16, 8)
+            .with_times(30_000, 45 * 60_000),
+    ];
+    jobs.sort_by_key(|j| j.submit_ms);
+
+    let out = run(&mut state, &mut qsch, &mut rsch, jobs, &SimConfig::default());
+
+    println!("{}", headline("quickstart", &out.metrics));
+    for id in 1..=5u64 {
+        let j = out.store.expect(JobId(id));
+        println!(
+            "job {id}: {:?} wait={} preemptions={} nodes={:?}",
+            j.phase,
+            fmt_ms(j.waiting_ms(out.end_ms) as f64),
+            j.preemptions,
+            state.nodes_of(JobId(id)).len()
+        );
+    }
+    println!(
+        "final: GAR {} SOR {} GFR {} (all jobs drained: {})",
+        pct(out.metrics.gar_avg()),
+        pct(out.metrics.sor_final()),
+        pct(out.metrics.gfr_avg()),
+        out.unfinished_jobs == 0
+    );
+}

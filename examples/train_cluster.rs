@@ -1,0 +1,44 @@
+//! §5.1 large-scale training cluster experiment: Kant (Backfill +
+//! E-Binpack + two-level + incremental snapshots) vs the native baseline
+//! (Strict FIFO + spread-like placement), on the Figure-2 workload.
+//!
+//! Run with:
+//!   cargo run --release --example train_cluster            (small scale)
+//!   cargo run --release --example train_cluster -- paper   (8,192 GPUs)
+
+use kant::config::{training_cluster, Scale};
+use kant::experiments::{fig3, fig4, fig5, fig6, fig7, fig8, fig9, run_arm, Arm};
+use kant::experiments::{EBinpackComparison, PolicyComparison};
+use kant::sim::SimConfig;
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "paper") {
+        Scale::Paper
+    } else {
+        Scale::Small
+    };
+    let seed = 42;
+
+    eprintln!("== policy comparison (Backfill vs Strict vs Best-Effort) ==");
+    let env = training_cluster(scale, seed, 0.98);
+    let sim = SimConfig::default();
+    let policy = PolicyComparison {
+        strict: run_arm(&env, &Arm::kant_strict(), &sim),
+        backfill: run_arm(&env, &Arm::kant_backfill(), &sim),
+        best_effort: run_arm(&env, &Arm::kant_best_effort(), &sim),
+    };
+    println!("{}", fig3(&policy));
+    println!("{}", fig4(&policy));
+    println!("{}", fig5(&policy));
+
+    eprintln!("== E-Binpack vs native baseline ==");
+    let env = training_cluster(scale, seed, 0.90);
+    let ebp = EBinpackComparison {
+        baseline: run_arm(&env, &Arm::native_baseline(), &sim),
+        ebinpack: run_arm(&env, &Arm::kant_ebinpack(), &sim),
+    };
+    println!("{}", fig6(&ebp));
+    println!("{}", fig7(&ebp));
+    println!("{}", fig8(&ebp));
+    println!("{}", fig9(&ebp));
+}

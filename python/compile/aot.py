@@ -1,0 +1,135 @@
+"""AOT lowering: JAX scoring pipelines -> HLO *text* artifacts for Rust.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and NOT
+a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which the ``xla`` crate's bundled xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to ``artifacts/``, consumed by ``rust/src/runtime``):
+
+  node_scorer_<N>.hlo.txt   score_and_rank  over N in NODE_SIZES
+  group_scorer_<G>.hlo.txt  score_groups    over G in GROUP_SIZES
+  manifest.json             shapes + feature-layout version for the loader
+
+Run once via ``make artifacts``; Python never appears on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import GROUP_COMPONENTS, GROUP_F, JOB_D, NODE_F, NUM_COMPONENTS
+
+# Pool sizes the Rust loader can pick from; it chooses the smallest artifact
+# with capacity >= the live node count and pads with unhealthy rows.
+NODE_SIZES = (256, 1024, 4096)
+GROUP_SIZES = (128,)
+
+LAYOUT_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_node_scorer(n: int) -> str:
+    feat = jax.ShapeDtypeStruct((n, NODE_F), jnp.float32)
+    job = jax.ShapeDtypeStruct((JOB_D,), jnp.float32)
+    w = jax.ShapeDtypeStruct((NUM_COMPONENTS,), jnp.float32)
+    return to_hlo_text(jax.jit(model.score_and_rank).lower(feat, job, w))
+
+
+def lower_group_scorer(g: int) -> str:
+    gfeat = jax.ShapeDtypeStruct((g, GROUP_F), jnp.float32)
+    job = jax.ShapeDtypeStruct((JOB_D,), jnp.float32)
+    w = jax.ShapeDtypeStruct((GROUP_COMPONENTS,), jnp.float32)
+    return to_hlo_text(jax.jit(model.score_groups_model).lower(gfeat, job, w))
+
+
+def fusion_report(hlo_text: str) -> dict:
+    """Crude HLO-level cost signals for the perf log (EXPERIMENTS.md §Perf)."""
+    lines = hlo_text.splitlines()
+    ops = [ln.strip() for ln in lines if "=" in ln and not ln.strip().startswith("//")]
+    kinds: dict[str, int] = {}
+    import re
+
+    op_re = re.compile(r"([a-z][a-z0-9_-]*)\(")
+    for ln in ops:
+        rhs = ln.split("=", 1)[1]
+        m = op_re.search(rhs)
+        if not m:
+            continue
+        kinds[m.group(1)] = kinds.get(m.group(1), 0) + 1
+    return {
+        "total_instructions": len(ops),
+        "fusions": kinds.get("fusion", 0),
+        "sorts": kinds.get("sort", 0),
+        "broadcasts": kinds.get("broadcast", 0),
+        "kinds": kinds,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="AOT-lower Kant scorers to HLO text")
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument("--out", default=None, help="(compat) single-artifact path stem")
+    args = ap.parse_args(argv)
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out_dir = args.out_dir or os.path.join(repo_root, "artifacts")
+    if args.out:
+        out_dir = os.path.dirname(os.path.abspath(args.out)) or out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "layout_version": LAYOUT_VERSION,
+        "node_f": NODE_F,
+        "group_f": GROUP_F,
+        "job_d": JOB_D,
+        "num_components": NUM_COMPONENTS,
+        "group_components": GROUP_COMPONENTS,
+        "node_scorers": [],
+        "group_scorers": [],
+        "fusion_reports": {},
+    }
+
+    for n in NODE_SIZES:
+        text = lower_node_scorer(n)
+        name = f"node_scorer_{n}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["node_scorers"].append({"n": n, "file": name})
+        manifest["fusion_reports"][name] = fusion_report(text)
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for g in GROUP_SIZES:
+        text = lower_group_scorer(g)
+        name = f"group_scorer_{g}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["group_scorers"].append({"g": g, "file": name})
+        manifest["fusion_reports"][name] = fusion_report(text)
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

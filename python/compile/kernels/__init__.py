@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels for Kant's scoring hot-spot (build-time only)."""
+
+from . import ref, score  # noqa: F401

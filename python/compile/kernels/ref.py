@@ -1,0 +1,160 @@
+"""Pure-jnp reference oracles for the Kant scoring kernels.
+
+These are the ground truth the Pallas kernels in ``score.py`` are tested
+against (pytest + hypothesis). They define the *scoring contract* shared with
+the Rust native scorer (``rust/src/rsch/score.rs``): same feature layout, same
+component definitions, same masking semantics. Keep the three in lockstep.
+
+Feature layout — node features ``[N, NODE_F]`` (f32):
+
+  ==  =====================  ==========================================
+  idx  name                   meaning
+  ==  =====================  ==========================================
+   0  free_gpus              free *healthy* GPUs on the node
+   1  total_gpus             GPUs physically on the node
+   2  alloc_gpus             GPUs currently allocated
+   3  healthy                1.0 if node is schedulable
+   4  group_free             free GPUs in the node's NodeNetGroup
+   5  group_total            total GPUs in the node's NodeNetGroup
+   6  job_pods_on_node       this job's pods already placed on the node
+   7  job_pods_in_group      this job's pods already placed in the group
+   8  topo_tier              min distance tier to already-placed pods
+                             (0 node / 1 leaf / 2 spine / 3 superspine,
+                              3 when the job has no placed pods yet)
+   9  in_inference_zone      1.0 if node is in the E-Spread dedicated zone
+  10  hbd_free               free GPUs in the node's HBD (scale-up) domain
+  11  nvlink_best_clique     size of the largest free NVLink-connected
+                             GPU clique on the node
+  ==  =====================  ==========================================
+
+Job descriptor ``[JOB_D]`` (f32):
+
+  0 gpus_per_pod, 1 total_gpus, 2 is_gang, 3 is_inference,
+  4 wants_whole_node, 5 strategy_id, 6 needs_hbd, 7 (reserved)
+
+Weight vector ``[NUM_COMPONENTS]`` (f32) — chosen by the Rust side per
+placement strategy (Binpack / E-Binpack / Spread / E-Spread / native):
+
+  0 w_fill, 1 w_spread, 2 w_group_pack, 3 w_group_empty,
+  4 w_topo, 5 w_colocate, 6 w_zone, 7 w_nvlink
+
+Score: ``mask * (components @ w) + (mask - 1) * BIG`` so infeasible nodes sit
+at ``-BIG`` and can never win an argmax, while remaining finite (the Rust
+side relies on finiteness when sorting).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NODE_F = 12
+GROUP_F = 6
+JOB_D = 8
+NUM_COMPONENTS = 8
+GROUP_COMPONENTS = 6
+BIG = 1.0e9
+EPS = 1.0e-6
+
+
+def node_components(feat: jnp.ndarray, job: jnp.ndarray) -> jnp.ndarray:
+    """Per-node score components ``[N, NUM_COMPONENTS]`` (pure jnp oracle)."""
+    feat = feat.astype(jnp.float32)
+    job = job.astype(jnp.float32)
+    alloc = feat[:, 2]
+    total = jnp.maximum(feat[:, 1], EPS)
+    group_free = feat[:, 4]
+    group_total = jnp.maximum(feat[:, 5], EPS)
+    pods_on_node = feat[:, 6]
+    topo_tier = feat[:, 8]
+    in_zone = feat[:, 9]
+    clique = feat[:, 11]
+
+    gpus_per_pod = job[0]
+
+    # c0: binpack — fill ratio *after* placing one pod, clamped to [0, 1].
+    fill_after = jnp.clip((alloc + gpus_per_pod) / total, 0.0, 1.0)
+    # c1: spread — prefer emptier nodes.
+    spread = 1.0 - jnp.clip(alloc / total, 0.0, 1.0)
+    # c2: group consolidation — prefer groups that are already busy.
+    group_pack = 1.0 - jnp.clip(group_free / group_total, 0.0, 1.0)
+    # c3: group emptiness — prefer empty groups (large gang jobs).
+    group_empty = jnp.clip(group_free / group_total, 0.0, 1.0)
+    # c4: topology closeness to already-placed pods of the same job.
+    topo = 1.0 - jnp.clip(topo_tier, 0.0, 3.0) / 3.0
+    # c5: co-location with this job's pods already on the node (E-Binpack
+    #     node level), saturating at 8 pods.
+    colocate = jnp.clip(pods_on_node, 0.0, 8.0) / 8.0
+    # c6: E-Spread dedicated-zone membership.
+    zone = in_zone
+    # c7: intra-node NVLink fit — largest free clique can hold the pod.
+    nvlink = (clique >= gpus_per_pod).astype(jnp.float32)
+
+    return jnp.stack(
+        [fill_after, spread, group_pack, group_empty, topo, colocate, zone, nvlink],
+        axis=1,
+    )
+
+
+def node_feasible(feat: jnp.ndarray, job: jnp.ndarray) -> jnp.ndarray:
+    """Feasibility mask ``[N]``: healthy and enough free GPUs for one pod."""
+    feat = feat.astype(jnp.float32)
+    healthy = feat[:, 3] > 0.5
+    enough = feat[:, 0] >= job[0]
+    return jnp.logical_and(healthy, enough).astype(jnp.float32)
+
+
+def score_nodes_ref(
+    feat: jnp.ndarray, job: jnp.ndarray, weights: jnp.ndarray
+) -> jnp.ndarray:
+    """Reference node scorer: ``[N, NODE_F] x [JOB_D] x [NUM_COMPONENTS] -> [N]``."""
+    comps = node_components(feat, job)
+    mask = node_feasible(feat, job)
+    raw = comps @ weights.astype(jnp.float32)
+    return mask * raw + (mask - 1.0) * BIG
+
+
+def group_components(gfeat: jnp.ndarray, job: jnp.ndarray) -> jnp.ndarray:
+    """Per-group components ``[G, GROUP_COMPONENTS]``.
+
+    Group feature layout ``[G, GROUP_F]``:
+      0 free_gpus, 1 total_gpus, 2 job_pods_in_group,
+      3 zone_frac (fraction of nodes in the inference zone),
+      4 healthy_frac, 5 whole_free_nodes (count of fully-idle nodes)
+    """
+    gfeat = gfeat.astype(jnp.float32)
+    job = job.astype(jnp.float32)
+    free = gfeat[:, 0]
+    total = jnp.maximum(gfeat[:, 1], EPS)
+    pods_in_group = gfeat[:, 2]
+    zone_frac = gfeat[:, 3]
+    healthy_frac = gfeat[:, 4]
+    whole_free = gfeat[:, 5]
+
+    pack = 1.0 - jnp.clip(free / total, 0.0, 1.0)
+    empty = jnp.clip(free / total, 0.0, 1.0)
+    colocate = jnp.clip(pods_in_group, 0.0, 64.0) / 64.0
+    zone = zone_frac
+    health = healthy_frac
+    # Whole-node fit: how well the group's fully-idle nodes cover the job's
+    # whole-node demand (8-GPU boards), clamped to [0, 1].
+    need_nodes = jnp.ceil(job[1] / 8.0)
+    whole_fit = jnp.clip(whole_free / jnp.maximum(need_nodes, 1.0), 0.0, 1.0)
+    return jnp.stack([pack, empty, colocate, zone, health, whole_fit], axis=1)
+
+
+def group_feasible(gfeat: jnp.ndarray, job: jnp.ndarray) -> jnp.ndarray:
+    """Group mask: some healthy capacity and enough free GPUs for one pod."""
+    gfeat = gfeat.astype(jnp.float32)
+    has_capacity = gfeat[:, 0] >= job[0]
+    healthy = gfeat[:, 4] > 0.0
+    return jnp.logical_and(has_capacity, healthy).astype(jnp.float32)
+
+
+def score_groups_ref(
+    gfeat: jnp.ndarray, job: jnp.ndarray, weights: jnp.ndarray
+) -> jnp.ndarray:
+    """Reference group scorer: ``[G, GROUP_F] x [JOB_D] x [GROUP_COMPONENTS] -> [G]``."""
+    comps = group_components(gfeat, job)
+    mask = group_feasible(gfeat, job)
+    raw = comps @ weights.astype(jnp.float32)
+    return mask * raw + (mask - 1.0) * BIG

@@ -1,0 +1,76 @@
+"""Layer-2 JAX model: Kant's scoring pipelines, composed from L1 kernels.
+
+The scheduler paper's analogue of a model forward pass is the per-cycle
+scoring computation: given the cluster snapshot (dense node/group feature
+matrices) and the job at the head of the scheduling pipeline, produce the
+score vector the selector consumes. This module is the single source the AOT
+path (``aot.py``) lowers to HLO text; it is never imported at runtime.
+
+Entry points (all fixed-shape for AOT):
+
+  - :func:`score_nodes_model`   — [N, NODE_F] x [JOB_D] x [C]  -> [N]
+  - :func:`score_groups_model`  — [G, GROUP_F] x [JOB_D] x [Cg] -> [G]
+  - :func:`score_nodes_batch`   — vmapped node scorer for a queue of B jobs
+  - :func:`score_and_rank`      — fused scores + descending rank permutation,
+    saving the Rust side a full sort on the hot path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import score as kernels
+from .kernels.ref import GROUP_COMPONENTS, GROUP_F, JOB_D, NODE_F, NUM_COMPONENTS
+
+__all__ = [
+    "score_nodes_model",
+    "score_groups_model",
+    "score_nodes_batch",
+    "score_and_rank",
+    "NODE_F",
+    "GROUP_F",
+    "JOB_D",
+    "NUM_COMPONENTS",
+    "GROUP_COMPONENTS",
+]
+
+
+def score_nodes_model(
+    feat: jnp.ndarray, job: jnp.ndarray, weights: jnp.ndarray
+) -> jnp.ndarray:
+    """Score every node for one job (L1 Pallas kernel under the hood)."""
+    return kernels.score_nodes(feat, job, weights)
+
+
+def score_groups_model(
+    gfeat: jnp.ndarray, job: jnp.ndarray, weights: jnp.ndarray
+) -> jnp.ndarray:
+    """Score every NodeNetGroup for one job (two-level stage 1)."""
+    return kernels.score_groups(gfeat, job, weights)
+
+
+def score_nodes_batch(
+    feat: jnp.ndarray, jobs: jnp.ndarray, weights: jnp.ndarray
+) -> jnp.ndarray:
+    """Score every node for a batch of jobs: ``[B, JOB_D] x [B, C] -> [B, N]``.
+
+    The feature matrix is shared across the batch (one snapshot, many queued
+    jobs) — this is RSCH's multi-job cycle in a single XLA launch.
+    """
+    return jax.vmap(lambda j, w: kernels.score_nodes(feat, j, w))(jobs, weights)
+
+
+def score_and_rank(
+    feat: jnp.ndarray, job: jnp.ndarray, weights: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Scores plus the descending-score permutation (stable, index tiebreak).
+
+    Returns ``(scores [N] f32, order [N] i32)`` where ``order[0]`` is the
+    best node index. Sorting inside XLA keeps the Rust hot path allocation-
+    free: it walks ``order`` until it finds a node that passes the exact
+    (non-vectorizable) device-level checks.
+    """
+    scores = kernels.score_nodes(feat, job, weights)
+    order = jnp.argsort(-scores, stable=True).astype(jnp.int32)
+    return scores, order

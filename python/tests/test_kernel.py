@@ -1,0 +1,164 @@
+"""L1 correctness: Pallas scoring kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-multiple-of-block sizes), dtypes and
+feature values; assert_allclose against ref.py is the core signal.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import score as K
+
+RNG = np.random.default_rng(0)
+
+
+def make_node_features(n: int, rng: np.random.Generator) -> np.ndarray:
+    total = rng.choice([1.0, 4.0, 8.0], size=n)
+    alloc = np.floor(rng.uniform(0, total + 1))
+    alloc = np.minimum(alloc, total)
+    free = total - alloc
+    healthy = (rng.uniform(size=n) > 0.1).astype(np.float32)
+    group_total = np.full(n, 8.0 * 32)
+    group_free = np.floor(rng.uniform(0, group_total + 1))
+    pods_on_node = np.floor(rng.uniform(0, 9, size=n))
+    pods_in_group = pods_on_node + np.floor(rng.uniform(0, 4, size=n))
+    topo_tier = rng.choice([0.0, 1.0, 2.0, 3.0], size=n)
+    in_zone = (rng.uniform(size=n) > 0.7).astype(np.float32)
+    hbd_free = np.floor(rng.uniform(0, 64, size=n))
+    clique = np.floor(rng.uniform(0, free + 1))
+    feat = np.stack(
+        [free, total, alloc, healthy, group_free, group_total, pods_on_node,
+         pods_in_group, topo_tier, in_zone, hbd_free, clique],
+        axis=1,
+    ).astype(np.float32)
+    assert feat.shape == (n, ref.NODE_F)
+    return feat
+
+
+def make_job(gpus_per_pod: float, pods: float = 4.0, inference: bool = False) -> np.ndarray:
+    return np.array(
+        [gpus_per_pod, gpus_per_pod * pods, 1.0, float(inference),
+         float(gpus_per_pod >= 8), 2.0, 0.0, 0.0],
+        dtype=np.float32,
+    )
+
+
+def make_group_features(g: int, rng: np.random.Generator) -> np.ndarray:
+    total = np.full(g, 256.0)
+    free = np.floor(rng.uniform(0, total + 1))
+    pods = np.floor(rng.uniform(0, 16, size=g))
+    zone = rng.uniform(size=g).astype(np.float32)
+    healthy = rng.uniform(0.5, 1.0, size=g).astype(np.float32)
+    whole = np.floor(rng.uniform(0, 33, size=g))
+    return np.stack([free, total, pods, zone, healthy, whole], axis=1).astype(np.float32)
+
+
+WEIGHTS_EBINPACK = np.array([1.0, 0.0, 0.6, 0.0, 0.5, 0.8, -0.3, 0.2], np.float32)
+WEIGHTS_SPREAD = np.array([0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.5, 0.1], np.float32)
+GROUP_W = np.array([1.0, 0.0, 0.5, -0.2, 0.3, 0.4], np.float32)
+
+
+class TestNodeScorerVsRef:
+    @pytest.mark.parametrize("n", [1, 7, 64, 255, 256, 257, 1024, 1500])
+    def test_sizes(self, n):
+        feat = make_node_features(n, RNG)
+        job = make_job(4.0)
+        got = np.asarray(K.score_nodes(feat, job, WEIGHTS_EBINPACK))
+        want = np.asarray(ref.score_nodes_ref(feat, job, WEIGHTS_EBINPACK))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("gpp", [1.0, 2.0, 4.0, 8.0])
+    def test_gpus_per_pod(self, gpp):
+        feat = make_node_features(300, RNG)
+        job = make_job(gpp)
+        got = np.asarray(K.score_nodes(feat, job, WEIGHTS_SPREAD))
+        want = np.asarray(ref.score_nodes_ref(feat, job, WEIGHTS_SPREAD))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_infeasible_nodes_score_below_any_feasible(self):
+        feat = make_node_features(512, RNG)
+        job = make_job(4.0)
+        scores = np.asarray(K.score_nodes(feat, job, WEIGHTS_EBINPACK))
+        feas = np.asarray(ref.node_feasible(feat, job)) > 0.5
+        if feas.any() and (~feas).any():
+            assert scores[~feas].max() < scores[feas].min()
+
+    def test_all_infeasible(self):
+        feat = make_node_features(64, RNG)
+        feat[:, 3] = 0.0  # all unhealthy
+        job = make_job(1.0)
+        scores = np.asarray(K.score_nodes(feat, job, WEIGHTS_EBINPACK))
+        assert (scores <= -ref.BIG + 1e3).all()
+
+    def test_block_size_invariance(self):
+        feat = make_node_features(700, RNG)
+        job = make_job(2.0)
+        a = np.asarray(K.score_nodes(feat, job, WEIGHTS_EBINPACK, block_n=128))
+        b = np.asarray(K.score_nodes(feat, job, WEIGHTS_EBINPACK, block_n=512))
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+class TestGroupScorerVsRef:
+    @pytest.mark.parametrize("g", [1, 5, 63, 64, 65, 128])
+    def test_sizes(self, g):
+        gfeat = make_group_features(g, RNG)
+        job = make_job(8.0, pods=32.0)
+        got = np.asarray(K.score_groups(gfeat, job, GROUP_W))
+        want = np.asarray(ref.score_groups_ref(gfeat, job, GROUP_W))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_empty_group_infeasible_for_big_pod(self):
+        gfeat = make_group_features(16, RNG)
+        gfeat[:, 0] = 0.0  # no free GPUs anywhere
+        job = make_job(8.0)
+        scores = np.asarray(K.score_groups(gfeat, job, GROUP_W))
+        assert (scores <= -ref.BIG + 1e3).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=600),
+    gpp=st.sampled_from([1.0, 2.0, 4.0, 8.0]),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    wseed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_hypothesis_node_scorer_matches_ref(n, gpp, seed, wseed):
+    rng = np.random.default_rng(seed)
+    feat = make_node_features(n, rng)
+    job = make_job(gpp)
+    w = np.random.default_rng(wseed).uniform(-1, 1, ref.NUM_COMPONENTS).astype(np.float32)
+    got = np.asarray(K.score_nodes(feat, job, w))
+    want = np.asarray(ref.score_nodes_ref(feat, job, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    g=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_hypothesis_group_scorer_matches_ref(g, seed):
+    rng = np.random.default_rng(seed)
+    gfeat = make_group_features(g, rng)
+    job = make_job(4.0, pods=8.0)
+    w = rng.uniform(-1, 1, ref.GROUP_COMPONENTS).astype(np.float32)
+    got = np.asarray(K.score_groups(gfeat, job, w))
+    want = np.asarray(ref.score_groups_ref(gfeat, job, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_hypothesis_extreme_values_finite(seed):
+    """Scores stay finite even for degenerate features (zero totals etc.)."""
+    rng = np.random.default_rng(seed)
+    feat = make_node_features(128, rng)
+    feat[:, 1] = rng.choice([0.0, 8.0], size=128)  # some zero-GPU nodes
+    feat[:, 5] = rng.choice([0.0, 256.0], size=128)
+    job = make_job(4.0)
+    scores = np.asarray(K.score_nodes(feat, job, WEIGHTS_EBINPACK))
+    assert np.isfinite(scores).all()

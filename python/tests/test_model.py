@@ -1,0 +1,89 @@
+"""L2 model tests: shapes, batching, and the fused score_and_rank pipeline."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from .test_kernel import (
+    WEIGHTS_EBINPACK,
+    GROUP_W,
+    make_group_features,
+    make_job,
+    make_node_features,
+)
+
+RNG = np.random.default_rng(7)
+
+
+class TestShapes:
+    def test_node_scorer_shape(self):
+        feat = make_node_features(333, RNG)
+        out = np.asarray(model.score_nodes_model(feat, make_job(2.0), WEIGHTS_EBINPACK))
+        assert out.shape == (333,) and out.dtype == np.float32
+
+    def test_group_scorer_shape(self):
+        gfeat = make_group_features(50, RNG)
+        out = np.asarray(model.score_groups_model(gfeat, make_job(8.0), GROUP_W))
+        assert out.shape == (50,) and out.dtype == np.float32
+
+    def test_batch_shape(self):
+        feat = make_node_features(256, RNG)
+        jobs = np.stack([make_job(g) for g in (1.0, 2.0, 4.0, 8.0)])
+        ws = np.tile(WEIGHTS_EBINPACK, (4, 1))
+        out = np.asarray(model.score_nodes_batch(feat, jobs, ws))
+        assert out.shape == (4, 256)
+
+
+class TestBatchMatchesSingle:
+    def test_batch_rows_equal_single_calls(self):
+        feat = make_node_features(200, RNG)
+        jobs = np.stack([make_job(g) for g in (1.0, 4.0, 8.0)])
+        ws = np.tile(WEIGHTS_EBINPACK, (3, 1))
+        batch = np.asarray(model.score_nodes_batch(feat, jobs, ws))
+        for i in range(3):
+            single = np.asarray(model.score_nodes_model(feat, jobs[i], ws[i]))
+            np.testing.assert_allclose(batch[i], single, rtol=1e-5, atol=1e-5)
+
+
+class TestScoreAndRank:
+    def test_order_is_descending_permutation(self):
+        feat = make_node_features(512, RNG)
+        scores, order = model.score_and_rank(feat, make_job(4.0), WEIGHTS_EBINPACK)
+        scores, order = np.asarray(scores), np.asarray(order)
+        assert sorted(order.tolist()) == list(range(512))
+        ranked = scores[order]
+        assert (np.diff(ranked) <= 1e-6).all()
+
+    def test_best_index_matches_ref_argmax(self):
+        feat = make_node_features(512, RNG)
+        job = make_job(2.0)
+        _, order = model.score_and_rank(feat, job, WEIGHTS_EBINPACK)
+        want = np.asarray(ref.score_nodes_ref(feat, job, WEIGHTS_EBINPACK))
+        best = int(np.asarray(order)[0])
+        assert want[best] == want.max()
+
+    def test_stable_tiebreak_by_index(self):
+        # Identical nodes -> identical scores -> order must be by index.
+        feat = np.tile(make_node_features(1, RNG), (16, 1))
+        feat[:, 3] = 1.0
+        feat[:, 0] = 8.0
+        _, order = model.score_and_rank(feat, make_job(1.0), WEIGHTS_EBINPACK)
+        assert np.asarray(order).tolist() == list(range(16))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_hypothesis_rank_consistent_with_scores(n, seed):
+    rng = np.random.default_rng(seed)
+    feat = make_node_features(n, rng)
+    scores, order = model.score_and_rank(feat, make_job(2.0), WEIGHTS_EBINPACK)
+    scores, order = np.asarray(scores), np.asarray(order)
+    ranked = scores[order]
+    assert (np.diff(ranked) <= 1e-5).all()
+    assert sorted(order.tolist()) == list(range(n))

@@ -1,0 +1,42 @@
+//! End-to-end simulator throughput: simulated days per wall-clock second
+//! for each experiment arm on the small-scale training cluster, plus the
+//! i2 inference preset. This is the whole-stack hot-path number the §Perf
+//! pass optimizes.
+//!
+//! Run with: `cargo bench --bench e2e`
+
+use kant::config::{inference_cluster, training_cluster, InferencePreset, Scale};
+use kant::experiments::{run_arm, Arm};
+use kant::sim::SimConfig;
+use kant::util::benchkit::Bench;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bench::new()
+        .warmup(1)
+        .min_iters(3)
+        .max_iters(10)
+        .target_time(Duration::from_secs(6));
+
+    println!("== end-to-end simulation throughput ==");
+    for (label, arm) in [
+        ("native", Arm::native_baseline()),
+        ("kant-backfill-ebinpack", Arm::kant_ebinpack()),
+    ] {
+        let mut env = training_cluster(Scale::Small, 9, 0.9);
+        env.horizon_ms = 24 * 3_600_000; // 1 simulated day of arrivals.
+        let sim_days = 2.0; // incl. drain day
+        b.run_throughput(
+            &format!("sim-train1024/{label}"),
+            sim_days,
+            || run_arm(&env, &arm, &SimConfig::default()).events_processed,
+        );
+    }
+
+    let env = inference_cluster(InferencePreset::I2, 9);
+    let days = (env.horizon_ms + 24 * 3_600_000) as f64 / 86_400_000.0;
+    b.run_throughput("sim-inference-i2/kant", days, || {
+        run_arm(&env, &Arm::kant_backfill(), &SimConfig::default()).events_processed
+    });
+    println!("(items/s = simulated days per wall second)");
+}

@@ -1,0 +1,156 @@
+//! §3.4.2 ablation bench: two-level (NodeNetGroup preselect) vs flat
+//! scheduling, across cluster sizes — plus the per-placement cost of the
+//! full RSCH path. The paper's claim: hierarchical scheduling "significantly
+//! reduces the scheduling search scope".
+//!
+//! Run with: `cargo bench --bench sched_cycle`
+
+use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
+use kant::cluster::ids::{GpuTypeId, JobId, TenantId};
+use kant::job::spec::{JobKind, JobSpec};
+use kant::qsch::Placer;
+use kant::rsch::{Rsch, RschConfig};
+use kant::util::benchkit::Bench;
+use kant::util::rng::Pcg32;
+use std::time::Duration;
+
+fn make_state(groups: u32) -> kant::cluster::state::ClusterState {
+    ClusterBuilder::build(&ClusterSpec::homogeneous("bench", 8, groups / 8, 32))
+}
+
+/// Place-and-release one small job (the scheduler's common case).
+fn bench_placement(b: &mut Bench, groups: u32, two_level: bool) {
+    let mut state = make_state(groups);
+    let cfg = RschConfig {
+        two_level,
+        ..RschConfig::default()
+    };
+    let mut rsch = Rsch::new(cfg, &state);
+    // Fragment the cluster a bit so scoring has real work.
+    let mut rng = Pcg32::seed_from_u64(3);
+    let mut warm = 1_000_000u64;
+    for _ in 0..state.nodes.len() / 2 {
+        let spec = JobSpec::homogeneous(
+            JobId(warm),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            1,
+            rng.range_inclusive(1, 4) as u32,
+        );
+        let _ = rsch.place(&mut state, &spec);
+        warm += 1;
+    }
+    let mode = if two_level { "two-level" } else { "flat" };
+    let n = state.nodes.len();
+    let mut id = 1u64;
+    b.run_throughput(
+        &format!("place-8gpu-job/{mode}/{n}nodes"),
+        1.0,
+        || {
+            let spec = JobSpec::homogeneous(
+                JobId(id),
+                TenantId(0),
+                JobKind::Training,
+                GpuTypeId(0),
+                1,
+                8,
+            );
+            id += 1;
+            if rsch.place(&mut state, &spec).is_ok() {
+                state.release_job(JobId(id - 1)).unwrap();
+            }
+        },
+    );
+}
+
+/// A 32-node gang placement (256 GPUs) — the large-job path.
+fn bench_gang(b: &mut Bench, groups: u32, two_level: bool) {
+    let mut state = make_state(groups);
+    let cfg = RschConfig {
+        two_level,
+        ..RschConfig::default()
+    };
+    let mut rsch = Rsch::new(cfg, &state);
+    let mode = if two_level { "two-level" } else { "flat" };
+    let n = state.nodes.len();
+    let mut id = 1u64;
+    b.run_throughput(&format!("place-256gpu-gang/{mode}/{n}nodes"), 32.0, || {
+        let spec = JobSpec::homogeneous(
+            JobId(id),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            32,
+            8,
+        );
+        id += 1;
+        if rsch.place(&mut state, &spec).is_ok() {
+            state.release_job(JobId(id - 1)).unwrap();
+        }
+    });
+}
+
+/// §3.1 multi-instance parallel planning throughput.
+fn bench_parallel(b: &mut Bench, threads: usize) {
+    let mut state = make_state(32);
+    let mut rsch = Rsch::new(RschConfig::default(), &state);
+    let batch = 64usize;
+    let mut id = 1u64;
+    b.run_throughput(
+        &format!("place-batch64/threads{threads}/1024nodes"),
+        batch as f64,
+        || {
+            let specs: Vec<JobSpec> = (0..batch)
+                .map(|k| {
+                    JobSpec::homogeneous(
+                        JobId(id + k as u64),
+                        TenantId(0),
+                        JobKind::Training,
+                        GpuTypeId(0),
+                        1,
+                        ((k % 4) + 1) as u32 * 2,
+                    )
+                })
+                .collect();
+            id += batch as u64;
+            let results = rsch.place_many_parallel(&mut state, &specs, threads);
+            for (spec, r) in specs.iter().zip(&results) {
+                if r.is_ok() {
+                    state.release_job(spec.id).unwrap();
+                }
+            }
+        },
+    );
+}
+
+fn main() {
+    println!("== §3.4.2 two-level vs flat scheduling ==");
+    let mut b = Bench::new()
+        .warmup(3)
+        .target_time(Duration::from_secs(2))
+        .max_iters(20_000);
+    for groups in [8u32, 32, 128] {
+        bench_placement(&mut b, groups, false);
+        bench_placement(&mut b, groups, true);
+    }
+    bench_gang(&mut b, 32, false);
+    bench_gang(&mut b, 32, true);
+
+    println!("== §3.1 multi-instance parallel planning ==");
+    for threads in [1usize, 2, 4, 8] {
+        bench_parallel(&mut b, threads);
+    }
+
+    // Summarize two-level speedups.
+    let results = b.results().to_vec();
+    for pair in results.chunks(2) {
+        if let [flat, two] = pair {
+            println!(
+                "=> {} vs two-level: {:.1}x faster",
+                flat.name,
+                flat.mean_ns / two.mean_ns.max(1.0)
+            );
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Scoring-backend bench: native Rust vs the AOT XLA artifact (PJRT),
+//! across candidate-set sizes. The XLA path proves the three-layer
+//! composition; the native path is the production default at sim scale —
+//! this bench quantifies the crossover.
+//!
+//! Run with: `cargo bench --bench scorer` (XLA rows need `make artifacts`)
+
+use kant::job::spec::PlacementStrategy;
+use kant::rsch::features::NODE_F;
+use kant::rsch::score::{node_weights, NativeBackend, Phase, ScoreBackend};
+use kant::runtime::XlaBackend;
+use kant::util::benchkit::Bench;
+use kant::util::rng::Pcg32;
+use std::time::Duration;
+
+fn random_features(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    let mut feat = vec![0.0f32; n * NODE_F];
+    for i in 0..n {
+        let row = &mut feat[i * NODE_F..(i + 1) * NODE_F];
+        let alloc = rng.below(9) as f32;
+        row[0] = 8.0 - alloc;
+        row[1] = 8.0;
+        row[2] = alloc;
+        row[3] = 1.0;
+        row[4] = rng.below(257) as f32;
+        row[5] = 256.0;
+        row[8] = rng.below(4) as f32;
+        row[11] = row[0];
+    }
+    feat
+}
+
+fn main() {
+    let mut b = Bench::new()
+        .warmup(3)
+        .target_time(Duration::from_secs(2))
+        .max_iters(100_000);
+    let mut rng = Pcg32::seed_from_u64(1);
+    let job = [4.0f32, 64.0, 1.0, 0.0, 0.0, 2.0, 0.0, 0.0];
+    let w = node_weights(PlacementStrategy::EBinpack, Phase::Primary, false);
+
+    println!("== scoring hot path: native vs XLA/PJRT ==");
+    for n in [32usize, 256, 1024, 4096] {
+        let feat = random_features(&mut rng, n);
+        let mut native = NativeBackend;
+        b.run_throughput(&format!("score-nodes/native/{n}"), n as f64, || {
+            native.score_nodes(&feat, n, &job, &w)
+        });
+    }
+
+    match XlaBackend::new("artifacts") {
+        Ok(mut xla) => {
+            xla.warmup().expect("artifact warmup");
+            for n in [32usize, 256, 1024, 4096] {
+                let feat = random_features(&mut rng, n);
+                b.run_throughput(&format!("score-nodes/xla/{n}"), n as f64, || {
+                    xla.score_nodes(&feat, n, &job, &w)
+                });
+            }
+        }
+        Err(e) => eprintln!("skipping XLA rows (run `make artifacts`): {e}"),
+    }
+}

@@ -1,0 +1,113 @@
+//! Figures harness: regenerates every table and figure of the paper's §5
+//! evaluation (see DESIGN.md §5 for the experiment index).
+//!
+//! Usage:
+//!   figures [--scale small|paper] [--seed N] [--out results/] <id>...
+//!   ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15
+//!        table1 ablation-espread all
+//!   (fig10 covers 10-12; fig13 covers 13-14; snapshot/two-level ablations
+//!    live in `cargo bench`.)
+
+use std::path::PathBuf;
+
+use kant::config::Scale;
+use kant::experiments as exp;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale = Scale::Small;
+    let mut seed = 42u64;
+    let mut out_dir = PathBuf::from("results");
+    let mut ids: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--scale" => {
+                i += 1;
+                scale = Scale::parse(&args[i]).ok_or_else(|| anyhow::anyhow!("bad scale"))?;
+            }
+            "--seed" => {
+                i += 1;
+                seed = args[i].parse()?;
+            }
+            "--out" => {
+                i += 1;
+                out_dir = PathBuf::from(&args[i]);
+            }
+            "-h" | "--help" => {
+                println!("{}", HELP);
+                return Ok(());
+            }
+            id => ids.push(id.to_string()),
+        }
+        i += 1;
+    }
+    if ids.is_empty() {
+        println!("{}", HELP);
+        return Ok(());
+    }
+    if ids.iter().any(|s| s == "all") {
+        ids = vec![
+            "fig2", "fig3", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
+            "fig10", "fig13", "fig15", "ablation-espread", "ablation-defrag",
+        ]
+        .into_iter()
+        .map(String::from)
+        .collect();
+    }
+    std::fs::create_dir_all(&out_dir)?;
+
+    // Shared expensive runs, computed lazily.
+    let mut policy_cmp: Option<exp::PolicyComparison> = None;
+    let mut ebp_cmp: Option<exp::EBinpackComparison> = None;
+
+    for id in &ids {
+        eprintln!(">>> running {id} (scale={scale:?}, seed={seed})");
+        let report = match id.as_str() {
+            "fig2" => exp::fig2(seed),
+            "fig3" | "fig4" | "fig5" | "table1" => {
+                if policy_cmp.is_none() {
+                    policy_cmp = Some(exp::run_policy_comparison(scale, seed));
+                }
+                let c = policy_cmp.as_ref().unwrap();
+                match id.as_str() {
+                    "fig3" => exp::fig3(c),
+                    "fig4" => exp::fig4(c),
+                    "fig5" => exp::fig5(c),
+                    _ => exp::table1(c),
+                }
+            }
+            "fig6" | "fig7" | "fig8" | "fig9" => {
+                if ebp_cmp.is_none() {
+                    ebp_cmp = Some(exp::run_ebinpack_comparison(scale, seed));
+                }
+                let c = ebp_cmp.as_ref().unwrap();
+                match id.as_str() {
+                    "fig6" => exp::fig6(c),
+                    "fig7" => exp::fig7(c),
+                    "fig8" => exp::fig8(c),
+                    _ => exp::fig9(c),
+                }
+            }
+            "fig10" | "fig11" | "fig12" => exp::fig10_11_12(seed),
+            "fig13" | "fig14" => exp::fig13_14(seed),
+            "fig15" => exp::fig15(seed),
+            "ablation-espread" => exp::ablation_espread(seed),
+            "ablation-defrag" => exp::ablation_defrag(seed),
+            other => {
+                eprintln!("unknown figure id: {other}");
+                continue;
+            }
+        };
+        println!("{report}");
+        let path = out_dir.join(format!("{id}.txt"));
+        std::fs::write(&path, &report)?;
+        eprintln!("    wrote {}", path.display());
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+figures — regenerate the paper's tables and figures
+usage: figures [--scale small|paper] [--seed N] [--out DIR] <id>... | all
+ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15 table1 ablation-espread ablation-defrag";

@@ -1,0 +1,179 @@
+//! GPU models, devices and NICs — the device-level resources RSCH's
+//! fine-grained scheduling (§3.3.1) assigns to pods.
+
+use super::ids::{GpuTypeId, PodId};
+
+/// A GPU model. Clusters are split into GPU-Type-based node pools (§3.4.1)
+/// because models are not interchangeable: quota, admission and scheduling
+/// all operate per type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuType {
+    pub id: GpuTypeId,
+    pub name: String,
+    /// Peak bf16 TFLOPs — used only for reporting, never for placement.
+    pub tflops: f64,
+    pub mem_gb: u32,
+    /// Intra-node NVLink islands: groups of GPU indices that are
+    /// all-to-all NVLink-connected. One island of 8 models an H100-class
+    /// board; two islands of 4 model a PCIe-bridged pair of quads.
+    pub nvlink_islands: Vec<Vec<u8>>,
+    /// GPUs per node for this model.
+    pub gpus_per_node: u8,
+    /// NICs per node and the GPUs each NIC serves (topology pairing).
+    pub nics_per_node: u8,
+}
+
+impl GpuType {
+    /// Standard 8-GPU fully-NVLinked training board (Type-H in figures).
+    pub fn type_h(id: GpuTypeId) -> GpuType {
+        GpuType {
+            id,
+            name: "Type-H".to_string(),
+            tflops: 989.0,
+            mem_gb: 80,
+            nvlink_islands: vec![(0..8).collect()],
+            gpus_per_node: 8,
+            nics_per_node: 4,
+        }
+    }
+
+    /// 8-GPU board split into two PCIe-bridged NVLink quads (Type-L).
+    pub fn type_l(id: GpuTypeId) -> GpuType {
+        GpuType {
+            id,
+            name: "Type-L".to_string(),
+            tflops: 362.0,
+            mem_gb: 48,
+            nvlink_islands: vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]],
+            gpus_per_node: 8,
+            nics_per_node: 2,
+        }
+    }
+
+    /// Inference-oriented 4-GPU PCIe board (Type-A).
+    pub fn type_a(id: GpuTypeId) -> GpuType {
+        GpuType {
+            id,
+            name: "Type-A".to_string(),
+            tflops: 165.0,
+            mem_gb: 24,
+            nvlink_islands: vec![vec![0], vec![1], vec![2], vec![3]],
+            gpus_per_node: 4,
+            nics_per_node: 1,
+        }
+    }
+
+    /// The NVLink island containing GPU `idx`, if any.
+    pub fn island_of(&self, idx: u8) -> Option<&[u8]> {
+        self.nvlink_islands
+            .iter()
+            .find(|island| island.contains(&idx))
+            .map(|v| v.as_slice())
+    }
+
+    /// Which NIC index serves GPU `idx`: GPUs are striped across NICs in
+    /// contiguous blocks (GPUs 0..k → NIC 0, etc.).
+    pub fn nic_for_gpu(&self, idx: u8) -> u8 {
+        let per_nic = (self.gpus_per_node / self.nics_per_node).max(1);
+        (idx / per_nic).min(self.nics_per_node - 1)
+    }
+}
+
+/// Health of a device or node. `Cordoned` is administratively unschedulable
+/// (still counted in totals); `Faulty` is hardware-failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Cordoned,
+    Faulty,
+}
+
+impl Health {
+    #[inline]
+    pub fn schedulable(self) -> bool {
+        matches!(self, Health::Healthy)
+    }
+}
+
+/// One physical GPU device on a node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuDevice {
+    /// Index on the node board (0..gpus_per_node).
+    pub index: u8,
+    pub health: Health,
+    /// The pod currently bound to this device (non-shared allocation mode;
+    /// the paper notes GPUs are typically allocated whole).
+    pub allocated_to: Option<PodId>,
+}
+
+impl GpuDevice {
+    pub fn new(index: u8) -> GpuDevice {
+        GpuDevice {
+            index,
+            health: Health::Healthy,
+            allocated_to: None,
+        }
+    }
+
+    #[inline]
+    pub fn free(&self) -> bool {
+        self.allocated_to.is_none() && self.health.schedulable()
+    }
+}
+
+/// One RDMA NIC on a node. Pods are paired with the NIC topologically
+/// closest to their GPUs (§3.3.1, §3.3.5 intra-node).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Nic {
+    pub index: u8,
+    pub health: Health,
+}
+
+impl Nic {
+    pub fn new(index: u8) -> Nic {
+        Nic {
+            index,
+            health: Health::Healthy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ids::JobId;
+
+    #[test]
+    fn type_h_is_one_full_island() {
+        let t = GpuType::type_h(GpuTypeId(0));
+        assert_eq!(t.nvlink_islands.len(), 1);
+        assert_eq!(t.island_of(5).unwrap().len(), 8);
+    }
+
+    #[test]
+    fn type_l_has_two_quads() {
+        let t = GpuType::type_l(GpuTypeId(0));
+        assert_eq!(t.island_of(2).unwrap(), &[0, 1, 2, 3]);
+        assert_eq!(t.island_of(6).unwrap(), &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn nic_pairing_stripes_gpus() {
+        let t = GpuType::type_h(GpuTypeId(0)); // 8 GPUs, 4 NICs → 2 GPUs per NIC
+        assert_eq!(t.nic_for_gpu(0), 0);
+        assert_eq!(t.nic_for_gpu(1), 0);
+        assert_eq!(t.nic_for_gpu(2), 1);
+        assert_eq!(t.nic_for_gpu(7), 3);
+    }
+
+    #[test]
+    fn device_free_accounts_health_and_allocation() {
+        let mut d = GpuDevice::new(0);
+        assert!(d.free());
+        d.health = Health::Faulty;
+        assert!(!d.free());
+        d.health = Health::Healthy;
+        d.allocated_to = Some(PodId::new(JobId(1), 0));
+        assert!(!d.free());
+    }
+}

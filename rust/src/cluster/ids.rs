@@ -1,0 +1,120 @@
+//! Strongly-typed identifiers used across the cluster model.
+//!
+//! Everything is index-based (ids are indices into `Vec`s on
+//! [`crate::cluster::state::ClusterState`]) — the scheduler hot path never
+//! chases pointers or hashes strings.
+
+use std::fmt;
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident, $inner:ty) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+        pub struct $name(pub $inner);
+
+        impl $name {
+            #[inline]
+            pub fn index(self) -> usize {
+                self.0 as usize
+            }
+        }
+
+        impl fmt::Display for $name {
+            fmt_impl!($name);
+        }
+
+        impl From<usize> for $name {
+            fn from(i: usize) -> Self {
+                $name(i as $inner)
+            }
+        }
+    };
+}
+
+macro_rules! fmt_impl {
+    ($name:ident) => {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "{}{}", stringify!($name), self.0)
+        }
+    };
+}
+
+id_type!(
+    /// A physical node (server with a GPU board).
+    NodeId, u32
+);
+id_type!(
+    /// A NodeNetGroup — one LeafGroup of the scale-out fabric (§3.4.2).
+    GroupId, u32
+);
+id_type!(
+    /// An aggregation-layer (spine) switch group.
+    SpineId, u32
+);
+id_type!(
+    /// A core-layer (superspine) switch group.
+    SuperSpineId, u32
+);
+id_type!(
+    /// A Hyper Bandwidth Domain — scale-up interconnect island (§3.3.5).
+    HbdId, u32
+);
+id_type!(
+    /// A GPU model (Type-L, Type-A, ...). Indexes the GPU type table.
+    GpuTypeId, u16
+);
+id_type!(
+    /// A GPU-Type-based node pool (§3.4.1).
+    PoolId, u16
+);
+id_type!(
+    /// A tenant in the multi-tenant cluster.
+    TenantId, u32
+);
+id_type!(
+    /// A submitted job (workload).
+    JobId, u64
+);
+
+/// A pod is addressed as (job, replica index); it never exists standalone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PodId {
+    pub job: JobId,
+    pub replica: u32,
+}
+
+impl PodId {
+    pub fn new(job: JobId, replica: u32) -> PodId {
+        PodId { job, replica }
+    }
+}
+
+impl fmt::Display for PodId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/pod{}", self.job, self.replica)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_roundtrip_index() {
+        assert_eq!(NodeId::from(42usize).index(), 42);
+        assert_eq!(GroupId(7).index(), 7);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(NodeId(3).to_string(), "NodeId3");
+        assert_eq!(PodId::new(JobId(9), 2).to_string(), "JobId9/pod2");
+    }
+
+    #[test]
+    fn pod_ids_order_by_job_then_replica() {
+        let a = PodId::new(JobId(1), 5);
+        let b = PodId::new(JobId(2), 0);
+        assert!(a < b);
+    }
+}

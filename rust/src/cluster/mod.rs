@@ -1,0 +1,25 @@
+//! The simulated cluster substrate: GPUs, nodes, fabric topology, GPU-type
+//! node pools, tenants/quotas, the authoritative state, and scheduling
+//! snapshots. This stands in for Kubernetes + real hardware (DESIGN.md §1).
+
+pub mod builder;
+pub mod gpu;
+pub mod ids;
+pub mod node;
+pub mod pool;
+pub mod snapshot;
+pub mod state;
+pub mod tenant;
+pub mod topology;
+
+pub use builder::{ClusterBuilder, ClusterSpec, GpuModel, GpuTypeProfile};
+pub use gpu::{GpuDevice, GpuType, Health, Nic};
+pub use ids::{
+    GpuTypeId, GroupId, HbdId, JobId, NodeId, PodId, PoolId, SpineId, SuperSpineId, TenantId,
+};
+pub use node::{AllocError, Node, Zone};
+pub use pool::{NodePool, PoolSet};
+pub use snapshot::{GroupRecord, NodeRecord, Snapshot, SnapshotMode, SnapshotStats};
+pub use state::{ClusterState, PodPlacement, StateError};
+pub use tenant::{BorrowRecord, QuotaEntry, QuotaError, QuotaLedger, QuotaMode, Tenant};
+pub use topology::{Fabric, Hbd, NetGroup, Spine, Tier};

@@ -1,0 +1,270 @@
+//! A cluster node: an 8-GPU (or 4-GPU) server with NVLink islands, RDMA
+//! NICs, a position in the scale-out fabric (its NodeNetGroup) and
+//! optionally a scale-up HBD domain.
+//!
+//! Nodes expose *primitive* allocation operations (allocate these exact
+//! device indices to this pod); policy — which devices to pick — lives in
+//! `rsch::device_alloc`.
+
+use super::gpu::{GpuDevice, GpuType, Health, Nic};
+use super::ids::{GpuTypeId, GroupId, HbdId, NodeId, PodId};
+
+/// Placement zone for E-Spread (§3.3.4): a subset of nodes is designated an
+/// inference dedicated zone; the rest is the general pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Zone {
+    General,
+    InferenceDedicated,
+}
+
+/// A physical node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    pub gpu_type: GpuTypeId,
+    pub group: GroupId,
+    pub hbd: Option<HbdId>,
+    pub zone: Zone,
+    pub health: Health,
+    pub gpus: Vec<GpuDevice>,
+    pub nics: Vec<Nic>,
+}
+
+impl Node {
+    pub fn new(id: NodeId, gpu_type: &GpuType, group: GroupId) -> Node {
+        Node {
+            id,
+            gpu_type: gpu_type.id,
+            group,
+            hbd: None,
+            zone: Zone::General,
+            health: Health::Healthy,
+            gpus: (0..gpu_type.gpus_per_node).map(GpuDevice::new).collect(),
+            nics: (0..gpu_type.nics_per_node).map(Nic::new).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn total_gpus(&self) -> u32 {
+        self.gpus.len() as u32
+    }
+
+    /// Free (unallocated, healthy) GPU count; zero when the node itself is
+    /// unschedulable.
+    pub fn free_gpus(&self) -> u32 {
+        if !self.health.schedulable() {
+            return 0;
+        }
+        self.gpus.iter().filter(|g| g.free()).count() as u32
+    }
+
+    pub fn allocated_gpus(&self) -> u32 {
+        self.gpus.iter().filter(|g| g.allocated_to.is_some()).count() as u32
+    }
+
+    /// Indices of free, healthy devices.
+    pub fn free_gpu_indices(&self) -> Vec<u8> {
+        if !self.health.schedulable() {
+            return Vec::new();
+        }
+        self.gpus
+            .iter()
+            .filter(|g| g.free())
+            .map(|g| g.index)
+            .collect()
+    }
+
+    /// Fragmentation classification per §4.3: a node is *non-fragmented*
+    /// when fully idle or fully occupied, fragmented otherwise. Unhealthy
+    /// nodes are excluded from the metric (not schedulable capacity).
+    pub fn is_fragmented(&self) -> bool {
+        if !self.health.schedulable() {
+            return false;
+        }
+        let alloc = self.allocated_gpus();
+        alloc > 0 && alloc < self.total_gpus()
+    }
+
+    /// Size of the largest NVLink island measured in *free* devices —
+    /// feature 11 of the scoring contract and the device-alloc heuristic's
+    /// first choice.
+    pub fn largest_free_island(&self, gpu_type: &GpuType) -> u32 {
+        debug_assert_eq!(gpu_type.id, self.gpu_type);
+        if !self.health.schedulable() {
+            return 0;
+        }
+        gpu_type
+            .nvlink_islands
+            .iter()
+            .map(|island| {
+                island
+                    .iter()
+                    .filter(|&&i| self.gpus.get(i as usize).is_some_and(|g| g.free()))
+                    .count() as u32
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Bind `devices` (exact indices) to `pod`. Fails without mutating if
+    /// any device is missing, unhealthy or already bound — allocation is
+    /// all-or-nothing at node granularity too.
+    pub fn allocate(&mut self, pod: PodId, devices: &[u8]) -> Result<(), AllocError> {
+        if !self.health.schedulable() {
+            return Err(AllocError::NodeUnhealthy(self.id));
+        }
+        for &d in devices {
+            match self.gpus.get(d as usize) {
+                None => return Err(AllocError::NoSuchDevice(self.id, d)),
+                Some(g) if !g.free() => return Err(AllocError::DeviceBusy(self.id, d)),
+                Some(_) => {}
+            }
+        }
+        for &d in devices {
+            self.gpus[d as usize].allocated_to = Some(pod);
+        }
+        Ok(())
+    }
+
+    /// Release every device bound to `pod`; returns how many were freed.
+    pub fn release_pod(&mut self, pod: PodId) -> u32 {
+        let mut freed = 0;
+        for g in &mut self.gpus {
+            if g.allocated_to == Some(pod) {
+                g.allocated_to = None;
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    /// Devices currently bound to `pod`.
+    pub fn devices_of(&self, pod: PodId) -> Vec<u8> {
+        self.gpus
+            .iter()
+            .filter(|g| g.allocated_to == Some(pod))
+            .map(|g| g.index)
+            .collect()
+    }
+
+    /// Distinct pods with at least one device on this node.
+    pub fn resident_pods(&self) -> Vec<PodId> {
+        let mut pods: Vec<PodId> = self
+            .gpus
+            .iter()
+            .filter_map(|g| g.allocated_to)
+            .collect();
+        pods.sort_unstable();
+        pods.dedup();
+        pods
+    }
+}
+
+/// Device-level allocation failures (distinct from scheduling failures —
+/// these indicate races/bugs and abort the gang transaction).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum AllocError {
+    #[error("node {0} is unhealthy")]
+    NodeUnhealthy(NodeId),
+    #[error("node {0} has no GPU device {1}")]
+    NoSuchDevice(NodeId, u8),
+    #[error("node {0} GPU device {1} is busy")]
+    DeviceBusy(NodeId, u8),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ids::JobId;
+
+    fn node8() -> (Node, GpuType) {
+        let t = GpuType::type_h(GpuTypeId(0));
+        (Node::new(NodeId(0), &t, GroupId(0)), t)
+    }
+
+    fn pod(j: u64, r: u32) -> PodId {
+        PodId::new(JobId(j), r)
+    }
+
+    #[test]
+    fn fresh_node_is_all_free() {
+        let (n, t) = node8();
+        assert_eq!(n.free_gpus(), 8);
+        assert_eq!(n.allocated_gpus(), 0);
+        assert!(!n.is_fragmented());
+        assert_eq!(n.largest_free_island(&t), 8);
+    }
+
+    #[test]
+    fn allocate_and_release_roundtrip() {
+        let (mut n, _) = node8();
+        n.allocate(pod(1, 0), &[0, 1, 2, 3]).unwrap();
+        assert_eq!(n.free_gpus(), 4);
+        assert!(n.is_fragmented());
+        assert_eq!(n.devices_of(pod(1, 0)), vec![0, 1, 2, 3]);
+        assert_eq!(n.release_pod(pod(1, 0)), 4);
+        assert_eq!(n.free_gpus(), 8);
+        assert!(!n.is_fragmented());
+    }
+
+    #[test]
+    fn allocate_is_all_or_nothing() {
+        let (mut n, _) = node8();
+        n.allocate(pod(1, 0), &[3]).unwrap();
+        let err = n.allocate(pod(2, 0), &[2, 3]).unwrap_err();
+        assert_eq!(err, AllocError::DeviceBusy(NodeId(0), 3));
+        // Device 2 must NOT have been allocated by the failed call.
+        assert!(n.gpus[2].free());
+    }
+
+    #[test]
+    fn allocate_rejects_bad_device() {
+        let (mut n, _) = node8();
+        assert!(matches!(
+            n.allocate(pod(1, 0), &[42]),
+            Err(AllocError::NoSuchDevice(_, 42))
+        ));
+    }
+
+    #[test]
+    fn unhealthy_node_is_not_schedulable() {
+        let (mut n, t) = node8();
+        n.health = Health::Cordoned;
+        assert_eq!(n.free_gpus(), 0);
+        assert_eq!(n.largest_free_island(&t), 0);
+        assert!(n.allocate(pod(1, 0), &[0]).is_err());
+        assert!(!n.is_fragmented()); // Excluded from GFR.
+    }
+
+    #[test]
+    fn faulty_device_shrinks_free_and_islands() {
+        let (mut n, t) = node8();
+        n.gpus[0].health = Health::Faulty;
+        assert_eq!(n.free_gpus(), 7);
+        assert_eq!(n.largest_free_island(&t), 7);
+    }
+
+    #[test]
+    fn type_l_islands_track_quads() {
+        let t = GpuType::type_l(GpuTypeId(1));
+        let mut n = Node::new(NodeId(1), &t, GroupId(0));
+        n.allocate(pod(1, 0), &[0, 1]).unwrap();
+        // Quad 0 has 2 free, quad 1 has 4 free.
+        assert_eq!(n.largest_free_island(&t), 4);
+    }
+
+    #[test]
+    fn fully_allocated_node_not_fragmented() {
+        let (mut n, _) = node8();
+        n.allocate(pod(1, 0), &[0, 1, 2, 3, 4, 5, 6, 7]).unwrap();
+        assert!(!n.is_fragmented());
+    }
+
+    #[test]
+    fn resident_pods_dedups() {
+        let (mut n, _) = node8();
+        n.allocate(pod(1, 0), &[0, 1]).unwrap();
+        n.allocate(pod(2, 1), &[2]).unwrap();
+        assert_eq!(n.resident_pods(), vec![pod(1, 0), pod(2, 1)]);
+    }
+}

@@ -1,0 +1,112 @@
+//! GPU-Type-based node pools (§3.4.1): heterogeneous clusters are split by
+//! GPU model so scheduling searches only within the matching pool instead of
+//! traversing the whole cluster.
+
+use super::ids::{GpuTypeId, NodeId, PoolId};
+
+/// One node pool: all nodes carrying a given GPU model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodePool {
+    pub id: PoolId,
+    pub gpu_type: GpuTypeId,
+    pub nodes: Vec<NodeId>,
+    /// Total GPUs across member nodes (static).
+    pub total_gpus: u32,
+}
+
+impl NodePool {
+    pub fn new(id: PoolId, gpu_type: GpuTypeId) -> NodePool {
+        NodePool {
+            id,
+            gpu_type,
+            nodes: Vec::new(),
+            total_gpus: 0,
+        }
+    }
+
+    pub fn add_node(&mut self, node: NodeId, gpus: u32) {
+        self.nodes.push(node);
+        self.total_gpus += gpus;
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Pool registry with type→pool lookup.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PoolSet {
+    pools: Vec<NodePool>,
+}
+
+impl PoolSet {
+    pub fn new() -> PoolSet {
+        PoolSet::default()
+    }
+
+    /// Get or create the pool for `gpu_type`.
+    pub fn pool_for_type_mut(&mut self, gpu_type: GpuTypeId) -> &mut NodePool {
+        if let Some(i) = self.pools.iter().position(|p| p.gpu_type == gpu_type) {
+            &mut self.pools[i]
+        } else {
+            let id = PoolId(self.pools.len() as u16);
+            self.pools.push(NodePool::new(id, gpu_type));
+            self.pools.last_mut().unwrap()
+        }
+    }
+
+    pub fn pool_for_type(&self, gpu_type: GpuTypeId) -> Option<&NodePool> {
+        self.pools.iter().find(|p| p.gpu_type == gpu_type)
+    }
+
+    pub fn get(&self, id: PoolId) -> &NodePool {
+        &self.pools[id.index()]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &NodePool> {
+        self.pools.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pools.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pools.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_partition_by_type() {
+        let mut ps = PoolSet::new();
+        ps.pool_for_type_mut(GpuTypeId(0)).add_node(NodeId(0), 8);
+        ps.pool_for_type_mut(GpuTypeId(1)).add_node(NodeId(1), 4);
+        ps.pool_for_type_mut(GpuTypeId(0)).add_node(NodeId(2), 8);
+        assert_eq!(ps.len(), 2);
+        let p0 = ps.pool_for_type(GpuTypeId(0)).unwrap();
+        assert_eq!(p0.num_nodes(), 2);
+        assert_eq!(p0.total_gpus, 16);
+        let p1 = ps.pool_for_type(GpuTypeId(1)).unwrap();
+        assert_eq!(p1.total_gpus, 4);
+    }
+
+    #[test]
+    fn missing_type_is_none() {
+        let ps = PoolSet::new();
+        assert!(ps.pool_for_type(GpuTypeId(9)).is_none());
+    }
+
+    #[test]
+    fn pool_ids_are_stable() {
+        let mut ps = PoolSet::new();
+        let id0 = ps.pool_for_type_mut(GpuTypeId(5)).id;
+        let id1 = ps.pool_for_type_mut(GpuTypeId(6)).id;
+        assert_eq!(ps.get(id0).gpu_type, GpuTypeId(5));
+        assert_eq!(ps.get(id1).gpu_type, GpuTypeId(6));
+    }
+}

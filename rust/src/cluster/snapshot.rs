@@ -1,0 +1,374 @@
+//! Scheduling snapshots (§3.4.3).
+//!
+//! Before each cycle the scheduler works against a consistent copy of the
+//! resource state. The naive approach deep-copies everything; Kant's
+//! optimization maintains a persistent snapshot and applies only the delta
+//! recorded in [`ClusterState`]'s mutation log since the last cycle —
+//! "copies only the data portions modified since the last scheduling
+//! cycle", which the paper reports cut RSCH CPU load by >50 % on a
+//! 1,000-node cluster. Both modes are implemented; equivalence is
+//! property-tested and the ablation bench measures the gap.
+
+use super::ids::{GpuTypeId, GroupId, NodeId};
+use super::node::Zone;
+use super::state::ClusterState;
+
+/// Dense, scoring-ready record of one node. This is what feature extraction
+/// reads — both the native Rust scorer and the XLA feature packer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeRecord {
+    pub id: NodeId,
+    pub gpu_type: GpuTypeId,
+    pub group: GroupId,
+    pub free: u32,
+    pub total: u32,
+    pub alloc: u32,
+    pub healthy: bool,
+    pub in_inference_zone: bool,
+    pub hbd_free: u32,
+    pub largest_free_island: u32,
+}
+
+/// Aggregated record of one NodeNetGroup.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct GroupRecord {
+    pub free: u32,
+    pub total: u32,
+    /// Nodes with every GPU free (candidates for whole-node jobs).
+    pub whole_free_nodes: u32,
+    /// Fraction of member nodes in the inference dedicated zone.
+    pub zone_frac: f32,
+    /// Fraction of member nodes that are schedulable.
+    pub healthy_frac: f32,
+}
+
+/// How the snapshot refreshes from state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotMode {
+    /// Rebuild every record each cycle (the baseline the paper measures
+    /// against).
+    DeepCopy,
+    /// Apply only the mutation-log delta since the previous refresh.
+    Incremental,
+}
+
+/// A consistent scheduling-time view of the cluster.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub nodes: Vec<NodeRecord>,
+    pub groups: Vec<GroupRecord>,
+    mode: SnapshotMode,
+    /// Mutation-log cursor (Incremental mode).
+    cursor: u64,
+    initialized: bool,
+    /// Refresh-cost counters for the §3.4.3 ablation.
+    pub stats: SnapshotStats,
+}
+
+/// Counters proving how much work each refresh does.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SnapshotStats {
+    pub refreshes: u64,
+    pub node_records_rebuilt: u64,
+    pub full_rebuilds: u64,
+}
+
+impl Snapshot {
+    pub fn new(mode: SnapshotMode) -> Snapshot {
+        Snapshot {
+            nodes: Vec::new(),
+            groups: Vec::new(),
+            mode,
+            cursor: 0,
+            initialized: false,
+            stats: SnapshotStats::default(),
+        }
+    }
+
+    pub fn mode(&self) -> SnapshotMode {
+        self.mode
+    }
+
+    /// Bring the snapshot up to date with `state`.
+    pub fn refresh(&mut self, state: &ClusterState) {
+        self.stats.refreshes += 1;
+        match self.mode {
+            SnapshotMode::DeepCopy => self.full_rebuild(state),
+            SnapshotMode::Incremental => {
+                if !self.initialized {
+                    self.full_rebuild(state);
+                } else {
+                    match state.log_since(self.cursor) {
+                        None => self.full_rebuild(state), // Log compacted past us.
+                        Some(touched) => {
+                            let touched: Vec<NodeId> = {
+                                let mut t = touched.to_vec();
+                                t.sort_unstable();
+                                t.dedup();
+                                t
+                            };
+                            for n in touched {
+                                self.rebuild_node(state, n);
+                                self.stats.node_records_rebuilt += 1;
+                            }
+                            self.cursor = state.log_head();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn full_rebuild(&mut self, state: &ClusterState) {
+        self.stats.full_rebuilds += 1;
+        self.stats.node_records_rebuilt += state.nodes.len() as u64;
+        self.nodes = state
+            .nodes
+            .iter()
+            .map(|n| {
+                let gpu_type = state.gpu_type(n.gpu_type);
+                NodeRecord {
+                    id: n.id,
+                    gpu_type: n.gpu_type,
+                    group: n.group,
+                    free: n.free_gpus(),
+                    total: n.total_gpus(),
+                    alloc: n.allocated_gpus(),
+                    healthy: n.health.schedulable(),
+                    in_inference_zone: n.zone == Zone::InferenceDedicated,
+                    hbd_free: n.hbd.map(|h| state.hbd_free(h)).unwrap_or(0),
+                    largest_free_island: n.largest_free_island(gpu_type),
+                }
+            })
+            .collect();
+        self.rebuild_all_groups(state);
+        self.cursor = state.log_head();
+        self.initialized = true;
+    }
+
+    fn rebuild_node(&mut self, state: &ClusterState, id: NodeId) {
+        let n = state.node(id);
+        let gpu_type = state.gpu_type(n.gpu_type);
+        let rec = NodeRecord {
+            id: n.id,
+            gpu_type: n.gpu_type,
+            group: n.group,
+            free: n.free_gpus(),
+            total: n.total_gpus(),
+            alloc: n.allocated_gpus(),
+            healthy: n.health.schedulable(),
+            in_inference_zone: n.zone == Zone::InferenceDedicated,
+            hbd_free: n.hbd.map(|h| state.hbd_free(h)).unwrap_or(0),
+            largest_free_island: n.largest_free_island(gpu_type),
+        };
+        self.nodes[id.index()] = rec;
+        self.rebuild_group(state, n.group);
+        // HBD free counts are cluster aggregates: any member node's record
+        // may be stale after a mutation elsewhere in the domain. Refresh
+        // records of HBD siblings cheaply from the state aggregate.
+        if let Some(h) = n.hbd {
+            let free = state.hbd_free(h);
+            for &sib in &state.fabric.hbds[h.index()].nodes {
+                self.nodes[sib.index()].hbd_free = free;
+            }
+        }
+    }
+
+    fn rebuild_group(&mut self, state: &ClusterState, g: GroupId) {
+        let members = &state.fabric.groups[g.index()].nodes;
+        let mut rec = GroupRecord {
+            free: state.group_free(g),
+            total: state.group_total(g),
+            ..Default::default()
+        };
+        let mut zone = 0u32;
+        let mut healthy = 0u32;
+        for &n in members {
+            let node = state.node(n);
+            if node.zone == Zone::InferenceDedicated {
+                zone += 1;
+            }
+            if node.health.schedulable() {
+                healthy += 1;
+                if node.free_gpus() == node.total_gpus() {
+                    rec.whole_free_nodes += 1;
+                }
+            }
+        }
+        let count = members.len().max(1) as f32;
+        rec.zone_frac = zone as f32 / count;
+        rec.healthy_frac = healthy as f32 / count;
+        self.groups[g.index()] = rec;
+    }
+
+    fn rebuild_all_groups(&mut self, state: &ClusterState) {
+        self.groups = vec![GroupRecord::default(); state.fabric.num_groups()];
+        for g in 0..state.fabric.num_groups() {
+            self.rebuild_group(state, GroupId(g as u32));
+        }
+    }
+
+    /// Current mutation-log cursor (for `ClusterState::compact_log`).
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::gpu::Health;
+    use crate::cluster::ids::{JobId, PodId};
+    use crate::cluster::state::PodPlacement;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn state() -> ClusterState {
+        ClusterBuilder::build(&ClusterSpec::homogeneous("s", 2, 2, 4))
+    }
+
+    fn placement(job: u64, node: u32, devs: Vec<u8>) -> PodPlacement {
+        PodPlacement {
+            pod: PodId::new(JobId(job), 0),
+            node: NodeId(node),
+            devices: devs,
+            nic: 0,
+        }
+    }
+
+    #[test]
+    fn deep_and_incremental_agree_after_mutations() {
+        let mut s = state();
+        let mut deep = Snapshot::new(SnapshotMode::DeepCopy);
+        let mut inc = Snapshot::new(SnapshotMode::Incremental);
+        deep.refresh(&s);
+        inc.refresh(&s);
+        assert_eq!(deep.nodes, inc.nodes);
+        assert_eq!(deep.groups, inc.groups);
+
+        s.commit_placements(JobId(1), vec![placement(1, 0, vec![0, 1, 2])])
+            .unwrap();
+        s.commit_placements(JobId(2), vec![placement(2, 5, vec![0])])
+            .unwrap();
+        s.set_node_health(NodeId(9), Health::Cordoned);
+        s.release_job(JobId(2)).unwrap();
+
+        deep.refresh(&s);
+        inc.refresh(&s);
+        assert_eq!(deep.nodes, inc.nodes);
+        assert_eq!(deep.groups, inc.groups);
+    }
+
+    #[test]
+    fn incremental_rebuilds_fewer_records() {
+        let mut s = state();
+        let mut inc = Snapshot::new(SnapshotMode::Incremental);
+        inc.refresh(&s); // Full build: 16 nodes.
+        s.commit_placements(JobId(1), vec![placement(1, 0, vec![0])])
+            .unwrap();
+        inc.refresh(&s);
+        assert_eq!(inc.stats.full_rebuilds, 1);
+        assert_eq!(inc.stats.node_records_rebuilt, 16 + 1);
+    }
+
+    #[test]
+    fn compacted_log_triggers_full_rebuild() {
+        let mut s = state();
+        let mut inc = Snapshot::new(SnapshotMode::Incremental);
+        inc.refresh(&s);
+        s.commit_placements(JobId(1), vec![placement(1, 1, vec![0])])
+            .unwrap();
+        s.compact_log(s.log_head()); // Compact past the snapshot cursor... cursor == head0 < head.
+        inc.refresh(&s);
+        assert_eq!(inc.stats.full_rebuilds, 2);
+        // And it is still correct.
+        let mut deep = Snapshot::new(SnapshotMode::DeepCopy);
+        deep.refresh(&s);
+        assert_eq!(deep.nodes, inc.nodes);
+    }
+
+    #[test]
+    fn group_records_track_whole_free_nodes() {
+        let mut s = state();
+        let mut snap = Snapshot::new(SnapshotMode::DeepCopy);
+        snap.refresh(&s);
+        assert_eq!(snap.groups[0].whole_free_nodes, 4);
+        s.commit_placements(JobId(1), vec![placement(1, 0, vec![0])])
+            .unwrap();
+        snap.refresh(&s);
+        assert_eq!(snap.groups[0].whole_free_nodes, 3);
+        assert_eq!(snap.groups[0].free, 31);
+    }
+
+    #[test]
+    fn property_incremental_equals_deep_after_random_ops() {
+        prop::check(60, |rng: &mut Pcg32| {
+            let mut s = state();
+            let mut deep = Snapshot::new(SnapshotMode::DeepCopy);
+            let mut inc = Snapshot::new(SnapshotMode::Incremental);
+            let mut live_jobs: Vec<u64> = Vec::new();
+            let mut next_job = 1u64;
+            for step in 0..rng.range_inclusive(1, 40) {
+                match rng.below(4) {
+                    0 | 1 => {
+                        // Try to place a random 1-4 GPU pod.
+                        let node = NodeId(rng.below(16) as u32);
+                        let want = rng.range_inclusive(1, 4) as usize;
+                        let free = s.node(node).free_gpu_indices();
+                        if free.len() >= want && s.node(node).health.schedulable() {
+                            let devs = free[..want].to_vec();
+                            s.commit_placements(
+                                JobId(next_job),
+                                vec![placement(next_job, node.0, devs)],
+                            )
+                            .unwrap();
+                            live_jobs.push(next_job);
+                            next_job += 1;
+                        }
+                    }
+                    2 => {
+                        if let Some(i) = (!live_jobs.is_empty())
+                            .then(|| rng.below(live_jobs.len() as u64) as usize)
+                        {
+                            let j = live_jobs.swap_remove(i);
+                            s.release_job(JobId(j)).unwrap();
+                        }
+                    }
+                    _ => {
+                        let node = NodeId(rng.below(16) as u32);
+                        // Only flip health of nodes with no allocations, to
+                        // keep the exercise simple and valid.
+                        if s.node(node).allocated_gpus() == 0 {
+                            let h = if s.node(node).health.schedulable() {
+                                Health::Cordoned
+                            } else {
+                                Health::Healthy
+                            };
+                            s.set_node_health(node, h);
+                        }
+                    }
+                }
+                // Refresh at random points, not only at the end.
+                if rng.chance(0.3) || step == 0 {
+                    deep.refresh(&s);
+                    inc.refresh(&s);
+                    prop_assert!(
+                        deep.nodes == inc.nodes,
+                        "node records diverged at step {step}"
+                    );
+                    prop_assert!(
+                        deep.groups == inc.groups,
+                        "group records diverged at step {step}"
+                    );
+                }
+            }
+            deep.refresh(&s);
+            inc.refresh(&s);
+            prop_assert!(deep.nodes == inc.nodes, "final node records diverged");
+            prop_assert!(deep.groups == inc.groups, "final group records diverged");
+            Ok(())
+        });
+    }
+}

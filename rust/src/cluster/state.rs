@@ -1,0 +1,548 @@
+//! `ClusterState`: the authoritative, mutable view of the cluster —
+//! nodes + fabric + pools + the allocation index — with maintained
+//! aggregates (per-group / per-pool / per-HBD free counts) and a mutation
+//! log that feeds incremental snapshots (§3.4.3).
+
+use std::collections::HashMap;
+
+use super::gpu::{GpuType, Health};
+use super::ids::{GpuTypeId, GroupId, HbdId, JobId, NodeId, PodId, PoolId};
+use super::node::{AllocError, Node};
+use super::pool::PoolSet;
+use super::topology::Fabric;
+
+/// One pod's physical placement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PodPlacement {
+    pub pod: PodId,
+    pub node: NodeId,
+    /// Exact GPU device indices on the node.
+    pub devices: Vec<u8>,
+    /// The RDMA NIC paired with the pod (index on the node).
+    pub nic: u8,
+}
+
+/// Errors from state mutations.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum StateError {
+    #[error("job {0} already placed")]
+    AlreadyPlaced(JobId),
+    #[error("job {0} has no placement")]
+    NotPlaced(JobId),
+    #[error(transparent)]
+    Alloc(#[from] AllocError),
+}
+
+/// The authoritative cluster state.
+#[derive(Debug, Clone)]
+pub struct ClusterState {
+    pub gpu_types: Vec<GpuType>,
+    pub nodes: Vec<Node>,
+    pub fabric: Fabric,
+    pub pools: PoolSet,
+    node_pool: Vec<PoolId>,
+
+    // Maintained aggregates.
+    group_free: Vec<u32>,
+    group_total: Vec<u32>,
+    pool_free: Vec<u32>,
+    hbd_free: Vec<u32>,
+    total_gpus: u32,
+    allocated_gpus: u32,
+
+    // Allocation index.
+    placements: HashMap<JobId, Vec<PodPlacement>>,
+
+    // Mutation log for incremental snapshots: monotonically growing list of
+    // touched node ids; `log_base` is the absolute offset of entry 0 so the
+    // log can be compacted without invalidating consumer cursors.
+    mutation_log: Vec<NodeId>,
+    log_base: u64,
+}
+
+impl ClusterState {
+    /// Assemble a state from parts (normally via `cluster::builder`).
+    pub fn new(gpu_types: Vec<GpuType>, nodes: Vec<Node>, fabric: Fabric) -> ClusterState {
+        let mut pools = PoolSet::new();
+        let mut node_pool = Vec::with_capacity(nodes.len());
+        for n in &nodes {
+            let pool = pools.pool_for_type_mut(n.gpu_type);
+            pool.add_node(n.id, n.total_gpus());
+            node_pool.push(pool.id);
+        }
+        let num_groups = fabric.num_groups();
+        let mut s = ClusterState {
+            group_free: vec![0; num_groups],
+            group_total: vec![0; num_groups],
+            pool_free: vec![0; pools.len()],
+            hbd_free: vec![0; fabric.hbds.len()],
+            total_gpus: 0,
+            allocated_gpus: 0,
+            placements: HashMap::new(),
+            mutation_log: Vec::new(),
+            log_base: 0,
+            node_pool,
+            gpu_types,
+            nodes,
+            fabric,
+            pools,
+        };
+        s.rebuild_aggregates();
+        s
+    }
+
+    /// Recompute every aggregate from scratch (startup or after bulk edits).
+    pub fn rebuild_aggregates(&mut self) {
+        self.group_free.iter_mut().for_each(|x| *x = 0);
+        self.group_total.iter_mut().for_each(|x| *x = 0);
+        self.pool_free.iter_mut().for_each(|x| *x = 0);
+        self.hbd_free.iter_mut().for_each(|x| *x = 0);
+        self.total_gpus = 0;
+        self.allocated_gpus = 0;
+        for n in &self.nodes {
+            let free = n.free_gpus();
+            let g = n.group.index();
+            self.group_free[g] += free;
+            self.group_total[g] += n.total_gpus();
+            self.pool_free[self.node_pool[n.id.index()].index()] += free;
+            if let Some(h) = n.hbd {
+                self.hbd_free[h.index()] += free;
+            }
+            self.total_gpus += n.total_gpus();
+            self.allocated_gpus += n.allocated_gpus();
+        }
+    }
+
+    #[inline]
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.index()]
+    }
+
+    #[inline]
+    pub fn gpu_type(&self, id: GpuTypeId) -> &GpuType {
+        &self.gpu_types[id.index()]
+    }
+
+    #[inline]
+    pub fn pool_of_node(&self, id: NodeId) -> PoolId {
+        self.node_pool[id.index()]
+    }
+
+    #[inline]
+    pub fn group_free(&self, g: GroupId) -> u32 {
+        self.group_free[g.index()]
+    }
+
+    #[inline]
+    pub fn group_total(&self, g: GroupId) -> u32 {
+        self.group_total[g.index()]
+    }
+
+    #[inline]
+    pub fn hbd_free(&self, h: HbdId) -> u32 {
+        self.hbd_free[h.index()]
+    }
+
+    /// Free GPUs in the pool serving `gpu_type` (dynamic-admission input).
+    pub fn pool_free_for_type(&self, gpu_type: GpuTypeId) -> u32 {
+        self.pools
+            .pool_for_type(gpu_type)
+            .map(|p| self.pool_free[p.id.index()])
+            .unwrap_or(0)
+    }
+
+    #[inline]
+    pub fn total_gpus(&self) -> u32 {
+        self.total_gpus
+    }
+
+    #[inline]
+    pub fn allocated_gpus(&self) -> u32 {
+        self.allocated_gpus
+    }
+
+    /// GAR numerator/denominator at this instant (§4.1).
+    pub fn gpu_allocation_ratio(&self) -> f64 {
+        if self.total_gpus == 0 {
+            0.0
+        } else {
+            self.allocated_gpus as f64 / self.total_gpus as f64
+        }
+    }
+
+    /// GFR (§4.3): fragmented / schedulable nodes, optionally per pool.
+    pub fn fragmentation_ratio(&self, pool: Option<PoolId>) -> f64 {
+        let mut fragmented = 0usize;
+        let mut schedulable = 0usize;
+        for n in &self.nodes {
+            if let Some(p) = pool {
+                if self.node_pool[n.id.index()] != p {
+                    continue;
+                }
+            }
+            if !n.health.schedulable() {
+                continue;
+            }
+            schedulable += 1;
+            if n.is_fragmented() {
+                fragmented += 1;
+            }
+        }
+        if schedulable == 0 {
+            0.0
+        } else {
+            fragmented as f64 / schedulable as f64
+        }
+    }
+
+    /// Commit a whole job's placement plan transactionally: either every
+    /// pod binds or nothing does (gang semantics are enforced one level up;
+    /// this guards against placement-plan races).
+    pub fn commit_placements(
+        &mut self,
+        job: JobId,
+        plan: Vec<PodPlacement>,
+    ) -> Result<(), StateError> {
+        if self.placements.contains_key(&job) {
+            return Err(StateError::AlreadyPlaced(job));
+        }
+        // Validate first (no mutation).
+        for p in &plan {
+            let node = &self.nodes[p.node.index()];
+            if !node.health.schedulable() {
+                return Err(AllocError::NodeUnhealthy(p.node).into());
+            }
+            for &d in &p.devices {
+                match node.gpus.get(d as usize) {
+                    None => return Err(AllocError::NoSuchDevice(p.node, d).into()),
+                    Some(g) if !g.free() => {
+                        return Err(AllocError::DeviceBusy(p.node, d).into())
+                    }
+                    Some(_) => {}
+                }
+            }
+        }
+        // Detect intra-plan duplicate device use (two pods, same device).
+        {
+            let mut seen: Vec<(NodeId, u8)> = plan
+                .iter()
+                .flat_map(|p| p.devices.iter().map(|&d| (p.node, d)))
+                .collect();
+            let before = seen.len();
+            seen.sort_unstable();
+            seen.dedup();
+            if seen.len() != before {
+                // Find one offender for the error message.
+                for p in &plan {
+                    for &d in &p.devices {
+                        if plan
+                            .iter()
+                            .flat_map(|q| q.devices.iter().map(move |&e| (q.node, e, q.pod)))
+                            .filter(|&(n, e, _)| n == p.node && e == d)
+                            .count()
+                            > 1
+                        {
+                            return Err(AllocError::DeviceBusy(p.node, d).into());
+                        }
+                    }
+                }
+            }
+        }
+        // Apply.
+        for p in &plan {
+            self.nodes[p.node.index()]
+                .allocate(p.pod, &p.devices)
+                .expect("validated above");
+            self.note_alloc_delta(p.node, p.devices.len() as u32, true);
+        }
+        self.placements.insert(job, plan);
+        Ok(())
+    }
+
+    /// Release every pod of `job`; returns the placements that were freed.
+    pub fn release_job(&mut self, job: JobId) -> Result<Vec<PodPlacement>, StateError> {
+        let plan = self
+            .placements
+            .remove(&job)
+            .ok_or(StateError::NotPlaced(job))?;
+        for p in &plan {
+            let freed = self.nodes[p.node.index()].release_pod(p.pod);
+            debug_assert_eq!(freed as usize, p.devices.len());
+            self.note_alloc_delta(p.node, freed, false);
+        }
+        Ok(plan)
+    }
+
+    fn note_alloc_delta(&mut self, node: NodeId, gpus: u32, alloc: bool) {
+        let n = &self.nodes[node.index()];
+        let g = n.group.index();
+        let p = self.node_pool[node.index()].index();
+        if alloc {
+            self.group_free[g] -= gpus;
+            self.pool_free[p] -= gpus;
+            self.allocated_gpus += gpus;
+            if let Some(h) = n.hbd {
+                self.hbd_free[h.index()] -= gpus;
+            }
+        } else {
+            self.group_free[g] += gpus;
+            self.pool_free[p] += gpus;
+            self.allocated_gpus -= gpus;
+            if let Some(h) = n.hbd {
+                self.hbd_free[h.index()] += gpus;
+            }
+        }
+        self.log_touch(node);
+    }
+
+    /// Change a node's health; aggregates update (free counts depend on
+    /// schedulability) and the mutation log records the touch.
+    pub fn set_node_health(&mut self, node: NodeId, health: Health) {
+        let old_free = self.nodes[node.index()].free_gpus();
+        self.nodes[node.index()].health = health;
+        let new_free = self.nodes[node.index()].free_gpus();
+        let n = &self.nodes[node.index()];
+        let g = n.group.index();
+        let p = self.node_pool[node.index()].index();
+        let hbd = n.hbd;
+        if new_free >= old_free {
+            let d = new_free - old_free;
+            self.group_free[g] += d;
+            self.pool_free[p] += d;
+            if let Some(h) = hbd {
+                self.hbd_free[h.index()] += d;
+            }
+        } else {
+            let d = old_free - new_free;
+            self.group_free[g] -= d;
+            self.pool_free[p] -= d;
+            if let Some(h) = hbd {
+                self.hbd_free[h.index()] -= d;
+            }
+        }
+        self.log_touch(node);
+    }
+
+    pub fn placements_of(&self, job: JobId) -> Option<&[PodPlacement]> {
+        self.placements.get(&job).map(|v| v.as_slice())
+    }
+
+    /// Nodes a job occupies (sorted, deduped).
+    pub fn nodes_of(&self, job: JobId) -> Vec<NodeId> {
+        let mut ns: Vec<NodeId> = self
+            .placements
+            .get(&job)
+            .map(|v| v.iter().map(|p| p.node).collect())
+            .unwrap_or_default();
+        ns.sort_unstable();
+        ns.dedup();
+        ns
+    }
+
+    pub fn num_running_jobs(&self) -> usize {
+        self.placements.len()
+    }
+
+    // ---- Mutation log (incremental snapshot feed) ----
+
+    fn log_touch(&mut self, node: NodeId) {
+        // NB: no consecutive-dedup here — a consumer whose cursor already
+        // passed the previous entry would lose the new touch. Consumers
+        // dedup on read; `compact_log` bounds growth.
+        self.mutation_log.push(node);
+    }
+
+    /// Absolute position just past the newest log entry.
+    pub fn log_head(&self) -> u64 {
+        self.log_base + self.mutation_log.len() as u64
+    }
+
+    /// Entries in [from, head): the nodes touched since a consumer's cursor.
+    /// Returns `None` if `from` pre-dates the compacted window (consumer
+    /// must fall back to a full rebuild).
+    pub fn log_since(&self, from: u64) -> Option<&[NodeId]> {
+        if from < self.log_base {
+            return None;
+        }
+        let start = (from - self.log_base) as usize;
+        Some(&self.mutation_log[start.min(self.mutation_log.len())..])
+    }
+
+    /// Drop log entries older than `upto` (min cursor across consumers).
+    pub fn compact_log(&mut self, upto: u64) {
+        if upto <= self.log_base {
+            return;
+        }
+        let drop = ((upto - self.log_base) as usize).min(self.mutation_log.len());
+        self.mutation_log.drain(..drop);
+        self.log_base += drop as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+
+    fn small_state() -> ClusterState {
+        // 2 spines x 2 groups x 4 nodes x 8 GPUs = 128 GPUs.
+        ClusterBuilder::build(&ClusterSpec::homogeneous("t", 2, 2, 4))
+    }
+
+    fn pod(j: u64, r: u32) -> PodId {
+        PodId::new(JobId(j), r)
+    }
+
+    fn place(job: u64, node: u32, devices: Vec<u8>) -> PodPlacement {
+        PodPlacement {
+            pod: pod(job, 0),
+            node: NodeId(node),
+            devices,
+            nic: 0,
+        }
+    }
+
+    #[test]
+    fn aggregates_track_commits_and_releases() {
+        let mut s = small_state();
+        assert_eq!(s.total_gpus(), 128);
+        assert_eq!(s.allocated_gpus(), 0);
+        let g0 = s.node(NodeId(0)).group;
+        let before = s.group_free(g0);
+        s.commit_placements(JobId(1), vec![place(1, 0, vec![0, 1, 2, 3])])
+            .unwrap();
+        assert_eq!(s.allocated_gpus(), 4);
+        assert_eq!(s.group_free(g0), before - 4);
+        assert!((s.gpu_allocation_ratio() - 4.0 / 128.0).abs() < 1e-12);
+        s.release_job(JobId(1)).unwrap();
+        assert_eq!(s.allocated_gpus(), 0);
+        assert_eq!(s.group_free(g0), before);
+    }
+
+    #[test]
+    fn commit_is_transactional_on_busy_device() {
+        let mut s = small_state();
+        s.commit_placements(JobId(1), vec![place(1, 0, vec![0])])
+            .unwrap();
+        let plan = vec![
+            PodPlacement {
+                pod: pod(2, 0),
+                node: NodeId(1),
+                devices: vec![0, 1],
+                nic: 0,
+            },
+            PodPlacement {
+                pod: pod(2, 1),
+                node: NodeId(0),
+                devices: vec![0], // Busy.
+                nic: 0,
+            },
+        ];
+        assert!(s.commit_placements(JobId(2), plan).is_err());
+        // Pod 2/0's devices must not be bound.
+        assert_eq!(s.node(NodeId(1)).free_gpus(), 8);
+        assert_eq!(s.allocated_gpus(), 1);
+    }
+
+    #[test]
+    fn commit_rejects_intra_plan_duplicates() {
+        let mut s = small_state();
+        let plan = vec![
+            PodPlacement {
+                pod: pod(1, 0),
+                node: NodeId(0),
+                devices: vec![0],
+                nic: 0,
+            },
+            PodPlacement {
+                pod: pod(1, 1),
+                node: NodeId(0),
+                devices: vec![0], // Same device!
+                nic: 0,
+            },
+        ];
+        assert!(s.commit_placements(JobId(1), plan).is_err());
+        assert_eq!(s.allocated_gpus(), 0);
+    }
+
+    #[test]
+    fn double_commit_rejected() {
+        let mut s = small_state();
+        s.commit_placements(JobId(1), vec![place(1, 0, vec![0])])
+            .unwrap();
+        assert!(matches!(
+            s.commit_placements(JobId(1), vec![place(1, 1, vec![0])]),
+            Err(StateError::AlreadyPlaced(_))
+        ));
+    }
+
+    #[test]
+    fn health_changes_update_free_aggregates() {
+        let mut s = small_state();
+        let g0 = s.node(NodeId(0)).group;
+        let before = s.group_free(g0);
+        s.set_node_health(NodeId(0), Health::Cordoned);
+        assert_eq!(s.group_free(g0), before - 8);
+        assert_eq!(s.pool_free_for_type(GpuTypeId(0)), 120);
+        s.set_node_health(NodeId(0), Health::Healthy);
+        assert_eq!(s.group_free(g0), before);
+    }
+
+    #[test]
+    fn fragmentation_ratio_counts_partial_nodes() {
+        let mut s = small_state();
+        assert_eq!(s.fragmentation_ratio(None), 0.0);
+        s.commit_placements(JobId(1), vec![place(1, 0, vec![0, 1])])
+            .unwrap();
+        assert!((s.fragmentation_ratio(None) - 1.0 / 16.0).abs() < 1e-12);
+        // A fully-allocated node is not fragmented.
+        s.commit_placements(
+            JobId(2),
+            vec![place(2, 1, vec![0, 1, 2, 3, 4, 5, 6, 7])],
+        )
+        .unwrap();
+        assert!((s.fragmentation_ratio(None) - 1.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mutation_log_tracks_and_compacts() {
+        let mut s = small_state();
+        let head0 = s.log_head();
+        s.commit_placements(JobId(1), vec![place(1, 3, vec![0])])
+            .unwrap();
+        s.release_job(JobId(1)).unwrap();
+        let touched = s.log_since(head0).unwrap().to_vec();
+        assert_eq!(touched, vec![NodeId(3), NodeId(3)]); // One per mutation.
+        let head1 = s.log_head();
+        s.compact_log(head1);
+        assert!(s.log_since(head0).is_none()); // Pre-window cursor.
+        assert_eq!(s.log_since(head1).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn nodes_of_reports_sorted_unique() {
+        let mut s = small_state();
+        let plan = vec![
+            PodPlacement {
+                pod: pod(1, 0),
+                node: NodeId(2),
+                devices: vec![0, 1],
+                nic: 0,
+            },
+            PodPlacement {
+                pod: pod(1, 1),
+                node: NodeId(1),
+                devices: vec![0, 1],
+                nic: 0,
+            },
+            PodPlacement {
+                pod: pod(1, 2),
+                node: NodeId(2),
+                devices: vec![2, 3],
+                nic: 1,
+            },
+        ];
+        s.commit_placements(JobId(1), plan).unwrap();
+        assert_eq!(s.nodes_of(JobId(1)), vec![NodeId(1), NodeId(2)]);
+    }
+}

@@ -1,0 +1,407 @@
+//! Tenants and GPU quota management (§3.2.1 static quota admission).
+//!
+//! Quotas are per (tenant, GPU type) because heterogeneous models are not
+//! comparable resources. Two modes:
+//!
+//! * **Isolated** — a tenant can never exceed its own limit.
+//! * **Shared** — a tenant may *borrow* unused quota from other tenants;
+//!   borrowing is recorded per job so quota-reclamation preemption (§3.2.3)
+//!   can find exactly which jobs to evict when a lender wants capacity back.
+
+use std::collections::HashMap;
+
+use super::ids::{GpuTypeId, JobId, TenantId};
+
+/// Quota sharing mode (cluster-wide policy in this implementation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuotaMode {
+    Shared,
+    Isolated,
+}
+
+/// A tenant of the cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tenant {
+    pub id: TenantId,
+    pub name: String,
+    /// Weight for fair ordering across tenant queues (reserved for future
+    /// fair-share work; 1.0 everywhere in the paper's experiments).
+    pub weight: f64,
+}
+
+impl Tenant {
+    pub fn new(id: TenantId, name: impl Into<String>) -> Tenant {
+        Tenant {
+            id,
+            name: name.into(),
+            weight: 1.0,
+        }
+    }
+}
+
+/// Per-(tenant, type) quota accounting entry. All units are GPU counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QuotaEntry {
+    /// The tenant's own limit for this GPU type.
+    pub limit: u32,
+    /// GPUs in use charged against the tenant's own limit.
+    pub used_own: u32,
+    /// GPUs of this tenant's limit currently lent to other tenants.
+    pub lent: u32,
+    /// GPUs this tenant is currently borrowing from others.
+    pub borrowed: u32,
+}
+
+impl QuotaEntry {
+    /// Own headroom: quota not used by self and not lent away.
+    pub fn own_free(&self) -> u32 {
+        self.limit.saturating_sub(self.used_own + self.lent)
+    }
+
+    /// Total GPUs the tenant currently occupies of this type.
+    pub fn occupied(&self) -> u32 {
+        self.used_own + self.borrowed
+    }
+}
+
+/// One borrowing record: `borrower` runs `job` on `amount` GPUs charged to
+/// `lender`'s limit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BorrowRecord {
+    pub job: JobId,
+    pub gpu_type: GpuTypeId,
+    pub borrower: TenantId,
+    pub lender: TenantId,
+    pub amount: u32,
+}
+
+/// Errors from quota operations.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum QuotaError {
+    #[error("tenant {tenant} over quota for type {gpu_type}: need {need}, available {available}")]
+    OverQuota {
+        tenant: TenantId,
+        gpu_type: GpuTypeId,
+        need: u32,
+        available: u32,
+    },
+    #[error("job {0} already charged")]
+    AlreadyCharged(JobId),
+    #[error("job {0} not charged")]
+    NotCharged(JobId),
+}
+
+/// The quota ledger: the static-quota half of QSCH admission.
+#[derive(Debug, Clone)]
+pub struct QuotaLedger {
+    mode: QuotaMode,
+    num_types: usize,
+    /// Dense [tenant][type] entries.
+    entries: Vec<QuotaEntry>,
+    /// Active borrow records, by job (a job may borrow from several lenders).
+    borrows: HashMap<JobId, Vec<BorrowRecord>>,
+    /// Own-quota charges by job: (tenant, type, amount).
+    charges: HashMap<JobId, Vec<(TenantId, GpuTypeId, u32)>>,
+}
+
+impl QuotaLedger {
+    pub fn new(num_tenants: usize, num_types: usize, mode: QuotaMode) -> QuotaLedger {
+        QuotaLedger {
+            mode,
+            num_types,
+            entries: vec![QuotaEntry::default(); num_tenants * num_types],
+            borrows: HashMap::new(),
+            charges: HashMap::new(),
+        }
+    }
+
+    pub fn mode(&self) -> QuotaMode {
+        self.mode
+    }
+
+    #[inline]
+    fn idx(&self, t: TenantId, g: GpuTypeId) -> usize {
+        t.index() * self.num_types + g.index()
+    }
+
+    pub fn entry(&self, t: TenantId, g: GpuTypeId) -> QuotaEntry {
+        self.entries[self.idx(t, g)]
+    }
+
+    pub fn set_limit(&mut self, t: TenantId, g: GpuTypeId, limit: u32) {
+        let i = self.idx(t, g);
+        self.entries[i].limit = limit;
+    }
+
+    fn num_tenants(&self) -> usize {
+        self.entries.len() / self.num_types
+    }
+
+    /// Headroom available to `t` for a *new* request of type `g` under the
+    /// current mode (does not mutate).
+    pub fn available(&self, t: TenantId, g: GpuTypeId) -> u32 {
+        let own = self.entry(t, g).own_free();
+        match self.mode {
+            QuotaMode::Isolated => own,
+            QuotaMode::Shared => {
+                let others: u32 = (0..self.num_tenants())
+                    .filter(|&o| o != t.index())
+                    .map(|o| self.entries[o * self.num_types + g.index()].own_free())
+                    .sum();
+                own + others
+            }
+        }
+    }
+
+    /// Static-quota admission check for one (type, amount) demand.
+    pub fn admit_check(&self, t: TenantId, g: GpuTypeId, amount: u32) -> Result<(), QuotaError> {
+        let available = self.available(t, g);
+        if amount <= available {
+            Ok(())
+        } else {
+            Err(QuotaError::OverQuota {
+                tenant: t,
+                gpu_type: g,
+                need: amount,
+                available,
+            })
+        }
+    }
+
+    /// Charge a job's demand against the ledger: own quota first, then (in
+    /// Shared mode) borrow from lenders in descending headroom order.
+    /// All-or-nothing: fails without mutating when headroom is insufficient.
+    pub fn charge(
+        &mut self,
+        job: JobId,
+        t: TenantId,
+        demands: &[(GpuTypeId, u32)],
+    ) -> Result<(), QuotaError> {
+        if self.charges.contains_key(&job) || self.borrows.contains_key(&job) {
+            return Err(QuotaError::AlreadyCharged(job));
+        }
+        for &(g, amount) in demands {
+            self.admit_check(t, g, amount)?;
+        }
+
+        let mut charges = Vec::new();
+        let mut borrows = Vec::new();
+        for &(g, amount) in demands {
+            let own = self.entry(t, g).own_free().min(amount);
+            if own > 0 {
+                let i = self.idx(t, g);
+                self.entries[i].used_own += own;
+                charges.push((t, g, own));
+            }
+            let mut rest = amount - own;
+            if rest > 0 {
+                debug_assert_eq!(self.mode, QuotaMode::Shared);
+                // Borrow from lenders, largest headroom first (stable order
+                // by tenant id for determinism).
+                let mut lenders: Vec<(usize, u32)> = (0..self.num_tenants())
+                    .filter(|&o| o != t.index())
+                    .map(|o| (o, self.entries[o * self.num_types + g.index()].own_free()))
+                    .filter(|&(_, free)| free > 0)
+                    .collect();
+                lenders.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                for (o, free) in lenders {
+                    if rest == 0 {
+                        break;
+                    }
+                    let take = free.min(rest);
+                    let oi = o * self.num_types + g.index();
+                    self.entries[oi].lent += take;
+                    let ti = self.idx(t, g);
+                    self.entries[ti].borrowed += take;
+                    borrows.push(BorrowRecord {
+                        job,
+                        gpu_type: g,
+                        borrower: t,
+                        lender: TenantId(o as u32),
+                        amount: take,
+                    });
+                    rest -= take;
+                }
+                debug_assert_eq!(rest, 0, "admit_check guaranteed headroom");
+            }
+        }
+        if !charges.is_empty() {
+            self.charges.insert(job, charges);
+        }
+        if !borrows.is_empty() {
+            self.borrows.insert(job, borrows);
+        }
+        Ok(())
+    }
+
+    /// Return a job's quota (on completion, preemption or requeue).
+    pub fn refund(&mut self, job: JobId) -> Result<(), QuotaError> {
+        let charges = self.charges.remove(&job);
+        let borrows = self.borrows.remove(&job);
+        if charges.is_none() && borrows.is_none() {
+            return Err(QuotaError::NotCharged(job));
+        }
+        for (t, g, amount) in charges.unwrap_or_default() {
+            let i = self.idx(t, g);
+            self.entries[i].used_own -= amount;
+        }
+        for b in borrows.unwrap_or_default() {
+            let li = self.idx(b.lender, b.gpu_type);
+            self.entries[li].lent -= b.amount;
+            let bi = self.idx(b.borrower, b.gpu_type);
+            self.entries[bi].borrowed -= b.amount;
+        }
+        Ok(())
+    }
+
+    /// Jobs currently borrowing from `lender` on type `g`, largest borrow
+    /// first — the candidate list for quota-reclamation preemption.
+    pub fn debtors(&self, lender: TenantId, g: GpuTypeId) -> Vec<BorrowRecord> {
+        let mut out: Vec<BorrowRecord> = self
+            .borrows
+            .values()
+            .flatten()
+            .filter(|b| b.lender == lender && b.gpu_type == g)
+            .copied()
+            .collect();
+        out.sort_by(|a, b| b.amount.cmp(&a.amount).then(a.job.cmp(&b.job)));
+        out
+    }
+
+    /// Whether `job` runs (partly) on borrowed quota.
+    pub fn is_borrowing(&self, job: JobId) -> bool {
+        self.borrows.contains_key(&job)
+    }
+
+    /// Quota utilization (occupied / limit) per tenant for type `g` —
+    /// Figure 10's series.
+    pub fn utilization(&self, g: GpuTypeId) -> Vec<(TenantId, u32, u32)> {
+        (0..self.num_tenants())
+            .map(|t| {
+                let e = self.entries[t * self.num_types + g.index()];
+                (TenantId(t as u32), e.limit, e.occupied())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T0: TenantId = TenantId(0);
+    const T1: TenantId = TenantId(1);
+    const T2: TenantId = TenantId(2);
+    const G: GpuTypeId = GpuTypeId(0);
+
+    fn ledger(mode: QuotaMode) -> QuotaLedger {
+        let mut l = QuotaLedger::new(3, 1, mode);
+        l.set_limit(T0, G, 8);
+        l.set_limit(T1, G, 16);
+        l.set_limit(T2, G, 0);
+        l
+    }
+
+    #[test]
+    fn isolated_enforces_own_limit() {
+        let mut l = ledger(QuotaMode::Isolated);
+        assert_eq!(l.available(T0, G), 8);
+        l.charge(JobId(1), T0, &[(G, 8)]).unwrap();
+        assert!(matches!(
+            l.charge(JobId(2), T0, &[(G, 1)]),
+            Err(QuotaError::OverQuota { available: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn shared_allows_borrowing() {
+        let mut l = ledger(QuotaMode::Shared);
+        assert_eq!(l.available(T0, G), 24);
+        l.charge(JobId(1), T0, &[(G, 20)]).unwrap();
+        let e0 = l.entry(T0, G);
+        assert_eq!(e0.used_own, 8);
+        assert_eq!(e0.borrowed, 12);
+        assert_eq!(l.entry(T1, G).lent, 12);
+        assert!(l.is_borrowing(JobId(1)));
+    }
+
+    #[test]
+    fn shared_still_bounded_by_total() {
+        let mut l = ledger(QuotaMode::Shared);
+        assert!(l.charge(JobId(1), T0, &[(G, 25)]).is_err());
+    }
+
+    #[test]
+    fn refund_restores_everything() {
+        let mut l = ledger(QuotaMode::Shared);
+        l.charge(JobId(1), T0, &[(G, 20)]).unwrap();
+        l.refund(JobId(1)).unwrap();
+        assert_eq!(l.entry(T0, G), QuotaEntry { limit: 8, ..Default::default() });
+        assert_eq!(l.entry(T1, G).lent, 0);
+        assert_eq!(l.available(T0, G), 24);
+    }
+
+    #[test]
+    fn refund_unknown_job_errors() {
+        let mut l = ledger(QuotaMode::Shared);
+        assert!(matches!(l.refund(JobId(99)), Err(QuotaError::NotCharged(_))));
+    }
+
+    #[test]
+    fn double_charge_rejected() {
+        let mut l = ledger(QuotaMode::Shared);
+        l.charge(JobId(1), T0, &[(G, 2)]).unwrap();
+        assert!(matches!(
+            l.charge(JobId(1), T0, &[(G, 2)]),
+            Err(QuotaError::AlreadyCharged(_))
+        ));
+    }
+
+    #[test]
+    fn debtors_lists_borrowers_of_lender() {
+        let mut l = ledger(QuotaMode::Shared);
+        l.charge(JobId(1), T0, &[(G, 12)]).unwrap(); // borrows 4 from T1
+        l.charge(JobId(2), T2, &[(G, 6)]).unwrap(); // borrows 6 from T1
+        let debts = l.debtors(T1, G);
+        assert_eq!(debts.len(), 2);
+        assert_eq!(debts[0].job, JobId(2)); // Largest borrow first.
+        assert_eq!(debts[0].amount, 6);
+        assert_eq!(debts[1].amount, 4);
+    }
+
+    #[test]
+    fn lender_own_free_shrinks_while_lent() {
+        let mut l = ledger(QuotaMode::Shared);
+        l.charge(JobId(1), T0, &[(G, 12)]).unwrap(); // T1 lends 4
+        assert_eq!(l.entry(T1, G).own_free(), 12);
+        // T1 can still use its remaining 12 itself.
+        l.charge(JobId(2), T1, &[(G, 12)]).unwrap();
+        assert_eq!(l.available(T1, G), 0);
+    }
+
+    #[test]
+    fn multi_type_demand_charges_each_type() {
+        let mut l = QuotaLedger::new(2, 2, QuotaMode::Isolated);
+        let g0 = GpuTypeId(0);
+        let g1 = GpuTypeId(1);
+        l.set_limit(T0, g0, 4);
+        l.set_limit(T0, g1, 2);
+        l.charge(JobId(1), T0, &[(g0, 4), (g1, 2)]).unwrap();
+        assert_eq!(l.entry(T0, g0).used_own, 4);
+        assert_eq!(l.entry(T0, g1).used_own, 2);
+        // Insufficient on one type → nothing charged at all.
+        l.refund(JobId(1)).unwrap();
+        assert!(l.charge(JobId(2), T0, &[(g0, 1), (g1, 3)]).is_err());
+        assert_eq!(l.entry(T0, g0).used_own, 0);
+    }
+
+    #[test]
+    fn utilization_reports_all_tenants() {
+        let mut l = ledger(QuotaMode::Shared);
+        l.charge(JobId(1), T0, &[(G, 4)]).unwrap();
+        let u = l.utilization(G);
+        assert_eq!(u.len(), 3);
+        assert_eq!(u[0], (T0, 8, 4));
+        assert_eq!(u[1], (T1, 16, 0));
+    }
+}

@@ -1,0 +1,245 @@
+//! Experiment presets: the clusters, tenants/quotas and workloads of the
+//! paper's §5 evaluation, plus down-scaled variants for quick runs.
+
+use crate::cluster::builder::{ClusterBuilder, ClusterSpec, GpuModel, GpuTypeProfile};
+use crate::cluster::ids::{GpuTypeId, TenantId};
+use crate::cluster::state::ClusterState;
+use crate::cluster::tenant::{QuotaLedger, QuotaMode};
+use crate::job::workload::WorkloadConfig;
+
+/// Run scale: `Paper` mirrors §5's sizes; `Small` is CI-friendly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Small,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "small" => Some(Scale::Small),
+            "paper" | "full" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+}
+
+/// A fully-specified experiment environment.
+pub struct Environment {
+    pub state: ClusterState,
+    pub ledger: QuotaLedger,
+    pub workload: WorkloadConfig,
+    /// Simulated horizon (ms).
+    pub horizon_ms: u64,
+    pub label: String,
+}
+
+/// §5.1 large-scale training cluster (homogeneous Type-H).
+///
+/// `Paper`: 1,024 nodes / 8,192 GPUs (the paper's "8,000-GPU" cluster),
+/// 32-node LeafGroups. `Small`: 128 nodes / 1,024 GPUs, same group shape.
+pub fn training_cluster(scale: Scale, seed: u64, rho: f64) -> Environment {
+    let (spec, days) = match scale {
+        Scale::Paper => (ClusterSpec::train8000(), 14.0),
+        Scale::Small => (ClusterSpec::homogeneous("train1024", 2, 2, 32), 4.0),
+    };
+    let state = ClusterBuilder::build(&spec);
+    let num_tenants = 4;
+    // Training tenants share one big pool; quotas sized so static admission
+    // is not the binding constraint (the paper's training experiments focus
+    // on queueing/placement, not quota contention).
+    let mut ledger = QuotaLedger::new(num_tenants, 1, QuotaMode::Shared);
+    for t in 0..num_tenants {
+        ledger.set_limit(
+            TenantId(t as u32),
+            GpuTypeId(0),
+            state.total_gpus() / num_tenants as u32,
+        );
+    }
+    let mut workload = WorkloadConfig::paper_training(seed);
+    workload.num_tenants = num_tenants as u32;
+    // Cap job sizes at half the cluster so the biggest class stays
+    // schedulable (2048-GPU jobs on the paper-scale cluster; 512 on small).
+    workload.max_gpus = (state.total_gpus() / 4).next_power_of_two().min(2048);
+    let workload = workload.calibrate_load(state.total_gpus(), rho);
+    Environment {
+        horizon_ms: (days * 24.0 * 3_600_000.0) as u64,
+        label: format!("{}({} GPUs)", spec.name, state.total_gpus()),
+        state,
+        ledger,
+        workload,
+    }
+}
+
+/// §5.2 inference clusters. The paper's i7 > i2 > a10 size ordering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferencePreset {
+    /// Hundred-GPU heterogeneous cluster (Figures 13–14): Type-L + Type-A.
+    I2,
+    /// Larger homogeneous sibling (Figure 15 leftmost).
+    I7,
+    /// Small cluster (Figure 15 rightmost, highest GFR).
+    A10,
+}
+
+impl InferencePreset {
+    pub fn parse(s: &str) -> Option<InferencePreset> {
+        match s {
+            "i2" => Some(InferencePreset::I2),
+            "i7" => Some(InferencePreset::I7),
+            "a10" => Some(InferencePreset::A10),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            InferencePreset::I2 => "i2",
+            InferencePreset::I7 => "i7",
+            InferencePreset::A10 => "a10",
+        }
+    }
+}
+
+/// Build an inference environment. All presets run multi-tenant, non-gang,
+/// small-job workloads near capacity (the paper observes GAR ≈ 93 % with no
+/// pending jobs on i2).
+pub fn inference_cluster(preset: InferencePreset, seed: u64) -> Environment {
+    let spec = match preset {
+        // 8 Type-L nodes (64 GPUs) + 12 Type-A nodes (48 GPUs) = 112 GPUs.
+        InferencePreset::I2 => ClusterSpec {
+            name: "i2".into(),
+            gpu_types: vec![
+                GpuTypeProfile {
+                    model: GpuModel::TypeL,
+                    groups: 2,
+                },
+                GpuTypeProfile {
+                    model: GpuModel::TypeA,
+                    groups: 3,
+                },
+            ],
+            groups_per_spine: 5,
+            spines_per_superspine: 2,
+            nodes_per_group: 4,
+            hbd_size: 0,
+            // No dedicated zone on a 20-node cluster: even one zoned
+            // LeafGroup would set a 20 % GFR floor (DESIGN.md §6).
+            inference_zone_frac: 0.0,
+        },
+        // 56 Type-L nodes = 448 GPUs.
+        InferencePreset::I7 => ClusterSpec {
+            name: "i7".into(),
+            gpu_types: vec![GpuTypeProfile {
+                model: GpuModel::TypeL,
+                groups: 7,
+            }],
+            groups_per_spine: 4,
+            spines_per_superspine: 2,
+            nodes_per_group: 8,
+            hbd_size: 0,
+            inference_zone_frac: 0.25,
+        },
+        // 10 Type-A nodes = 40 GPUs.
+        InferencePreset::A10 => ClusterSpec {
+            name: "a10".into(),
+            gpu_types: vec![GpuTypeProfile {
+                model: GpuModel::TypeA,
+                groups: 2,
+            }],
+            groups_per_spine: 2,
+            spines_per_superspine: 1,
+            nodes_per_group: 5,
+            hbd_size: 0,
+            inference_zone_frac: 0.0,
+        },
+    };
+    let state = ClusterBuilder::build(&spec);
+    let num_tenants = 8usize;
+    let num_types = state.gpu_types.len();
+    let mut ledger = QuotaLedger::new(num_tenants, num_types, QuotaMode::Shared);
+    // Uneven quotas across tenants (Figure 10's varied quota profile):
+    // tenant t gets a share proportional to (t % 4) + 1.
+    for g in 0..num_types {
+        let pool_total = state.pool_free_for_type(GpuTypeId(g as u16));
+        let weight_sum: u32 = (0..num_tenants).map(|t| (t as u32 % 4) + 1).sum();
+        for t in 0..num_tenants {
+            let share = pool_total * ((t as u32 % 4) + 1) / weight_sum;
+            ledger.set_limit(TenantId(t as u32), GpuTypeId(g as u16), share);
+        }
+    }
+    let mut workload = WorkloadConfig::paper_inference(seed);
+    workload.num_tenants = num_tenants as u32;
+    // Tenant demand tracks the quota profile (Figure 10's utilization is
+    // then meaningful rather than dominated by borrowing).
+    workload.tenant_weights = (0..num_tenants).map(|t| ((t % 4) + 1) as f64).collect();
+    // Demand proportional to each pool's capacity, shaped to its boards.
+    workload.type_mix = state
+        .gpu_types
+        .iter()
+        .map(|t| {
+            (
+                t.id,
+                state.pool_free_for_type(t.id) as f64,
+                t.gpus_per_node as u32,
+            )
+        })
+        .collect();
+    workload.max_gpus = 4; // Small HA services (≤ smallest board).
+    let workload = workload.calibrate_load(state.total_gpus(), 0.93);
+    Environment {
+        horizon_ms: 5 * 24 * 3_600_000, // 5 simulated days.
+        label: preset.label().to_string(),
+        state,
+        ledger,
+        workload,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_scales() {
+        let small = training_cluster(Scale::Small, 1, 0.9);
+        assert_eq!(small.state.total_gpus(), 1024);
+        let paper = training_cluster(Scale::Paper, 1, 0.9);
+        assert_eq!(paper.state.total_gpus(), 8192);
+        assert!(paper.horizon_ms > small.horizon_ms);
+    }
+
+    #[test]
+    fn inference_size_ordering_matches_paper() {
+        let i7 = inference_cluster(InferencePreset::I7, 1);
+        let i2 = inference_cluster(InferencePreset::I2, 1);
+        let a10 = inference_cluster(InferencePreset::A10, 1);
+        assert!(i7.state.total_gpus() > i2.state.total_gpus());
+        assert!(i2.state.total_gpus() > a10.state.total_gpus());
+    }
+
+    #[test]
+    fn i2_is_heterogeneous_with_quotas() {
+        let i2 = inference_cluster(InferencePreset::I2, 1);
+        assert_eq!(i2.state.pools.len(), 2);
+        let util = i2.ledger.utilization(GpuTypeId(0));
+        assert_eq!(util.len(), 8);
+        // Quotas vary across tenants.
+        let limits: Vec<u32> = util.iter().map(|&(_, l, _)| l).collect();
+        assert!(limits.iter().any(|&l| l != limits[0]));
+    }
+
+    #[test]
+    fn workload_caps_match_cluster() {
+        let env = training_cluster(Scale::Small, 2, 0.8);
+        assert!(env.workload.max_gpus <= env.state.total_gpus() / 2);
+        assert!(env.workload.max_gpus >= 256);
+    }
+
+    #[test]
+    fn scale_parses() {
+        assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
+        assert_eq!(Scale::parse("small"), Some(Scale::Small));
+        assert_eq!(InferencePreset::parse("a10"), Some(InferencePreset::A10));
+    }
+}

@@ -1,0 +1,750 @@
+//! The §5 experiment harness: one function per paper table/figure, shared
+//! by the `figures` binary, the examples and the integration tests.
+//! DESIGN.md §5 maps each id to the modules it exercises.
+
+use crate::cluster::ids::GpuTypeId;
+use crate::config::{inference_cluster, training_cluster, Environment, InferencePreset, Scale};
+use crate::job::spec::PlacementStrategy;
+use crate::job::store::JobStore;
+use crate::job::workload::{distribution_report, WorkloadGen};
+use crate::metrics::report::{bucket_comparison, fmt_ms, pct, table};
+use crate::qsch::policy::QschConfig;
+use crate::qsch::Qsch;
+use crate::rsch::{Rsch, RschConfig};
+use crate::sim::{run, SimConfig, SimOutcome};
+use crate::util::stats::{SizeBuckets, Summary};
+
+/// One experiment arm: a queueing policy + placement configuration.
+pub struct Arm {
+    pub label: &'static str,
+    pub qsch: QschConfig,
+    pub rsch: RschConfig,
+}
+
+impl Arm {
+    /// The paper's "native scheduling system": Strict FIFO + spread-like
+    /// (LeastAllocated) placement, flat scan, deep-copy snapshots.
+    pub fn native_baseline() -> Arm {
+        Arm {
+            label: "native",
+            qsch: QschConfig::strict_fifo(),
+            rsch: RschConfig::native_baseline(),
+        }
+    }
+
+    /// Kant with Backfill queueing (placement as configured by default).
+    pub fn kant_backfill() -> Arm {
+        Arm {
+            label: "backfill",
+            qsch: QschConfig::default(),
+            rsch: RschConfig::default(),
+        }
+    }
+
+    pub fn kant_strict() -> Arm {
+        Arm {
+            label: "strict-fifo",
+            qsch: QschConfig::strict_fifo(),
+            rsch: RschConfig::default(),
+        }
+    }
+
+    pub fn kant_best_effort() -> Arm {
+        Arm {
+            label: "best-effort",
+            qsch: QschConfig::best_effort(),
+            rsch: RschConfig::default(),
+        }
+    }
+
+    /// E-Binpack enabled (Kant full stack).
+    pub fn kant_ebinpack() -> Arm {
+        Arm {
+            label: "e-binpack",
+            qsch: QschConfig::default(),
+            rsch: RschConfig::default(),
+        }
+    }
+}
+
+/// Run one arm over an environment's workload (deterministic per seed).
+pub fn run_arm(env: &Environment, arm: &Arm, sim: &SimConfig) -> SimOutcome {
+    let mut state = env.state.clone();
+    let mut qsch = Qsch::new(arm.qsch.clone(), env.ledger.clone());
+    let mut rsch = Rsch::new(arm.rsch.clone(), &state);
+    let jobs = WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms);
+    let mut cfg = sim.clone();
+    if cfg.horizon_ms == 0 {
+        // Let in-flight jobs drain for a day past the arrival horizon.
+        cfg.horizon_ms = env.horizon_ms + 24 * 3_600_000;
+    }
+    run(&mut state, &mut qsch, &mut rsch, jobs, &cfg)
+}
+
+/// JWTD including censored waits of never-scheduled jobs (starvation shows
+/// up instead of disappearing — essential for the Best-Effort pathology).
+pub fn jwtd_buckets(store: &JobStore, end_ms: u64) -> SizeBuckets {
+    let mut b = SizeBuckets::paper_default();
+    for j in store.iter() {
+        b.record(j.spec.total_gpus(), j.waiting_ms(end_ms) as f64);
+    }
+    b
+}
+
+fn headline_rows(outs: &[(&str, &SimOutcome)]) -> Vec<Vec<String>> {
+    outs.iter()
+        .map(|(name, o)| {
+            vec![
+                name.to_string(),
+                pct(o.metrics.gar_median(200)),
+                pct(o.metrics.sor_final()),
+                pct(o.metrics.gfr_avg()),
+                o.metrics.jobs_scheduled.to_string(),
+                o.metrics.jobs_finished.to_string(),
+                o.unfinished_jobs.to_string(),
+            ]
+        })
+        .collect()
+}
+
+fn headline_table(title: &str, outs: &[(&str, &SimOutcome)]) -> String {
+    table(
+        title,
+        &["arm", "GAR", "SOR", "GFR", "sched", "done", "stuck"],
+        &headline_rows(outs),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Figure 2: job distribution by size (count share vs GPU-time share).
+// ---------------------------------------------------------------------
+pub fn fig2(seed: u64) -> String {
+    let jobs = WorkloadGen::new(crate::job::workload::WorkloadConfig::paper_training(seed))
+        .generate(20_000);
+    let rows: Vec<Vec<String>> = distribution_report(&jobs)
+        .into_iter()
+        .map(|(size, count, time)| vec![size.to_string(), pct(count), pct(time)])
+        .collect();
+    let mut out = table(
+        "Figure 2 — job distribution by percentage",
+        &["GPUs", "job-count share", "GPU-time share"],
+        &rows,
+    );
+    let small: f64 = distribution_report(&jobs)
+        .iter()
+        .filter(|(s, _, _)| *s <= 8)
+        .map(|(_, c, _)| c)
+        .sum();
+    let big_time: f64 = distribution_report(&jobs)
+        .iter()
+        .filter(|(s, _, _)| *s >= 256)
+        .map(|(_, _, t)| t)
+        .sum();
+    out.push_str(&format!(
+        "\npaper claims: >90% of jobs ≤8 GPUs (measured {}), ≥256-GPU jobs >50% GPU-time (measured {})\n",
+        pct(small),
+        pct(big_time)
+    ));
+    out
+}
+
+// ---------------------------------------------------------------------
+// Table 1 + Figures 3-5: queueing-policy comparison on the training
+// cluster — Backfill vs Strict FIFO (vs Best-Effort for JWTD).
+// ---------------------------------------------------------------------
+pub struct PolicyComparison {
+    pub strict: SimOutcome,
+    pub backfill: SimOutcome,
+    pub best_effort: SimOutcome,
+}
+
+pub fn run_policy_comparison(scale: Scale, seed: u64) -> PolicyComparison {
+    let env = training_cluster(scale, seed, 0.98);
+    let sim = SimConfig::default();
+    PolicyComparison {
+        strict: run_arm(&env, &Arm::kant_strict(), &sim),
+        backfill: run_arm(&env, &Arm::kant_backfill(), &sim),
+        best_effort: run_arm(&env, &Arm::kant_best_effort(), &sim),
+    }
+}
+
+pub fn fig3(c: &PolicyComparison) -> String {
+    let mut out = headline_table(
+        "Figure 3 — GAR and SOR: Backfill vs Strict FIFO",
+        &[
+            ("strict-fifo", &c.strict),
+            ("backfill", &c.backfill),
+        ],
+    );
+    let sor_gain = c.backfill.metrics.sor_final() - c.strict.metrics.sor_final();
+    let gar_gain = c.backfill.metrics.gar_median(200) - c.strict.metrics.gar_median(200);
+    out.push_str(&format!(
+        "\nSOR gain {} (paper: ≈ +3.6% median), GAR gain {} (paper: moderate improvement)\n",
+        pct(sor_gain),
+        pct(gar_gain)
+    ));
+    out
+}
+
+pub fn fig4(c: &PolicyComparison) -> String {
+    let arms = vec![
+        (
+            "strict-fifo",
+            jwtd_buckets(&c.strict.store, c.strict.end_ms).summaries(),
+        ),
+        (
+            "backfill",
+            jwtd_buckets(&c.backfill.store, c.backfill.end_ms).summaries(),
+        ),
+        (
+            "best-effort",
+            jwtd_buckets(&c.best_effort.store, c.best_effort.end_ms).summaries(),
+        ),
+    ];
+    let mut out = bucket_comparison(
+        "Figure 4 — JWTD (mean wait by job size): Backfill vs Strict vs Best-Effort",
+        &arms
+            .iter()
+            .map(|(n, s)| (*n, s.clone()))
+            .collect::<Vec<_>>(),
+        fmt_ms,
+    );
+    out.push_str(
+        "\npaper: Backfill ≈ Strict on waits; Best-Effort starves 1024/2048-GPU jobs\n",
+    );
+    out
+}
+
+pub fn fig5(c: &PolicyComparison) -> String {
+    let mut out = table(
+        "Figure 5 — GFR: Backfill vs Strict FIFO",
+        &["arm", "GFR(avg)"],
+        &[
+            vec!["strict-fifo".into(), pct(c.strict.metrics.gfr_avg())],
+            vec!["backfill".into(), pct(c.backfill.metrics.gfr_avg())],
+        ],
+    );
+    out.push_str("\npaper: both <1% — Backfill has little effect on GFR\n");
+    out
+}
+
+// ---------------------------------------------------------------------
+// Figures 6-9: E-Binpack on/off vs the native baseline.
+// ---------------------------------------------------------------------
+pub struct EBinpackComparison {
+    pub baseline: SimOutcome,
+    pub ebinpack: SimOutcome,
+}
+
+pub fn run_ebinpack_comparison(scale: Scale, seed: u64) -> EBinpackComparison {
+    let env = training_cluster(scale, seed, 0.96);
+    let sim = SimConfig::default();
+    EBinpackComparison {
+        baseline: run_arm(&env, &Arm::native_baseline(), &sim),
+        ebinpack: run_arm(&env, &Arm::kant_ebinpack(), &sim),
+    }
+}
+
+pub fn fig6(c: &EBinpackComparison) -> String {
+    let mut out = table(
+        "Figure 6 — GFR with E-Binpack enabled vs disabled",
+        &["arm", "GFR(avg)"],
+        &[
+            vec!["native (disabled)".into(), pct(c.baseline.metrics.gfr_avg())],
+            vec!["e-binpack (enabled)".into(), pct(c.ebinpack.metrics.gfr_avg())],
+        ],
+    );
+    out.push_str("\npaper: 8.5% average → below 1%\n");
+    out
+}
+
+pub fn fig7(c: &EBinpackComparison) -> String {
+    let mut out = headline_table(
+        "Figure 7 — GAR and SOR with E-Binpack enabled vs disabled",
+        &[
+            ("native", &c.baseline),
+            ("e-binpack", &c.ebinpack),
+        ],
+    );
+    out.push_str(&format!(
+        "\nGAR gain {} (paper ≈ +4.6%), SOR gain {} (paper ≈ +4.1%)\n",
+        pct(c.ebinpack.metrics.gar_median(200) - c.baseline.metrics.gar_median(200)),
+        pct(c.ebinpack.metrics.sor_final() - c.baseline.metrics.sor_final()),
+    ));
+    out
+}
+
+pub fn fig8(c: &EBinpackComparison) -> String {
+    let arms = vec![
+        (
+            "native",
+            jwtd_buckets(&c.baseline.store, c.baseline.end_ms).summaries(),
+        ),
+        (
+            "e-binpack",
+            jwtd_buckets(&c.ebinpack.store, c.ebinpack.end_ms).summaries(),
+        ),
+    ];
+    let mut out = bucket_comparison(
+        "Figure 8 — JWTD with E-Binpack enabled vs disabled",
+        &arms
+            .iter()
+            .map(|(n, s)| (*n, s.clone()))
+            .collect::<Vec<_>>(),
+        fmt_ms,
+    );
+    out.push_str("\npaper: waits decrease across all job sizes\n");
+    out
+}
+
+pub fn fig9(c: &EBinpackComparison) -> String {
+    let arms_node = vec![
+        ("native", c.baseline.metrics.jtted_node_summaries()),
+        ("e-binpack", c.ebinpack.metrics.jtted_node_summaries()),
+    ];
+    let arms_group = vec![
+        ("native", c.baseline.metrics.jtted_group_summaries()),
+        ("e-binpack", c.ebinpack.metrics.jtted_group_summaries()),
+    ];
+    let mut out = bucket_comparison(
+        "Figure 9a — JTTED NodeNum deviation ratio (actual/optimal nodes)",
+        &arms_node,
+        |x| format!("{x:.2}"),
+    );
+    out.push('\n');
+    out.push_str(&bucket_comparison(
+        "Figure 9b — JTTED NodeNetGroupNum deviation ratio (actual/optimal groups)",
+        &arms_group,
+        |x| format!("{x:.2}"),
+    ));
+    out.push_str("\npaper: deviation shrinks for all sizes except 2048-GPU jobs\n");
+    out
+}
+
+// ---------------------------------------------------------------------
+// Table 1: the three queueing policies side by side (mechanism summary
+// backed by measured numbers).
+// ---------------------------------------------------------------------
+pub fn table1(c: &PolicyComparison) -> String {
+    let big = |o: &SimOutcome| {
+        let b = jwtd_buckets(&o.store, o.end_ms);
+        let s = b.summaries();
+        // Largest bucket with samples.
+        s.iter()
+            .rev()
+            .find(|(_, sum)| sum.count > 0)
+            .map(|(_, sum)| fmt_ms(sum.mean))
+            .unwrap_or_else(|| "-".into())
+    };
+    let small = |o: &SimOutcome| {
+        let b = jwtd_buckets(&o.store, o.end_ms);
+        fmt_ms(b.summaries()[1].1.mean)
+    };
+    let rows = vec![
+        vec![
+            "strict-fifo".into(),
+            pct(c.strict.metrics.sor_final()),
+            small(&c.strict),
+            big(&c.strict),
+            c.strict.qsch_stats.scheduled_backfilled.to_string(),
+            "0".into(),
+        ],
+        vec![
+            "best-effort".into(),
+            pct(c.best_effort.metrics.sor_final()),
+            small(&c.best_effort),
+            big(&c.best_effort),
+            c.best_effort.qsch_stats.scheduled_backfilled.to_string(),
+            "0".into(),
+        ],
+        vec![
+            "backfill".into(),
+            pct(c.backfill.metrics.sor_final()),
+            small(&c.backfill),
+            big(&c.backfill),
+            c.backfill.qsch_stats.scheduled_backfilled.to_string(),
+            c.backfill.qsch_stats.backfill_preemptions.to_string(),
+        ],
+    ];
+    table(
+        "Table 1 — queueing policies (measured)",
+        &["policy", "SOR", "small-job wait", "largest-job wait", "bypass-scheduled", "backfill-preempt"],
+        &rows,
+    )
+}
+
+/// Peak concurrent GPU usage of one tenant on one GPU type over a run
+/// (interval sweep over scheduled→released windows).
+fn peak_concurrent_gpus(out: &SimOutcome, tenant: u32, gpu_type: GpuTypeId) -> u32 {
+    let mut events: Vec<(u64, i64)> = Vec::new();
+    for j in out.store.iter().filter(|j| j.spec.tenant.0 == tenant) {
+        let Some(start) = j.scheduled_ms else { continue };
+        let end = j.finished_ms.unwrap_or(out.end_ms);
+        let gpus: i64 = j
+            .spec
+            .demands
+            .iter()
+            .filter(|d| d.gpu_type == gpu_type)
+            .map(|d| d.total_gpus() as i64)
+            .sum();
+        if gpus > 0 {
+            events.push((start, gpus));
+            events.push((end, -gpus));
+        }
+    }
+    events.sort_unstable();
+    let (mut cur, mut peak) = (0i64, 0i64);
+    for (_, d) in events {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    peak.max(0) as u32
+}
+
+// ---------------------------------------------------------------------
+// Figures 10-12: tenant quotas in the heterogeneous inference cluster.
+// ---------------------------------------------------------------------
+pub fn fig10_11_12(seed: u64) -> String {
+    let env = inference_cluster(InferencePreset::I2, seed);
+    let out = run_arm(&env, &Arm::kant_backfill(), &SimConfig::default());
+    // Re-derive the final ledger state by replaying quota charges is
+    // overkill: utilization at end-of-run is in the outcome's store —
+    // instead report configured quota + peak concurrent usage per tenant.
+    let mut rows_total: Vec<Vec<String>> = Vec::new();
+    let num_types = env.state.gpu_types.len();
+    let mut per_type_rows: Vec<Vec<Vec<String>>> = vec![Vec::new(); num_types];
+    for (t, name) in (0..8).map(|t| (t, format!("tenant-{t}"))) {
+        let mut total_quota = 0u32;
+        let mut total_used = 0u32;
+        for g in 0..num_types {
+            let limit = env
+                .ledger
+                .entry(crate::cluster::ids::TenantId(t), GpuTypeId(g as u16))
+                .limit;
+            // Peak *concurrent* usage: sweep job (schedule, finish) intervals.
+            let used: u32 = peak_concurrent_gpus(&out, t, GpuTypeId(g as u16));
+            per_type_rows[g].push(vec![
+                name.clone(),
+                limit.to_string(),
+                used.to_string(),
+            ]);
+            total_quota += limit;
+            total_used += used;
+        }
+        rows_total.push(vec![
+            name,
+            total_quota.to_string(),
+            total_used.to_string(),
+            if total_quota > 0 {
+                pct(total_used as f64 / total_quota as f64)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    let mut s = table(
+        "Figure 10 — GPU quota and quota utilization (per tenant)",
+        &["tenant", "quota", "peak-job-GPUs", "utilization"],
+        &rows_total,
+    );
+    for (g, rows) in per_type_rows.into_iter().enumerate() {
+        let name = &env.state.gpu_types[g].name;
+        s.push('\n');
+        s.push_str(&table(
+            &format!("Figure {} — {} GPU quota by tenant", 11 + g, name),
+            &["tenant", "quota", "peak-job-GPUs"],
+            &rows,
+        ));
+    }
+    s.push_str(
+        "\nnote: utilization >100% = borrowing under Shared quota mode (§3.2.1)\n",
+    );
+    s.push_str(&format!(
+        "\nrun summary: GAR {} SOR {} GFR {}\n",
+        pct(out.metrics.gar_avg()),
+        pct(out.metrics.sor_final()),
+        pct(out.metrics.gfr_avg())
+    ));
+    s
+}
+
+// ---------------------------------------------------------------------
+// Figures 13-15: inference-cluster GAR/SOR/GFR time series and the
+// GFR-vs-cluster-size comparison.
+// ---------------------------------------------------------------------
+pub fn fig13_14(seed: u64) -> String {
+    let env = inference_cluster(InferencePreset::I2, seed);
+    let out = run_arm(&env, &Arm::kant_backfill(), &SimConfig::default());
+    let rows: Vec<Vec<String>> = out
+        .metrics
+        .series(24)
+        .into_iter()
+        .map(|(t, gar, sor, gfr)| {
+            vec![
+                format!("{:.1}d", t as f64 / 86_400_000.0),
+                pct(gar),
+                pct(sor),
+                pct(gfr),
+            ]
+        })
+        .collect();
+    let mut s = table(
+        "Figures 13/14 — cluster i2 time series (GAR, SOR, GFR)",
+        &["t", "GAR", "SOR", "GFR"],
+        &rows,
+    );
+    // Steady state: skip the warm-up ramp (first half of the window).
+    let (a, b) = out.metrics.window();
+    let mid = a + (b - a) / 2;
+    s.push_str(&format!(
+        "\nsteady-state (2nd half): GAR {} (paper ≈93%), GFR {} (paper ≈6.5%); SOR final {}\n",
+        pct(out.metrics.gar_avg_between(mid, b)),
+        pct(out.metrics.gfr_avg_between(mid, b)),
+        pct(out.metrics.sor_final())
+    ));
+    s
+}
+
+pub fn fig15(seed: u64) -> String {
+    // The paper's condition: "under the same task change frequency" —
+    // the IDENTICAL workload stream hits all three clusters, so the
+    // absolute number of fragmented nodes is comparable and the *ratio*
+    // rises as the cluster shrinks.
+    let a10 = inference_cluster(InferencePreset::A10, seed);
+    let shared_workload = a10.workload.clone();
+    let mut rows = Vec::new();
+    // Kant's deployed inference config consolidates (E-Binpack fallback);
+    // fragmented-node COUNT then tracks churn, so the RATIO rises as the
+    // cluster shrinks.
+    let arm = Arm {
+        label: "kant",
+        qsch: QschConfig::default(),
+        rsch: RschConfig {
+            inference_strategy: PlacementStrategy::EBinpack,
+            ..RschConfig::default()
+        },
+    };
+    for preset in [InferencePreset::I7, InferencePreset::I2, InferencePreset::A10] {
+        let mut env = inference_cluster(preset, seed);
+        env.workload = shared_workload.clone();
+        let out = run_arm(&env, &arm, &SimConfig::default());
+        let (a, b) = out.metrics.window();
+        let mid = a + (b - a) / 2;
+        rows.push(vec![
+            preset.label().to_string(),
+            env.state.total_gpus().to_string(),
+            env.state.nodes.len().to_string(),
+            pct(out.metrics.gfr_avg_between(mid, b)),
+        ]);
+    }
+    let mut s = table(
+        "Figure 15 — GFR vs cluster size, identical churn (i7 > i2 > a10)",
+        &["cluster", "GPUs", "nodes", "GFR(steady)"],
+        &rows,
+    );
+    s.push_str("\npaper: smaller clusters show higher GFR under the same churn\n");
+    s
+}
+
+// ---------------------------------------------------------------------
+// Ablation: E-Spread's inference dedicated zone (§3.3.4). Mixed workload
+// of many small HA inference replicas plus whole-node distributed
+// inference jobs; plain Spread scatters the small replicas everywhere and
+// starves the big jobs of whole nodes.
+// ---------------------------------------------------------------------
+pub fn ablation_espread(seed: u64) -> String {
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{JobId, TenantId};
+    use crate::cluster::tenant::{QuotaLedger, QuotaMode};
+    use crate::job::spec::{JobKind, JobSpec};
+    use crate::util::rng::Pcg32;
+
+    let run_with = |strategy: PlacementStrategy| -> (SimOutcome, u32) {
+        let mut spec = ClusterSpec::homogeneous("espread", 2, 4, 4); // 32 nodes.
+        spec.inference_zone_frac = 0.25;
+        let mut state = ClusterBuilder::build(&spec);
+        let mut ledger = QuotaLedger::new(2, 1, QuotaMode::Shared);
+        ledger.set_limit(TenantId(0), GpuTypeId(0), state.total_gpus());
+        ledger.set_limit(TenantId(1), GpuTypeId(0), 0);
+        let mut qsch = Qsch::new(QschConfig::default(), ledger);
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+
+        let mut rng = Pcg32::seed_from_u64(seed);
+        let mut jobs = Vec::new();
+        let mut id = 1u64;
+        // 60 small inference replicasets (1-2 GPU pods), staggered arrivals.
+        for _ in 0..60 {
+            let mut j = JobSpec::homogeneous(
+                JobId(id),
+                TenantId(0),
+                JobKind::Inference,
+                GpuTypeId(0),
+                rng.range_inclusive(1, 3) as u32,
+                rng.range_inclusive(1, 2) as u32,
+            )
+            .with_times(rng.below(3_600_000), 6 * 3_600_000)
+            .with_strategy(strategy);
+            j.gang = false;
+            jobs.push(j);
+            id += 1;
+        }
+        // 6 large distributed-inference jobs (4 whole nodes each) arriving
+        // after the small ones have spread out.
+        for k in 0..6u64 {
+            let j = JobSpec::homogeneous(
+                JobId(id),
+                TenantId(0),
+                JobKind::Inference,
+                GpuTypeId(0),
+                4,
+                8,
+            )
+            .with_times(3_700_000 + k * 600_000, 4 * 3_600_000)
+            .with_strategy(strategy)
+            .with_gang(true);
+            jobs.push(j);
+            id += 1;
+        }
+        jobs.sort_by_key(|j| j.submit_ms);
+        let out = run(
+            &mut state,
+            &mut qsch,
+            &mut rsch,
+            jobs,
+            &SimConfig {
+                horizon_ms: 24 * 3_600_000,
+                ..SimConfig::default()
+            },
+        );
+        let big_scheduled = out
+            .store
+            .iter()
+            .filter(|j| j.spec.total_gpus() == 32 && j.scheduled_ms.is_some())
+            .count() as u32;
+        (out, big_scheduled)
+    };
+
+    let (spread_out, spread_big) = run_with(PlacementStrategy::Spread);
+    let (espread_out, espread_big) = run_with(PlacementStrategy::ESpread);
+
+    let big_wait = |o: &SimOutcome| -> String {
+        let waits: Vec<f64> = o
+            .store
+            .iter()
+            .filter(|j| j.spec.total_gpus() == 32)
+            .map(|j| j.waiting_ms(o.end_ms) as f64)
+            .collect();
+        fmt_ms(Summary::from_samples(&waits).mean)
+    };
+
+    let rows = vec![
+        vec![
+            "spread".into(),
+            format!("{spread_big}/6"),
+            big_wait(&spread_out),
+            pct(spread_out.metrics.gfr_avg()),
+        ],
+        vec![
+            "e-spread".into(),
+            format!("{espread_big}/6"),
+            big_wait(&espread_out),
+            pct(espread_out.metrics.gfr_avg()),
+        ],
+    ];
+    let mut s = table(
+        "Ablation — E-Spread dedicated zone vs plain Spread (§3.3.4)",
+        &["strategy", "whole-node jobs scheduled", "mean big-job wait", "GFR"],
+        &rows,
+    );
+    s.push_str(
+        "\npaper: E-Spread preserves whole nodes for large distributed inference\n",
+    );
+    s
+}
+
+// ---------------------------------------------------------------------
+// Ablation: periodic fragmentation reorganization (§3.3.3, the paper's
+// planned extension) — defrag on/off under a churning small-job workload.
+// ---------------------------------------------------------------------
+pub fn ablation_defrag(seed: u64) -> String {
+    let env = inference_cluster(InferencePreset::I2, seed);
+    let arm = Arm {
+        label: "kant",
+        qsch: QschConfig::default(),
+        rsch: RschConfig::default(),
+    };
+    let base = SimConfig::default();
+    let off = run_arm(&env, &arm, &base);
+    let on_cfg = SimConfig {
+        defrag_interval_ms: 30 * 60_000, // Every 30 simulated minutes.
+        ..base
+    };
+    let on = run_arm(&env, &arm, &on_cfg);
+    let steady = |o: &SimOutcome| {
+        let (a, b) = o.metrics.window();
+        o.metrics.gfr_avg_between(a + (b - a) / 2, b)
+    };
+    let rows = vec![
+        vec![
+            "defrag off".into(),
+            pct(steady(&off)),
+            pct(off.metrics.gar_avg()),
+            "0".into(),
+        ],
+        vec![
+            "defrag on (30m)".into(),
+            pct(steady(&on)),
+            pct(on.metrics.gar_avg()),
+            on.migrations.to_string(),
+        ],
+    ];
+    let mut s = table(
+        "Ablation — periodic fragmentation reorganization (§3.3.3)",
+        &["config", "GFR(steady)", "GAR", "migrations"],
+        &rows,
+    );
+    s.push_str("\npaper (planned): consolidating scattered resources via rescheduling improves utilization\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_report_contains_claims() {
+        let s = fig2(3);
+        assert!(s.contains("Figure 2"));
+        assert!(s.contains("GPU-time share"));
+    }
+
+    #[test]
+    fn run_arm_is_deterministic() {
+        let env = inference_cluster(InferencePreset::A10, 5);
+        let a = run_arm(&env, &Arm::kant_backfill(), &SimConfig::default());
+        let b = run_arm(&env, &Arm::kant_backfill(), &SimConfig::default());
+        assert_eq!(a.metrics.jobs_finished, b.metrics.jobs_finished);
+        assert!((a.metrics.sor_final() - b.metrics.sor_final()).abs() < 1e-12);
+        assert_eq!(a.end_ms, b.end_ms);
+    }
+
+    #[test]
+    fn jwtd_buckets_include_censored() {
+        use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
+        use crate::job::spec::{JobKind, JobSpec};
+        use crate::job::state::Job;
+        let mut store = JobStore::new();
+        let spec = JobSpec::homogeneous(
+            JobId(1),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            1,
+            8,
+        );
+        store.insert(Job::new(spec)); // Never scheduled.
+        let b = jwtd_buckets(&store, 10_000);
+        assert_eq!(b.summaries()[1].1.count, 1);
+        assert_eq!(b.summaries()[1].1.mean, 10_000.0);
+    }
+}

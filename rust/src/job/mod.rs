@@ -1,0 +1,13 @@
+//! Jobs: specifications, lifecycle state, synthetic workload generation
+//! (Figure-2 calibrated) and JSONL trace record/replay.
+
+pub mod spec;
+pub mod state;
+pub mod store;
+pub mod trace;
+pub mod workload;
+
+pub use spec::{JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand};
+pub use state::{Job, Phase};
+pub use store::JobStore;
+pub use workload::{distribution_report, with_strategy, WorkloadConfig, WorkloadGen};

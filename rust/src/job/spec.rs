@@ -1,0 +1,265 @@
+//! Job and pod specifications — what users submit.
+//!
+//! The paper's workload taxonomy (§2): LLM distributed training (gang,
+//! large), inference services (non-gang, small, HA-sensitive), and
+//! dev/debug tasks (small, latency-sensitive). Jobs may request multiple
+//! GPU models in heterogeneous clusters (cross-pool joint admission,
+//! §3.2.1); the common case is a single model.
+
+use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
+
+/// Task category (§2 "Diverse Task Types").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobKind {
+    Training,
+    Inference,
+    Dev,
+}
+
+impl JobKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobKind::Training => "training",
+            JobKind::Inference => "inference",
+            JobKind::Dev => "dev",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobKind> {
+        match s {
+            "training" => Some(JobKind::Training),
+            "inference" => Some(JobKind::Inference),
+            "dev" => Some(JobKind::Dev),
+            _ => None,
+        }
+    }
+}
+
+/// Scheduling priority; higher value = more important.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Priority(pub u8);
+
+impl Priority {
+    pub const LOW: Priority = Priority(0);
+    pub const NORMAL: Priority = Priority(4);
+    pub const HIGH: Priority = Priority(8);
+}
+
+/// Placement strategy requested for (or assigned to) a job (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementStrategy {
+    /// Baseline: first fit in node-id order, no consolidation ("native
+    /// scheduling system" in §5).
+    NativeFirstFit,
+    /// Plain Binpack: fill partially-used nodes first (§3.3.3).
+    Binpack,
+    /// Enhanced Binpack: node-level co-location + LeafGroup consolidation
+    /// (§3.3.3 E-Binpack).
+    EBinpack,
+    /// Plain Spread: spread replicas across nodes (§3.3.4).
+    Spread,
+    /// Enhanced Spread: inference dedicated zone + E-Binpack overflow
+    /// (§3.3.4 E-Spread).
+    ESpread,
+}
+
+impl PlacementStrategy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlacementStrategy::NativeFirstFit => "native",
+            PlacementStrategy::Binpack => "binpack",
+            PlacementStrategy::EBinpack => "e-binpack",
+            PlacementStrategy::Spread => "spread",
+            PlacementStrategy::ESpread => "e-spread",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlacementStrategy> {
+        match s {
+            "native" => Some(PlacementStrategy::NativeFirstFit),
+            "binpack" => Some(PlacementStrategy::Binpack),
+            "e-binpack" | "ebinpack" => Some(PlacementStrategy::EBinpack),
+            "spread" => Some(PlacementStrategy::Spread),
+            "e-spread" | "espread" => Some(PlacementStrategy::ESpread),
+            _ => None,
+        }
+    }
+}
+
+/// Resource demand for one GPU model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TypedDemand {
+    pub gpu_type: GpuTypeId,
+    /// Pod replicas requesting this model.
+    pub replicas: u32,
+    /// GPUs per replica (1..=gpus_per_node; whole-node jobs use 8).
+    pub gpus_per_pod: u32,
+}
+
+impl TypedDemand {
+    pub fn total_gpus(&self) -> u32 {
+        self.replicas * self.gpus_per_pod
+    }
+}
+
+/// A submitted job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub tenant: TenantId,
+    pub kind: JobKind,
+    pub priority: Priority,
+    /// Gang (all-or-nothing) scheduling semantics (§3.3.2). Training jobs
+    /// are gang; classic inference replicas are not.
+    pub gang: bool,
+    /// Per-GPU-model demands. Single-entry for homogeneous jobs; multiple
+    /// entries trigger cross-pool joint admission.
+    pub demands: Vec<TypedDemand>,
+    /// Submission time (ms since sim start).
+    pub submit_ms: u64,
+    /// Service/run duration once scheduled (ms).
+    pub duration_ms: u64,
+    /// Placement strategy; `None` = scheduler default for the kind.
+    pub strategy: Option<PlacementStrategy>,
+    /// Whether the job needs its pods inside one HBD (EP/TP patterns,
+    /// §3.3.5 scale-up).
+    pub needs_hbd: bool,
+}
+
+impl JobSpec {
+    /// Total GPUs across all demands.
+    pub fn total_gpus(&self) -> u32 {
+        self.demands.iter().map(TypedDemand::total_gpus).sum()
+    }
+
+    /// Total pod replicas.
+    pub fn total_replicas(&self) -> u32 {
+        self.demands.iter().map(|d| d.replicas).sum()
+    }
+
+    /// The single GPU type for homogeneous jobs.
+    pub fn sole_type(&self) -> Option<GpuTypeId> {
+        match self.demands.as_slice() {
+            [d] => Some(d.gpu_type),
+            _ => None,
+        }
+    }
+
+    /// Builder for the common homogeneous case.
+    pub fn homogeneous(
+        id: JobId,
+        tenant: TenantId,
+        kind: JobKind,
+        gpu_type: GpuTypeId,
+        replicas: u32,
+        gpus_per_pod: u32,
+    ) -> JobSpec {
+        JobSpec {
+            id,
+            tenant,
+            kind,
+            priority: Priority::NORMAL,
+            gang: kind == JobKind::Training,
+            demands: vec![TypedDemand {
+                gpu_type,
+                replicas,
+                gpus_per_pod,
+            }],
+            submit_ms: 0,
+            duration_ms: 60_000,
+            strategy: None,
+            needs_hbd: false,
+        }
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> JobSpec {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_times(mut self, submit_ms: u64, duration_ms: u64) -> JobSpec {
+        self.submit_ms = submit_ms;
+        self.duration_ms = duration_ms;
+        self
+    }
+
+    pub fn with_strategy(mut self, s: PlacementStrategy) -> JobSpec {
+        self.strategy = Some(s);
+        self
+    }
+
+    pub fn with_gang(mut self, gang: bool) -> JobSpec {
+        self.gang = gang;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Training, GpuTypeId(0), 4, 8)
+    }
+
+    #[test]
+    fn totals() {
+        let j = spec();
+        assert_eq!(j.total_gpus(), 32);
+        assert_eq!(j.total_replicas(), 4);
+        assert_eq!(j.sole_type(), Some(GpuTypeId(0)));
+    }
+
+    #[test]
+    fn training_defaults_to_gang() {
+        assert!(spec().gang);
+        let inf = JobSpec::homogeneous(
+            JobId(2),
+            TenantId(0),
+            JobKind::Inference,
+            GpuTypeId(0),
+            2,
+            1,
+        );
+        assert!(!inf.gang);
+    }
+
+    #[test]
+    fn multi_type_has_no_sole_type() {
+        let mut j = spec();
+        j.demands.push(TypedDemand {
+            gpu_type: GpuTypeId(1),
+            replicas: 1,
+            gpus_per_pod: 4,
+        });
+        assert_eq!(j.sole_type(), None);
+        assert_eq!(j.total_gpus(), 36);
+    }
+
+    #[test]
+    fn strategy_roundtrip() {
+        for s in [
+            PlacementStrategy::NativeFirstFit,
+            PlacementStrategy::Binpack,
+            PlacementStrategy::EBinpack,
+            PlacementStrategy::Spread,
+            PlacementStrategy::ESpread,
+        ] {
+            assert_eq!(PlacementStrategy::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(PlacementStrategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [JobKind::Training, JobKind::Inference, JobKind::Dev] {
+            assert_eq!(JobKind::parse(k.as_str()), Some(k));
+        }
+    }
+
+    #[test]
+    fn priority_ordering() {
+        assert!(Priority::HIGH > Priority::NORMAL);
+        assert!(Priority::NORMAL > Priority::LOW);
+    }
+}

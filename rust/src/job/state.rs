@@ -1,0 +1,235 @@
+//! Job lifecycle state machine and the bookkeeping the metrics need.
+//!
+//! ```text
+//! Submitted ─▶ Queued ─▶ Admitted ─▶ Scheduled ─▶ Running ─▶ Finished
+//!     ▲           ▲                      │
+//!     └───────────┴──── Requeued ◀──────┴── (preempted / failed)
+//! ```
+//!
+//! JWTD measures Submitted→Scheduled; SOR accrues from Scheduled (resource
+//! binding) even before Running (§4.2's image-pull window).
+
+use super::spec::JobSpec;
+use crate::cluster::ids::JobId;
+
+/// Lifecycle phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Known to QSCH, not yet past admission.
+    Queued,
+    /// Passed static + dynamic admission, waiting for RSCH.
+    Admitted,
+    /// Resources bound (SOR accrual starts here).
+    Scheduled,
+    /// Containers up (after platform overhead).
+    Running,
+    Finished,
+    /// Evicted by preemption; will requeue.
+    Preempted,
+}
+
+/// A job plus its runtime state.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub spec: JobSpec,
+    pub phase: Phase,
+    /// First time QSCH saw the job.
+    pub submit_ms: u64,
+    /// When resources were bound (last successful scheduling).
+    pub scheduled_ms: Option<u64>,
+    /// When containers started running.
+    pub running_ms: Option<u64>,
+    /// When the job finished.
+    pub finished_ms: Option<u64>,
+    /// Number of preemptions suffered.
+    pub preemptions: u32,
+    /// Number of defragmentation migrations (§3.3.3 reorganization).
+    pub migrations: u32,
+    /// Event epoch: bumped by preemption AND migration; stale simulator
+    /// events (RunningStart/Finish scheduled under an older epoch) are
+    /// dropped on delivery.
+    pub epoch: u32,
+    /// Number of requeue events (scheduling failures).
+    pub requeues: u32,
+    /// Remaining work (ms of runtime still owed); preemption pauses it.
+    pub remaining_ms: u64,
+    /// Whether the job was scheduled by bypassing a blocked queue head
+    /// (Backfill) — such jobs are the preferred victims of backfill
+    /// preemption (§3.2.2/§3.2.3).
+    pub backfilled: bool,
+}
+
+impl Job {
+    pub fn new(spec: JobSpec) -> Job {
+        let submit_ms = spec.submit_ms;
+        let remaining_ms = spec.duration_ms;
+        Job {
+            spec,
+            phase: Phase::Queued,
+            submit_ms,
+            scheduled_ms: None,
+            running_ms: None,
+            finished_ms: None,
+            preemptions: 0,
+            migrations: 0,
+            epoch: 0,
+            requeues: 0,
+            remaining_ms,
+            backfilled: false,
+        }
+    }
+
+    pub fn id(&self) -> JobId {
+        self.spec.id
+    }
+
+    /// Waiting time as JWTD defines it: submission → scheduling start
+    /// (resource binding). For jobs never scheduled, `now` gives the
+    /// censored value.
+    pub fn waiting_ms(&self, now: u64) -> u64 {
+        match self.scheduled_ms {
+            Some(t) => t.saturating_sub(self.submit_ms),
+            None => now.saturating_sub(self.submit_ms),
+        }
+    }
+
+    pub fn mark_admitted(&mut self) {
+        debug_assert!(matches!(self.phase, Phase::Queued | Phase::Preempted));
+        self.phase = Phase::Admitted;
+    }
+
+    pub fn mark_scheduled(&mut self, now: u64) {
+        debug_assert!(matches!(self.phase, Phase::Admitted | Phase::Queued));
+        // JWTD counts until FIRST successful scheduling; keep the earliest.
+        if self.scheduled_ms.is_none() {
+            self.scheduled_ms = Some(now);
+        }
+        self.phase = Phase::Scheduled;
+    }
+
+    pub fn mark_running(&mut self, now: u64) {
+        debug_assert_eq!(self.phase, Phase::Scheduled);
+        self.running_ms = Some(now);
+        self.phase = Phase::Running;
+    }
+
+    pub fn mark_finished(&mut self, now: u64) {
+        self.finished_ms = Some(now);
+        self.remaining_ms = 0;
+        self.phase = Phase::Finished;
+    }
+
+    /// Preempt at `now`, crediting completed runtime.
+    pub fn mark_preempted(&mut self, now: u64) {
+        if let Some(start) = self.running_ms {
+            let ran = now.saturating_sub(start);
+            self.remaining_ms = self.remaining_ms.saturating_sub(ran);
+        }
+        self.preemptions += 1;
+        self.epoch += 1;
+        self.phase = Phase::Preempted;
+        self.running_ms = None;
+    }
+
+    /// Defragmentation migration (§3.3.3): the pod restarts elsewhere with
+    /// a service interruption of `penalty_ms`. The job stays Running; its
+    /// progress is credited and the penalty added to the remaining work.
+    pub fn mark_migrated(&mut self, now: u64, penalty_ms: u64) {
+        debug_assert_eq!(self.phase, Phase::Running);
+        if let Some(start) = self.running_ms {
+            let ran = now.saturating_sub(start);
+            self.remaining_ms = self.remaining_ms.saturating_sub(ran);
+        }
+        self.remaining_ms += penalty_ms;
+        self.running_ms = Some(now);
+        self.migrations += 1;
+        self.epoch += 1;
+    }
+
+    /// Return to the queue after preemption or scheduling failure.
+    pub fn mark_requeued(&mut self) {
+        debug_assert!(matches!(
+            self.phase,
+            Phase::Preempted | Phase::Admitted | Phase::Queued
+        ));
+        self.requeues += 1;
+        self.phase = Phase::Queued;
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+
+    /// Holds resources (bound or running)?
+    pub fn holds_resources(&self) -> bool {
+        matches!(self.phase, Phase::Scheduled | Phase::Running)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ids::{GpuTypeId, TenantId};
+    use crate::job::spec::JobKind;
+
+    fn job() -> Job {
+        let spec = crate::job::spec::JobSpec::homogeneous(
+            JobId(1),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            2,
+            8,
+        )
+        .with_times(100, 5_000);
+        Job::new(spec)
+    }
+
+    #[test]
+    fn happy_path_lifecycle() {
+        let mut j = job();
+        assert_eq!(j.phase, Phase::Queued);
+        j.mark_admitted();
+        j.mark_scheduled(250);
+        assert_eq!(j.waiting_ms(9999), 150);
+        j.mark_running(300);
+        assert!(j.holds_resources());
+        j.mark_finished(5_300);
+        assert!(j.is_terminal());
+        assert_eq!(j.remaining_ms, 0);
+    }
+
+    #[test]
+    fn waiting_time_censored_until_scheduled() {
+        let j = job();
+        assert_eq!(j.waiting_ms(600), 500);
+    }
+
+    #[test]
+    fn preemption_credits_progress_and_requeues() {
+        let mut j = job();
+        j.mark_admitted();
+        j.mark_scheduled(200);
+        j.mark_running(200);
+        j.mark_preempted(2_200); // Ran 2s of 5s.
+        assert_eq!(j.remaining_ms, 3_000);
+        assert_eq!(j.preemptions, 1);
+        assert!(!j.holds_resources());
+        j.mark_requeued();
+        assert_eq!(j.phase, Phase::Queued);
+        assert_eq!(j.requeues, 1);
+        // Rescheduling keeps the original scheduled_ms for JWTD.
+        j.mark_admitted();
+        j.mark_scheduled(3_000);
+        assert_eq!(j.scheduled_ms, Some(200));
+    }
+
+    #[test]
+    fn preempt_before_running_keeps_full_remaining() {
+        let mut j = job();
+        j.mark_admitted();
+        j.mark_scheduled(200);
+        j.mark_preempted(400);
+        assert_eq!(j.remaining_ms, 5_000);
+    }
+}

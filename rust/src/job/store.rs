@@ -1,0 +1,104 @@
+//! In-memory job table shared by QSCH, RSCH and the simulator.
+
+use std::collections::HashMap;
+
+use crate::cluster::ids::JobId;
+
+use super::state::{Job, Phase};
+
+/// All jobs known to the system, keyed by id.
+#[derive(Debug, Default)]
+pub struct JobStore {
+    jobs: HashMap<JobId, Job>,
+}
+
+impl JobStore {
+    pub fn new() -> JobStore {
+        JobStore::default()
+    }
+
+    pub fn insert(&mut self, job: Job) {
+        let id = job.id();
+        let prev = self.jobs.insert(id, job);
+        debug_assert!(prev.is_none(), "job {id} inserted twice");
+    }
+
+    pub fn get(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: JobId) -> Option<&mut Job> {
+        self.jobs.get_mut(&id)
+    }
+
+    /// Panic-on-missing accessors for internal invariants.
+    pub fn expect(&self, id: JobId) -> &Job {
+        self.jobs.get(&id).unwrap_or_else(|| panic!("unknown job {id}"))
+    }
+
+    pub fn expect_mut(&mut self, id: JobId) -> &mut Job {
+        self.jobs.get_mut(&id).unwrap_or_else(|| panic!("unknown job {id}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.values()
+    }
+
+    /// Jobs currently holding resources (Scheduled or Running).
+    pub fn holding_resources(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.values().filter(|j| j.holds_resources())
+    }
+
+    pub fn count_in_phase(&self, phase: Phase) -> usize {
+        self.jobs.values().filter(|j| j.phase == phase).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ids::{GpuTypeId, TenantId};
+    use crate::job::spec::{JobKind, JobSpec};
+
+    fn mk(id: u64) -> Job {
+        Job::new(JobSpec::homogeneous(
+            JobId(id),
+            TenantId(0),
+            JobKind::Dev,
+            GpuTypeId(0),
+            1,
+            1,
+        ))
+    }
+
+    #[test]
+    fn insert_get_iter() {
+        let mut s = JobStore::new();
+        s.insert(mk(1));
+        s.insert(mk(2));
+        assert_eq!(s.len(), 2);
+        assert!(s.get(JobId(1)).is_some());
+        assert!(s.get(JobId(3)).is_none());
+        assert_eq!(s.iter().count(), 2);
+    }
+
+    #[test]
+    fn phase_counting() {
+        let mut s = JobStore::new();
+        s.insert(mk(1));
+        s.insert(mk(2));
+        s.expect_mut(JobId(1)).mark_admitted();
+        s.expect_mut(JobId(1)).mark_scheduled(10);
+        assert_eq!(s.count_in_phase(Phase::Queued), 1);
+        assert_eq!(s.count_in_phase(Phase::Scheduled), 1);
+        assert_eq!(s.holding_resources().count(), 1);
+    }
+}

@@ -1,0 +1,177 @@
+//! JSONL job traces: record a generated workload to disk and replay it —
+//! lets experiment arms (Backfill vs FIFO, E-Binpack on/off) consume the
+//! *identical* input, and lets users bring their own traces.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
+use crate::util::json::Json;
+
+use super::spec::{JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand};
+
+/// Serialize one job to a JSON object.
+pub fn job_to_json(j: &JobSpec) -> Json {
+    let mut o = Json::obj();
+    o.set("id", j.id.0)
+        .set("tenant", j.tenant.0)
+        .set("kind", j.kind.as_str())
+        .set("priority", j.priority.0 as u64)
+        .set("gang", j.gang)
+        .set("submit_ms", j.submit_ms)
+        .set("duration_ms", j.duration_ms)
+        .set("needs_hbd", j.needs_hbd);
+    if let Some(s) = j.strategy {
+        o.set("strategy", s.as_str());
+    }
+    let demands: Vec<Json> = j
+        .demands
+        .iter()
+        .map(|d| {
+            let mut m = Json::obj();
+            m.set("gpu_type", d.gpu_type.0 as u64)
+                .set("replicas", d.replicas)
+                .set("gpus_per_pod", d.gpus_per_pod);
+            m
+        })
+        .collect();
+    o.set("demands", demands);
+    o
+}
+
+/// Parse one job from a JSON object.
+pub fn job_from_json(v: &Json) -> Result<JobSpec> {
+    let get = |k: &str| v.get(k).with_context(|| format!("missing field '{k}'"));
+    let kind_s = get("kind")?.as_str().context("kind not a string")?;
+    let kind = JobKind::parse(kind_s).with_context(|| format!("bad kind '{kind_s}'"))?;
+    let demands_json = get("demands")?.as_arr().context("demands not an array")?;
+    if demands_json.is_empty() {
+        bail!("job has no demands");
+    }
+    let mut demands = Vec::with_capacity(demands_json.len());
+    for d in demands_json {
+        demands.push(TypedDemand {
+            gpu_type: GpuTypeId(
+                d.get("gpu_type")
+                    .and_then(Json::as_u64)
+                    .context("demand.gpu_type")? as u16,
+            ),
+            replicas: d
+                .get("replicas")
+                .and_then(Json::as_u64)
+                .context("demand.replicas")? as u32,
+            gpus_per_pod: d
+                .get("gpus_per_pod")
+                .and_then(Json::as_u64)
+                .context("demand.gpus_per_pod")? as u32,
+        });
+    }
+    let strategy = match v.get("strategy").and_then(Json::as_str) {
+        Some(s) => {
+            Some(PlacementStrategy::parse(s).with_context(|| format!("bad strategy '{s}'"))?)
+        }
+        None => None,
+    };
+    Ok(JobSpec {
+        id: JobId(get("id")?.as_u64().context("id")?),
+        tenant: TenantId(get("tenant")?.as_u64().context("tenant")? as u32),
+        kind,
+        priority: Priority(get("priority")?.as_u64().context("priority")? as u8),
+        gang: get("gang")?.as_bool().context("gang")?,
+        demands,
+        submit_ms: get("submit_ms")?.as_u64().context("submit_ms")?,
+        duration_ms: get("duration_ms")?.as_u64().context("duration_ms")?,
+        strategy,
+        needs_hbd: v.get("needs_hbd").and_then(Json::as_bool).unwrap_or(false),
+    })
+}
+
+/// Write a trace as JSON-lines.
+pub fn write_trace(path: &Path, jobs: &[JobSpec]) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    for j in jobs {
+        writeln!(w, "{}", job_to_json(j).to_string_compact())?;
+    }
+    Ok(())
+}
+
+/// Read a JSONL trace.
+pub fn read_trace(path: &Path) -> Result<Vec<JobSpec>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening trace file {}", path.display()))?;
+    let r = std::io::BufReader::new(f);
+    let mut jobs = Vec::new();
+    for (i, line) in r.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(&line).with_context(|| format!("trace line {}", i + 1))?;
+        jobs.push(job_from_json(&v).with_context(|| format!("trace line {}", i + 1))?);
+    }
+    Ok(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::workload::{WorkloadConfig, WorkloadGen};
+
+    #[test]
+    fn json_roundtrip_single() {
+        let spec = JobSpec::homogeneous(
+            JobId(7),
+            TenantId(2),
+            JobKind::Inference,
+            GpuTypeId(1),
+            4,
+            1,
+        )
+        .with_times(123, 456_000)
+        .with_strategy(PlacementStrategy::ESpread);
+        let j = job_to_json(&spec);
+        let back = job_from_json(&j).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn file_roundtrip_workload() {
+        let jobs = WorkloadGen::new(WorkloadConfig::paper_training(99)).generate(200);
+        let dir = std::env::temp_dir().join("kant_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        write_trace(&path, &jobs).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(back, jobs);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let v = Json::parse(r#"{"id": 1}"#).unwrap();
+        let err = job_from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("missing field"), "{err}");
+    }
+
+    #[test]
+    fn bad_kind_errors() {
+        let spec =
+            JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Dev, GpuTypeId(0), 1, 1);
+        let mut j = job_to_json(&spec);
+        j.set("kind", "bogus");
+        assert!(job_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn empty_demands_rejected() {
+        let spec =
+            JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Dev, GpuTypeId(0), 1, 1);
+        let mut j = job_to_json(&spec);
+        j.set("demands", Vec::<Json>::new());
+        assert!(job_from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,442 @@
+//! Synthetic workload generation matching the paper's §5.1.1 job
+//! characteristics (Figure 2): job sizes span 1–2048 GPUs, **over 90 % of
+//! jobs request ≤ 8 GPUs**, yet **jobs of ≥ 256 GPUs consume more than half
+//! of all GPU-time** — small jobs' cumulative GPU-time is under 10 %.
+//!
+//! The generator is fully deterministic given a seed and can be calibrated
+//! to a target offered load against a cluster's capacity.
+
+use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
+use crate::util::rng::Pcg32;
+
+use super::spec::{JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand};
+
+/// One size class of the Figure-2 distribution.
+#[derive(Debug, Clone, Copy)]
+pub struct SizeClass {
+    pub gpus: u32,
+    /// Relative job-count weight.
+    pub weight: f64,
+    /// Mean duration (hours) for this class; durations are log-normal
+    /// around this mean (large jobs run much longer — that is what makes
+    /// their GPU-time share dominate).
+    pub mean_hours: f64,
+}
+
+/// Workload shape parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub seed: u64,
+    /// Size-class mix (defaults to the Figure-2 calibration).
+    pub classes: Vec<SizeClass>,
+    /// Mean job inter-arrival time in ms (Poisson process).
+    pub mean_interarrival_ms: f64,
+    /// Tenants to spread jobs across (round-robin weighting by rng).
+    pub num_tenants: u32,
+    /// Per-tenant demand weights (empty = uniform). Length must equal
+    /// `num_tenants` when set — lets quota profiles match demand (Fig. 10).
+    pub tenant_weights: Vec<f64>,
+    /// Fraction of jobs that are training (gang); the rest split between
+    /// inference and dev.
+    pub training_frac: f64,
+    pub inference_frac: f64,
+    /// GPU model for generated jobs (single-pool workloads).
+    pub gpu_type: GpuTypeId,
+    /// GPUs per node in the target cluster (pods are sized to boards).
+    pub gpus_per_node: u32,
+    /// Heterogeneous demand mix: (gpu_type, weight, gpus_per_node). When
+    /// non-empty this overrides `gpu_type`/`gpus_per_node`, sampling a
+    /// model per job — multi-pool clusters need demand in every pool.
+    pub type_mix: Vec<(GpuTypeId, f64, u32)>,
+    /// Log-normal sigma for durations.
+    pub duration_sigma: f64,
+    /// Fraction of HIGH-priority jobs; equal share of LOW; rest NORMAL.
+    pub high_priority_frac: f64,
+    /// Cap sizes at this many GPUs (small clusters); 0 = uncapped.
+    pub max_gpus: u32,
+}
+
+impl WorkloadConfig {
+    /// Figure-2-calibrated training-cluster mix (per mille job counts).
+    pub fn paper_training(seed: u64) -> WorkloadConfig {
+        WorkloadConfig {
+            seed,
+            classes: vec![
+                SizeClass { gpus: 1, weight: 400.0, mean_hours: 0.5 },
+                SizeClass { gpus: 2, weight: 130.0, mean_hours: 0.5 },
+                SizeClass { gpus: 4, weight: 120.0, mean_hours: 0.75 },
+                SizeClass { gpus: 8, weight: 270.0, mean_hours: 1.0 },
+                SizeClass { gpus: 16, weight: 25.0, mean_hours: 2.0 },
+                SizeClass { gpus: 32, weight: 12.0, mean_hours: 3.0 },
+                SizeClass { gpus: 64, weight: 8.0, mean_hours: 4.0 },
+                SizeClass { gpus: 128, weight: 10.0, mean_hours: 6.0 },
+                SizeClass { gpus: 256, weight: 10.0, mean_hours: 8.0 },
+                SizeClass { gpus: 512, weight: 8.0, mean_hours: 10.0 },
+                SizeClass { gpus: 1024, weight: 5.0, mean_hours: 12.0 },
+                SizeClass { gpus: 2048, weight: 2.0, mean_hours: 16.0 },
+            ],
+            mean_interarrival_ms: 60_000.0,
+            num_tenants: 4,
+            tenant_weights: Vec::new(),
+            training_frac: 0.85,
+            inference_frac: 0.05,
+            gpu_type: GpuTypeId(0),
+            gpus_per_node: 8,
+            type_mix: Vec::new(),
+            duration_sigma: 0.35,
+            high_priority_frac: 0.05,
+            max_gpus: 0,
+        }
+    }
+
+    /// Small multi-tenant inference-cluster mix (§5.2): 1–8 GPU services,
+    /// long-lived, non-gang.
+    pub fn paper_inference(seed: u64) -> WorkloadConfig {
+        WorkloadConfig {
+            seed,
+            classes: vec![
+                SizeClass { gpus: 1, weight: 45.0, mean_hours: 24.0 },
+                SizeClass { gpus: 2, weight: 25.0, mean_hours: 24.0 },
+                SizeClass { gpus: 4, weight: 20.0, mean_hours: 48.0 },
+                SizeClass { gpus: 8, weight: 10.0, mean_hours: 48.0 },
+            ],
+            mean_interarrival_ms: 600_000.0,
+            num_tenants: 8,
+            tenant_weights: Vec::new(),
+            training_frac: 0.0,
+            inference_frac: 0.95,
+            gpu_type: GpuTypeId(0),
+            gpus_per_node: 8,
+            type_mix: Vec::new(),
+            duration_sigma: 0.5,
+            high_priority_frac: 0.1,
+            max_gpus: 8,
+        }
+    }
+
+    /// Mean GPU-hours per job under this mix (closed form over classes,
+    /// honouring the `max_gpus` size cap).
+    pub fn mean_gpu_hours(&self) -> f64 {
+        let total_w: f64 = self.classes.iter().map(|c| c.weight).sum();
+        self.classes
+            .iter()
+            .map(|c| {
+                let gpus = if self.max_gpus > 0 {
+                    c.gpus.min(self.max_gpus)
+                } else {
+                    c.gpus
+                };
+                c.weight / total_w * gpus as f64 * c.mean_hours
+            })
+            .sum()
+    }
+
+    /// Calibrate the arrival rate so offered load ≈ `rho` × `capacity_gpus`
+    /// (steady state): interarrival = mean_job_gpu_hours / (rho × capacity).
+    pub fn calibrate_load(mut self, capacity_gpus: u32, rho: f64) -> WorkloadConfig {
+        let gpu_hours_per_job = self.mean_gpu_hours();
+        let jobs_per_hour = rho * capacity_gpus as f64 / gpu_hours_per_job;
+        self.mean_interarrival_ms = 3_600_000.0 / jobs_per_hour;
+        self
+    }
+}
+
+/// The deterministic workload generator.
+pub struct WorkloadGen {
+    cfg: WorkloadConfig,
+    rng: Pcg32,
+    next_id: u64,
+    clock_ms: f64,
+}
+
+impl WorkloadGen {
+    pub fn new(cfg: WorkloadConfig) -> WorkloadGen {
+        let rng = Pcg32::seed_from_u64(cfg.seed);
+        WorkloadGen {
+            cfg,
+            rng,
+            next_id: 1,
+            clock_ms: 0.0,
+        }
+    }
+
+    pub fn config(&self) -> &WorkloadConfig {
+        &self.cfg
+    }
+
+    /// Generate the next job (advancing the arrival clock).
+    pub fn next_job(&mut self) -> JobSpec {
+        let dt = self
+            .rng
+            .exponential(1.0 / self.cfg.mean_interarrival_ms.max(1e-9));
+        self.clock_ms += dt;
+        let submit_ms = self.clock_ms as u64;
+
+        // Size class.
+        let weights: Vec<f64> = self.cfg.classes.iter().map(|c| c.weight).collect();
+        let class = self.cfg.classes[self.rng.categorical(&weights)];
+        let mut gpus = class.gpus;
+        if self.cfg.max_gpus > 0 {
+            gpus = gpus.min(self.cfg.max_gpus);
+        }
+
+        // GPU model (heterogeneous mix or the single configured type).
+        let (gpu_type, node_size) = if self.cfg.type_mix.is_empty() {
+            (self.cfg.gpu_type, self.cfg.gpus_per_node)
+        } else {
+            let tw: Vec<f64> = self.cfg.type_mix.iter().map(|&(_, w, _)| w).collect();
+            let pick = self.cfg.type_mix[self.rng.categorical(&tw)];
+            (pick.0, pick.2)
+        };
+        // Pods can never exceed the model's board size.
+        gpus = gpus.min(node_size.max(1) * 256);
+
+        // Kind.
+        let r = self.rng.f64();
+        let kind = if r < self.cfg.training_frac {
+            JobKind::Training
+        } else if r < self.cfg.training_frac + self.cfg.inference_frac {
+            JobKind::Inference
+        } else {
+            JobKind::Dev
+        };
+
+        // Shape: jobs larger than one node become N whole-node pods;
+        // sub-node jobs are a single pod (training) or `gpus` single-GPU
+        // replicas (inference services scale by replica).
+        let per_node = node_size.max(1);
+        let (replicas, gpus_per_pod) = if gpus > per_node {
+            let pods = gpus.div_ceil(per_node);
+            (pods, per_node)
+        } else if kind == JobKind::Inference && gpus > 1 {
+            (gpus, 1)
+        } else {
+            (1, gpus)
+        };
+
+        // Duration: log-normal with the class mean.
+        let mean_ms = class.mean_hours * 3_600_000.0;
+        let sigma = self.cfg.duration_sigma;
+        let mu = mean_ms.ln() - sigma * sigma / 2.0;
+        let duration_ms = self.rng.log_normal(mu, sigma).max(10_000.0) as u64;
+
+        // Priority.
+        let pr = self.rng.f64();
+        let priority = if pr < self.cfg.high_priority_frac {
+            Priority::HIGH
+        } else if pr < 2.0 * self.cfg.high_priority_frac {
+            Priority::LOW
+        } else {
+            Priority::NORMAL
+        };
+
+        let tenant = if self.cfg.tenant_weights.len() == self.cfg.num_tenants as usize
+            && !self.cfg.tenant_weights.is_empty()
+        {
+            TenantId(self.rng.categorical(&self.cfg.tenant_weights) as u32)
+        } else {
+            TenantId(self.rng.below(self.cfg.num_tenants.max(1) as u64) as u32)
+        };
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+
+        JobSpec {
+            id,
+            tenant,
+            kind,
+            priority,
+            gang: kind == JobKind::Training,
+            demands: vec![TypedDemand {
+                gpu_type,
+                replicas,
+                gpus_per_pod,
+            }],
+            submit_ms,
+            duration_ms,
+            strategy: None,
+            needs_hbd: false,
+        }
+    }
+
+    /// Generate `n` jobs (sorted by submit time by construction).
+    pub fn generate(&mut self, n: usize) -> Vec<JobSpec> {
+        (0..n).map(|_| self.next_job()).collect()
+    }
+
+    /// Generate jobs until the arrival clock passes `horizon_ms`.
+    pub fn generate_until(&mut self, horizon_ms: u64) -> Vec<JobSpec> {
+        let mut out = Vec::new();
+        loop {
+            let j = self.next_job();
+            if j.submit_ms > horizon_ms {
+                break;
+            }
+            out.push(j);
+        }
+        out
+    }
+}
+
+/// Assign every job a fixed strategy (for A/B experiment arms).
+pub fn with_strategy(mut jobs: Vec<JobSpec>, s: PlacementStrategy) -> Vec<JobSpec> {
+    for j in &mut jobs {
+        j.strategy = Some(s);
+    }
+    jobs
+}
+
+/// Figure-2 style distribution report: per size class, the share of job
+/// count and of GPU-time.
+pub fn distribution_report(jobs: &[JobSpec]) -> Vec<(u32, f64, f64)> {
+    let mut sizes: Vec<u32> = jobs.iter().map(|j| j.total_gpus()).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let total_jobs = jobs.len() as f64;
+    let total_gpu_time: f64 = jobs
+        .iter()
+        .map(|j| j.total_gpus() as f64 * j.duration_ms as f64)
+        .sum();
+    sizes
+        .into_iter()
+        .map(|s| {
+            let of_size: Vec<&JobSpec> = jobs.iter().filter(|j| j.total_gpus() == s).collect();
+            let count_share = of_size.len() as f64 / total_jobs;
+            let time_share = of_size
+                .iter()
+                .map(|j| j.total_gpus() as f64 * j.duration_ms as f64)
+                .sum::<f64>()
+                / total_gpu_time.max(1.0);
+            (s, count_share, time_share)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = WorkloadGen::new(WorkloadConfig::paper_training(7)).generate(100);
+        let b = WorkloadGen::new(WorkloadConfig::paper_training(7)).generate(100);
+        assert_eq!(a, b);
+        let c = WorkloadGen::new(WorkloadConfig::paper_training(8)).generate(100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn figure2_shape_holds() {
+        let jobs = WorkloadGen::new(WorkloadConfig::paper_training(42)).generate(10_000);
+        let report = distribution_report(&jobs);
+        let small_count: f64 = report
+            .iter()
+            .filter(|(s, _, _)| *s <= 8)
+            .map(|(_, c, _)| c)
+            .sum();
+        let small_time: f64 = report
+            .iter()
+            .filter(|(s, _, _)| *s <= 8)
+            .map(|(_, _, t)| t)
+            .sum();
+        let big_time: f64 = report
+            .iter()
+            .filter(|(s, _, _)| *s >= 256)
+            .map(|(_, _, t)| t)
+            .sum();
+        assert!(small_count > 0.90, "small-job count share {small_count}");
+        assert!(small_time < 0.10, "small-job GPU-time share {small_time}");
+        assert!(big_time > 0.50, "big-job GPU-time share {big_time}");
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_poisson_mean() {
+        let cfg = WorkloadConfig::paper_training(1);
+        let mean = cfg.mean_interarrival_ms;
+        let jobs = WorkloadGen::new(cfg).generate(5_000);
+        for w in jobs.windows(2) {
+            assert!(w[0].submit_ms <= w[1].submit_ms);
+        }
+        let span = jobs.last().unwrap().submit_ms as f64;
+        let measured = span / jobs.len() as f64;
+        assert!(
+            (measured - mean).abs() / mean < 0.1,
+            "interarrival {measured} vs {mean}"
+        );
+    }
+
+    #[test]
+    fn large_jobs_are_whole_node_gangs() {
+        let jobs = WorkloadGen::new(WorkloadConfig::paper_training(3)).generate(5_000);
+        for j in jobs.iter().filter(|j| j.total_gpus() > 8) {
+            let d = j.demands[0];
+            assert_eq!(d.gpus_per_pod, 8, "large jobs use whole boards");
+            assert_eq!(d.replicas * 8, j.total_gpus());
+        }
+    }
+
+    #[test]
+    fn inference_mix_is_small_and_non_gang() {
+        let jobs = WorkloadGen::new(WorkloadConfig::paper_inference(5)).generate(2_000);
+        assert!(jobs.iter().all(|j| j.total_gpus() <= 8));
+        let gang = jobs.iter().filter(|j| j.gang).count();
+        assert!(gang == 0, "inference workload must be non-gang, got {gang}");
+        let inf = jobs
+            .iter()
+            .filter(|j| j.kind == JobKind::Inference)
+            .count() as f64
+            / jobs.len() as f64;
+        assert!(inf > 0.9);
+    }
+
+    #[test]
+    fn calibrate_load_hits_target_roughly() {
+        // rho=0.8 against 1024 GPUs: offered GPU-hours/hour ≈ 819.
+        let cfg = WorkloadConfig::paper_training(11).calibrate_load(1024, 0.8);
+        let jobs = WorkloadGen::new(cfg).generate(4_000);
+        let span_h = jobs.last().unwrap().submit_ms as f64 / 3_600_000.0;
+        let offered: f64 = jobs
+            .iter()
+            .map(|j| j.total_gpus() as f64 * j.duration_ms as f64 / 3_600_000.0)
+            .sum();
+        let rate = offered / span_h;
+        let target = 0.8 * 1024.0;
+        assert!(
+            (rate - target).abs() / target < 0.25,
+            "offered {rate} GPU-h/h vs target {target}"
+        );
+    }
+
+    #[test]
+    fn priorities_follow_config_fractions() {
+        let jobs = WorkloadGen::new(WorkloadConfig::paper_training(13)).generate(10_000);
+        let high = jobs.iter().filter(|j| j.priority == Priority::HIGH).count() as f64
+            / jobs.len() as f64;
+        assert!((high - 0.05).abs() < 0.01, "high frac {high}");
+    }
+
+    #[test]
+    fn tenants_are_spread() {
+        let jobs = WorkloadGen::new(WorkloadConfig::paper_training(17)).generate(4_000);
+        for t in 0..4u32 {
+            let share = jobs.iter().filter(|j| j.tenant == TenantId(t)).count() as f64
+                / jobs.len() as f64;
+            assert!((share - 0.25).abs() < 0.05, "tenant {t} share {share}");
+        }
+    }
+
+    #[test]
+    fn generate_until_respects_horizon() {
+        let jobs =
+            WorkloadGen::new(WorkloadConfig::paper_training(19)).generate_until(3_600_000);
+        assert!(!jobs.is_empty());
+        assert!(jobs.iter().all(|j| j.submit_ms <= 3_600_000));
+    }
+
+    #[test]
+    fn max_gpus_caps_sizes() {
+        let mut cfg = WorkloadConfig::paper_training(23);
+        cfg.max_gpus = 8;
+        let jobs = WorkloadGen::new(cfg).generate(2_000);
+        assert!(jobs.iter().all(|j| j.total_gpus() <= 8));
+    }
+}

@@ -1,0 +1,27 @@
+//! # Kant — a unified scheduling system for large-scale AI clusters
+//!
+//! Reproduction of *“Kant: An Efficient Unified Scheduling System for
+//! Large-Scale AI Clusters”* (Zeng et al., ZTE, CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Kant scheduler itself: QSCH (queueing,
+//!   admission, preemption) + RSCH (placement, gang, E-Binpack/E-Spread,
+//!   topology awareness) over a discrete-event cluster simulator.
+//! * **L2/L1 (`python/compile`)** — the per-cycle node/group scoring
+//!   hot-spot as JAX + Pallas, AOT-lowered to HLO text in `artifacts/`.
+//! * **runtime** — loads those artifacts through PJRT (`xla` crate) so the
+//!   XLA scorer can serve RSCH's hot path with Python nowhere at runtime.
+//!
+//! See DESIGN.md for the module inventory and the experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cluster;
+pub mod config;
+pub mod experiments;
+pub mod job;
+pub mod qsch;
+pub mod rsch;
+pub mod runtime;
+pub mod sim;
+pub mod metrics;
+pub mod util;

@@ -1,0 +1,202 @@
+//! `kant` — the leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   simulate   run a workload (generated or trace) on a cluster preset
+//!   gen-trace  generate and save a workload trace (JSONL)
+//!   validate   smoke-check the AOT artifacts through the PJRT runtime
+//!
+//! The figures harness lives in the separate `figures` binary.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use kant::config::{inference_cluster, training_cluster, InferencePreset, Scale};
+use kant::experiments::jwtd_buckets;
+use kant::job::spec::PlacementStrategy;
+use kant::job::trace;
+use kant::job::workload::{WorkloadConfig, WorkloadGen};
+use kant::metrics::report::{bucket_comparison, fmt_ms, headline, pct};
+use kant::qsch::policy::{QschConfig, QueuePolicy};
+use kant::qsch::Qsch;
+use kant::rsch::{Rsch, RschConfig};
+use kant::sim::{run, SimConfig};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("simulate") => simulate(&args[1..]),
+        Some("gen-trace") => gen_trace(&args[1..]),
+        Some("validate") => validate(&args[1..]),
+        Some("-h" | "--help") | None => {
+            println!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}'\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+kant — unified scheduling system for large-scale AI clusters (paper reproduction)
+
+usage:
+  kant simulate [--cluster train|i2|i7|a10] [--scale small|paper] [--seed N]
+                [--policy strict-fifo|best-effort|backfill]
+                [--strategy native|binpack|e-binpack|spread|e-spread]
+                [--trace FILE] [--xla-scorer] [--flat] [--deep-snapshot]
+  kant gen-trace [--seed N] [--jobs N] [--mix training|inference] --out FILE
+  kant validate [--artifacts DIR]
+";
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn simulate(args: &[String]) -> Result<()> {
+    let cluster = flag_value(args, "--cluster").unwrap_or("train");
+    let scale = Scale::parse(flag_value(args, "--scale").unwrap_or("small"))
+        .context("bad --scale")?;
+    let seed: u64 = flag_value(args, "--seed").unwrap_or("42").parse()?;
+    let policy = QueuePolicy::parse(flag_value(args, "--policy").unwrap_or("backfill"))
+        .context("bad --policy")?;
+
+    let mut env = match cluster {
+        "train" => training_cluster(scale, seed, 0.95),
+        other => {
+            let preset = InferencePreset::parse(other)
+                .with_context(|| format!("unknown cluster '{other}'"))?;
+            inference_cluster(preset, seed)
+        }
+    };
+
+    let qsch_cfg = QschConfig {
+        policy,
+        ..QschConfig::default()
+    };
+    let mut rsch_cfg = RschConfig::default();
+    if let Some(s) = flag_value(args, "--strategy") {
+        let strat = PlacementStrategy::parse(s).context("bad --strategy")?;
+        rsch_cfg.training_strategy = strat;
+        rsch_cfg.inference_strategy = strat;
+        rsch_cfg.dev_strategy = strat;
+    }
+    if has_flag(args, "--flat") {
+        rsch_cfg.two_level = false;
+    }
+    if has_flag(args, "--deep-snapshot") {
+        rsch_cfg.snapshot_mode = kant::cluster::snapshot::SnapshotMode::DeepCopy;
+    }
+
+    let jobs = match flag_value(args, "--trace") {
+        Some(path) => trace::read_trace(&PathBuf::from(path))?,
+        None => WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms),
+    };
+    println!(
+        "cluster={} gpus={} jobs={} policy={} two_level={} snapshot={:?} scorer={}",
+        env.label,
+        env.state.total_gpus(),
+        jobs.len(),
+        policy.as_str(),
+        rsch_cfg.two_level,
+        rsch_cfg.snapshot_mode,
+        if has_flag(args, "--xla-scorer") { "xla" } else { "native" },
+    );
+
+    let mut qsch = Qsch::new(qsch_cfg, env.ledger.clone());
+    let mut rsch = if has_flag(args, "--xla-scorer") {
+        let mut backend = kant::runtime::XlaBackend::new("artifacts")
+            .context("loading XLA scorer artifacts (run `make artifacts`)")?;
+        backend.warmup().context("compiling artifacts")?;
+        Rsch::with_backend(rsch_cfg, &env.state, Box::new(backend))
+    } else {
+        Rsch::new(rsch_cfg, &env.state)
+    };
+    let sim_cfg = SimConfig {
+        horizon_ms: env.horizon_ms + 24 * 3_600_000,
+        ..SimConfig::default()
+    };
+    let out = run(&mut env.state, &mut qsch, &mut rsch, jobs, &sim_cfg);
+
+    println!("{}", headline(env.label.as_str(), &out.metrics));
+    let arms = vec![("wait", jwtd_buckets(&out.store, out.end_ms).summaries())];
+    println!(
+        "{}",
+        bucket_comparison("JWTD (mean wait by job size)", &arms, fmt_ms)
+    );
+    println!(
+        "qsch: {:?}\nrsch: {:?}\nsnapshot: {:?}",
+        out.qsch_stats, out.rsch_stats, out.snapshot_stats
+    );
+    println!(
+        "sim: end={} events={} unfinished={} | GAR {} SOR {} GFR {}",
+        fmt_ms(out.end_ms as f64),
+        out.events_processed,
+        out.unfinished_jobs,
+        pct(out.metrics.gar_avg()),
+        pct(out.metrics.sor_final()),
+        pct(out.metrics.gfr_avg()),
+    );
+    Ok(())
+}
+
+fn gen_trace(args: &[String]) -> Result<()> {
+    let seed: u64 = flag_value(args, "--seed").unwrap_or("42").parse()?;
+    let n: usize = flag_value(args, "--jobs").unwrap_or("1000").parse()?;
+    let out = flag_value(args, "--out").context("--out FILE required")?;
+    let cfg = match flag_value(args, "--mix").unwrap_or("training") {
+        "training" => WorkloadConfig::paper_training(seed),
+        "inference" => WorkloadConfig::paper_inference(seed),
+        other => bail!("unknown mix '{other}'"),
+    };
+    let jobs = WorkloadGen::new(cfg).generate(n);
+    trace::write_trace(&PathBuf::from(out), &jobs)?;
+    println!("wrote {n} jobs to {out}");
+    Ok(())
+}
+
+fn validate(args: &[String]) -> Result<()> {
+    let dir = flag_value(args, "--artifacts").unwrap_or("artifacts");
+    let mut backend = kant::runtime::XlaBackend::new(dir)
+        .context("loading artifacts (run `make artifacts` first)")?;
+    backend.warmup().context("compiling artifacts")?;
+    // Score a toy candidate set and check the math against the native
+    // backend (the same parity the integration tests enforce).
+    use kant::rsch::features::NODE_F;
+    use kant::rsch::score::{NativeBackend, ScoreBackend};
+    let n = 64;
+    let mut feat = vec![0.0f32; n * NODE_F];
+    for i in 0..n {
+        let row = &mut feat[i * NODE_F..(i + 1) * NODE_F];
+        row[0] = (i % 9) as f32; // free
+        row[1] = 8.0;
+        row[2] = 8.0 - row[0];
+        row[3] = 1.0;
+        row[4] = 200.0;
+        row[5] = 256.0;
+        row[8] = 3.0;
+        row[11] = row[0];
+    }
+    let job = [2.0, 16.0, 1.0, 0.0, 0.0, 2.0, 0.0, 0.0];
+    let w = [1.0, 0.0, 0.6, 0.0, 0.5, 0.8, -0.3, 0.2];
+    let xla = backend.score_nodes(&feat, n, &job, &w);
+    let native = NativeBackend.score_nodes(&feat, n, &job, &w);
+    let max_diff = xla
+        .iter()
+        .zip(&native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "validate: scored {n} nodes via XLA ({} launches); max |xla - native| = {max_diff:.2e}",
+        backend.launches
+    );
+    anyhow::ensure!(max_diff < 1e-3, "XLA/native scorer divergence");
+    println!("validate OK — artifacts healthy, parity holds");
+    Ok(())
+}

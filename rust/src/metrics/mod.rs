@@ -1,0 +1,289 @@
+//! The paper's five key metrics (§4): GAR, SOR, GFR, JWTD, JTTED —
+//! collected live during simulation and rendered by `metrics::report`.
+
+pub mod report;
+
+use crate::cluster::state::ClusterState;
+use crate::job::state::Job;
+use crate::util::stats::{SizeBuckets, Summary, TimeWeighted};
+
+/// Live metrics collector. The runner calls the hooks; figures read the
+/// accessors.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    total_gpus: u32,
+    t0: u64,
+    last_ms: u64,
+    /// Allocated-GPU count over time → GAR(t) and SOR via integral (§4.1/4.2).
+    gar: TimeWeighted,
+    /// Fragmentation ratio over time (§4.3).
+    gfr: TimeWeighted,
+    /// Waiting time (ms) by job size (§4.4).
+    jwtd: SizeBuckets,
+    /// Node-count deviation ratio by job size (§4.5).
+    jtted_node: SizeBuckets,
+    /// NodeNetGroup deviation ratio by job size (§4.5).
+    jtted_group: SizeBuckets,
+    pub jobs_submitted: u64,
+    pub jobs_finished: u64,
+    pub jobs_scheduled: u64,
+}
+
+impl Metrics {
+    pub fn new(state: &ClusterState, t0: u64) -> Metrics {
+        let mut m = Metrics {
+            total_gpus: state.total_gpus(),
+            t0,
+            last_ms: t0,
+            gar: TimeWeighted::new(),
+            gfr: TimeWeighted::new(),
+            jwtd: SizeBuckets::paper_default(),
+            jtted_node: SizeBuckets::paper_default(),
+            jtted_group: SizeBuckets::paper_default(),
+            jobs_submitted: 0,
+            jobs_finished: 0,
+            jobs_scheduled: 0,
+        };
+        m.observe_cluster(t0, state);
+        m
+    }
+
+    /// Record the instantaneous allocation + fragmentation state.
+    pub fn observe_cluster(&mut self, now: u64, state: &ClusterState) {
+        self.last_ms = self.last_ms.max(now);
+        self.gar.push(now, state.allocated_gpus() as f64);
+        self.gfr.push(now, state.fragmentation_ratio(None));
+    }
+
+    pub fn on_submit(&mut self) {
+        self.jobs_submitted += 1;
+    }
+
+    /// Record a successful (first) scheduling: JWTD + JTTED.
+    pub fn on_scheduled(&mut self, now: u64, state: &ClusterState, job: &Job) {
+        self.jobs_scheduled += 1;
+        let gpus = job.spec.total_gpus();
+        self.jwtd.record(gpus, job.waiting_ms(now) as f64);
+
+        // JTTED (§4.5): deviation from the optimal packing.
+        let nodes = state.nodes_of(job.id());
+        if nodes.is_empty() {
+            return;
+        }
+        let gpus_per_node = state
+            .gpu_type(state.node(nodes[0]).gpu_type)
+            .gpus_per_node as u32;
+        let optimal_nodes = gpus.div_ceil(gpus_per_node).max(1);
+        let actual_nodes = nodes.len() as u32;
+        self.jtted_node
+            .record(gpus, actual_nodes as f64 / optimal_nodes as f64);
+
+        let group = state.node(nodes[0]).group;
+        let nodes_per_group = state.fabric.groups[group.index()].nodes.len() as u32;
+        let optimal_groups = optimal_nodes.div_ceil(nodes_per_group.max(1)).max(1);
+        let actual_groups = state.fabric.groups_spanned(&nodes) as u32;
+        self.jtted_group
+            .record(gpus, actual_groups as f64 / optimal_groups as f64);
+    }
+
+    pub fn on_finished(&mut self) {
+        self.jobs_finished += 1;
+    }
+
+    // ---- accessors (figures) ----
+
+    pub fn window(&self) -> (u64, u64) {
+        (self.t0, self.last_ms)
+    }
+
+    /// Instantaneous GAR at `t`.
+    pub fn gar_at(&self, t: u64) -> f64 {
+        self.gar.at(t) / self.total_gpus.max(1) as f64
+    }
+
+    /// Time-averaged GAR over the whole run.
+    pub fn gar_avg(&self) -> f64 {
+        let (a, b) = self.window();
+        if b <= a {
+            return 0.0;
+        }
+        self.gar.average(a, b) / self.total_gpus.max(1) as f64
+    }
+
+    /// Median of the sampled instantaneous GAR series (what the paper's
+    /// GAR bars report — distinct from the cumulative SOR).
+    pub fn gar_median(&self, points: usize) -> f64 {
+        let (a, b) = self.window();
+        if b <= a || points == 0 {
+            return 0.0;
+        }
+        let samples: Vec<f64> = (1..=points)
+            .map(|i| self.gar_at(a + (b - a) * i as u64 / points as u64))
+            .collect();
+        crate::util::stats::median(&samples)
+    }
+
+    /// SOR at `t`: cumulative allocated GPU-time / available GPU-time (§4.2).
+    pub fn sor_at(&self, t: u64) -> f64 {
+        if t <= self.t0 {
+            return 0.0;
+        }
+        self.gar.integral(self.t0, t) / (self.total_gpus.max(1) as f64 * (t - self.t0) as f64)
+    }
+
+    pub fn sor_final(&self) -> f64 {
+        self.sor_at(self.last_ms)
+    }
+
+    pub fn gfr_avg(&self) -> f64 {
+        let (a, b) = self.window();
+        if b <= a {
+            return 0.0;
+        }
+        self.gfr.average(a, b)
+    }
+
+    /// Time-averaged GAR over an explicit window (steady-state reporting).
+    pub fn gar_avg_between(&self, t0: u64, t1: u64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        self.gar.average(t0, t1) / self.total_gpus.max(1) as f64
+    }
+
+    /// Time-averaged GFR over an explicit window.
+    pub fn gfr_avg_between(&self, t0: u64, t1: u64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        self.gfr.average(t0, t1)
+    }
+
+    pub fn gfr_at(&self, t: u64) -> f64 {
+        self.gfr.at(t)
+    }
+
+    /// Evenly-sampled series for time-series figures: (t, GAR, SOR, GFR).
+    pub fn series(&self, points: usize) -> Vec<(u64, f64, f64, f64)> {
+        let (a, b) = self.window();
+        if points == 0 || b <= a {
+            return Vec::new();
+        }
+        (1..=points)
+            .map(|i| {
+                let t = a + (b - a) * i as u64 / points as u64;
+                (t, self.gar_at(t), self.sor_at(t), self.gfr_at(t))
+            })
+            .collect()
+    }
+
+    pub fn jwtd_summaries(&self) -> Vec<(String, Summary)> {
+        self.jwtd.summaries()
+    }
+
+    pub fn jtted_node_summaries(&self) -> Vec<(String, Summary)> {
+        self.jtted_node.summaries()
+    }
+
+    pub fn jtted_group_summaries(&self) -> Vec<(String, Summary)> {
+        self.jtted_group.summaries()
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.total_gpus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{GpuTypeId, JobId, NodeId, PodId, TenantId};
+    use crate::cluster::state::PodPlacement;
+    use crate::job::spec::{JobKind, JobSpec};
+
+    fn place(state: &mut ClusterState, id: u64, node: u32, devs: Vec<u8>) {
+        state
+            .commit_placements(
+                JobId(id),
+                vec![PodPlacement {
+                    pod: PodId::new(JobId(id), 0),
+                    node: NodeId(node),
+                    devices: devs,
+                    nic: 0,
+                }],
+            )
+            .unwrap();
+    }
+
+    #[test]
+    fn gar_and_sor_track_allocation_over_time() {
+        let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2)); // 16 GPUs.
+        let mut m = Metrics::new(&state, 0);
+        place(&mut state, 1, 0, (0..8).collect());
+        m.observe_cluster(0, &state);
+        m.observe_cluster(100, &state); // Hold 8/16 for [0,100).
+        state.release_job(JobId(1)).unwrap();
+        m.observe_cluster(100, &state);
+        m.observe_cluster(200, &state);
+        assert!((m.gar_at(50) - 0.5).abs() < 1e-9);
+        assert!((m.gar_at(150) - 0.0).abs() < 1e-9);
+        // SOR at 200: (8×100) / (16×200) = 0.25.
+        assert!((m.sor_at(200) - 0.25).abs() < 1e-9);
+        assert!((m.gar_avg() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gfr_reflects_partial_nodes() {
+        let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 4));
+        let mut m = Metrics::new(&state, 0);
+        place(&mut state, 1, 0, vec![0, 1]);
+        m.observe_cluster(10, &state);
+        assert!((m.gfr_at(10) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jwtd_and_jtted_record_on_schedule() {
+        let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 2, 2));
+        let mut m = Metrics::new(&state, 0);
+        let spec = JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Training, GpuTypeId(0), 2, 8)
+            .with_times(0, 1000);
+        let mut job = Job::new(spec);
+        // Spans two groups (worst case for a 2-node job here).
+        place(&mut state, 1, 0, (0..8).collect());
+        state
+            .commit_placements(
+                JobId(99),
+                vec![PodPlacement {
+                    pod: PodId::new(JobId(99), 0),
+                    node: NodeId(2),
+                    devices: (0..8).collect(),
+                    nic: 0,
+                }],
+            )
+            .unwrap();
+        job.mark_admitted();
+        job.mark_scheduled(500);
+        // Fake: job 1 occupies nodes 0 (own) — nodes_of uses placements of job 1 only.
+        m.on_scheduled(500, &state, &job);
+        let jwtd = m.jwtd_summaries();
+        // 16-GPU job → bucket "9-64".
+        assert_eq!(jwtd[2].1.count, 1);
+        assert_eq!(jwtd[2].1.mean, 500.0);
+        let node_dev = m.jtted_node_summaries();
+        // Actual 1 node placed (only node 0 for job1) vs optimal 2 → 0.5;
+        // (degenerate because we hand-placed half the job — the value just
+        // needs to be recorded).
+        assert_eq!(node_dev[2].1.count, 1);
+    }
+
+    #[test]
+    fn series_is_monotone_in_time() {
+        let state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2));
+        let mut m = Metrics::new(&state, 0);
+        m.observe_cluster(1000, &state);
+        let s = m.series(10);
+        assert_eq!(s.len(), 10);
+        assert!(s.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+}

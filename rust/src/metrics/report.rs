@@ -1,0 +1,163 @@
+//! Rendering: aligned text tables and CSV export for the figures harness.
+
+use crate::util::stats::Summary;
+
+use super::Metrics;
+
+/// Render a table of (label, columns) rows with a header.
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let headers: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&headers, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV rendering of the same rows.
+pub fn csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&headers.join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format milliseconds as a human duration.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms < 1_000.0 {
+        format!("{ms:.0}ms")
+    } else if ms < 60_000.0 {
+        format!("{:.1}s", ms / 1_000.0)
+    } else if ms < 3_600_000.0 {
+        format!("{:.1}m", ms / 60_000.0)
+    } else {
+        format!("{:.2}h", ms / 3_600_000.0)
+    }
+}
+
+/// Format a ratio as a percentage.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+/// Headline table for one run (GAR/SOR/GFR + throughput).
+pub fn headline(name: &str, m: &Metrics) -> String {
+    let rows = vec![vec![
+        name.to_string(),
+        pct(m.gar_avg()),
+        pct(m.sor_final()),
+        pct(m.gfr_avg()),
+        m.jobs_scheduled.to_string(),
+        m.jobs_finished.to_string(),
+    ]];
+    table(
+        "headline",
+        &["run", "GAR(avg)", "SOR", "GFR(avg)", "scheduled", "finished"],
+        &rows,
+    )
+}
+
+/// Side-by-side per-bucket summaries, e.g. JWTD for two arms.
+pub fn bucket_comparison(
+    title: &str,
+    arms: &[(&str, Vec<(String, Summary)>)],
+    value_fmt: fn(f64) -> String,
+) -> String {
+    let mut headers = vec!["size"];
+    for (name, _) in arms {
+        headers.push(name);
+    }
+    let num_buckets = arms.first().map(|(_, s)| s.len()).unwrap_or(0);
+    let mut rows = Vec::new();
+    for b in 0..num_buckets {
+        let mut row = vec![arms[0].1[b].0.clone()];
+        for (_, summaries) in arms {
+            let s = &summaries[b].1;
+            row.push(if s.count == 0 {
+                "-".to_string()
+            } else {
+                value_fmt(s.mean)
+            });
+        }
+        rows.push(row);
+    }
+    table(title, &headers, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(
+            "x",
+            &["a", "bbbb"],
+            &[
+                vec!["1".into(), "2".into()],
+                vec!["100".into(), "20000".into()],
+            ],
+        );
+        assert!(t.contains("== x =="));
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines[1].len(), lines[3].len());
+    }
+
+    #[test]
+    fn csv_joins_cells() {
+        let c = csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(c, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn fmt_ms_units() {
+        assert_eq!(fmt_ms(500.0), "500ms");
+        assert_eq!(fmt_ms(90_000.0), "1.5m");
+        assert_eq!(fmt_ms(7_200_000.0), "2.00h");
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.9312), "93.12%");
+    }
+
+    #[test]
+    fn bucket_comparison_renders_dash_for_empty() {
+        let arms = vec![
+            (
+                "arm1",
+                vec![("1".to_string(), Summary::from_samples(&[10.0]))],
+            ),
+            ("arm2", vec![("1".to_string(), Summary::from_samples(&[]))]),
+        ];
+        let t = bucket_comparison("jwtd", &arms, |x| format!("{x:.0}"));
+        assert!(t.contains("10"));
+        assert!(t.contains('-'));
+    }
+}

@@ -1,0 +1,172 @@
+//! Two-tier admission control (§3.2.1): static quota admission against the
+//! tenant ledger, then dynamic resource admission against live pool state
+//! (with cross-pool joint admission for heterogeneous jobs).
+
+use crate::cluster::ids::GpuTypeId;
+use crate::cluster::state::ClusterState;
+use crate::cluster::tenant::{QuotaError, QuotaLedger};
+use crate::job::spec::JobSpec;
+
+/// Why admission rejected a job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionFailure {
+    /// Static quota insufficient for some GPU type.
+    Quota(QuotaError),
+    /// Dynamic check: not enough free GPUs in the pool for `gpu_type`
+    /// right now (`need` vs `free`).
+    Resources {
+        gpu_type: GpuTypeId,
+        need: u32,
+        free: u32,
+    },
+}
+
+impl std::fmt::Display for AdmissionFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionFailure::Quota(e) => write!(f, "static quota: {e}"),
+            AdmissionFailure::Resources { gpu_type, need, free } => {
+                write!(f, "dynamic resources: type {gpu_type} need {need} free {free}")
+            }
+        }
+    }
+}
+
+/// Aggregate a job's demand per GPU type (heterogeneous jobs may list
+/// several demands with the same type).
+pub fn demand_by_type(spec: &JobSpec) -> Vec<(GpuTypeId, u32)> {
+    let mut out: Vec<(GpuTypeId, u32)> = Vec::new();
+    for d in &spec.demands {
+        match out.iter_mut().find(|(g, _)| *g == d.gpu_type) {
+            Some((_, amt)) => *amt += d.total_gpus(),
+            None => out.push((d.gpu_type, d.total_gpus())),
+        }
+    }
+    out
+}
+
+/// Static quota admission: every typed demand must fit the tenant's
+/// available quota (own + borrowable in Shared mode). Does not charge.
+pub fn static_admission(ledger: &QuotaLedger, spec: &JobSpec) -> Result<(), AdmissionFailure> {
+    for (g, amount) in demand_by_type(spec) {
+        ledger
+            .admit_check(spec.tenant, g, amount)
+            .map_err(AdmissionFailure::Quota)?;
+    }
+    Ok(())
+}
+
+/// Dynamic resource admission: real-time free capacity in every matching
+/// pool (cross-pool *joint* admission — all types must pass together).
+/// A readiness check only; actual placement can still fail on
+/// fragmentation/topology, which triggers requeueing (§3.2.4).
+pub fn dynamic_admission(state: &ClusterState, spec: &JobSpec) -> Result<(), AdmissionFailure> {
+    for (g, need) in demand_by_type(spec) {
+        let free = state.pool_free_for_type(g);
+        if free < need {
+            return Err(AdmissionFailure::Resources {
+                gpu_type: g,
+                need,
+                free,
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{JobId, PodId, TenantId};
+    use crate::cluster::state::PodPlacement;
+    use crate::cluster::tenant::QuotaMode;
+    use crate::job::spec::{JobKind, TypedDemand};
+
+    fn ledger() -> QuotaLedger {
+        let mut l = QuotaLedger::new(2, 2, QuotaMode::Isolated);
+        l.set_limit(TenantId(0), GpuTypeId(0), 16);
+        l.set_limit(TenantId(0), GpuTypeId(1), 4);
+        l
+    }
+
+    fn train_job(gpus: u32) -> JobSpec {
+        JobSpec::homogeneous(
+            JobId(1),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            gpus / 8.max(1),
+            8,
+        )
+    }
+
+    #[test]
+    fn static_admission_respects_quota() {
+        let l = ledger();
+        assert!(static_admission(&l, &train_job(16)).is_ok());
+        assert!(matches!(
+            static_admission(&l, &train_job(24)),
+            Err(AdmissionFailure::Quota(_))
+        ));
+    }
+
+    #[test]
+    fn joint_admission_requires_all_types() {
+        let l = ledger();
+        let mut j = train_job(8);
+        j.demands.push(TypedDemand {
+            gpu_type: GpuTypeId(1),
+            replicas: 1,
+            gpus_per_pod: 8, // Over the type-1 quota of 4.
+        });
+        assert!(static_admission(&l, &j).is_err());
+        j.demands[1].gpus_per_pod = 4;
+        assert!(static_admission(&l, &j).is_ok());
+    }
+
+    #[test]
+    fn demand_by_type_merges_same_type() {
+        let mut j = train_job(8);
+        j.demands.push(TypedDemand {
+            gpu_type: GpuTypeId(0),
+            replicas: 2,
+            gpus_per_pod: 4,
+        });
+        assert_eq!(demand_by_type(&j), vec![(GpuTypeId(0), 16)]);
+    }
+
+    #[test]
+    fn dynamic_admission_tracks_free_pool() {
+        let mut s = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2)); // 16 GPUs.
+        assert!(dynamic_admission(&s, &train_job(16)).is_ok());
+        // Occupy one full node.
+        s.commit_placements(
+            JobId(50),
+            vec![PodPlacement {
+                pod: PodId::new(JobId(50), 0),
+                node: crate::cluster::ids::NodeId(0),
+                devices: (0..8).collect(),
+                nic: 0,
+            }],
+        )
+        .unwrap();
+        let err = dynamic_admission(&s, &train_job(16)).unwrap_err();
+        assert_eq!(
+            err,
+            AdmissionFailure::Resources {
+                gpu_type: GpuTypeId(0),
+                need: 16,
+                free: 8
+            }
+        );
+    }
+
+    #[test]
+    fn dynamic_admission_unknown_type_fails() {
+        let s = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2));
+        let mut j = train_job(8);
+        j.demands[0].gpu_type = GpuTypeId(9);
+        assert!(dynamic_admission(&s, &j).is_err());
+    }
+}

@@ -1,0 +1,677 @@
+//! QSCH — the Queue-based Scheduler (§3.2): tenant queues, two-tier
+//! admission, queueing policies (Strict FIFO / Best-Effort FIFO /
+//! Backfill), the three preemption mechanisms, and requeueing.
+//!
+//! QSCH decides *which job goes next*; the actual placement is delegated to
+//! a [`Placer`] (RSCH in production, mocks in tests) — mirroring the
+//! paper's QSCH/RSCH decoupling.
+
+pub mod admission;
+pub mod policy;
+pub mod preemption;
+pub mod queue;
+
+use crate::cluster::ids::JobId;
+use crate::cluster::state::ClusterState;
+use crate::cluster::tenant::QuotaLedger;
+use crate::job::spec::{JobSpec, Priority};
+use crate::job::state::Phase;
+use crate::job::store::JobStore;
+
+use admission::{demand_by_type, dynamic_admission, static_admission};
+use policy::{QschConfig, QueuePolicy};
+use preemption::{evict, select_victims, PreemptKind};
+use queue::{QueueEntry, TenantQueues};
+
+pub use admission::AdmissionFailure as Failure;
+pub use policy::{QschConfig as Config, QueuePolicy as Policy};
+
+/// Why a placement attempt failed (returned by the [`Placer`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlaceFailure {
+    /// Not enough usable resources (fragmentation, topology constraints).
+    Resources,
+    /// The job's constraints can never be satisfied on this cluster
+    /// (e.g. pod larger than any node). Such jobs are parked, not retried.
+    Unsatisfiable,
+}
+
+/// The placement half of the pipeline (RSCH implements this).
+pub trait Placer {
+    /// Try to place `spec`, committing device allocations into `state` on
+    /// success (all-or-nothing for gang jobs).
+    fn place(&mut self, state: &mut ClusterState, spec: &JobSpec) -> Result<(), PlaceFailure>;
+}
+
+/// Outcome of one scheduling cycle.
+#[derive(Debug, Clone, Default)]
+pub struct CycleReport {
+    pub scheduled: Vec<JobId>,
+    pub preempted: Vec<JobId>,
+    pub admission_failures: Vec<(JobId, String)>,
+    pub placement_failures: Vec<JobId>,
+    pub head_blocked: Option<JobId>,
+}
+
+/// Cumulative QSCH counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QschStats {
+    pub cycles: u64,
+    pub submitted: u64,
+    pub scheduled: u64,
+    pub scheduled_backfilled: u64,
+    pub placement_failures: u64,
+    pub backfill_preemptions: u64,
+    pub priority_preemptions: u64,
+    pub quota_reclaim_preemptions: u64,
+    pub requeues: u64,
+}
+
+/// The queue-based scheduler.
+pub struct Qsch {
+    pub cfg: QschConfig,
+    pub ledger: QuotaLedger,
+    pub queues: TenantQueues,
+    /// Global head blockage tracker: (job, blocked-since ms).
+    head_blocked: Option<(JobId, u64)>,
+    pub stats: QschStats,
+}
+
+impl Qsch {
+    pub fn new(cfg: QschConfig, ledger: QuotaLedger) -> Qsch {
+        Qsch {
+            cfg,
+            ledger,
+            queues: TenantQueues::new(),
+            head_blocked: None,
+            stats: QschStats::default(),
+        }
+    }
+
+    /// Accept a job into its tenant queue.
+    pub fn submit(&mut self, store: &mut JobStore, spec: JobSpec) {
+        self.stats.submitted += 1;
+        let entry = QueueEntry {
+            job: spec.id,
+            tenant: spec.tenant,
+            priority: spec.priority,
+            submit_ms: spec.submit_ms,
+            total_gpus: spec.total_gpus(),
+        };
+        store.insert(crate::job::state::Job::new(spec));
+        self.queues.push(entry);
+    }
+
+    /// Re-enqueue a job that lost its resources (preemption, node failure)
+    /// or needs another attempt — the §3.2.4 requeueing mechanism.
+    pub fn requeue(&mut self, store: &JobStore, job: JobId) {
+        let j = store.expect(job);
+        debug_assert_eq!(j.phase, Phase::Queued, "requeue expects a Queued job");
+        self.stats.requeues += 1;
+        if !self.queues.contains(job) {
+            self.queues.push(QueueEntry {
+                job,
+                tenant: j.spec.tenant,
+                priority: j.spec.priority,
+                submit_ms: j.submit_ms, // Keep original position.
+                total_gpus: j.spec.total_gpus(),
+            });
+        }
+    }
+
+    /// Job completed: release resources + refund quota + close lifecycle.
+    pub fn finish_job(
+        &mut self,
+        store: &mut JobStore,
+        state: &mut ClusterState,
+        job: JobId,
+        now: u64,
+    ) {
+        state.release_job(job).expect("finished job held resources");
+        self.ledger.refund(job).expect("finished job was charged");
+        store.expect_mut(job).mark_finished(now);
+    }
+
+    /// Evict a running job due to an external failure (node fault) and
+    /// requeue it — used by failure-injection tests and the simulator.
+    pub fn evict_and_requeue(
+        &mut self,
+        store: &mut JobStore,
+        state: &mut ClusterState,
+        job: JobId,
+        now: u64,
+    ) {
+        evict(state, store, &mut self.ledger, &[job], now);
+        self.requeue(store, job);
+    }
+
+    /// One scheduling cycle over the queues.
+    pub fn cycle(
+        &mut self,
+        now: u64,
+        store: &mut JobStore,
+        state: &mut ClusterState,
+        placer: &mut dyn Placer,
+    ) -> CycleReport {
+        self.stats.cycles += 1;
+        let mut report = CycleReport::default();
+        let candidates = self.queues.global_order();
+        let mut head_failed = false;
+
+        for (i, entry) in candidates.iter().enumerate() {
+            let is_head = i == 0;
+            // Entries may have left the queue mid-cycle (victims are pushed
+            // back with Queued phase but were not in this snapshot; a
+            // scheduled job is removed). Only Queued jobs are attempted.
+            if store.expect(entry.job).phase != Phase::Queued {
+                continue;
+            }
+
+            // ---- Tier 1: static quota admission ----
+            let spec = store.expect(entry.job).spec.clone();
+            if let Err(failure) = static_admission(&self.ledger, &spec) {
+                let mut resolved = false;
+                if self.cfg.enable_quota_reclaim {
+                    resolved = self.try_quota_reclaim(now, store, state, &spec, &mut report);
+                }
+                if !resolved || static_admission(&self.ledger, &spec).is_err() {
+                    report
+                        .admission_failures
+                        .push((entry.job, failure.to_string()));
+                    if is_head {
+                        head_failed = true;
+                        self.note_head_blocked(entry.job, now);
+                    }
+                    if self.cfg.policy.allows_bypass() {
+                        continue;
+                    } else {
+                        break;
+                    }
+                }
+            }
+
+            // ---- Tier 2: dynamic admission + placement ----
+            let bypassing = head_failed && !is_head;
+            if self.attempt_place(now, store, state, placer, entry.job, bypassing) {
+                report.scheduled.push(entry.job);
+                if is_head {
+                    self.head_blocked = None;
+                }
+                continue;
+            }
+            report.placement_failures.push(entry.job);
+            self.stats.placement_failures += 1;
+
+            // ---- Escalations ----
+            let mut rescued = false;
+            if is_head {
+                head_failed = true;
+                let since = self.note_head_blocked(entry.job, now);
+                if self.cfg.policy == QueuePolicy::Backfill
+                    && now.saturating_sub(since) >= self.cfg.backfill_timeout_ms
+                {
+                    rescued = self.try_preempt_and_place(
+                        now,
+                        store,
+                        state,
+                        placer,
+                        entry.job,
+                        PreemptKind::Backfill,
+                        &mut report,
+                    );
+                }
+            }
+            if !rescued
+                && self.cfg.enable_priority_preemption
+                && spec.priority >= Priority::HIGH
+                && now.saturating_sub(spec.submit_ms) >= self.cfg.priority_preempt_min_wait_ms
+            {
+                rescued = self.try_preempt_and_place(
+                    now,
+                    store,
+                    state,
+                    placer,
+                    entry.job,
+                    PreemptKind::Priority,
+                    &mut report,
+                );
+            }
+            if rescued {
+                report.scheduled.push(entry.job);
+                report.placement_failures.pop();
+                if is_head {
+                    head_failed = false;
+                    self.head_blocked = None;
+                }
+                continue;
+            }
+
+            if !self.cfg.policy.allows_bypass() {
+                break; // Strict FIFO: a blocked head blocks everyone.
+            }
+        }
+
+        if !head_failed {
+            // Head either scheduled, or the queue is empty / head changed.
+            match (self.head_blocked, self.queues.global_head()) {
+                (Some((j, _)), Some(h)) if h.job == j => {}
+                _ => self.head_blocked = None,
+            }
+        }
+        report.head_blocked = self.head_blocked.map(|(j, _)| j);
+        report
+    }
+
+    /// Record/refresh head blockage; returns the blocked-since timestamp.
+    fn note_head_blocked(&mut self, job: JobId, now: u64) -> u64 {
+        match self.head_blocked {
+            Some((j, since)) if j == job => since,
+            _ => {
+                self.head_blocked = Some((job, now));
+                now
+            }
+        }
+    }
+
+    /// Dynamic admission + placer attempt + on success: quota charge and
+    /// lifecycle transition.
+    fn attempt_place(
+        &mut self,
+        now: u64,
+        store: &mut JobStore,
+        state: &mut ClusterState,
+        placer: &mut dyn Placer,
+        job: JobId,
+        bypassed_blocked_head: bool,
+    ) -> bool {
+        let spec = store.expect(job).spec.clone();
+        if dynamic_admission(state, &spec).is_err() {
+            return false;
+        }
+        match placer.place(state, &spec) {
+            Ok(()) => {
+                self.ledger
+                    .charge(job, spec.tenant, &demand_by_type(&spec))
+                    .expect("static admission verified headroom");
+                let j = store.expect_mut(job);
+                j.mark_admitted();
+                j.mark_scheduled(now);
+                j.backfilled = bypassed_blocked_head;
+                self.queues.remove(job);
+                self.stats.scheduled += 1;
+                if bypassed_blocked_head {
+                    self.stats.scheduled_backfilled += 1;
+                }
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Preempt eligible victims for `job`, then retry placement once.
+    fn try_preempt_and_place(
+        &mut self,
+        now: u64,
+        store: &mut JobStore,
+        state: &mut ClusterState,
+        placer: &mut dyn Placer,
+        job: JobId,
+        kind: PreemptKind,
+        report: &mut CycleReport,
+    ) -> bool {
+        let spec = store.expect(job).spec.clone();
+        let need = demand_by_type(&spec);
+        let prio = spec.priority;
+        let victims = match kind {
+            PreemptKind::Backfill => {
+                let shortage = select_victims(state, store, &need, |j| {
+                    j.backfilled && j.spec.priority <= prio
+                });
+                match shortage {
+                    // Enough raw capacity exists but placement failed ⇒
+                    // fragmentation: fall back to defrag victim selection.
+                    Some(v) if v.is_empty() => {
+                        preemption::select_defrag_victims(state, store, &need, |j| {
+                            j.backfilled && j.spec.priority <= prio
+                        })
+                    }
+                    other => other,
+                }
+            }
+            PreemptKind::Priority => {
+                select_victims(state, store, &need, |j| j.spec.priority < prio)
+            }
+            PreemptKind::QuotaReclaim => unreachable!("handled in try_quota_reclaim"),
+        };
+        let Some(victims) = victims else {
+            return false; // Conservative: no complete victim set.
+        };
+        if victims.is_empty() {
+            return false; // Resources exist; placement failed for another
+                          // reason (fragmentation) — preemption won't help.
+        }
+        evict(state, store, &mut self.ledger, &victims, now);
+        for &v in &victims {
+            self.requeue(store, v);
+            report.preempted.push(v);
+        }
+        match kind {
+            PreemptKind::Backfill => self.stats.backfill_preemptions += victims.len() as u64,
+            PreemptKind::Priority => self.stats.priority_preemptions += victims.len() as u64,
+            PreemptKind::QuotaReclaim => {}
+        }
+        self.attempt_place(now, store, state, placer, job, false)
+    }
+
+    /// Quota-reclamation preemption: evict jobs borrowing this tenant's
+    /// quota until the demand fits. Conservative: aborts (no eviction) if
+    /// the reclaimable total cannot cover the shortfall.
+    fn try_quota_reclaim(
+        &mut self,
+        now: u64,
+        store: &mut JobStore,
+        state: &mut ClusterState,
+        spec: &JobSpec,
+        report: &mut CycleReport,
+    ) -> bool {
+        let mut victims: Vec<JobId> = Vec::new();
+        for (g, amount) in demand_by_type(spec) {
+            let available = self.ledger.available(spec.tenant, g);
+            if available >= amount {
+                continue;
+            }
+            let mut shortfall = amount - available;
+            for rec in self.ledger.debtors(spec.tenant, g) {
+                if shortfall == 0 {
+                    break;
+                }
+                if victims.contains(&rec.job) {
+                    continue;
+                }
+                // Only evict jobs that actually hold resources.
+                if store
+                    .get(rec.job)
+                    .map(|j| j.holds_resources())
+                    .unwrap_or(false)
+                {
+                    victims.push(rec.job);
+                    shortfall = shortfall.saturating_sub(rec.amount);
+                }
+            }
+            if shortfall > 0 {
+                return false; // Cannot reclaim enough; do nothing.
+            }
+        }
+        if victims.is_empty() {
+            return false;
+        }
+        evict(state, store, &mut self.ledger, &victims, now);
+        self.stats.quota_reclaim_preemptions += victims.len() as u64;
+        for &v in &victims {
+            self.requeue(store, v);
+            report.preempted.push(v);
+        }
+        true
+    }
+
+    /// How long the current head has been blocked (for metrics/inspection).
+    pub fn head_blocked_for(&self, now: u64) -> Option<(JobId, u64)> {
+        self.head_blocked
+            .map(|(j, since)| (j, now.saturating_sub(since)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{GpuTypeId, NodeId, PodId, TenantId};
+    use crate::cluster::state::PodPlacement;
+    use crate::cluster::tenant::QuotaMode;
+    use crate::job::spec::JobKind;
+
+    const G: GpuTypeId = GpuTypeId(0);
+
+    /// First-fit mock placer: one pod per `replicas`, each taking
+    /// `gpus_per_pod` devices from the first nodes with room.
+    struct FirstFit;
+
+    impl Placer for FirstFit {
+        fn place(
+            &mut self,
+            state: &mut ClusterState,
+            spec: &JobSpec,
+        ) -> Result<(), PlaceFailure> {
+            let mut plan = Vec::new();
+            let mut replica = 0u32;
+            for d in &spec.demands {
+                for _ in 0..d.replicas {
+                    let mut found = None;
+                    for n in &state.nodes {
+                        let already: usize = plan
+                            .iter()
+                            .filter(|p: &&PodPlacement| p.node == n.id)
+                            .map(|p| p.devices.len())
+                            .sum();
+                        let free = n.free_gpu_indices();
+                        if free.len() >= already + d.gpus_per_pod as usize {
+                            found = Some((
+                                n.id,
+                                free[already..already + d.gpus_per_pod as usize].to_vec(),
+                            ));
+                            break;
+                        }
+                    }
+                    match found {
+                        Some((node, devices)) => {
+                            plan.push(PodPlacement {
+                                pod: PodId::new(spec.id, replica),
+                                node,
+                                devices,
+                                nic: 0,
+                            });
+                            replica += 1;
+                        }
+                        None => return Err(PlaceFailure::Resources),
+                    }
+                }
+            }
+            state
+                .commit_placements(spec.id, plan)
+                .map_err(|_| PlaceFailure::Resources)
+        }
+    }
+
+    fn setup(policy: QschConfig) -> (Qsch, JobStore, ClusterState) {
+        // 4 nodes × 8 GPUs = 32 GPUs, one group.
+        let state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 4));
+        let mut ledger = QuotaLedger::new(2, 1, QuotaMode::Shared);
+        ledger.set_limit(TenantId(0), G, 32);
+        ledger.set_limit(TenantId(1), G, 32);
+        (Qsch::new(policy, ledger), JobStore::new(), state)
+    }
+
+    fn job(id: u64, gpus_per_pod: u32, replicas: u32) -> JobSpec {
+        JobSpec::homogeneous(
+            JobId(id),
+            TenantId(0),
+            JobKind::Training,
+            G,
+            replicas,
+            gpus_per_pod,
+        )
+    }
+
+    #[test]
+    fn simple_job_schedules() {
+        let (mut q, mut store, mut state) = setup(QschConfig::default());
+        q.submit(&mut store, job(1, 8, 2));
+        let r = q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.scheduled, vec![JobId(1)]);
+        assert_eq!(state.allocated_gpus(), 16);
+        assert_eq!(store.expect(JobId(1)).phase, Phase::Scheduled);
+        assert!(q.queues.is_empty());
+    }
+
+    #[test]
+    fn strict_fifo_blocks_behind_big_head() {
+        let (mut q, mut store, mut state) = setup(QschConfig::strict_fifo());
+        // Occupy 24 of 32 GPUs.
+        q.submit(&mut store, job(1, 8, 3).with_times(0, 100_000));
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        // Head needs 16 (impossible), small job behind it could fit.
+        q.submit(&mut store, job(2, 8, 2).with_times(10, 100_000));
+        q.submit(&mut store, job(3, 1, 1).with_times(20, 100_000));
+        let r = q.cycle(1_000, &mut store, &mut state, &mut FirstFit);
+        assert!(r.scheduled.is_empty(), "strict FIFO must not bypass");
+        assert_eq!(r.head_blocked, Some(JobId(2)));
+    }
+
+    #[test]
+    fn best_effort_bypasses_blocked_head() {
+        let (mut q, mut store, mut state) = setup(QschConfig::best_effort());
+        q.submit(&mut store, job(1, 8, 3).with_times(0, 100_000));
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        q.submit(&mut store, job(2, 8, 2).with_times(10, 100_000));
+        q.submit(&mut store, job(3, 1, 1).with_times(20, 100_000));
+        let r = q.cycle(1_000, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.scheduled, vec![JobId(3)]);
+        assert!(store.expect(JobId(3)).backfilled);
+    }
+
+    #[test]
+    fn backfill_preempts_after_timeout() {
+        let mut cfg = QschConfig::backfill(5_000);
+        cfg.enable_priority_preemption = false;
+        let (mut q, mut store, mut state) = setup(cfg);
+        // 24/32 GPUs busy with a job that will finish at t=6000.
+        q.submit(&mut store, job(1, 8, 3).with_times(0, 6_000));
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(state.allocated_gpus(), 24);
+        // Head wants the whole cluster (32): blocked.
+        q.submit(&mut store, job(2, 8, 4).with_times(10, 100_000));
+        // A small job backfills into the remaining node.
+        q.submit(&mut store, job(3, 8, 1).with_times(20, 1_000_000));
+        let r = q.cycle(1_000, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.scheduled, vec![JobId(3)]);
+        assert!(store.expect(JobId(3)).backfilled);
+        assert_eq!(r.head_blocked, Some(JobId(2)));
+
+        // Before the timeout: no preemption even though the head waits.
+        let r = q.cycle(3_000, &mut store, &mut state, &mut FirstFit);
+        assert!(r.preempted.is_empty());
+
+        // job1 finishes; 24 free but the backfilled job still holds 8.
+        q.finish_job(&mut store, &mut state, JobId(1), 6_000);
+        // Past the timeout: evict the backfilled job → head fits.
+        let r = q.cycle(7_000, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.preempted, vec![JobId(3)]);
+        assert_eq!(r.scheduled, vec![JobId(2)]);
+        assert_eq!(q.stats.backfill_preemptions, 1);
+        assert_eq!(state.allocated_gpus(), 32);
+        // The victim is requeued (§3.2.4) and keeps its original position.
+        assert!(q.queues.contains(JobId(3)));
+        assert_eq!(store.expect(JobId(3)).phase, Phase::Queued);
+        assert_eq!(store.expect(JobId(3)).preemptions, 1);
+    }
+
+    #[test]
+    fn priority_preemption_rescues_high_job() {
+        let mut cfg = QschConfig::default();
+        cfg.priority_preempt_min_wait_ms = 1_000;
+        cfg.policy = QueuePolicy::BestEffortFifo;
+        let (mut q, mut store, mut state) = setup(cfg);
+        // Fill the whole cluster with NORMAL jobs.
+        for i in 1..=4 {
+            q.submit(&mut store, job(i, 8, 1).with_times(0, 1_000_000));
+        }
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(state.allocated_gpus(), 32);
+        // HIGH-priority job arrives.
+        q.submit(
+            &mut store,
+            job(5, 8, 1)
+                .with_times(100, 10_000)
+                .with_priority(Priority::HIGH),
+        );
+        // Too early (min wait not reached).
+        let r = q.cycle(500, &mut store, &mut state, &mut FirstFit);
+        assert!(r.scheduled.is_empty());
+        // After min wait: evict one NORMAL job.
+        let r = q.cycle(2_000, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.scheduled, vec![JobId(5)]);
+        assert_eq!(r.preempted.len(), 1);
+        assert_eq!(q.stats.priority_preemptions, 1);
+    }
+
+    #[test]
+    fn quota_reclaim_evicts_debtor() {
+        let mut cfg = QschConfig::default();
+        cfg.policy = QueuePolicy::BestEffortFifo;
+        let (mut q, mut store, mut state) = setup(cfg);
+        // Tighter quotas: each tenant 16.
+        q.ledger.set_limit(TenantId(0), G, 16);
+        q.ledger.set_limit(TenantId(1), G, 16);
+        // Tenant 0 borrows 16 beyond its own 16 → uses all 32.
+        q.submit(&mut store, job(1, 8, 4).with_times(0, 1_000_000));
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        assert!(q.ledger.is_borrowing(JobId(1)));
+        // Tenant 1 wants its quota back.
+        let mut j2 = job(2, 8, 2).with_times(10, 10_000);
+        j2.tenant = TenantId(1);
+        q.submit(&mut store, j2);
+        let r = q.cycle(1_000, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.preempted, vec![JobId(1)]);
+        assert_eq!(r.scheduled, vec![JobId(2)]);
+        assert_eq!(q.stats.quota_reclaim_preemptions, 1);
+    }
+
+    #[test]
+    fn finish_job_releases_and_refunds() {
+        let (mut q, mut store, mut state) = setup(QschConfig::default());
+        q.submit(&mut store, job(1, 8, 1));
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        q.finish_job(&mut store, &mut state, JobId(1), 60_000);
+        assert_eq!(state.allocated_gpus(), 0);
+        assert_eq!(q.ledger.entry(TenantId(0), G).used_own, 0);
+        assert!(store.expect(JobId(1)).is_terminal());
+    }
+
+    #[test]
+    fn requeue_after_external_eviction() {
+        let (mut q, mut store, mut state) = setup(QschConfig::default());
+        q.submit(&mut store, job(1, 8, 1));
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        q.evict_and_requeue(&mut store, &mut state, JobId(1), 5_000);
+        assert_eq!(store.expect(JobId(1)).phase, Phase::Queued);
+        assert!(q.queues.contains(JobId(1)));
+        // It reschedules next cycle.
+        let r = q.cycle(6_000, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.scheduled, vec![JobId(1)]);
+        // JWTD keeps the FIRST scheduling time.
+        assert_eq!(store.expect(JobId(1)).scheduled_ms, Some(0));
+    }
+
+    #[test]
+    fn gang_all_or_nothing_through_placer() {
+        let (mut q, mut store, mut state) = setup(QschConfig::default());
+        // 5 whole-node pods on a 4-node cluster: dynamic admission fails
+        // (40 > 32) — nothing allocated.
+        q.submit(&mut store, job(1, 8, 5));
+        let r = q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        assert!(r.scheduled.is_empty());
+        assert_eq!(state.allocated_gpus(), 0);
+    }
+
+    #[test]
+    fn static_quota_blocks_oversized_tenant() {
+        let (mut q, mut store, mut state) = setup(QschConfig::default());
+        q.ledger.set_limit(TenantId(0), G, 8);
+        q.ledger.set_limit(TenantId(1), G, 0);
+        q.submit(&mut store, job(1, 8, 2)); // Wants 16 > 8 available.
+        let r = q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        assert!(r.scheduled.is_empty());
+        assert_eq!(r.admission_failures.len(), 1);
+        assert!(r.admission_failures[0].1.contains("static quota"));
+    }
+}

@@ -1,0 +1,126 @@
+//! Queueing policies (§3.2.2, Table 1) and QSCH configuration.
+
+/// Table 1's three queueing policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Jobs scheduled strictly in arrival order; a blocked head blocks the
+    /// whole queue. The "native scheduling system" baseline of §5.
+    StrictFifo,
+    /// Smaller jobs may bypass a blocked head; no preemption — risks
+    /// starving large jobs (the Figure-4 pathology).
+    BestEffortFifo,
+    /// Bypass like Best-Effort, but once the head has waited past the
+    /// threshold, backfilled jobs are preempted to make room for it.
+    Backfill,
+}
+
+impl QueuePolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QueuePolicy::StrictFifo => "strict-fifo",
+            QueuePolicy::BestEffortFifo => "best-effort-fifo",
+            QueuePolicy::Backfill => "backfill",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QueuePolicy> {
+        match s {
+            "strict-fifo" | "fifo" => Some(QueuePolicy::StrictFifo),
+            "best-effort-fifo" | "best-effort" => Some(QueuePolicy::BestEffortFifo),
+            "backfill" => Some(QueuePolicy::Backfill),
+            _ => None,
+        }
+    }
+
+    /// May later jobs bypass a blocked head?
+    pub fn allows_bypass(self) -> bool {
+        !matches!(self, QueuePolicy::StrictFifo)
+    }
+}
+
+/// QSCH tunables.
+#[derive(Debug, Clone)]
+pub struct QschConfig {
+    pub policy: QueuePolicy,
+    /// Backfill: head wait beyond this triggers preemption of backfilled
+    /// jobs (§3.2.2/§3.2.3 backfill preemption).
+    pub backfill_timeout_ms: u64,
+    /// Priority preemption (§3.2.3): HIGH jobs may evict strictly
+    /// lower-priority jobs after a conservative minimum wait.
+    pub enable_priority_preemption: bool,
+    pub priority_preempt_min_wait_ms: u64,
+    /// Quota-reclamation preemption (§3.2.3): a lender may evict debtor
+    /// jobs to reclaim loaned quota.
+    pub enable_quota_reclaim: bool,
+}
+
+impl Default for QschConfig {
+    fn default() -> Self {
+        QschConfig {
+            policy: QueuePolicy::Backfill,
+            backfill_timeout_ms: 30 * 60 * 1000, // 30 min.
+            enable_priority_preemption: true,
+            priority_preempt_min_wait_ms: 5 * 60 * 1000,
+            enable_quota_reclaim: true,
+        }
+    }
+}
+
+impl QschConfig {
+    pub fn strict_fifo() -> QschConfig {
+        QschConfig {
+            policy: QueuePolicy::StrictFifo,
+            enable_priority_preemption: false,
+            enable_quota_reclaim: false,
+            ..Default::default()
+        }
+    }
+
+    pub fn best_effort() -> QschConfig {
+        QschConfig {
+            policy: QueuePolicy::BestEffortFifo,
+            enable_priority_preemption: false,
+            enable_quota_reclaim: false,
+            ..Default::default()
+        }
+    }
+
+    pub fn backfill(timeout_ms: u64) -> QschConfig {
+        QschConfig {
+            policy: QueuePolicy::Backfill,
+            backfill_timeout_ms: timeout_ms,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [
+            QueuePolicy::StrictFifo,
+            QueuePolicy::BestEffortFifo,
+            QueuePolicy::Backfill,
+        ] {
+            assert_eq!(QueuePolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(QueuePolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn bypass_semantics() {
+        assert!(!QueuePolicy::StrictFifo.allows_bypass());
+        assert!(QueuePolicy::BestEffortFifo.allows_bypass());
+        assert!(QueuePolicy::Backfill.allows_bypass());
+    }
+
+    #[test]
+    fn presets() {
+        assert_eq!(QschConfig::strict_fifo().policy, QueuePolicy::StrictFifo);
+        assert_eq!(QschConfig::backfill(1000).backfill_timeout_ms, 1000);
+        assert!(!QschConfig::best_effort().enable_priority_preemption);
+    }
+}

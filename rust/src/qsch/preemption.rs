@@ -1,0 +1,308 @@
+//! Preemption control (§3.2.3): victim selection and eviction for the three
+//! mechanisms — backfill, priority, and quota-reclamation preemption.
+//!
+//! QSCH's policy is deliberately conservative: preemption only fires when a
+//! complete victim set exists (partial eviction that still leaves the
+//! beneficiary unschedulable would waste work), and victims are chosen to
+//! minimize lost progress (lowest priority, most recently scheduled first).
+
+use crate::cluster::ids::{GpuTypeId, JobId};
+use crate::cluster::state::ClusterState;
+use crate::cluster::tenant::QuotaLedger;
+use crate::job::state::Job;
+use crate::job::store::JobStore;
+
+use super::admission::demand_by_type;
+
+/// Which preemption mechanism fired (for stats/reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptKind {
+    Backfill,
+    Priority,
+    QuotaReclaim,
+}
+
+/// Select a minimal-cost victim set among resource-holding jobs matching
+/// `eligible`, such that evicting them (plus current pool free space)
+/// covers `need_by_type`. Returns `None` when no complete set exists —
+/// the conservative policy then does nothing.
+pub fn select_victims(
+    state: &ClusterState,
+    store: &JobStore,
+    need_by_type: &[(GpuTypeId, u32)],
+    eligible: impl Fn(&Job) -> bool,
+) -> Option<Vec<JobId>> {
+    // Outstanding need after counting currently-free pool capacity.
+    let mut outstanding: Vec<(GpuTypeId, u32)> = need_by_type
+        .iter()
+        .map(|&(g, need)| (g, need.saturating_sub(state.pool_free_for_type(g))))
+        .filter(|&(_, n)| n > 0)
+        .collect();
+    if outstanding.is_empty() {
+        return Some(Vec::new()); // Resources already available.
+    }
+
+    // Candidates: eviction order = priority asc, scheduled_ms desc (newest
+    // first — least progress lost), id for determinism.
+    let mut candidates: Vec<&Job> = store
+        .holding_resources()
+        .filter(|j| eligible(j))
+        .collect();
+    candidates.sort_by(|a, b| {
+        a.spec
+            .priority
+            .cmp(&b.spec.priority)
+            .then(b.scheduled_ms.cmp(&a.scheduled_ms))
+            .then(a.id().cmp(&b.id()))
+    });
+
+    let mut victims = Vec::new();
+    for j in candidates {
+        if outstanding.is_empty() {
+            break;
+        }
+        // How much of the outstanding need would this victim free?
+        let frees = demand_by_type(&j.spec);
+        let helps = frees
+            .iter()
+            .any(|(g, _)| outstanding.iter().any(|(og, _)| og == g));
+        if !helps {
+            continue;
+        }
+        victims.push(j.id());
+        for (g, freed) in frees {
+            if let Some(slot) = outstanding.iter_mut().find(|(og, _)| *og == g) {
+                slot.1 = slot.1.saturating_sub(freed);
+            }
+        }
+        outstanding.retain(|&(_, n)| n > 0);
+    }
+
+    if outstanding.is_empty() {
+        Some(victims)
+    } else {
+        None
+    }
+}
+
+/// Defragmentation victims: when the pool nominally has enough free GPUs
+/// (`select_victims` returns an empty set) but placement still fails, the
+/// free capacity is *fragmented* across partially-used nodes. Evicting
+/// eligible jobs that sit on fragmented nodes consolidates whole nodes for
+/// the blocked head. Victims are accumulated until their holdings cover
+/// the full demand (not merely the shortfall), since fragmented free space
+/// can't be assumed usable.
+pub fn select_defrag_victims(
+    state: &ClusterState,
+    store: &JobStore,
+    need_by_type: &[(GpuTypeId, u32)],
+    eligible: impl Fn(&Job) -> bool,
+) -> Option<Vec<JobId>> {
+    // Capacity already usable by whole-node pods: GPUs on fully-idle nodes.
+    let whole_free = |g: GpuTypeId| -> u32 {
+        state
+            .nodes
+            .iter()
+            .filter(|n| {
+                n.gpu_type == g
+                    && n.health.schedulable()
+                    && n.allocated_gpus() == 0
+            })
+            .map(|n| n.total_gpus())
+            .sum()
+    };
+    let mut outstanding: Vec<(GpuTypeId, u32)> = need_by_type
+        .iter()
+        .map(|&(g, need)| (g, need.saturating_sub(whole_free(g))))
+        .filter(|&(_, n)| n > 0)
+        .collect();
+    if outstanding.is_empty() {
+        return None; // Whole nodes already cover the need; eviction won't help.
+    }
+    let mut candidates: Vec<&Job> = store
+        .holding_resources()
+        .filter(|j| eligible(j))
+        .filter(|j| {
+            state
+                .nodes_of(j.id())
+                .iter()
+                .any(|&n| state.node(n).is_fragmented())
+        })
+        .collect();
+    candidates.sort_by(|a, b| {
+        a.spec
+            .priority
+            .cmp(&b.spec.priority)
+            .then(b.scheduled_ms.cmp(&a.scheduled_ms))
+            .then(a.id().cmp(&b.id()))
+    });
+    let mut victims = Vec::new();
+    for j in candidates {
+        if outstanding.is_empty() {
+            break;
+        }
+        let frees = demand_by_type(&j.spec);
+        if !frees
+            .iter()
+            .any(|(g, _)| outstanding.iter().any(|(og, _)| og == g))
+        {
+            continue;
+        }
+        victims.push(j.id());
+        for (g, freed) in frees {
+            if let Some(slot) = outstanding.iter_mut().find(|(og, _)| *og == g) {
+                slot.1 = slot.1.saturating_sub(freed);
+            }
+        }
+        outstanding.retain(|&(_, n)| n > 0);
+    }
+    (outstanding.is_empty() && !victims.is_empty()).then_some(victims)
+}
+
+/// Evict `victims`: release cluster resources, refund quota, and mark the
+/// jobs preempted+requeued. The caller re-enqueues them.
+pub fn evict(
+    state: &mut ClusterState,
+    store: &mut JobStore,
+    ledger: &mut QuotaLedger,
+    victims: &[JobId],
+    now: u64,
+) {
+    for &v in victims {
+        state
+            .release_job(v)
+            .expect("victim must hold resources");
+        ledger.refund(v).expect("victim must be charged");
+        let job = store.expect_mut(v);
+        job.mark_preempted(now);
+        job.mark_requeued();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{NodeId, PodId, TenantId};
+    use crate::cluster::state::PodPlacement;
+    use crate::cluster::tenant::QuotaMode;
+    use crate::job::spec::{JobKind, JobSpec, Priority};
+
+    const G: GpuTypeId = GpuTypeId(0);
+
+    fn setup() -> (ClusterState, JobStore, QuotaLedger) {
+        // 2 groups x 2 nodes x 8 GPUs = 32 GPUs.
+        let state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 2, 2));
+        let store = JobStore::new();
+        let mut ledger = QuotaLedger::new(2, 1, QuotaMode::Shared);
+        ledger.set_limit(TenantId(0), G, 16);
+        ledger.set_limit(TenantId(1), G, 16);
+        (state, store, ledger)
+    }
+
+    /// Place a 1-pod job of `gpus` on `node` and register everywhere.
+    fn run_job(
+        state: &mut ClusterState,
+        store: &mut JobStore,
+        ledger: &mut QuotaLedger,
+        id: u64,
+        tenant: u32,
+        node: u32,
+        gpus: u32,
+        priority: Priority,
+        now: u64,
+        backfilled: bool,
+    ) {
+        let spec = JobSpec::homogeneous(
+            JobId(id),
+            TenantId(tenant),
+            JobKind::Training,
+            G,
+            1,
+            gpus,
+        )
+        .with_priority(priority);
+        ledger
+            .charge(JobId(id), TenantId(tenant), &demand_by_type(&spec))
+            .unwrap();
+        let free = state.node(NodeId(node)).free_gpu_indices();
+        state
+            .commit_placements(
+                JobId(id),
+                vec![PodPlacement {
+                    pod: PodId::new(JobId(id), 0),
+                    node: NodeId(node),
+                    devices: free[..gpus as usize].to_vec(),
+                    nic: 0,
+                }],
+            )
+            .unwrap();
+        let mut job = Job::new(spec);
+        job.mark_admitted();
+        job.mark_scheduled(now);
+        job.mark_running(now);
+        job.backfilled = backfilled;
+        store.insert(job);
+    }
+
+    #[test]
+    fn no_victims_needed_when_pool_has_room() {
+        let (state, store, _) = setup();
+        let v = select_victims(&state, &store, &[(G, 8)], |_| true).unwrap();
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn picks_newest_lowest_priority_first() {
+        let (mut state, mut store, mut ledger) = setup();
+        // Fill all four nodes.
+        run_job(&mut state, &mut store, &mut ledger, 1, 0, 0, 8, Priority::NORMAL, 10, false);
+        run_job(&mut state, &mut store, &mut ledger, 2, 0, 1, 8, Priority::LOW, 20, false);
+        run_job(&mut state, &mut store, &mut ledger, 3, 1, 2, 8, Priority::LOW, 30, false);
+        run_job(&mut state, &mut store, &mut ledger, 4, 1, 3, 8, Priority::HIGH, 40, false);
+        // Need 8 GPUs: expect the newest LOW job (3).
+        let v = select_victims(&state, &store, &[(G, 8)], |_| true).unwrap();
+        assert_eq!(v, vec![JobId(3)]);
+        // Need 16: newest LOW (3) then older LOW (2).
+        let v = select_victims(&state, &store, &[(G, 16)], |_| true).unwrap();
+        assert_eq!(v, vec![JobId(3), JobId(2)]);
+    }
+
+    #[test]
+    fn conservative_when_insufficient() {
+        let (mut state, mut store, mut ledger) = setup();
+        run_job(&mut state, &mut store, &mut ledger, 1, 0, 0, 8, Priority::NORMAL, 10, false);
+        // Need 64 GPUs from a 32-GPU cluster: impossible even evicting all.
+        assert!(select_victims(&state, &store, &[(G, 64)], |_| true).is_none());
+    }
+
+    #[test]
+    fn eligibility_filter_respected() {
+        let (mut state, mut store, mut ledger) = setup();
+        for n in 0..4 {
+            run_job(
+                &mut state, &mut store, &mut ledger,
+                n as u64 + 1, 0, n, 8, Priority::NORMAL, 10, n == 2,
+            );
+        }
+        // Only backfilled jobs eligible → job 3 (on node 2).
+        let v = select_victims(&state, &store, &[(G, 8)], |j| j.backfilled).unwrap();
+        assert_eq!(v, vec![JobId(3)]);
+        // Need 16 but only 8 backfilled → conservative None.
+        assert!(select_victims(&state, &store, &[(G, 16)], |j| j.backfilled).is_none());
+    }
+
+    #[test]
+    fn evict_releases_refunds_and_requeues() {
+        let (mut state, mut store, mut ledger) = setup();
+        run_job(&mut state, &mut store, &mut ledger, 1, 0, 0, 8, Priority::LOW, 10, true);
+        assert_eq!(state.allocated_gpus(), 8);
+        evict(&mut state, &mut store, &mut ledger, &[JobId(1)], 1_000);
+        assert_eq!(state.allocated_gpus(), 0);
+        assert_eq!(ledger.entry(TenantId(0), G).used_own, 0);
+        let j = store.expect(JobId(1));
+        assert_eq!(j.phase, crate::job::state::Phase::Queued);
+        assert_eq!(j.preemptions, 1);
+        assert_eq!(j.requeues, 1);
+    }
+}

@@ -1,0 +1,153 @@
+//! Per-tenant job queues and the global candidate ordering (§3.2.2).
+//!
+//! Jobs enter their tenant's queue at submission; each scheduling cycle the
+//! queues are merged into a globally ordered candidate list:
+//! priority (desc) → submission time (asc) → job size (asc, tiebreak).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::ids::{JobId, TenantId};
+use crate::job::spec::Priority;
+
+/// Ordering key captured at enqueue time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueEntry {
+    pub job: JobId,
+    pub tenant: TenantId,
+    pub priority: Priority,
+    pub submit_ms: u64,
+    pub total_gpus: u32,
+}
+
+impl QueueEntry {
+    /// The paper's ordering: priority desc, submit asc, size asc.
+    fn key(&self) -> (std::cmp::Reverse<u8>, u64, u32, u64) {
+        (
+            std::cmp::Reverse(self.priority.0),
+            self.submit_ms,
+            self.total_gpus,
+            self.job.0, // Final determinism tiebreak.
+        )
+    }
+}
+
+/// Per-tenant queues with a merged global view.
+#[derive(Debug, Default)]
+pub struct TenantQueues {
+    queues: BTreeMap<TenantId, Vec<QueueEntry>>,
+    len: usize,
+}
+
+impl TenantQueues {
+    pub fn new() -> TenantQueues {
+        TenantQueues::default()
+    }
+
+    pub fn push(&mut self, e: QueueEntry) {
+        let q = self.queues.entry(e.tenant).or_default();
+        debug_assert!(q.iter().all(|x| x.job != e.job), "job enqueued twice");
+        q.push(e);
+        q.sort_by_key(QueueEntry::key);
+        self.len += 1;
+    }
+
+    /// Remove a job (on successful scheduling or cancellation).
+    pub fn remove(&mut self, job: JobId) -> bool {
+        for q in self.queues.values_mut() {
+            if let Some(i) = q.iter().position(|e| e.job == job) {
+                q.remove(i);
+                self.len -= 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn tenant_len(&self, t: TenantId) -> usize {
+        self.queues.get(&t).map(Vec::len).unwrap_or(0)
+    }
+
+    pub fn contains(&self, job: JobId) -> bool {
+        self.queues.values().any(|q| q.iter().any(|e| e.job == job))
+    }
+
+    /// The globally ordered candidate list for this cycle.
+    pub fn global_order(&self) -> Vec<QueueEntry> {
+        let mut all: Vec<QueueEntry> = self.queues.values().flatten().copied().collect();
+        all.sort_by_key(QueueEntry::key);
+        all
+    }
+
+    /// Head of the global order (the job Strict FIFO would insist on).
+    pub fn global_head(&self) -> Option<QueueEntry> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first())
+            .min_by_key(|e| e.key())
+            .copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(job: u64, tenant: u32, prio: u8, submit: u64, gpus: u32) -> QueueEntry {
+        QueueEntry {
+            job: JobId(job),
+            tenant: TenantId(tenant),
+            priority: Priority(prio),
+            submit_ms: submit,
+            total_gpus: gpus,
+        }
+    }
+
+    #[test]
+    fn global_order_priority_then_time_then_size() {
+        let mut q = TenantQueues::new();
+        q.push(e(1, 0, 4, 100, 8));
+        q.push(e(2, 1, 8, 200, 64)); // Higher priority, later.
+        q.push(e(3, 0, 4, 100, 2)); // Same prio/time as 1, smaller.
+        q.push(e(4, 1, 4, 50, 512)); // Earliest normal.
+        let order: Vec<u64> = q.global_order().iter().map(|x| x.job.0).collect();
+        assert_eq!(order, vec![2, 4, 3, 1]);
+        assert_eq!(q.global_head().unwrap().job, JobId(2));
+    }
+
+    #[test]
+    fn remove_updates_len_and_head() {
+        let mut q = TenantQueues::new();
+        q.push(e(1, 0, 8, 10, 1));
+        q.push(e(2, 0, 4, 20, 1));
+        assert_eq!(q.len(), 2);
+        assert!(q.remove(JobId(1)));
+        assert!(!q.remove(JobId(1)));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.global_head().unwrap().job, JobId(2));
+    }
+
+    #[test]
+    fn tenant_isolation_of_queues() {
+        let mut q = TenantQueues::new();
+        q.push(e(1, 0, 4, 10, 1));
+        q.push(e(2, 1, 4, 20, 1));
+        assert_eq!(q.tenant_len(TenantId(0)), 1);
+        assert_eq!(q.tenant_len(TenantId(1)), 1);
+        assert_eq!(q.tenant_len(TenantId(2)), 0);
+    }
+
+    #[test]
+    fn empty_queue_has_no_head() {
+        let q = TenantQueues::new();
+        assert!(q.global_head().is_none());
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,383 @@
+//! Periodic fragmentation reorganization (§3.3.3, the paper's planned
+//! extension): consolidate scattered sub-node allocations by migrating
+//! pods off lightly-fragmented nodes, freeing whole nodes for large jobs.
+//!
+//! Policy (conservative, like everything in Kant):
+//! * only *non-gang* pods and single-pod jobs migrate (migrating one pod
+//!   of a distributed gang would stall the whole job);
+//! * a migration only happens if the pod fits on another node that is
+//!   already fragmented or busier (never create a new fragmented node);
+//! * per-round migration budget caps churn.
+//!
+//! Each migration is modelled with a configurable service interruption:
+//! the simulator replays it as release→place, so metrics see the real
+//! cost.
+
+use crate::cluster::ids::{JobId, NodeId};
+use crate::cluster::state::{ClusterState, PodPlacement};
+use crate::job::store::JobStore;
+
+use super::device_alloc::{select_devices, select_nic};
+
+/// Defragmentation tunables.
+#[derive(Debug, Clone)]
+pub struct DefragConfig {
+    /// Max pod migrations per reorganization round.
+    pub max_migrations_per_round: usize,
+    /// Only consider source nodes with at most this many allocated GPUs
+    /// (cheap to drain).
+    pub max_source_alloc: u32,
+}
+
+impl Default for DefragConfig {
+    fn default() -> Self {
+        DefragConfig {
+            max_migrations_per_round: 8,
+            max_source_alloc: 4,
+        }
+    }
+}
+
+/// One planned migration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Migration {
+    pub job: JobId,
+    pub from: NodeId,
+    pub to: NodeId,
+    pub devices_to: Vec<u8>,
+    pub nic_to: u8,
+}
+
+/// Outcome counters for a round.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DefragReport {
+    pub migrations: usize,
+    pub nodes_freed: usize,
+    pub gpus_moved: u32,
+}
+
+/// Plan one reorganization round against the current state. Pure planning:
+/// no mutation (the runner executes migrations so lifecycle/metrics see
+/// them).
+pub fn plan_round(
+    state: &ClusterState,
+    store: &JobStore,
+    cfg: &DefragConfig,
+) -> Vec<Migration> {
+    // Source candidates: fragmented nodes with little to drain, emptiest
+    // first (cheapest whole-node wins).
+    let mut sources: Vec<&crate::cluster::node::Node> = state
+        .nodes
+        .iter()
+        .filter(|n| n.is_fragmented() && n.allocated_gpus() <= cfg.max_source_alloc)
+        .collect();
+    sources.sort_by_key(|n| (n.allocated_gpus(), n.id));
+
+    let mut migrations: Vec<Migration> = Vec::new();
+    // Track planned deltas so one round's plans don't conflict, and keep
+    // sources/destinations disjoint (otherwise two fragmented nodes just
+    // swap pods and nothing is freed).
+    let mut planned_free: std::collections::HashMap<NodeId, Vec<u8>> =
+        std::collections::HashMap::new();
+    let mut planned_dests: std::collections::HashSet<NodeId> = std::collections::HashSet::new();
+    let mut planned_sources: std::collections::HashSet<NodeId> =
+        std::collections::HashSet::new();
+    let free_of = |state: &ClusterState,
+                   planned: &std::collections::HashMap<NodeId, Vec<u8>>,
+                   n: NodeId|
+     -> Vec<u8> {
+        planned
+            .get(&n)
+            .cloned()
+            .unwrap_or_else(|| state.node(n).free_gpu_indices())
+    };
+
+    'source: for src in sources {
+        if migrations.len() >= cfg.max_migrations_per_round {
+            break;
+        }
+        if planned_dests.contains(&src.id) {
+            continue; // This node is being filled; don't drain it.
+        }
+        // Every resident pod must be migratable or we skip the node (a
+        // partially-drained node stays fragmented — no gain).
+        let pods = src.resident_pods();
+        let mut node_plan: Vec<Migration> = Vec::new();
+        for pod in &pods {
+            let job = match store.get(pod.job) {
+                Some(j) => j,
+                None => continue 'source,
+            };
+            // Conservative eligibility: non-gang jobs or single-pod jobs.
+            if job.spec.gang && job.spec.total_replicas() > 1 {
+                continue 'source;
+            }
+            let devs_here = src.devices_of(*pod);
+            let want = devs_here.len() as u32;
+            // Destination: a *more* allocated, still-capable node of the
+            // same pool (never an idle node — that would undo the work).
+            let mut dests: Vec<NodeId> = state
+                .pools
+                .pool_for_type(src.gpu_type)
+                .map(|p| p.nodes.clone())
+                .unwrap_or_default();
+            dests.retain(|&d| {
+                d != src.id
+                    && !planned_sources.contains(&d)
+                    && state.node(d).health.schedulable()
+                    && state.node(d).allocated_gpus() > 0
+                    && free_of(state, &planned_free, d).len() as u32 >= want
+            });
+            // Best-fit: fullest destination first.
+            dests.sort_by_key(|&d| {
+                (
+                    free_of(state, &planned_free, d).len(),
+                    d,
+                )
+            });
+            let Some(&dest) = dests.first() else {
+                continue 'source;
+            };
+            let gpu_type = state.gpu_type(state.node(dest).gpu_type);
+            let dest_free = free_of(state, &planned_free, dest);
+            let Some(devices_to) = select_devices(gpu_type, &dest_free, want) else {
+                continue 'source;
+            };
+            let nic_to = select_nic(gpu_type, &devices_to);
+            node_plan.push(Migration {
+                job: pod.job,
+                from: src.id,
+                to: dest,
+                devices_to,
+                nic_to,
+            });
+        }
+        // Commit the node's plan into the round.
+        let remaining_budget = cfg.max_migrations_per_round - migrations.len();
+        if node_plan.is_empty() || node_plan.len() > remaining_budget {
+            continue;
+        }
+        for m in &node_plan {
+            let mut f = free_of(state, &planned_free, m.to);
+            f.retain(|d| !m.devices_to.contains(d));
+            planned_free.insert(m.to, f);
+            planned_dests.insert(m.to);
+        }
+        planned_sources.insert(src.id);
+        migrations.extend(node_plan);
+    }
+    migrations
+}
+
+/// Execute planned migrations: atomically re-home each job's pods.
+/// Returns the report plus the jobs actually moved; skips any migration
+/// that no longer applies.
+pub fn execute(
+    state: &mut ClusterState,
+    migrations: &[Migration],
+) -> (DefragReport, Vec<JobId>) {
+    let mut report = DefragReport::default();
+    let mut moved: Vec<JobId> = Vec::new();
+    let mut touched_sources: Vec<NodeId> = Vec::new();
+    for m in migrations {
+        // The job must still hold exactly its old placement.
+        let Some(old) = state.placements_of(m.job).map(|p| p.to_vec()) else {
+            continue;
+        };
+        let Ok(freed) = state.release_job(m.job) else {
+            continue;
+        };
+        // Re-place every pod: moved pods go to the new node, others return
+        // to where they were.
+        let new_plan: Vec<PodPlacement> = freed
+            .iter()
+            .map(|p| {
+                if p.node == m.from {
+                    PodPlacement {
+                        pod: p.pod,
+                        node: m.to,
+                        devices: m.devices_to.clone(),
+                        nic: m.nic_to,
+                    }
+                } else {
+                    p.clone()
+                }
+            })
+            .collect();
+        match state.commit_placements(m.job, new_plan) {
+            Ok(()) => {
+                report.migrations += 1;
+                report.gpus_moved += m.devices_to.len() as u32;
+                moved.push(m.job);
+                touched_sources.push(m.from);
+            }
+            Err(_) => {
+                // Roll back to the original placement (must succeed: we
+                // just freed those devices).
+                state
+                    .commit_placements(m.job, old)
+                    .expect("rollback placement");
+            }
+        }
+    }
+    touched_sources.sort_unstable();
+    touched_sources.dedup();
+    report.nodes_freed = touched_sources
+        .iter()
+        .filter(|&&n| state.node(n).allocated_gpus() == 0)
+        .count();
+    (report, moved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{GpuTypeId, PodId, TenantId};
+    use crate::job::spec::{JobKind, JobSpec};
+    use crate::job::state::Job;
+
+    fn setup() -> (ClusterState, JobStore) {
+        let state = ClusterBuilder::build(&ClusterSpec::homogeneous("d", 1, 1, 4));
+        (state, JobStore::new())
+    }
+
+    /// Place a single-pod non-gang job on a specific node.
+    fn place(state: &mut ClusterState, store: &mut JobStore, id: u64, node: u32, gpus: u32) {
+        let spec = JobSpec::homogeneous(
+            JobId(id),
+            TenantId(0),
+            JobKind::Inference,
+            GpuTypeId(0),
+            1,
+            gpus,
+        )
+        .with_gang(false);
+        let free = state.node(NodeId(node)).free_gpu_indices();
+        state
+            .commit_placements(
+                JobId(id),
+                vec![PodPlacement {
+                    pod: PodId::new(JobId(id), 0),
+                    node: NodeId(node),
+                    devices: free[..gpus as usize].to_vec(),
+                    nic: 0,
+                }],
+            )
+            .unwrap();
+        let mut j = Job::new(spec);
+        j.mark_admitted();
+        j.mark_scheduled(0);
+        store.insert(j);
+    }
+
+    #[test]
+    fn consolidates_two_fragmented_nodes() {
+        let (mut state, mut store) = setup();
+        place(&mut state, &mut store, 1, 0, 2);
+        place(&mut state, &mut store, 2, 1, 2);
+        assert!((state.fragmentation_ratio(None) - 0.5).abs() < 1e-9);
+        let plan = plan_round(&state, &store, &DefragConfig::default());
+        assert!(!plan.is_empty());
+        let (report, _moved) = execute(&mut state, &plan);
+        assert!(report.migrations >= 1);
+        // One of the two fragmented nodes is now empty.
+        assert!((state.fragmentation_ratio(None) - 0.25).abs() < 1e-9);
+        assert!(report.nodes_freed >= 1);
+        // No allocation lost.
+        assert_eq!(state.allocated_gpus(), 4);
+    }
+
+    #[test]
+    fn never_migrates_gang_pods() {
+        let (mut state, mut store) = setup();
+        // A 2-pod gang across nodes 0 and 1 (2 GPUs each) — fragmented but
+        // untouchable.
+        let spec = JobSpec::homogeneous(
+            JobId(1),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            2,
+            2,
+        );
+        state
+            .commit_placements(
+                JobId(1),
+                vec![
+                    PodPlacement {
+                        pod: PodId::new(JobId(1), 0),
+                        node: NodeId(0),
+                        devices: vec![0, 1],
+                        nic: 0,
+                    },
+                    PodPlacement {
+                        pod: PodId::new(JobId(1), 1),
+                        node: NodeId(1),
+                        devices: vec![0, 1],
+                        nic: 0,
+                    },
+                ],
+            )
+            .unwrap();
+        let mut j = Job::new(spec);
+        j.mark_admitted();
+        j.mark_scheduled(0);
+        store.insert(j);
+        let plan = plan_round(&state, &store, &DefragConfig::default());
+        assert!(plan.is_empty(), "gang pods must not migrate: {plan:?}");
+    }
+
+    #[test]
+    fn never_targets_idle_nodes() {
+        let (mut state, mut store) = setup();
+        place(&mut state, &mut store, 1, 0, 1);
+        // Only one fragmented node and three idle ones: nowhere to go.
+        let plan = plan_round(&state, &store, &DefragConfig::default());
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn budget_caps_migrations() {
+        let (mut state, mut store) = setup();
+        for (id, node) in [(1u64, 0u32), (2, 1), (3, 2), (4, 3)] {
+            place(&mut state, &mut store, id, node, 1);
+        }
+        let cfg = DefragConfig {
+            max_migrations_per_round: 2,
+            ..DefragConfig::default()
+        };
+        let plan = plan_round(&state, &store, &cfg);
+        assert!(plan.len() <= 2);
+    }
+
+    #[test]
+    fn execute_skips_stale_migrations() {
+        let (mut state, mut store) = setup();
+        place(&mut state, &mut store, 1, 0, 2);
+        place(&mut state, &mut store, 2, 1, 2);
+        let plan = plan_round(&state, &store, &DefragConfig::default());
+        // Job finishes before execution.
+        state.release_job(JobId(1)).ok();
+        state.release_job(JobId(2)).ok();
+        let (report, _moved) = execute(&mut state, &plan);
+        assert_eq!(report.migrations, 0);
+        assert_eq!(state.allocated_gpus(), 0);
+    }
+
+    #[test]
+    fn multi_gpu_pod_moves_whole() {
+        let (mut state, mut store) = setup();
+        place(&mut state, &mut store, 1, 0, 4);
+        place(&mut state, &mut store, 2, 1, 3);
+        let plan = plan_round(&state, &store, &DefragConfig::default());
+        let (report, _moved) = execute(&mut state, &plan);
+        assert!(report.migrations >= 1);
+        assert_eq!(state.allocated_gpus(), 7);
+        // The moved job's devices all live on one node.
+        for id in [1u64, 2] {
+            let nodes = state.nodes_of(JobId(id));
+            assert_eq!(nodes.len(), 1, "job {id} split across nodes");
+        }
+    }
+}

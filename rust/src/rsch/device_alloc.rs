@@ -1,0 +1,140 @@
+//! Fine-grained device selection (§3.3.1 + §3.3.5 intra-node topology):
+//! given a node and a GPU count, pick the exact devices — preferring the
+//! *smallest NVLink island that fits* (best-fit, which preserves large
+//! islands for future multi-GPU pods) — and pair the pod with the NIC
+//! serving the majority of the chosen devices.
+
+use crate::cluster::gpu::GpuType;
+
+/// Choose `count` device indices from `free` (free device indices on the
+/// node) honouring NVLink islands. Returns `None` if `free.len() < count`.
+///
+/// Policy:
+/// 1. Best-fit island: the island with the fewest free devices that still
+///    holds `count` — keeps big islands intact.
+/// 2. If no single island fits, take whole islands smallest-first and
+///    top up from the next (cross-island placement is allowed but last).
+pub fn select_devices(gpu_type: &GpuType, free: &[u8], count: u32) -> Option<Vec<u8>> {
+    let count = count as usize;
+    if free.len() < count || count == 0 {
+        return if count == 0 { Some(Vec::new()) } else { None };
+    }
+
+    // Free devices per island, in island order.
+    let mut islands: Vec<Vec<u8>> = gpu_type
+        .nvlink_islands
+        .iter()
+        .map(|isle| {
+            isle.iter()
+                .copied()
+                .filter(|d| free.contains(d))
+                .collect::<Vec<u8>>()
+        })
+        .collect();
+    // Devices outside any island (defensive; shouldn't happen).
+    let stray: Vec<u8> = free
+        .iter()
+        .copied()
+        .filter(|d| gpu_type.island_of(*d).is_none())
+        .collect();
+    if !stray.is_empty() {
+        islands.push(stray);
+    }
+
+    // 1. Best-fit single island.
+    let fit = islands
+        .iter()
+        .filter(|i| i.len() >= count)
+        .min_by_key(|i| (i.len(), i.first().copied().unwrap_or(255)));
+    if let Some(isle) = fit {
+        return Some(isle[..count].to_vec());
+    }
+
+    // 2. Combine islands, smallest first (consume fragments, preserve the
+    //    biggest contiguous capacity).
+    let mut order: Vec<usize> = (0..islands.len()).collect();
+    order.sort_by_key(|&i| (islands[i].len(), i));
+    let mut picked = Vec::with_capacity(count);
+    for i in order {
+        for &d in &islands[i] {
+            if picked.len() == count {
+                break;
+            }
+            picked.push(d);
+        }
+        if picked.len() == count {
+            break;
+        }
+    }
+    debug_assert_eq!(picked.len(), count);
+    Some(picked)
+}
+
+/// The NIC index to pair with a device set: the NIC serving the most
+/// selected devices (ties → lowest NIC index).
+pub fn select_nic(gpu_type: &GpuType, devices: &[u8]) -> u8 {
+    if devices.is_empty() {
+        return 0;
+    }
+    let mut counts = vec![0u32; gpu_type.nics_per_node as usize];
+    for &d in devices {
+        counts[gpu_type.nic_for_gpu(d) as usize] += 1;
+    }
+    counts
+        .iter()
+        .enumerate()
+        .max_by_key(|&(i, c)| (*c, std::cmp::Reverse(i)))
+        .map(|(i, _)| i as u8)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ids::GpuTypeId;
+
+    #[test]
+    fn whole_island_board_takes_prefix() {
+        let t = GpuType::type_h(GpuTypeId(0));
+        let free: Vec<u8> = (0..8).collect();
+        assert_eq!(select_devices(&t, &free, 4).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(select_devices(&t, &free, 8).unwrap().len(), 8);
+    }
+
+    #[test]
+    fn best_fit_prefers_smaller_island() {
+        let t = GpuType::type_l(GpuTypeId(0)); // Quads [0-3], [4-7].
+        // Quad0 has 2 free, quad1 has 4 free.
+        let free = vec![2, 3, 4, 5, 6, 7];
+        // A 2-GPU pod should take the 2-free quad, preserving the full quad.
+        assert_eq!(select_devices(&t, &free, 2).unwrap(), vec![2, 3]);
+        // A 4-GPU pod needs the intact quad.
+        assert_eq!(select_devices(&t, &free, 4).unwrap(), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn cross_island_when_no_single_island_fits() {
+        let t = GpuType::type_l(GpuTypeId(0));
+        let free = vec![0, 1, 4, 5, 6]; // 2 + 3 free.
+        let picked = select_devices(&t, &free, 5).unwrap();
+        assert_eq!(picked.len(), 5);
+        // Smallest island consumed first.
+        assert!(picked.contains(&0) && picked.contains(&1));
+    }
+
+    #[test]
+    fn insufficient_free_is_none() {
+        let t = GpuType::type_h(GpuTypeId(0));
+        assert!(select_devices(&t, &[1, 2], 3).is_none());
+        assert_eq!(select_devices(&t, &[], 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn nic_pairing_majority() {
+        let t = GpuType::type_h(GpuTypeId(0)); // 2 GPUs per NIC.
+        assert_eq!(select_nic(&t, &[0, 1]), 0);
+        assert_eq!(select_nic(&t, &[6, 7]), 3);
+        assert_eq!(select_nic(&t, &[0, 2, 3]), 1); // NIC1 serves 2 of 3.
+        assert_eq!(select_nic(&t, &[0, 2]), 0); // Tie → lowest.
+    }
+}

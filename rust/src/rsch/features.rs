@@ -1,0 +1,217 @@
+//! Feature extraction: cluster snapshot + in-flight placement plan → the
+//! dense `[N, NODE_F]` / `[G, GROUP_F]` matrices of the scoring contract.
+//!
+//! This is the single definition both scorer backends consume — the native
+//! Rust scorer and the XLA artifact see byte-identical features, which is
+//! what makes the parity tests meaningful. The layout mirrors
+//! `python/compile/kernels/ref.py`; keep them in lockstep.
+
+use crate::cluster::ids::{GroupId, NodeId};
+use crate::cluster::snapshot::Snapshot;
+use crate::cluster::topology::Fabric;
+use crate::job::spec::{JobKind, JobSpec, PlacementStrategy};
+
+/// Node feature indices (see ref.py for semantics).
+pub const NODE_F: usize = 12;
+pub const F_FREE: usize = 0;
+pub const F_TOTAL: usize = 1;
+pub const F_ALLOC: usize = 2;
+pub const F_HEALTHY: usize = 3;
+pub const F_GROUP_FREE: usize = 4;
+pub const F_GROUP_TOTAL: usize = 5;
+pub const F_PODS_ON_NODE: usize = 6;
+pub const F_PODS_IN_GROUP: usize = 7;
+pub const F_TOPO_TIER: usize = 8;
+pub const F_IN_ZONE: usize = 9;
+pub const F_HBD_FREE: usize = 10;
+pub const F_NVLINK_CLIQUE: usize = 11;
+
+/// Group feature indices.
+pub const GROUP_F: usize = 6;
+pub const GF_FREE: usize = 0;
+pub const GF_TOTAL: usize = 1;
+pub const GF_PODS_IN_GROUP: usize = 2;
+pub const GF_ZONE_FRAC: usize = 3;
+pub const GF_HEALTHY_FRAC: usize = 4;
+pub const GF_WHOLE_FREE: usize = 5;
+
+/// Job descriptor layout.
+pub const JOB_D: usize = 8;
+
+/// Dynamic per-plan deltas tracked while building a placement (the
+/// authoritative state is only mutated at commit).
+pub trait PlanView {
+    /// Free healthy GPUs on the node, minus devices taken by this plan.
+    fn free_gpus(&self, node: NodeId) -> u32;
+    /// This job's pods placed on the node so far.
+    fn pods_on_node(&self, node: NodeId) -> u32;
+    /// This job's pods placed in the group so far.
+    fn pods_in_group(&self, group: GroupId) -> u32;
+    /// Group free GPUs minus this plan's takings.
+    fn group_free(&self, group: GroupId) -> u32;
+    /// Largest free NVLink island on the node under this plan.
+    fn largest_free_island(&self, node: NodeId) -> u32;
+    /// Nodes already used by this plan (for topology tiers).
+    fn placed_nodes(&self) -> &[NodeId];
+}
+
+/// Encode the job descriptor for the scorers.
+pub fn job_descriptor(spec: &JobSpec, gpus_per_pod: u32) -> [f32; JOB_D] {
+    let strategy_id = match spec.strategy {
+        Some(PlacementStrategy::NativeFirstFit) => 0.0,
+        Some(PlacementStrategy::Binpack) => 1.0,
+        Some(PlacementStrategy::EBinpack) | None => 2.0,
+        Some(PlacementStrategy::Spread) => 3.0,
+        Some(PlacementStrategy::ESpread) => 4.0,
+    };
+    [
+        gpus_per_pod as f32,
+        spec.total_gpus() as f32,
+        if spec.gang { 1.0 } else { 0.0 },
+        if spec.kind == JobKind::Inference { 1.0 } else { 0.0 },
+        if gpus_per_pod >= 8 { 1.0 } else { 0.0 },
+        strategy_id,
+        if spec.needs_hbd { 1.0 } else { 0.0 },
+        0.0,
+    ]
+}
+
+/// Build the node feature matrix (row-major `[candidates.len(), NODE_F]`)
+/// for the given candidates under an in-flight plan.
+pub fn node_features(
+    snapshot: &Snapshot,
+    fabric: &Fabric,
+    plan: &dyn PlanView,
+    candidates: &[NodeId],
+) -> Vec<f32> {
+    let placed = plan.placed_nodes();
+    let mut out = Vec::with_capacity(candidates.len() * NODE_F);
+    for &n in candidates {
+        let rec = &snapshot.nodes[n.index()];
+        let grec = &snapshot.groups[rec.group.index()];
+        let free = plan.free_gpus(n);
+        let alloc = rec.total - free;
+        out.extend_from_slice(&[
+            free as f32,
+            rec.total as f32,
+            alloc as f32,
+            if rec.healthy { 1.0 } else { 0.0 },
+            plan.group_free(rec.group) as f32,
+            grec.total as f32,
+            plan.pods_on_node(n) as f32,
+            plan.pods_in_group(rec.group) as f32,
+            fabric.min_tier_to(n, placed).as_f32(),
+            if rec.in_inference_zone { 1.0 } else { 0.0 },
+            rec.hbd_free as f32,
+            plan.largest_free_island(n) as f32,
+        ]);
+    }
+    out
+}
+
+/// Build the group feature matrix for the given groups under a plan.
+pub fn group_features(
+    snapshot: &Snapshot,
+    plan: &dyn PlanView,
+    groups: &[GroupId],
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(groups.len() * GROUP_F);
+    for &g in groups {
+        let rec = &snapshot.groups[g.index()];
+        out.extend_from_slice(&[
+            plan.group_free(g) as f32,
+            rec.total as f32,
+            plan.pods_in_group(g) as f32,
+            rec.zone_frac,
+            rec.healthy_frac,
+            rec.whole_free_nodes as f32,
+        ]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
+    use crate::cluster::snapshot::SnapshotMode;
+
+    /// A no-delta plan view (fresh plan, nothing placed yet).
+    pub struct EmptyPlan<'a> {
+        pub snapshot: &'a Snapshot,
+    }
+
+    impl PlanView for EmptyPlan<'_> {
+        fn free_gpus(&self, node: NodeId) -> u32 {
+            self.snapshot.nodes[node.index()].free
+        }
+        fn pods_on_node(&self, _: NodeId) -> u32 {
+            0
+        }
+        fn pods_in_group(&self, _: GroupId) -> u32 {
+            0
+        }
+        fn group_free(&self, group: GroupId) -> u32 {
+            self.snapshot.groups[group.index()].free
+        }
+        fn largest_free_island(&self, node: NodeId) -> u32 {
+            self.snapshot.nodes[node.index()].largest_free_island
+        }
+        fn placed_nodes(&self) -> &[NodeId] {
+            &[]
+        }
+    }
+
+    #[test]
+    fn fresh_cluster_features() {
+        let state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 2, 2));
+        let mut snap = Snapshot::new(SnapshotMode::DeepCopy);
+        snap.refresh(&state);
+        let plan = EmptyPlan { snapshot: &snap };
+        let cands: Vec<NodeId> = (0..4).map(|i| NodeId(i)).collect();
+        let feat = node_features(&snap, &state.fabric, &plan, &cands);
+        assert_eq!(feat.len(), 4 * NODE_F);
+        // Row 0: all free, healthy, tier 3 (nothing placed).
+        assert_eq!(feat[F_FREE], 8.0);
+        assert_eq!(feat[F_ALLOC], 0.0);
+        assert_eq!(feat[F_HEALTHY], 1.0);
+        assert_eq!(feat[F_GROUP_FREE], 16.0);
+        assert_eq!(feat[F_TOPO_TIER], 3.0);
+        assert_eq!(feat[F_NVLINK_CLIQUE], 8.0);
+    }
+
+    #[test]
+    fn group_features_shape() {
+        let state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 2, 2));
+        let mut snap = Snapshot::new(SnapshotMode::DeepCopy);
+        snap.refresh(&state);
+        let plan = EmptyPlan { snapshot: &snap };
+        let gs: Vec<GroupId> = vec![GroupId(0), GroupId(1)];
+        let gf = group_features(&snap, &plan, &gs);
+        assert_eq!(gf.len(), 2 * GROUP_F);
+        assert_eq!(gf[GF_FREE], 16.0);
+        assert_eq!(gf[GF_WHOLE_FREE], 2.0);
+        assert_eq!(gf[GF_HEALTHY_FRAC], 1.0);
+    }
+
+    #[test]
+    fn job_descriptor_encodes_strategy_and_kind() {
+        let mut spec = crate::job::spec::JobSpec::homogeneous(
+            JobId(1),
+            TenantId(0),
+            crate::job::spec::JobKind::Inference,
+            GpuTypeId(0),
+            4,
+            2,
+        );
+        spec.strategy = Some(PlacementStrategy::ESpread);
+        let d = job_descriptor(&spec, 2);
+        assert_eq!(d[0], 2.0);
+        assert_eq!(d[1], 8.0);
+        assert_eq!(d[2], 0.0); // Non-gang.
+        assert_eq!(d[3], 1.0); // Inference.
+        assert_eq!(d[4], 0.0); // Not whole-node.
+        assert_eq!(d[5], 4.0); // E-Spread.
+    }
+}

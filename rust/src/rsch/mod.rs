@@ -1,0 +1,797 @@
+//! RSCH — the Resource-aware Scheduler (§3.3): fine-grained device-level
+//! placement with Gang semantics, Binpack/E-Binpack, Spread/E-Spread,
+//! topology awareness, and the §3.4 performance mechanisms (GPU-type node
+//! pools, two-level NodeNetGroup scheduling, incremental snapshots).
+//!
+//! The per-pod scoring hot-spot runs through a pluggable [`ScoreBackend`]:
+//! the pure-Rust [`NativeBackend`] or the AOT-compiled XLA artifact
+//! (`runtime::XlaBackend`) — both consume identical feature matrices.
+
+pub mod defrag;
+pub mod device_alloc;
+pub mod features;
+pub mod plan;
+pub mod score;
+
+use crate::cluster::ids::{GroupId, NodeId};
+use crate::cluster::snapshot::{Snapshot, SnapshotMode};
+use crate::cluster::state::ClusterState;
+use crate::job::spec::{JobKind, JobSpec, PlacementStrategy, TypedDemand};
+use crate::qsch::{PlaceFailure, Placer};
+
+use features::{group_features, job_descriptor, node_features};
+use plan::PlanBuilder;
+use score::{
+    argmax, feasible, group_weights, is_large_job, node_weights, NativeBackend, Phase,
+    ScoreBackend,
+};
+
+/// RSCH tunables.
+#[derive(Debug, Clone)]
+pub struct RschConfig {
+    /// Default strategy per job kind when the spec doesn't pin one.
+    pub training_strategy: PlacementStrategy,
+    pub inference_strategy: PlacementStrategy,
+    pub dev_strategy: PlacementStrategy,
+    /// Two-level (group-preselect) scheduling (§3.4.2). Off = flat scan of
+    /// the whole pool (the ablation baseline).
+    pub two_level: bool,
+    /// Snapshot refresh mode (§3.4.3).
+    pub snapshot_mode: SnapshotMode,
+    /// Groups to try per pod in two-level mode (top-K preselection).
+    pub group_fanout: usize,
+}
+
+impl Default for RschConfig {
+    fn default() -> Self {
+        RschConfig {
+            training_strategy: PlacementStrategy::EBinpack,
+            inference_strategy: PlacementStrategy::ESpread,
+            dev_strategy: PlacementStrategy::Binpack,
+            two_level: true,
+            snapshot_mode: SnapshotMode::Incremental,
+            group_fanout: 4,
+        }
+    }
+}
+
+impl RschConfig {
+    /// The §5 baseline: the "native scheduling system" — first-fit
+    /// placement, flat scan, deep-copy snapshots.
+    pub fn native_baseline() -> RschConfig {
+        // Kubernetes' default LeastAllocated scoring is spread-like; that
+        // is what produces the ~8.5 % baseline GFR E-Binpack collapses in
+        // Figure 6.
+        RschConfig {
+            training_strategy: PlacementStrategy::Spread,
+            inference_strategy: PlacementStrategy::Spread,
+            dev_strategy: PlacementStrategy::Spread,
+            two_level: false,
+            snapshot_mode: SnapshotMode::DeepCopy,
+            group_fanout: 4,
+        }
+    }
+
+    /// First-fit variant of the baseline (Table-1 style comparisons).
+    pub fn first_fit_baseline() -> RschConfig {
+        RschConfig {
+            training_strategy: PlacementStrategy::NativeFirstFit,
+            inference_strategy: PlacementStrategy::NativeFirstFit,
+            dev_strategy: PlacementStrategy::NativeFirstFit,
+            two_level: false,
+            snapshot_mode: SnapshotMode::DeepCopy,
+            group_fanout: 4,
+        }
+    }
+}
+
+/// Cumulative RSCH counters (scoring volume feeds the perf analysis).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RschStats {
+    pub placements: u64,
+    pub pods_placed: u64,
+    pub failures: u64,
+    pub nodes_scored: u64,
+    pub groups_scored: u64,
+    pub snapshot_refreshes: u64,
+}
+
+/// Candidate zone filter for E-Spread phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ZoneFilter {
+    All,
+    ZoneOnly,
+    GeneralOnly,
+}
+
+/// The resource-aware scheduler.
+pub struct Rsch {
+    pub cfg: RschConfig,
+    snapshot: Snapshot,
+    backend: Box<dyn ScoreBackend>,
+    /// Cached groups per pool id (pool index → group list).
+    pool_groups: Vec<Vec<GroupId>>,
+    pub stats: RschStats,
+}
+
+impl Rsch {
+    pub fn new(cfg: RschConfig, state: &ClusterState) -> Rsch {
+        Rsch::with_backend(cfg, state, Box::new(NativeBackend))
+    }
+
+    pub fn with_backend(
+        cfg: RschConfig,
+        state: &ClusterState,
+        backend: Box<dyn ScoreBackend>,
+    ) -> Rsch {
+        let mut pool_groups: Vec<Vec<GroupId>> = vec![Vec::new(); state.pools.len()];
+        for pool in state.pools.iter() {
+            let mut gs: Vec<GroupId> = pool
+                .nodes
+                .iter()
+                .map(|&n| state.node(n).group)
+                .collect();
+            gs.sort_unstable();
+            gs.dedup();
+            pool_groups[pool.id.index()] = gs;
+        }
+        Rsch {
+            snapshot: Snapshot::new(cfg.snapshot_mode),
+            cfg,
+            backend,
+            pool_groups,
+            stats: RschStats::default(),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn snapshot_stats(&self) -> crate::cluster::snapshot::SnapshotStats {
+        self.snapshot.stats
+    }
+
+    fn strategy_for(&self, spec: &JobSpec) -> PlacementStrategy {
+        spec.strategy.unwrap_or(match spec.kind {
+            JobKind::Training => self.cfg.training_strategy,
+            JobKind::Inference => self.cfg.inference_strategy,
+            JobKind::Dev => self.cfg.dev_strategy,
+        })
+    }
+
+    /// The scheduling phases a pod goes through for its strategy.
+    fn phases(strategy: PlacementStrategy, gpus_per_pod: u32) -> Vec<(Phase, ZoneFilter)> {
+        match strategy {
+            // E-Spread: pods under a full board spread inside the dedicated
+            // zone first, then fall back to E-Binpack in the general pool;
+            // whole-node inference pods go straight to the general pool
+            // (preserving zone nodes for small HA replicas).
+            PlacementStrategy::ESpread if gpus_per_pod < 8 => vec![
+                (Phase::Primary, ZoneFilter::ZoneOnly),
+                (Phase::Fallback, ZoneFilter::GeneralOnly),
+            ],
+            PlacementStrategy::ESpread => vec![(Phase::Fallback, ZoneFilter::GeneralOnly)],
+            _ => vec![(Phase::Primary, ZoneFilter::All)],
+        }
+    }
+
+    /// Representative LeafGroup capacity for the large-job threshold.
+    fn group_capacity(&self, state: &ClusterState, pool_idx: usize) -> u32 {
+        self.pool_groups[pool_idx]
+            .first()
+            .map(|&g| state.group_total(g))
+            .unwrap_or(0)
+    }
+}
+
+/// Borrow-split planning context: snapshot immutably feeds the
+/// [`PlanBuilder`] while the backend/stats stay mutably borrowable.
+struct Planner<'a> {
+    cfg: &'a RschConfig,
+    snapshot: &'a Snapshot,
+    backend: &'a mut dyn ScoreBackend,
+    pool_groups: &'a [Vec<GroupId>],
+    stats: &'a mut RschStats,
+}
+
+impl Planner<'_> {
+    /// Plan one pod; returns the chosen node or None.
+    fn plan_pod(
+        &mut self,
+        state: &ClusterState,
+        pb: &mut PlanBuilder,
+        spec: &JobSpec,
+        demand: &TypedDemand,
+        strategy: PlacementStrategy,
+        large: bool,
+    ) -> Option<NodeId> {
+        let pool = state.pools.pool_for_type(demand.gpu_type)?;
+        let job = job_descriptor(spec, demand.gpus_per_pod);
+
+        for (phase, zone_filter) in Rsch::phases(strategy, demand.gpus_per_pod) {
+            let node = if self.cfg.two_level {
+                self.plan_pod_two_level(
+                    state, pb, spec, demand, strategy, large, phase, zone_filter, &job,
+                    pool.id.index(),
+                )
+            } else {
+                let candidates =
+                    self.filter_candidates(state, pb, &pool.nodes, demand, spec, zone_filter);
+                self.pick_node(state, pb, &candidates, &job, strategy, phase, large)
+            };
+            if let Some(n) = node {
+                if pb.place_pod(n, demand.gpus_per_pod) {
+                    return Some(n);
+                }
+            }
+        }
+        None
+    }
+
+    /// Two-level: preselect top-K groups by score, then pick a node within.
+    #[allow(clippy::too_many_arguments)]
+    fn plan_pod_two_level(
+        &mut self,
+        state: &ClusterState,
+        pb: &mut PlanBuilder,
+        spec: &JobSpec,
+        demand: &TypedDemand,
+        strategy: PlacementStrategy,
+        large: bool,
+        phase: Phase,
+        zone_filter: ZoneFilter,
+        job: &[f32; features::JOB_D],
+        pool_idx: usize,
+    ) -> Option<NodeId> {
+        let groups = &self.pool_groups[pool_idx];
+        if groups.is_empty() {
+            return None;
+        }
+        let gfeat = group_features(self.snapshot, pb, groups);
+        let gw = group_weights(strategy, phase, large);
+        let gscores = self
+            .backend
+            .score_groups(&gfeat, groups.len(), job, &gw);
+        self.stats.groups_scored += groups.len() as u64;
+
+        // Order groups by score desc (stable by index) and walk the top-K
+        // feasible ones.
+        let mut order: Vec<usize> = (0..groups.len()).collect();
+        order.sort_by(|&a, &b| {
+            gscores[b]
+                .partial_cmp(&gscores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for &gi in order.iter().take(self.cfg.group_fanout.max(1)) {
+            if !feasible(gscores[gi]) {
+                break;
+            }
+            let group_nodes = &state.fabric.groups[groups[gi].index()].nodes;
+            let candidates =
+                self.filter_candidates(state, pb, group_nodes, demand, spec, zone_filter);
+            if candidates.is_empty() {
+                continue;
+            }
+            if let Some(n) =
+                self.pick_node(state, pb, &candidates, job, strategy, phase, large)
+            {
+                return Some(n);
+            }
+        }
+        None
+    }
+
+    /// Cheap pre-filters before scoring (health, capacity, zone, HBD pin).
+    fn filter_candidates(
+        &self,
+        state: &ClusterState,
+        pb: &PlanBuilder,
+        nodes: &[NodeId],
+        demand: &TypedDemand,
+        spec: &JobSpec,
+        zone_filter: ZoneFilter,
+    ) -> Vec<NodeId> {
+        use features::PlanView;
+        nodes
+            .iter()
+            .copied()
+            .filter(|&n| {
+                let rec = &self.snapshot.nodes[n.index()];
+                if !rec.healthy || rec.gpu_type != demand.gpu_type {
+                    return false;
+                }
+                if pb.free_gpus(n) < demand.gpus_per_pod {
+                    return false;
+                }
+                match zone_filter {
+                    ZoneFilter::All => {}
+                    ZoneFilter::ZoneOnly if !rec.in_inference_zone => return false,
+                    ZoneFilter::GeneralOnly if rec.in_inference_zone => return false,
+                    _ => {}
+                }
+                if spec.needs_hbd {
+                    match (pb.hbd_lock, state.node(n).hbd) {
+                        (Some(lock), Some(h)) if lock == h => {}
+                        (Some(_), _) => return false,
+                        (None, Some(h)) => {
+                            // First pod: the HBD must fit the whole job.
+                            if state.hbd_free(h) < spec.total_gpus() {
+                                return false;
+                            }
+                        }
+                        (None, None) => return false,
+                    }
+                }
+                true
+            })
+            .collect()
+    }
+
+    /// Plan a whole job against the snapshot (no state mutation). Returns
+    /// the placement plan or the failure kind.
+    fn plan_job(
+        &mut self,
+        state: &ClusterState,
+        spec: &JobSpec,
+        default_strategy: PlacementStrategy,
+    ) -> Result<Vec<crate::cluster::state::PodPlacement>, PlaceFailure> {
+        // Sanity: every demand must be satisfiable in principle.
+        for d in &spec.demands {
+            let Some(pool) = state.pools.pool_for_type(d.gpu_type) else {
+                self.stats.failures += 1;
+                return Err(PlaceFailure::Unsatisfiable);
+            };
+            let per_node = state.gpu_type(d.gpu_type).gpus_per_node as u32;
+            if d.gpus_per_pod > per_node || d.total_gpus() > pool.total_gpus {
+                self.stats.failures += 1;
+                return Err(PlaceFailure::Unsatisfiable);
+            }
+        }
+        let strategy = spec.strategy.unwrap_or(default_strategy);
+        let mut pb = PlanBuilder::new(state, self.snapshot, spec.id);
+        for d in &spec.demands {
+            let pool_idx = state
+                .pools
+                .pool_for_type(d.gpu_type)
+                .expect("checked above")
+                .id
+                .index();
+            let cap = self.pool_groups[pool_idx]
+                .first()
+                .map(|&g| state.group_total(g))
+                .unwrap_or(0);
+            let large = is_large_job(spec.total_gpus(), cap);
+            for _ in 0..d.replicas {
+                if self.plan_pod(state, &mut pb, spec, d, strategy, large).is_none() {
+                    // Gang all-or-nothing: abandon the whole plan. (Non-gang
+                    // jobs are treated the same at job granularity; see
+                    // DESIGN.md §6 for the pod-level-admission note.)
+                    self.stats.failures += 1;
+                    return Err(PlaceFailure::Resources);
+                }
+            }
+        }
+        Ok(pb.into_plan())
+    }
+
+    /// Score candidates and return the best feasible node.
+    #[allow(clippy::too_many_arguments)]
+    fn pick_node(
+        &mut self,
+        state: &ClusterState,
+        pb: &PlanBuilder,
+        candidates: &[NodeId],
+        job: &[f32; features::JOB_D],
+        strategy: PlacementStrategy,
+        phase: Phase,
+        large: bool,
+    ) -> Option<NodeId> {
+        if candidates.is_empty() {
+            return None;
+        }
+        let feat = node_features(self.snapshot, &state.fabric, pb, candidates);
+        let w = node_weights(strategy, phase, large);
+        let scores = self
+            .backend
+            .score_nodes(&feat, candidates.len(), job, &w);
+        self.stats.nodes_scored += candidates.len() as u64;
+        let best = argmax(&scores)?;
+        feasible(scores[best]).then(|| candidates[best])
+    }
+}
+
+impl Placer for Rsch {
+    fn place(&mut self, state: &mut ClusterState, spec: &JobSpec) -> Result<(), PlaceFailure> {
+        self.snapshot.refresh(state);
+        self.stats.snapshot_refreshes += 1;
+        let default_strategy = self.strategy_for(spec);
+        let mut planner = Planner {
+            cfg: &self.cfg,
+            snapshot: &self.snapshot,
+            backend: self.backend.as_mut(),
+            pool_groups: &self.pool_groups,
+            stats: &mut self.stats,
+        };
+        let plan = planner.plan_job(state, spec, default_strategy)?;
+        let pods = plan.len() as u64;
+        state
+            .commit_placements(spec.id, plan)
+            .map_err(|_| PlaceFailure::Resources)?;
+        self.stats.placements += 1;
+        self.stats.pods_placed += pods;
+        Ok(())
+    }
+}
+
+impl Rsch {
+    /// Multi-instance parallel scheduling (§3.1 / §3.4.2 "parallel
+    /// scheduling across groups"): plan many jobs concurrently against one
+    /// consistent snapshot (each worker thread = one RSCH instance with
+    /// its own native scorer), then commit optimistically in input order.
+    /// Plans invalidated by earlier commits fall back to the sequential
+    /// path — determinism is preserved because commit order is the input
+    /// order.
+    ///
+    /// The parallel planners always use the native backend (the PJRT
+    /// client is not `Send`); the sequential fallback uses whatever
+    /// backend the instance was built with.
+    pub fn place_many_parallel(
+        &mut self,
+        state: &mut ClusterState,
+        specs: &[JobSpec],
+        threads: usize,
+    ) -> Vec<Result<(), PlaceFailure>> {
+        self.snapshot.refresh(state);
+        self.stats.snapshot_refreshes += 1;
+        let threads = threads.max(1);
+
+        // Shard NodeNetGroups round-robin across worker threads (§3.4.2
+        // "parallel scheduling across groups"): planners touch disjoint
+        // node sets, so optimistic commits almost never conflict. Each
+        // worker forces two-level mode (the shard IS a group partition).
+        let sharded_groups: Vec<Vec<Vec<GroupId>>> = (0..threads)
+            .map(|t| {
+                self.pool_groups
+                    .iter()
+                    .map(|gs| {
+                        gs.iter()
+                            .enumerate()
+                            .filter(|(i, _)| i % threads == t)
+                            .map(|(_, &g)| g)
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let parallel_cfg = RschConfig {
+            two_level: true,
+            ..self.cfg.clone()
+        };
+
+        // Phase 1: parallel planning against the shared snapshot.
+        let mut plans: Vec<Option<Result<Vec<crate::cluster::state::PodPlacement>, PlaceFailure>>> =
+            (0..specs.len()).map(|_| None).collect();
+        let snapshot = &self.snapshot;
+        let strategies: Vec<PlacementStrategy> =
+            specs.iter().map(|sp| self.strategy_for(sp)).collect();
+        let state_ref: &ClusterState = state;
+        let mut thread_stats: Vec<RschStats> = vec![RschStats::default(); threads];
+
+        let plans_ref = &mut plans;
+        crossbeam_utils::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (t, stats_slot) in thread_stats.iter_mut().enumerate() {
+                let strategies = &strategies;
+                let shard = &sharded_groups[t];
+                let parallel_cfg = &parallel_cfg;
+                let handle = scope.spawn(move |_| {
+                    let mut backend = NativeBackend;
+                    let mut stats = RschStats::default();
+                    let mut out = Vec::new();
+                    let mut planner = Planner {
+                        cfg: parallel_cfg,
+                        snapshot,
+                        backend: &mut backend,
+                        pool_groups: shard,
+                        stats: &mut stats,
+                    };
+                    for (i, spec) in specs.iter().enumerate() {
+                        if i % threads != t {
+                            continue;
+                        }
+                        out.push((i, planner.plan_job(state_ref, spec, strategies[i])));
+                    }
+                    (out, stats)
+                });
+                handles.push((handle, stats_slot));
+            }
+            for (handle, slot) in handles {
+                let (out, stats) = handle.join().expect("planner thread panicked");
+                *slot = stats;
+                for (i, r) in out {
+                    plans_ref[i] = Some(r);
+                }
+            }
+        })
+        .expect("scoped threads");
+        for ts in thread_stats {
+            self.stats.nodes_scored += ts.nodes_scored;
+            self.stats.groups_scored += ts.groups_scored;
+            self.stats.failures += ts.failures;
+        }
+
+        // Phase 2: optimistic sequential commit in input order.
+        let mut results = Vec::with_capacity(specs.len());
+        for (spec, plan) in specs.iter().zip(plans.into_iter()) {
+            let plan = plan.expect("every index planned");
+            let res = match plan {
+                Err(PlaceFailure::Unsatisfiable) => Err(PlaceFailure::Unsatisfiable),
+                // The thread's group shard may simply have been too
+                // narrow for this job — replan with the full view.
+                Err(PlaceFailure::Resources) => self.place(state, spec),
+                Ok(plan) => match state.commit_placements(spec.id, plan) {
+                    Ok(()) => {
+                        self.stats.placements += 1;
+                        Ok(())
+                    }
+                    Err(_) => {
+                        // Conflict with an earlier commit: replan
+                        // sequentially against fresh state.
+                        self.place(state, spec)
+                    }
+                },
+            };
+            results.push(res);
+        }
+        results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
+    use crate::cluster::node::Zone;
+    use crate::job::spec::JobKind;
+
+    const G: GpuTypeId = GpuTypeId(0);
+
+    fn state_2x4() -> ClusterState {
+        // 1 spine × 2 groups × 4 nodes × 8 GPUs = 64 GPUs.
+        ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 2, 4))
+    }
+
+    fn train(id: u64, replicas: u32, gpp: u32) -> JobSpec {
+        JobSpec::homogeneous(JobId(id), TenantId(0), JobKind::Training, G, replicas, gpp)
+    }
+
+    #[test]
+    fn places_simple_job() {
+        let mut state = state_2x4();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        rsch.place(&mut state, &train(1, 2, 8)).unwrap();
+        assert_eq!(state.allocated_gpus(), 16);
+        assert_eq!(state.placements_of(JobId(1)).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn gang_is_all_or_nothing() {
+        let mut state = state_2x4();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        // 9 whole-node pods on an 8-node cluster.
+        let err = rsch.place(&mut state, &train(1, 9, 8)).unwrap_err();
+        assert_eq!(err, PlaceFailure::Unsatisfiable); // 72 > 64 capacity.
+        // 8 pods fit exactly.
+        rsch.place(&mut state, &train(2, 8, 8)).unwrap();
+        assert_eq!(state.allocated_gpus(), 64);
+        // Next job: resources, not unsatisfiable.
+        let err = rsch.place(&mut state, &train(3, 1, 8)).unwrap_err();
+        assert_eq!(err, PlaceFailure::Resources);
+        assert!(state.placements_of(JobId(3)).is_none());
+    }
+
+    #[test]
+    fn oversized_pod_unsatisfiable() {
+        let mut state = state_2x4();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        let err = rsch.place(&mut state, &train(1, 1, 9)).unwrap_err();
+        assert_eq!(err, PlaceFailure::Unsatisfiable);
+    }
+
+    #[test]
+    fn ebinpack_consolidates_small_jobs_on_one_node() {
+        let mut state = state_2x4();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        // Three 2-GPU jobs should stack onto the same node.
+        for id in 1..=3 {
+            rsch.place(&mut state, &train(id, 1, 2)).unwrap();
+        }
+        let n0 = state.nodes_of(JobId(1))[0];
+        assert_eq!(state.nodes_of(JobId(2)), vec![n0]);
+        assert_eq!(state.nodes_of(JobId(3)), vec![n0]);
+        assert!((state.fragmentation_ratio(None) - 1.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spread_scatters_inference_replicas() {
+        let mut state = state_2x4();
+        let mut cfg = RschConfig::default();
+        cfg.inference_strategy = PlacementStrategy::Spread;
+        let mut rsch = Rsch::new(cfg, &state);
+        let mut spec = JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Inference, G, 4, 1);
+        spec.strategy = Some(PlacementStrategy::Spread);
+        rsch.place(&mut state, &spec).unwrap();
+        // 4 replicas on 4 distinct nodes.
+        assert_eq!(state.nodes_of(JobId(1)).len(), 4);
+    }
+
+    #[test]
+    fn multi_node_gang_stays_in_one_group_when_possible() {
+        let mut state = state_2x4();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        // 4 whole nodes = exactly one group.
+        rsch.place(&mut state, &train(1, 4, 8)).unwrap();
+        let nodes = state.nodes_of(JobId(1));
+        assert_eq!(nodes.len(), 4);
+        assert_eq!(state.fabric.groups_spanned(&nodes), 1);
+    }
+
+    #[test]
+    fn espread_prefers_zone_then_falls_back() {
+        let mut spec3 = ClusterSpec::homogeneous("z", 1, 4, 2);
+        spec3.inference_zone_frac = 0.25; // Group 3 is the zone (2 nodes).
+        let mut state = ClusterBuilder::build(&spec3);
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        // Small inference pods land in the zone.
+        let mut inf = JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Inference, G, 2, 1);
+        inf.strategy = Some(PlacementStrategy::ESpread);
+        rsch.place(&mut state, &inf).unwrap();
+        for n in state.nodes_of(JobId(1)) {
+            assert_eq!(state.node(n).zone, Zone::InferenceDedicated);
+        }
+        // Fill the zone completely.
+        let mut filler = JobSpec::homogeneous(JobId(2), TenantId(0), JobKind::Inference, G, 14, 1);
+        filler.strategy = Some(PlacementStrategy::ESpread);
+        rsch.place(&mut state, &filler).unwrap();
+        // Overflow replica must fall back to the general pool.
+        let mut inf2 = JobSpec::homogeneous(JobId(3), TenantId(0), JobKind::Inference, G, 1, 1);
+        inf2.strategy = Some(PlacementStrategy::ESpread);
+        rsch.place(&mut state, &inf2).unwrap();
+        let n = state.nodes_of(JobId(3))[0];
+        assert_eq!(state.node(n).zone, Zone::General);
+    }
+
+    #[test]
+    fn first_fit_baseline_walks_node_order() {
+        let mut state = state_2x4();
+        let mut rsch = Rsch::new(RschConfig::first_fit_baseline(), &state);
+        rsch.place(&mut state, &train(1, 1, 2)).unwrap();
+        assert_eq!(state.nodes_of(JobId(1)), vec![NodeId(0)]);
+        rsch.place(&mut state, &train(2, 1, 8)).unwrap();
+        // Node 0 has only 6 free → next node.
+        assert_eq!(state.nodes_of(JobId(2)), vec![NodeId(1)]);
+    }
+
+    #[test]
+    fn two_level_equals_flat_feasibility() {
+        // Whatever two-level does, it must not lose schedulability for a
+        // simple sequence that flat placement can schedule.
+        let mut s1 = state_2x4();
+        let mut s2 = state_2x4();
+        let mut two = Rsch::new(RschConfig::default(), &s1);
+        let flat = RschConfig {
+            two_level: false,
+            ..RschConfig::default()
+        };
+        let mut flat = Rsch::new(flat, &s2);
+        for id in 1..=8 {
+            assert!(two.place(&mut s1, &train(id, 1, 8)).is_ok());
+            assert!(flat.place(&mut s2, &train(id, 1, 8)).is_ok());
+        }
+        assert_eq!(s1.allocated_gpus(), 64);
+        assert_eq!(s2.allocated_gpus(), 64);
+    }
+
+    #[test]
+    fn hbd_job_lands_in_single_domain() {
+        let mut spec = ClusterSpec::homogeneous("h", 1, 2, 4);
+        spec.hbd_size = 2; // 2-node (16-GPU) HBDs.
+        let mut state = ClusterBuilder::build(&spec);
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        let mut job = train(1, 2, 8);
+        job.needs_hbd = true;
+        rsch.place(&mut state, &job).unwrap();
+        let nodes = state.nodes_of(JobId(1));
+        assert_eq!(nodes.len(), 2);
+        let h0 = state.node(nodes[0]).hbd.unwrap();
+        assert!(nodes.iter().all(|&n| state.node(n).hbd == Some(h0)));
+        // A 3-node HBD job can't fit any 2-node domain.
+        let mut big = train(2, 3, 8);
+        big.needs_hbd = true;
+        assert_eq!(rsch.place(&mut state, &big).unwrap_err(), PlaceFailure::Resources);
+    }
+
+    #[test]
+    fn device_level_allocation_records_nic() {
+        let mut state = state_2x4();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        rsch.place(&mut state, &train(1, 1, 2)).unwrap();
+        let p = &state.placements_of(JobId(1)).unwrap()[0];
+        assert_eq!(p.devices.len(), 2);
+        // Type-H: GPUs 0,1 → NIC 0.
+        assert_eq!(p.nic, 0);
+    }
+
+    #[test]
+    fn parallel_placement_matches_sequential_outcomes() {
+        // Same specs through the parallel path and the sequential path:
+        // every job that one can place, the other can too, and the
+        // resulting allocation totals agree.
+        let specs: Vec<JobSpec> = (1..=12)
+            .map(|id| train(id, 1, ((id % 4) + 1) as u32 * 2))
+            .collect();
+        let mut s1 = state_2x4();
+        let mut par = Rsch::new(RschConfig::default(), &s1);
+        let r1 = par.place_many_parallel(&mut s1, &specs, 4);
+        let mut s2 = state_2x4();
+        let mut seq = Rsch::new(RschConfig::default(), &s2);
+        let r2: Vec<_> = specs.iter().map(|sp| seq.place(&mut s2, sp)).collect();
+        assert_eq!(r1.iter().filter(|r| r.is_ok()).count(),
+                   r2.iter().filter(|r| r.is_ok()).count());
+        assert_eq!(s1.allocated_gpus(), s2.allocated_gpus());
+    }
+
+    #[test]
+    fn parallel_placement_handles_conflicts() {
+        // Jobs that all want the same scarce capacity: optimistic commits
+        // conflict and replan; no double allocation, gang invariants hold.
+        let mut state = state_2x4(); // 64 GPUs.
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        let specs: Vec<JobSpec> = (1..=10).map(|id| train(id, 1, 8)).collect();
+        let results = rsch.place_many_parallel(&mut state, &specs, 4);
+        let ok = results.iter().filter(|r| r.is_ok()).count();
+        assert_eq!(ok, 8, "exactly 8 whole-node jobs fit");
+        assert_eq!(state.allocated_gpus(), 64);
+        // Every placed job holds exactly its demand.
+        for (spec, r) in specs.iter().zip(&results) {
+            if r.is_ok() {
+                let gpus: u32 = state
+                    .placements_of(spec.id)
+                    .unwrap()
+                    .iter()
+                    .map(|p| p.devices.len() as u32)
+                    .sum();
+                assert_eq!(gpus, spec.total_gpus());
+            } else {
+                assert!(state.placements_of(spec.id).is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_single_thread_equals_multi() {
+        let specs: Vec<JobSpec> = (1..=9).map(|id| train(id, 1, 4)).collect();
+        let mut s1 = state_2x4();
+        let mut a = Rsch::new(RschConfig::default(), &s1);
+        let r1 = a.place_many_parallel(&mut s1, &specs, 1);
+        let mut s2 = state_2x4();
+        let mut b = Rsch::new(RschConfig::default(), &s2);
+        let r2 = b.place_many_parallel(&mut s2, &specs, 8);
+        assert_eq!(r1, r2);
+        assert_eq!(s1.allocated_gpus(), s2.allocated_gpus());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut state = state_2x4();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        rsch.place(&mut state, &train(1, 2, 4)).unwrap();
+        assert_eq!(rsch.stats.placements, 1);
+        assert_eq!(rsch.stats.pods_placed, 2);
+        assert!(rsch.stats.nodes_scored > 0);
+        assert!(rsch.stats.groups_scored > 0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Placement-plan builder: tracks in-flight device takings against a
+//! snapshot so gang placement is transactional — nothing touches
+//! `ClusterState` until the whole plan commits (§3.3.2).
+
+use std::collections::HashMap;
+
+use crate::cluster::ids::{GroupId, HbdId, JobId, NodeId, PodId};
+use crate::cluster::snapshot::Snapshot;
+use crate::cluster::state::{ClusterState, PodPlacement};
+
+use super::device_alloc::{select_devices, select_nic};
+use super::features::PlanView;
+
+/// Builds a multi-pod placement incrementally.
+pub struct PlanBuilder<'a> {
+    state: &'a ClusterState,
+    snapshot: &'a Snapshot,
+    job: JobId,
+    /// Free device indices per touched node (lazily seeded from state).
+    free_devs: HashMap<NodeId, Vec<u8>>,
+    pods_on_node: HashMap<NodeId, u32>,
+    pods_in_group: HashMap<GroupId, u32>,
+    /// GPUs taken from each group by this plan.
+    group_taken: HashMap<GroupId, u32>,
+    placed_nodes: Vec<NodeId>,
+    plan: Vec<PodPlacement>,
+    next_replica: u32,
+    /// HBD the job is pinned to once the first pod of an HBD job lands.
+    pub hbd_lock: Option<HbdId>,
+}
+
+impl<'a> PlanBuilder<'a> {
+    pub fn new(state: &'a ClusterState, snapshot: &'a Snapshot, job: JobId) -> PlanBuilder<'a> {
+        PlanBuilder {
+            state,
+            snapshot,
+            job,
+            free_devs: HashMap::new(),
+            pods_on_node: HashMap::new(),
+            pods_in_group: HashMap::new(),
+            group_taken: HashMap::new(),
+            placed_nodes: Vec::new(),
+            plan: Vec::new(),
+            next_replica: 0,
+            hbd_lock: None,
+        }
+    }
+
+    fn free_of(&mut self, node: NodeId) -> &mut Vec<u8> {
+        let state = self.state;
+        self.free_devs
+            .entry(node)
+            .or_insert_with(|| state.node(node).free_gpu_indices())
+    }
+
+    /// Place one pod of `gpus` devices on `node`. Returns false (no
+    /// mutation) if the node can't hold it under the current plan.
+    pub fn place_pod(&mut self, node: NodeId, gpus: u32) -> bool {
+        let gpu_type = self.state.gpu_type(self.state.node(node).gpu_type).clone();
+        let free = self.free_of(node).clone();
+        let Some(devices) = select_devices(&gpu_type, &free, gpus) else {
+            return false;
+        };
+        let nic = select_nic(&gpu_type, &devices);
+        self.free_of(node).retain(|d| !devices.contains(d));
+        *self.pods_on_node.entry(node).or_default() += 1;
+        let group = self.state.node(node).group;
+        *self.pods_in_group.entry(group).or_default() += 1;
+        *self.group_taken.entry(group).or_default() += gpus;
+        if !self.placed_nodes.contains(&node) {
+            self.placed_nodes.push(node);
+        }
+        if self.hbd_lock.is_none() {
+            self.hbd_lock = self.state.node(node).hbd;
+        }
+        self.plan.push(PodPlacement {
+            pod: PodId::new(self.job, self.next_replica),
+            node,
+            devices,
+            nic,
+        });
+        self.next_replica += 1;
+        true
+    }
+
+    pub fn pods_planned(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// Consume the builder, yielding the plan for `commit_placements`.
+    pub fn into_plan(self) -> Vec<PodPlacement> {
+        self.plan
+    }
+}
+
+impl PlanView for PlanBuilder<'_> {
+    fn free_gpus(&self, node: NodeId) -> u32 {
+        match self.free_devs.get(&node) {
+            Some(v) => v.len() as u32,
+            None => self.snapshot.nodes[node.index()].free,
+        }
+    }
+
+    fn pods_on_node(&self, node: NodeId) -> u32 {
+        self.pods_on_node.get(&node).copied().unwrap_or(0)
+    }
+
+    fn pods_in_group(&self, group: GroupId) -> u32 {
+        self.pods_in_group.get(&group).copied().unwrap_or(0)
+    }
+
+    fn group_free(&self, group: GroupId) -> u32 {
+        let base = self.snapshot.groups[group.index()].free;
+        base.saturating_sub(self.group_taken.get(&group).copied().unwrap_or(0))
+    }
+
+    fn largest_free_island(&self, node: NodeId) -> u32 {
+        match self.free_devs.get(&node) {
+            Some(free) => {
+                let gpu_type = self.state.gpu_type(self.state.node(node).gpu_type);
+                gpu_type
+                    .nvlink_islands
+                    .iter()
+                    .map(|isle| isle.iter().filter(|d| free.contains(d)).count() as u32)
+                    .max()
+                    .unwrap_or(0)
+            }
+            None => self.snapshot.nodes[node.index()].largest_free_island,
+        }
+    }
+
+    fn placed_nodes(&self) -> &[NodeId] {
+        &self.placed_nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::snapshot::SnapshotMode;
+
+    fn setup() -> (ClusterState, Snapshot) {
+        let state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 2, 2));
+        let mut snap = Snapshot::new(SnapshotMode::DeepCopy);
+        snap.refresh(&state);
+        (state, snap)
+    }
+
+    #[test]
+    fn plan_tracks_deltas_without_touching_state() {
+        let (state, snap) = setup();
+        let mut pb = PlanBuilder::new(&state, &snap, JobId(1));
+        assert!(pb.place_pod(NodeId(0), 4));
+        assert_eq!(pb.free_gpus(NodeId(0)), 4);
+        assert_eq!(pb.pods_on_node(NodeId(0)), 1);
+        assert_eq!(pb.group_free(GroupId(0)), 12);
+        assert_eq!(pb.placed_nodes(), &[NodeId(0)]);
+        // State untouched until commit.
+        assert_eq!(state.node(NodeId(0)).free_gpus(), 8);
+    }
+
+    #[test]
+    fn plan_rejects_overflow() {
+        let (state, snap) = setup();
+        let mut pb = PlanBuilder::new(&state, &snap, JobId(1));
+        assert!(pb.place_pod(NodeId(0), 8));
+        assert!(!pb.place_pod(NodeId(0), 1));
+        assert_eq!(pb.pods_planned(), 1);
+    }
+
+    #[test]
+    fn committed_plan_matches_builder() {
+        let (mut state, snap) = setup();
+        let mut pb = PlanBuilder::new(&state, &snap, JobId(1));
+        assert!(pb.place_pod(NodeId(1), 2));
+        assert!(pb.place_pod(NodeId(2), 8));
+        let plan = pb.into_plan();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].pod, PodId::new(JobId(1), 0));
+        assert_eq!(plan[1].pod, PodId::new(JobId(1), 1));
+        state.commit_placements(JobId(1), plan).unwrap();
+        assert_eq!(state.allocated_gpus(), 10);
+    }
+
+    #[test]
+    fn island_tracking_under_plan() {
+        let (state, snap) = setup();
+        let mut pb = PlanBuilder::new(&state, &snap, JobId(1));
+        assert_eq!(pb.largest_free_island(NodeId(0)), 8);
+        pb.place_pod(NodeId(0), 5);
+        assert_eq!(pb.largest_free_island(NodeId(0)), 3);
+    }
+}

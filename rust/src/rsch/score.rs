@@ -1,0 +1,377 @@
+//! Scoring: strategy weight vectors and the native (pure-Rust) scorer
+//! backend. The math mirrors `python/compile/kernels/ref.py` exactly, in
+//! f32, so the native and XLA backends are interchangeable and
+//! parity-testable.
+
+use crate::job::spec::PlacementStrategy;
+
+use super::features::{GROUP_F, JOB_D, NODE_F};
+
+/// Number of node score components / weights.
+pub const NUM_COMPONENTS: usize = 8;
+/// Number of group score components / weights.
+pub const GROUP_COMPONENTS: usize = 6;
+/// Infeasible-node sink value (finite so sorting stays total).
+pub const BIG: f32 = 1.0e9;
+const EPS: f32 = 1.0e-6;
+
+/// A scoring backend: native Rust or the AOT XLA artifact.
+pub trait ScoreBackend {
+    /// Score `n` nodes; `feat` is row-major `[n, NODE_F]`.
+    fn score_nodes(
+        &mut self,
+        feat: &[f32],
+        n: usize,
+        job: &[f32; JOB_D],
+        weights: &[f32; NUM_COMPONENTS],
+    ) -> Vec<f32>;
+
+    /// Score `g` groups; `gfeat` is row-major `[g, GROUP_F]`.
+    fn score_groups(
+        &mut self,
+        gfeat: &[f32],
+        g: usize,
+        job: &[f32; JOB_D],
+        weights: &[f32; GROUP_COMPONENTS],
+    ) -> Vec<f32>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Which phase of a (possibly two-phase) strategy is scoring: E-Spread
+/// first targets the dedicated zone, then falls back to the general pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Primary,
+    Fallback,
+}
+
+/// Node weight vector for a strategy (component order: fill, spread,
+/// group_pack, group_empty, topo, colocate, zone, nvlink — see ref.py).
+pub fn node_weights(
+    strategy: PlacementStrategy,
+    phase: Phase,
+    large_job: bool,
+) -> [f32; NUM_COMPONENTS] {
+    match (strategy, phase) {
+        // First fit: all-zero weights; argmax with index tiebreak = lowest
+        // feasible node id.
+        (PlacementStrategy::NativeFirstFit, _) => [0.0; NUM_COMPONENTS],
+        (PlacementStrategy::Binpack, _) => {
+            [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        }
+        (PlacementStrategy::EBinpack, _) => {
+            if large_job {
+                // Large gangs prefer empty groups (reserve busy groups for
+                // small jobs) and tight topology.
+                [1.0, 0.0, 0.0, 0.6, 0.8, 0.4, -0.5, 0.2]
+            } else {
+                // Small jobs consolidate: busy groups, co-located pods.
+                [1.0, 0.0, 0.6, 0.0, 0.5, 0.8, -0.3, 0.2]
+            }
+        }
+        (PlacementStrategy::Spread, _) => {
+            [0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.1]
+        }
+        // E-Spread primary: spread *inside* the dedicated zone.
+        (PlacementStrategy::ESpread, Phase::Primary) => {
+            [0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 2.0, 0.1]
+        }
+        // E-Spread fallback: consolidate in the general pool (E-Binpack
+        // weights, zone-averse).
+        (PlacementStrategy::ESpread, Phase::Fallback) => {
+            [1.0, 0.0, 0.6, 0.0, 0.5, 0.8, -0.5, 0.2]
+        }
+    }
+}
+
+/// Group weight vector (component order: pack, empty, colocate, zone,
+/// health, whole_fit).
+pub fn group_weights(
+    strategy: PlacementStrategy,
+    phase: Phase,
+    large_job: bool,
+) -> [f32; GROUP_COMPONENTS] {
+    match (strategy, phase) {
+        (PlacementStrategy::NativeFirstFit, _) => [0.0; GROUP_COMPONENTS],
+        (PlacementStrategy::Binpack, _) => [1.0, 0.0, 0.0, 0.0, 0.1, 0.0],
+        (PlacementStrategy::EBinpack, _) => {
+            if large_job {
+                // colocate dominates: once a gang starts filling a group it
+                // must stay there (each whole-node pod costs ~0.25·0.6 of
+                // `empty`; one pod adds 1/64·16 = 0.25 of colocate).
+                [0.0, 0.6, 16.0, -0.5, 0.3, 1.0]
+            } else {
+                [1.0, 0.0, 0.8, -0.5, 0.3, 0.0]
+            }
+        }
+        (PlacementStrategy::Spread, _) => [0.0, 0.3, 0.0, 0.0, 0.3, 0.0],
+        (PlacementStrategy::ESpread, Phase::Primary) => {
+            [0.0, 0.3, 0.3, 2.0, 0.2, 0.0]
+        }
+        (PlacementStrategy::ESpread, Phase::Fallback) => {
+            [1.0, 0.0, 0.8, -0.5, 0.3, 0.0]
+        }
+    }
+}
+
+/// Is the job "large" for E-Binpack's group policy? Large jobs get whole
+/// (empty) LeafGroups; small jobs consolidate into busy ones (§3.3.3).
+pub fn is_large_job(total_gpus: u32, group_total_gpus: u32) -> bool {
+    total_gpus * 4 >= group_total_gpus // ≥ 25 % of a LeafGroup.
+}
+
+/// The native scorer: straight-line Rust implementing the ref.py contract.
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+impl ScoreBackend for NativeBackend {
+    fn score_nodes(
+        &mut self,
+        feat: &[f32],
+        n: usize,
+        job: &[f32; JOB_D],
+        w: &[f32; NUM_COMPONENTS],
+    ) -> Vec<f32> {
+        debug_assert_eq!(feat.len(), n * NODE_F);
+        let gpus_per_pod = job[0];
+        let mut out = Vec::with_capacity(n);
+        for row in feat.chunks_exact(NODE_F) {
+            let free = row[0];
+            let total = row[1].max(EPS);
+            let alloc = row[2];
+            let healthy = row[3];
+            let group_free = row[4];
+            let group_total = row[5].max(EPS);
+            let pods_on_node = row[6];
+            let topo_tier = row[8];
+            let in_zone = row[9];
+            let clique = row[11];
+
+            let fill_after = ((alloc + gpus_per_pod) / total).clamp(0.0, 1.0);
+            let spread = 1.0 - (alloc / total).clamp(0.0, 1.0);
+            let group_pack = 1.0 - (group_free / group_total).clamp(0.0, 1.0);
+            let group_empty = (group_free / group_total).clamp(0.0, 1.0);
+            let topo = 1.0 - topo_tier.clamp(0.0, 3.0) / 3.0;
+            let colocate = pods_on_node.clamp(0.0, 8.0) / 8.0;
+            let nvlink = if clique >= gpus_per_pod { 1.0 } else { 0.0 };
+
+            let raw = w[0] * fill_after
+                + w[1] * spread
+                + w[2] * group_pack
+                + w[3] * group_empty
+                + w[4] * topo
+                + w[5] * colocate
+                + w[6] * in_zone
+                + w[7] * nvlink;
+
+            let mask = if healthy > 0.5 && free >= gpus_per_pod {
+                1.0
+            } else {
+                0.0
+            };
+            out.push(mask * raw + (mask - 1.0) * BIG);
+        }
+        out
+    }
+
+    fn score_groups(
+        &mut self,
+        gfeat: &[f32],
+        g: usize,
+        job: &[f32; JOB_D],
+        w: &[f32; GROUP_COMPONENTS],
+    ) -> Vec<f32> {
+        debug_assert_eq!(gfeat.len(), g * GROUP_F);
+        let mut out = Vec::with_capacity(g);
+        for row in gfeat.chunks_exact(GROUP_F) {
+            let free = row[0];
+            let total = row[1].max(EPS);
+            let pods_in_group = row[2];
+            let zone_frac = row[3];
+            let healthy_frac = row[4];
+            let whole_free = row[5];
+
+            let pack = 1.0 - (free / total).clamp(0.0, 1.0);
+            let empty = (free / total).clamp(0.0, 1.0);
+            let colocate = pods_in_group.clamp(0.0, 64.0) / 64.0;
+            let need_nodes = (job[1] / 8.0).ceil();
+            let whole_fit = (whole_free / need_nodes.max(1.0)).clamp(0.0, 1.0);
+
+            let raw = w[0] * pack
+                + w[1] * empty
+                + w[2] * colocate
+                + w[3] * zone_frac
+                + w[4] * healthy_frac
+                + w[5] * whole_fit;
+
+            let mask = if free >= job[0] && healthy_frac > 0.0 {
+                1.0
+            } else {
+                0.0
+            };
+            out.push(mask * raw + (mask - 1.0) * BIG);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Argmax with lowest-index tiebreak (matches the XLA stable argsort).
+pub fn argmax(scores: &[f32]) -> Option<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &s) in scores.iter().enumerate() {
+        match best {
+            None => best = Some((i, s)),
+            Some((_, bs)) if s > bs => best = Some((i, s)),
+            _ => {}
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Is a score the infeasible sink?
+#[inline]
+pub fn feasible(score: f32) -> bool {
+    score > -BIG / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(
+        free: f32,
+        total: f32,
+        alloc: f32,
+        healthy: f32,
+        group_free: f32,
+        group_total: f32,
+    ) -> [f32; NODE_F] {
+        let mut r = [0.0; NODE_F];
+        r[0] = free;
+        r[1] = total;
+        r[2] = alloc;
+        r[3] = healthy;
+        r[4] = group_free;
+        r[5] = group_total;
+        r[8] = 3.0;
+        r[11] = free;
+        r
+    }
+
+    #[test]
+    fn binpack_prefers_fuller_node() {
+        let mut b = NativeBackend;
+        let feat: Vec<f32> = [
+            row(8.0, 8.0, 0.0, 1.0, 64.0, 64.0), // Empty node.
+            row(4.0, 8.0, 4.0, 1.0, 60.0, 64.0), // Half-full node.
+        ]
+        .concat();
+        let job = [2.0, 2.0, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let w = node_weights(PlacementStrategy::Binpack, Phase::Primary, false);
+        let s = b.score_nodes(&feat, 2, &job, &w);
+        assert!(s[1] > s[0], "binpack must prefer the fuller node: {s:?}");
+    }
+
+    #[test]
+    fn spread_prefers_emptier_node() {
+        let mut b = NativeBackend;
+        let feat: Vec<f32> = [
+            row(8.0, 8.0, 0.0, 1.0, 64.0, 64.0),
+            row(4.0, 8.0, 4.0, 1.0, 60.0, 64.0),
+        ]
+        .concat();
+        let job = [1.0, 4.0, 0.0, 1.0, 0.0, 3.0, 0.0, 0.0];
+        let w = node_weights(PlacementStrategy::Spread, Phase::Primary, false);
+        let s = b.score_nodes(&feat, 2, &job, &w);
+        assert!(s[0] > s[1], "spread must prefer the emptier node: {s:?}");
+    }
+
+    #[test]
+    fn infeasible_sinks_below_feasible() {
+        let mut b = NativeBackend;
+        let feat: Vec<f32> = [
+            row(1.0, 8.0, 7.0, 1.0, 64.0, 64.0), // Too few free.
+            row(8.0, 8.0, 0.0, 0.0, 64.0, 64.0), // Unhealthy.
+            row(8.0, 8.0, 0.0, 1.0, 64.0, 64.0), // Feasible.
+        ]
+        .concat();
+        let job = [4.0, 4.0, 1.0, 0.0, 0.0, 2.0, 0.0, 0.0];
+        let w = node_weights(PlacementStrategy::EBinpack, Phase::Primary, false);
+        let s = b.score_nodes(&feat, 3, &job, &w);
+        assert!(!feasible(s[0]) && !feasible(s[1]) && feasible(s[2]));
+        assert_eq!(argmax(&s), Some(2));
+    }
+
+    #[test]
+    fn first_fit_ties_break_by_index() {
+        let mut b = NativeBackend;
+        let feat: Vec<f32> = [
+            row(8.0, 8.0, 0.0, 1.0, 64.0, 64.0),
+            row(8.0, 8.0, 0.0, 1.0, 64.0, 64.0),
+        ]
+        .concat();
+        let job = [1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let w = node_weights(PlacementStrategy::NativeFirstFit, Phase::Primary, false);
+        let s = b.score_nodes(&feat, 2, &job, &w);
+        assert_eq!(argmax(&s), Some(0));
+    }
+
+    #[test]
+    fn espread_primary_pulls_into_zone() {
+        let mut b = NativeBackend;
+        let mut in_zone = row(8.0, 8.0, 0.0, 1.0, 64.0, 64.0);
+        in_zone[9] = 1.0;
+        let out_zone = row(8.0, 8.0, 0.0, 1.0, 64.0, 64.0);
+        let feat: Vec<f32> = [out_zone, in_zone].concat();
+        let job = [1.0, 2.0, 0.0, 1.0, 0.0, 4.0, 0.0, 0.0];
+        let w = node_weights(PlacementStrategy::ESpread, Phase::Primary, false);
+        let s = b.score_nodes(&feat, 2, &job, &w);
+        assert!(s[1] > s[0]);
+        // Fallback phase is zone-averse.
+        let w = node_weights(PlacementStrategy::ESpread, Phase::Fallback, false);
+        let s = b.score_nodes(&feat, 2, &job, &w);
+        assert!(s[0] > s[1]);
+    }
+
+    #[test]
+    fn large_job_group_weights_prefer_empty_groups() {
+        let mut b = NativeBackend;
+        // Group rows: free,total,pods,zone,health,whole_free.
+        let gfeat: Vec<f32> = [
+            [100.0, 256.0, 0.0, 0.0, 1.0, 4.0], // Busy group.
+            [256.0, 256.0, 0.0, 0.0, 1.0, 32.0], // Empty group.
+        ]
+        .concat();
+        let job = [8.0, 512.0, 1.0, 0.0, 1.0, 2.0, 0.0, 0.0];
+        let w = group_weights(PlacementStrategy::EBinpack, Phase::Primary, true);
+        let s = b.score_groups(&gfeat, 2, &job, &w);
+        assert!(s[1] > s[0], "{s:?}");
+        // Small jobs go the other way.
+        let job_small = [2.0, 2.0, 1.0, 0.0, 0.0, 2.0, 0.0, 0.0];
+        let w = group_weights(PlacementStrategy::EBinpack, Phase::Primary, false);
+        let s = b.score_groups(&gfeat, 2, &job_small, &w);
+        assert!(s[0] > s[1], "{s:?}");
+    }
+
+    #[test]
+    fn group_mask_blocks_empty_capacity() {
+        let mut b = NativeBackend;
+        let gfeat: Vec<f32> = [[0.0, 256.0, 0.0, 0.0, 1.0, 0.0]].concat();
+        let job = [8.0, 8.0, 1.0, 0.0, 1.0, 2.0, 0.0, 0.0];
+        let w = group_weights(PlacementStrategy::EBinpack, Phase::Primary, false);
+        let s = b.score_groups(&gfeat, 1, &job, &w);
+        assert!(!feasible(s[0]));
+    }
+
+    #[test]
+    fn is_large_job_threshold() {
+        assert!(is_large_job(64, 256));
+        assert!(!is_large_job(63, 256));
+        assert!(is_large_job(2048, 256));
+    }
+}

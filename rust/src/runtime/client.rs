@@ -1,0 +1,118 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! PJRT client. Python never runs here — the artifacts in `artifacts/`
+//! were lowered once at build time by `python/compile/aot.py`.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids the bundled xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus a cache of compiled executables keyed by file name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load + compile an HLO-text artifact (cached by name).
+    pub fn load(&mut self, file: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(file) {
+            let path = self.artifacts_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.executables.insert(file.to_string(), exe);
+        }
+        Ok(&self.executables[file])
+    }
+
+    /// Execute a loaded artifact with literal inputs; returns the flattened
+    /// tuple outputs (aot.py lowers with `return_tuple=True`).
+    pub fn run(&mut self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(file)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {file}"))?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        result.to_tuple().context("untupling result")
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.executables.len()
+    }
+}
+
+/// Build a rank-2 f32 literal from row-major data.
+pub fn literal_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .context("reshaping literal")
+}
+
+/// Build a rank-1 f32 literal.
+pub fn literal_f32_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn cpu_runtime_comes_up() {
+        let rt = Runtime::cpu("artifacts").unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        assert_eq!(rt.loaded_count(), 0);
+    }
+
+    #[test]
+    fn loads_and_caches_artifact() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::cpu("artifacts").unwrap();
+        rt.load("node_scorer_256.hlo.txt").unwrap();
+        rt.load("node_scorer_256.hlo.txt").unwrap();
+        assert_eq!(rt.loaded_count(), 1);
+    }
+
+    #[test]
+    fn literal_helpers_shape_check() {
+        assert!(literal_f32_2d(&[1.0, 2.0, 3.0], 2, 2).is_err());
+        assert!(literal_f32_2d(&[1.0, 2.0, 3.0, 4.0], 2, 2).is_ok());
+    }
+}

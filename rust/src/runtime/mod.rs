@@ -1,0 +1,9 @@
+//! Runtime bridge: loads the AOT HLO-text artifacts through the PJRT C API
+//! (`xla` crate) and serves them to RSCH as a [`ScoreBackend`]. Python is
+//! build-time only; this module is the entire run-time footprint of L1/L2.
+
+pub mod client;
+pub mod scorer;
+
+pub use client::Runtime;
+pub use scorer::{Manifest, XlaBackend};

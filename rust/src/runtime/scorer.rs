@@ -1,0 +1,268 @@
+//! The XLA scorer backend: serves RSCH's scoring hot path from the
+//! AOT-compiled artifacts (L1 Pallas kernel → L2 JAX pipeline → HLO text →
+//! PJRT executable). Interchangeable with the native Rust scorer; parity
+//! between the two is tested in `rust/tests/xla_parity.rs`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::rsch::features::{GROUP_F, JOB_D, NODE_F};
+use crate::rsch::score::{ScoreBackend, BIG, GROUP_COMPONENTS, NUM_COMPONENTS};
+use crate::util::json::Json;
+
+use super::client::{literal_f32_1d, literal_f32_2d, Runtime};
+
+/// Artifact inventory parsed from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub node_sizes: Vec<(usize, String)>, // Ascending (n, file).
+    pub group_sizes: Vec<(usize, String)>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &std::path::Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        if v.get("node_f").and_then(Json::as_u64) != Some(NODE_F as u64)
+            || v.get("job_d").and_then(Json::as_u64) != Some(JOB_D as u64)
+            || v.get("num_components").and_then(Json::as_u64) != Some(NUM_COMPONENTS as u64)
+        {
+            bail!("manifest layout mismatch — rebuild artifacts (make artifacts)");
+        }
+        let mut node_sizes = Vec::new();
+        for e in v
+            .get("node_scorers")
+            .and_then(Json::as_arr)
+            .context("manifest.node_scorers")?
+        {
+            node_sizes.push((
+                e.get("n").and_then(Json::as_u64).context("n")? as usize,
+                e.get("file").and_then(Json::as_str).context("file")?.to_string(),
+            ));
+        }
+        let mut group_sizes = Vec::new();
+        for e in v
+            .get("group_scorers")
+            .and_then(Json::as_arr)
+            .context("manifest.group_scorers")?
+        {
+            group_sizes.push((
+                e.get("g").and_then(Json::as_u64).context("g")? as usize,
+                e.get("file").and_then(Json::as_str).context("file")?.to_string(),
+            ));
+        }
+        node_sizes.sort_by_key(|&(n, _)| n);
+        group_sizes.sort_by_key(|&(g, _)| g);
+        anyhow::ensure!(!node_sizes.is_empty(), "no node scorers in manifest");
+        anyhow::ensure!(!group_sizes.is_empty(), "no group scorers in manifest");
+        Ok(Manifest {
+            node_sizes,
+            group_sizes,
+        })
+    }
+
+    /// Smallest artifact with capacity ≥ n, else the largest (chunked).
+    fn pick(sizes: &[(usize, String)], n: usize) -> (usize, &str) {
+        for (cap, file) in sizes {
+            if *cap >= n {
+                return (*cap, file);
+            }
+        }
+        let (cap, file) = sizes.last().unwrap();
+        (*cap, file)
+    }
+}
+
+/// Scorer backend executing the AOT artifacts through PJRT.
+pub struct XlaBackend {
+    runtime: Runtime,
+    manifest: Manifest,
+    /// Executed-launch counter (per-cycle cost signal for §Perf).
+    pub launches: u64,
+}
+
+impl XlaBackend {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<XlaBackend> {
+        let dir = artifacts_dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let runtime = Runtime::cpu(dir)?;
+        Ok(XlaBackend {
+            runtime,
+            manifest,
+            launches: 0,
+        })
+    }
+
+    /// Warm the executable cache (compile everything up front so the first
+    /// scheduling cycle doesn't pay JIT latency).
+    pub fn warmup(&mut self) -> Result<()> {
+        let files: Vec<String> = self
+            .manifest
+            .node_sizes
+            .iter()
+            .chain(self.manifest.group_sizes.iter())
+            .map(|(_, f)| f.clone())
+            .collect();
+        for f in files {
+            self.runtime.load(&f)?;
+        }
+        Ok(())
+    }
+
+    fn run_node_chunk(
+        &mut self,
+        feat: &[f32],
+        n: usize,
+        job: &[f32; JOB_D],
+        weights: &[f32; NUM_COMPONENTS],
+    ) -> Result<Vec<f32>> {
+        let (cap, file) = Manifest::pick(&self.manifest.node_sizes, n);
+        let file = file.to_string();
+        debug_assert!(n <= cap);
+        // Pad with zero rows: healthy=0 ⇒ masked to -BIG by the kernel.
+        let mut padded = Vec::with_capacity(cap * NODE_F);
+        padded.extend_from_slice(feat);
+        padded.resize(cap * NODE_F, 0.0);
+        let lit_feat = literal_f32_2d(&padded, cap, NODE_F)?;
+        let lit_job = literal_f32_1d(job);
+        let lit_w = literal_f32_1d(weights);
+        let outputs = self.runtime.run(&file, &[lit_feat, lit_job, lit_w])?;
+        self.launches += 1;
+        // score_and_rank returns (scores, order); we consume scores here.
+        anyhow::ensure!(outputs.len() == 2, "expected (scores, order)");
+        let scores: Vec<f32> = outputs[0].to_vec().context("scores to_vec")?;
+        Ok(scores[..n].to_vec())
+    }
+
+    fn run_group_chunk(
+        &mut self,
+        gfeat: &[f32],
+        g: usize,
+        job: &[f32; JOB_D],
+        weights: &[f32; GROUP_COMPONENTS],
+    ) -> Result<Vec<f32>> {
+        let (cap, file) = Manifest::pick(&self.manifest.group_sizes, g);
+        let file = file.to_string();
+        let mut padded = Vec::with_capacity(cap * GROUP_F);
+        padded.extend_from_slice(gfeat);
+        padded.resize(cap * GROUP_F, 0.0);
+        let lit_feat = literal_f32_2d(&padded, cap, GROUP_F)?;
+        let lit_job = literal_f32_1d(job);
+        let lit_w = literal_f32_1d(weights);
+        let outputs = self.runtime.run(&file, &[lit_feat, lit_job, lit_w])?;
+        self.launches += 1;
+        anyhow::ensure!(outputs.len() == 1, "expected (scores,)");
+        let scores: Vec<f32> = outputs[0].to_vec().context("group scores to_vec")?;
+        Ok(scores[..g].to_vec())
+    }
+}
+
+impl ScoreBackend for XlaBackend {
+    fn score_nodes(
+        &mut self,
+        feat: &[f32],
+        n: usize,
+        job: &[f32; JOB_D],
+        weights: &[f32; NUM_COMPONENTS],
+    ) -> Vec<f32> {
+        let max_cap = self.manifest.node_sizes.last().unwrap().0;
+        let mut out = Vec::with_capacity(n);
+        let mut offset = 0;
+        while offset < n {
+            let chunk = (n - offset).min(max_cap);
+            let slice = &feat[offset * NODE_F..(offset + chunk) * NODE_F];
+            match self.run_node_chunk(slice, chunk, job, weights) {
+                Ok(scores) => out.extend_from_slice(&scores),
+                Err(e) => {
+                    // A scoring failure must not wedge the scheduler: treat
+                    // the chunk as infeasible and log.
+                    log::error!("xla node scoring failed: {e:#}");
+                    out.extend(std::iter::repeat(-BIG).take(chunk));
+                }
+            }
+            offset += chunk;
+        }
+        out
+    }
+
+    fn score_groups(
+        &mut self,
+        gfeat: &[f32],
+        g: usize,
+        job: &[f32; JOB_D],
+        weights: &[f32; GROUP_COMPONENTS],
+    ) -> Vec<f32> {
+        let max_cap = self.manifest.group_sizes.last().unwrap().0;
+        let mut out = Vec::with_capacity(g);
+        let mut offset = 0;
+        while offset < g {
+            let chunk = (g - offset).min(max_cap);
+            let slice = &gfeat[offset * GROUP_F..(offset + chunk) * GROUP_F];
+            match self.run_group_chunk(slice, chunk, job, weights) {
+                Ok(scores) => out.extend_from_slice(&scores),
+                Err(e) => {
+                    log::error!("xla group scoring failed: {e:#}");
+                    out.extend(std::iter::repeat(-BIG).take(chunk));
+                }
+            }
+            offset += chunk;
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let p = std::path::PathBuf::from("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn manifest_parses_and_orders() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.node_sizes.windows(2).all(|w| w[0].0 < w[1].0));
+        assert_eq!(Manifest::pick(&m.node_sizes, 1).0, m.node_sizes[0].0);
+        assert_eq!(
+            Manifest::pick(&m.node_sizes, 100_000).0,
+            m.node_sizes.last().unwrap().0
+        );
+    }
+
+    #[test]
+    fn xla_backend_scores_nodes() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut b = XlaBackend::new(&dir).unwrap();
+        // Two nodes: one feasible-and-empty, one unhealthy.
+        let mut feat = vec![0.0f32; 2 * NODE_F];
+        feat[0] = 8.0; // free
+        feat[1] = 8.0; // total
+        feat[3] = 1.0; // healthy
+        feat[4] = 64.0;
+        feat[5] = 64.0;
+        feat[8] = 3.0;
+        feat[11] = 8.0;
+        feat[NODE_F + 1] = 8.0; // total (unhealthy row)
+        let job = [2.0, 2.0, 1.0, 0.0, 0.0, 2.0, 0.0, 0.0];
+        let w = [1.0, 0.0, 0.6, 0.0, 0.5, 0.8, -0.3, 0.2];
+        let scores = b.score_nodes(&feat, 2, &job, &w);
+        assert_eq!(scores.len(), 2);
+        assert!(scores[0] > -BIG / 2.0);
+        assert!(scores[1] <= -BIG / 2.0);
+        assert_eq!(b.launches, 1);
+    }
+}

@@ -1,0 +1,7 @@
+//! Discrete-event simulation: the engine and the experiment runner.
+
+pub mod engine;
+pub mod runner;
+
+pub use engine::{Engine, Event, SimTime};
+pub use runner::{run, run_with_events, SimConfig, SimOutcome};

@@ -1,0 +1,384 @@
+//! The simulation runner: wires workload → QSCH → RSCH → cluster → metrics
+//! over the discrete-event engine. This is the §5 experiment driver.
+
+use crate::cluster::gpu::Health;
+use crate::cluster::state::ClusterState;
+use crate::job::spec::JobSpec;
+use crate::job::state::Phase;
+use crate::job::store::JobStore;
+use crate::metrics::Metrics;
+use crate::qsch::Qsch;
+use crate::rsch::Rsch;
+
+use super::engine::{Engine, Event, SimTime};
+
+/// Runner tunables.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Scheduling cycle period.
+    pub cycle_ms: u64,
+    /// Metrics sampling period.
+    pub sample_ms: u64,
+    /// Platform overhead from resource binding to Running (image pull,
+    /// container start — the §4.2 window that still accrues SOR).
+    pub platform_overhead_ms: u64,
+    /// Hard stop (0 = run to completion).
+    pub horizon_ms: u64,
+    /// Abort after this many consecutive no-progress cycles with no other
+    /// events pending (scheduling deadlock detection).
+    pub stall_cycles: u64,
+    /// Periodic fragmentation reorganization (§3.3.3); 0 = disabled.
+    pub defrag_interval_ms: u64,
+    /// Service interruption charged to each migrated job.
+    pub migration_penalty_ms: u64,
+    /// Defrag planner tunables.
+    pub defrag: crate::rsch::defrag::DefragConfig,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            cycle_ms: 5_000,
+            sample_ms: 60_000,
+            platform_overhead_ms: 30_000,
+            horizon_ms: 0,
+            stall_cycles: 10_000,
+            defrag_interval_ms: 0,
+            migration_penalty_ms: 30_000,
+            defrag: crate::rsch::defrag::DefragConfig::default(),
+        }
+    }
+}
+
+/// Everything a finished simulation reports.
+pub struct SimOutcome {
+    pub metrics: Metrics,
+    pub qsch_stats: crate::qsch::QschStats,
+    pub rsch_stats: crate::rsch::RschStats,
+    pub snapshot_stats: crate::cluster::snapshot::SnapshotStats,
+    pub end_ms: SimTime,
+    pub events_processed: u64,
+    pub unfinished_jobs: usize,
+    pub store: JobStore,
+    /// Total defrag migrations executed.
+    pub migrations: u64,
+}
+
+/// Run a workload to completion (or horizon) against a scheduler stack.
+pub fn run(
+    state: &mut ClusterState,
+    qsch: &mut Qsch,
+    rsch: &mut Rsch,
+    jobs: Vec<JobSpec>,
+    cfg: &SimConfig,
+) -> SimOutcome {
+    run_with_events(state, qsch, rsch, jobs, Vec::new(), cfg)
+}
+
+/// Like [`run`], with extra pre-scheduled events (failure injection etc.).
+pub fn run_with_events(
+    state: &mut ClusterState,
+    qsch: &mut Qsch,
+    rsch: &mut Rsch,
+    jobs: Vec<JobSpec>,
+    extra_events: Vec<(SimTime, Event)>,
+    cfg: &SimConfig,
+) -> SimOutcome {
+    let mut engine = Engine::new();
+    for (t, e) in extra_events {
+        engine.schedule(t, e);
+    }
+    let mut store = JobStore::new();
+    let mut metrics = Metrics::new(state, 0);
+
+    let total_jobs = jobs.len() as u64;
+    for j in jobs {
+        engine.schedule(j.submit_ms, Event::Arrival(Box::new(j)));
+    }
+    engine.schedule(0, Event::Cycle);
+    engine.schedule(0, Event::Sample);
+    if cfg.defrag_interval_ms > 0 {
+        engine.schedule(cfg.defrag_interval_ms, Event::Defrag);
+    }
+    let mut migrations_total: u64 = 0;
+
+    let mut finished: u64 = 0;
+    let mut stall: u64 = 0;
+    let mut deadlocked = false;
+
+    while let Some((now, event)) = engine.next() {
+        if cfg.horizon_ms > 0 && now > cfg.horizon_ms {
+            break;
+        }
+        match event {
+            Event::Arrival(spec) => {
+                metrics.on_submit();
+                qsch.submit(&mut store, *spec);
+            }
+            Event::Cycle => {
+                let report = qsch.cycle(now, &mut store, state, rsch);
+                let progressed = !report.scheduled.is_empty() || !report.preempted.is_empty();
+                for &job in &report.scheduled {
+                    let j = store.expect(job);
+                    metrics.on_scheduled(now, state, j);
+                    engine.schedule(
+                        now + cfg.platform_overhead_ms,
+                        Event::RunningStart {
+                            job,
+                            epoch: j.epoch,
+                        },
+                    );
+                }
+                if progressed {
+                    metrics.observe_cluster(now, state);
+                    stall = 0;
+                } else {
+                    stall += 1;
+                }
+                // Keep cycling while any job is still in flight.
+                let live = finished < total_jobs;
+                deadlocked = stall >= cfg.stall_cycles && !engine.has_substantive_events();
+                if live && !deadlocked {
+                    engine.schedule_in(cfg.cycle_ms, Event::Cycle);
+                } else if deadlocked {
+                    log::warn!(
+                        "scheduling stalled at t={now}ms with {} unfinished jobs",
+                        total_jobs - finished
+                    );
+                }
+            }
+            Event::RunningStart { job, epoch } => {
+                let j = store.expect_mut(job);
+                if j.phase == Phase::Scheduled && j.epoch == epoch {
+                    j.mark_running(now);
+                    let remaining = j.remaining_ms;
+                    engine.schedule(now + remaining, Event::Finish { job, epoch });
+                }
+            }
+            Event::Finish { job, epoch } => {
+                let j = store.expect(job);
+                if j.phase == Phase::Running && j.epoch == epoch {
+                    qsch.finish_job(&mut store, state, job, now);
+                    metrics.on_finished();
+                    metrics.observe_cluster(now, state);
+                    finished += 1;
+                }
+            }
+            Event::Sample => {
+                metrics.observe_cluster(now, state);
+                if finished < total_jobs && !deadlocked {
+                    engine.schedule_in(cfg.sample_ms, Event::Sample);
+                }
+            }
+            Event::Defrag => {
+                let plan = crate::rsch::defrag::plan_round(state, &store, &cfg.defrag);
+                // Only migrate Running jobs (Scheduled ones are mid-start).
+                let plan: Vec<_> = plan
+                    .into_iter()
+                    .filter(|m| {
+                        store
+                            .get(m.job)
+                            .map(|j| j.phase == Phase::Running)
+                            .unwrap_or(false)
+                    })
+                    .collect();
+                let (report, moved) = crate::rsch::defrag::execute(state, &plan);
+                if report.migrations > 0 {
+                    migrations_total += report.migrations as u64;
+                    // Charge the interruption and restart the finish clock
+                    // under a fresh epoch — only for jobs that truly moved.
+                    let mut seen = std::collections::HashSet::new();
+                    for job in moved {
+                        if !seen.insert(job) {
+                            continue;
+                        }
+                        let j = store.expect_mut(job);
+                        j.mark_migrated(now, cfg.migration_penalty_ms);
+                        let epoch = j.epoch;
+                        let remaining = j.remaining_ms;
+                        engine.schedule(now + remaining, Event::Finish { job, epoch });
+                    }
+                    metrics.observe_cluster(now, state);
+                }
+                if finished < total_jobs && !deadlocked {
+                    engine.schedule_in(cfg.defrag_interval_ms, Event::Defrag);
+                }
+            }
+            Event::NodeHealth { node, healthy } => {
+                // Evict any resident jobs first (they lose their devices),
+                // then flip health — the §3.2.4 requeue path.
+                if !healthy {
+                    let victims: Vec<_> = state
+                        .node(node)
+                        .resident_pods()
+                        .iter()
+                        .map(|p| p.job)
+                        .collect();
+                    let mut victims = victims;
+                    victims.sort_unstable();
+                    victims.dedup();
+                    for v in victims {
+                        qsch.evict_and_requeue(&mut store, state, v, now);
+                    }
+                }
+                state.set_node_health(
+                    node,
+                    if healthy { Health::Healthy } else { Health::Faulty },
+                );
+                metrics.observe_cluster(now, state);
+            }
+        }
+    }
+
+    let end_ms = engine.now();
+    metrics.observe_cluster(end_ms, state);
+    let unfinished = store.iter().filter(|j| !j.is_terminal()).count();
+    SimOutcome {
+        metrics,
+        qsch_stats: qsch.stats,
+        rsch_stats: rsch.stats,
+        snapshot_stats: rsch.snapshot_stats(),
+        end_ms,
+        events_processed: engine.processed(),
+        unfinished_jobs: unfinished,
+        store,
+        migrations: migrations_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
+    use crate::cluster::tenant::{QuotaLedger, QuotaMode};
+    use crate::job::spec::{JobKind, JobSpec};
+    use crate::qsch::policy::QschConfig;
+    use crate::rsch::RschConfig;
+
+    const G: GpuTypeId = GpuTypeId(0);
+
+    fn stack(nodes: u32) -> (ClusterState, Qsch, Rsch) {
+        let state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, nodes));
+        let mut ledger = QuotaLedger::new(2, 1, QuotaMode::Shared);
+        ledger.set_limit(TenantId(0), G, nodes * 8);
+        ledger.set_limit(TenantId(1), G, nodes * 8);
+        let qsch = Qsch::new(QschConfig::default(), ledger);
+        let rsch = Rsch::new(RschConfig::default(), &state);
+        (state, qsch, rsch)
+    }
+
+    fn train(id: u64, replicas: u32, gpp: u32, submit: u64, dur: u64) -> JobSpec {
+        JobSpec::homogeneous(JobId(id), TenantId(0), JobKind::Training, G, replicas, gpp)
+            .with_times(submit, dur)
+    }
+
+    #[test]
+    fn single_job_runs_to_completion() {
+        let (mut state, mut qsch, mut rsch) = stack(2);
+        let out = run(
+            &mut state,
+            &mut qsch,
+            &mut rsch,
+            vec![train(1, 2, 8, 0, 60_000)],
+            &SimConfig::default(),
+        );
+        assert_eq!(out.unfinished_jobs, 0);
+        assert_eq!(out.metrics.jobs_finished, 1);
+        assert_eq!(state.allocated_gpus(), 0);
+        // Job ran 60 s plus 30 s platform overhead from t=0 scheduling.
+        assert!(out.end_ms >= 90_000);
+        assert!(out.metrics.sor_final() > 0.0);
+    }
+
+    #[test]
+    fn contention_serializes_jobs() {
+        let (mut state, mut qsch, mut rsch) = stack(1); // 8 GPUs only.
+        let jobs = vec![
+            train(1, 1, 8, 0, 50_000),
+            train(2, 1, 8, 0, 50_000),
+            train(3, 1, 8, 0, 50_000),
+        ];
+        let out = run(&mut state, &mut qsch, &mut rsch, jobs, &SimConfig::default());
+        assert_eq!(out.unfinished_jobs, 0);
+        // Each must wait for the predecessor: scheduled at ~0 / ~80 s / ~160 s.
+        let w: Vec<u64> = (1..=3)
+            .map(|i| out.store.expect(JobId(i)).waiting_ms(out.end_ms))
+            .collect();
+        assert!(w[0] < 10_000, "{w:?}");
+        assert!(w[1] > 50_000, "{w:?}");
+        assert!(w[2] > w[1], "{w:?}");
+    }
+
+    #[test]
+    fn unsatisfiable_job_does_not_hang_the_sim() {
+        let (mut state, mut qsch, mut rsch) = stack(2);
+        let mut cfg = SimConfig::default();
+        cfg.stall_cycles = 10;
+        let jobs = vec![
+            train(1, 1, 8, 0, 20_000),
+            train(2, 5, 8, 0, 20_000), // 40 GPUs on a 16-GPU cluster.
+        ];
+        let out = run(&mut state, &mut qsch, &mut rsch, jobs, &cfg);
+        assert_eq!(out.unfinished_jobs, 1);
+        assert_eq!(out.metrics.jobs_finished, 1);
+    }
+
+    #[test]
+    fn node_failure_evicts_requeues_and_recovers() {
+        use crate::cluster::ids::NodeId;
+        let (mut state, mut qsch, mut rsch) = stack(2);
+        // Fail node 0 mid-run, recover it later. The resident job must be
+        // evicted, requeued (§3.2.4) and finish eventually.
+        let events = vec![
+            (
+                50_000,
+                Event::NodeHealth {
+                    node: NodeId(0),
+                    healthy: false,
+                },
+            ),
+            (
+                200_000,
+                Event::NodeHealth {
+                    node: NodeId(0),
+                    healthy: true,
+                },
+            ),
+        ];
+        // Two jobs filling both nodes; the one on node 0 gets hit.
+        let jobs = vec![train(1, 1, 8, 0, 100_000), train(2, 1, 8, 0, 100_000)];
+        let out = run_with_events(
+            &mut state,
+            &mut qsch,
+            &mut rsch,
+            jobs,
+            events,
+            &SimConfig::default(),
+        );
+        assert_eq!(out.unfinished_jobs, 0);
+        assert_eq!(out.metrics.jobs_finished, 2);
+        // Exactly one job suffered a preemption + requeue.
+        let preempted: u32 = (1..=2).map(|i| out.store.expect(JobId(i)).preemptions).sum();
+        assert_eq!(preempted, 1);
+        assert_eq!(state.allocated_gpus(), 0);
+    }
+
+    #[test]
+    fn sor_counts_binding_before_running() {
+        // SOR accrues from scheduling (binding), including the platform
+        // overhead window (§4.2).
+        let (mut state, mut qsch, mut rsch) = stack(1);
+        let mut cfg = SimConfig::default();
+        cfg.platform_overhead_ms = 60_000; // Long image pull.
+        let out = run(
+            &mut state,
+            &mut qsch,
+            &mut rsch,
+            vec![train(1, 1, 8, 0, 60_000)],
+            &cfg,
+        );
+        // Held 8/8 GPUs for 120 s of a ~120 s sim → SOR near 1.
+        assert!(out.metrics.sor_final() > 0.9, "{}", out.metrics.sor_final());
+    }
+}

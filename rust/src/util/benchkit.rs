@@ -1,0 +1,200 @@
+//! Micro-benchmark harness (no `criterion` available offline).
+//!
+//! `[[bench]] harness = false` binaries use [`Bench`] to run named cases
+//! with warmup, a fixed iteration budget, and mean/p50/p99/throughput
+//! reporting. Output is both human-readable and machine-parseable
+//! (`BENCH\t<name>\t<mean_ns>\t<p50_ns>\t<p99_ns>\t<iters>`), which the
+//! perf pass in EXPERIMENTS.md §Perf scrapes.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One benchmark runner with shared settings.
+pub struct Bench {
+    warmup_iters: usize,
+    min_iters: usize,
+    max_iters: usize,
+    target: Duration,
+    results: Vec<BenchResult>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Optional caller-supplied items-per-iteration for throughput lines.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        Bench {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1_000_000,
+            target: Duration::from_secs(2),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn warmup(mut self, iters: usize) -> Self {
+        self.warmup_iters = iters;
+        self
+    }
+
+    pub fn target_time(mut self, d: Duration) -> Self {
+        self.target = d;
+        self
+    }
+
+    pub fn min_iters(mut self, n: usize) -> Self {
+        self.min_iters = n;
+        self
+    }
+
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Time `f` repeatedly; `f` should produce a value which is black-boxed.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.run_with_items(name, None, &mut f)
+    }
+
+    /// Like [`run`], also reporting `items` per iteration as throughput.
+    pub fn run_throughput<T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.run_with_items(name, Some(items), &mut f)
+    }
+
+    fn run_with_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut impl FnMut() -> T,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        // Estimate cost from one timed call to size the iteration budget.
+        let probe = {
+            let t0 = Instant::now();
+            black_box(f());
+            t0.elapsed()
+        };
+        let est = probe.max(Duration::from_nanos(1));
+        let budget = (self.target.as_nanos() / est.as_nanos().max(1)) as usize;
+        let iters = budget.clamp(self.min_iters, self.max_iters);
+
+        let mut samples_ns = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let s = Summary::from_samples(&samples_ns);
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: s.mean,
+            p50_ns: s.p50,
+            p99_ns: s.p99,
+            items_per_iter: items,
+        };
+        print_result(&result);
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let human = format_ns(r.mean_ns);
+    let mut line = format!(
+        "{:<48} {:>12}/iter  p50 {:>10}  p99 {:>10}  ({} iters)",
+        r.name,
+        human,
+        format_ns(r.p50_ns),
+        format_ns(r.p99_ns),
+        r.iters
+    );
+    if let Some(items) = r.items_per_iter {
+        let per_sec = items / (r.mean_ns / 1e9);
+        line.push_str(&format!("  {:.3e} items/s", per_sec));
+    }
+    println!("{line}");
+    println!(
+        "BENCH\t{}\t{:.1}\t{:.1}\t{:.1}\t{}",
+        r.name, r.mean_ns, r.p50_ns, r.p99_ns, r.iters
+    );
+}
+
+/// Render nanoseconds with an adaptive unit.
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bench::new()
+            .warmup(1)
+            .min_iters(5)
+            .max_iters(20)
+            .target_time(Duration::from_millis(5));
+        b.run("noop", || 1 + 1);
+        assert_eq!(b.results().len(), 1);
+        let r = &b.results()[0];
+        assert!(r.iters >= 5 && r.iters <= 20);
+        assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn throughput_records_items() {
+        let mut b = Bench::new()
+            .warmup(0)
+            .min_iters(3)
+            .max_iters(3)
+            .target_time(Duration::from_millis(1));
+        let r = b.run_throughput("sum", 1000.0, || (0..1000u64).sum::<u64>());
+        assert_eq!(r.items_per_iter, Some(1000.0));
+    }
+
+    #[test]
+    fn format_ns_units() {
+        assert_eq!(format_ns(500.0), "500 ns");
+        assert_eq!(format_ns(1500.0), "1.50 µs");
+        assert_eq!(format_ns(2.5e6), "2.50 ms");
+        assert_eq!(format_ns(3.0e9), "3.00 s");
+    }
+}

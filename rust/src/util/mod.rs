@@ -1,0 +1,9 @@
+//! Shared substrate utilities: PRNG, JSON, statistics, property-testing and
+//! benchmarking harnesses. All hand-rolled — the offline build environment
+//! provides no `rand`/`serde`/`proptest`/`criterion` (see DESIGN.md §3).
+
+pub mod benchkit;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

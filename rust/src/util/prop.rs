@@ -1,0 +1,107 @@
+//! Tiny property-testing harness (no `proptest` available offline).
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(200, |rng| {
+//!     let n = rng.range_inclusive(1, 64) as usize;
+//!     // ... build random inputs, assert invariants, return Ok(()) or Err(msg)
+//!     Ok(())
+//! });
+//! ```
+//! Each case gets a PRNG derived from a fixed master seed plus the case
+//! index; on failure the panic message names the case seed so the exact
+//! case replays with [`check_seeded`].
+
+use super::rng::Pcg32;
+
+/// Master seed for derived case seeds; stable across runs ("kant" in ASCII).
+pub const MASTER_SEED: u64 = 0x6b61_6e74_0000_0000;
+
+/// Run `cases` random cases of `property`. Panics on the first failure,
+/// reporting the case index and seed.
+pub fn check<F>(cases: usize, mut property: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = derive_seed(case);
+        let mut rng = Pcg32::seed_from_u64(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_seeded<F>(seed: u64, mut property: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let mut rng = Pcg32::seed_from_u64(seed);
+    if let Err(msg) = property(&mut rng) {
+        panic!("property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+fn derive_seed(case: usize) -> u64 {
+    0x6b61_6e74_0000_0000u64 ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Assert helper that formats into the property's Err channel.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check(50, |rng| {
+            ran += 1;
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |_| Err("always fails".to_string()));
+    }
+
+    #[test]
+    fn seeds_are_distinct_per_case() {
+        let seeds: Vec<u64> = (0..100).map(derive_seed).collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len());
+    }
+
+    #[test]
+    fn prop_assert_macro_formats() {
+        let result: Result<(), String> = (|| {
+            prop_assert!(1 + 1 == 3, "math broke: {}", 42);
+            Ok(())
+        })();
+        assert_eq!(result.unwrap_err(), "math broke: 42");
+    }
+}

@@ -1,0 +1,329 @@
+//! Statistics utilities: summaries, percentiles, histograms, and
+//! time-weighted series — the numeric backbone of the §4 metrics (GAR, SOR,
+//! GFR are time-weighted ratios; JWTD/JTTED are per-bucket distributions).
+
+/// Summary statistics over a set of samples.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub std: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let count = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / count as f64;
+        let var = sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / count as f64;
+        Summary {
+            count,
+            mean,
+            min: sorted[0],
+            max: sorted[count - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+            std: var.sqrt(),
+        }
+    }
+}
+
+/// Percentile by linear interpolation over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median of an unsorted slice.
+pub fn median(samples: &[f64]) -> f64 {
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, 0.5)
+}
+
+/// A time-weighted series of a piecewise-constant quantity (e.g. the number
+/// of allocated GPUs): push (time, value) points; integrals and averages are
+/// weighted by how long each value was held.
+///
+/// This is exactly how SOR is defined in §4.2: GPU-hours allocated divided
+/// by GPU-hours available — i.e. the time integral of the allocation count.
+#[derive(Debug, Clone, Default)]
+pub struct TimeWeighted {
+    points: Vec<(u64, f64)>, // (time_ms, value from this time onward)
+}
+
+impl TimeWeighted {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that `value` holds from `time_ms` onward. Times must be
+    /// non-decreasing; same-time updates overwrite.
+    pub fn push(&mut self, time_ms: u64, value: f64) {
+        if let Some(last) = self.points.last_mut() {
+            debug_assert!(time_ms >= last.0, "time went backwards");
+            if last.0 == time_ms {
+                last.1 = value;
+                return;
+            }
+            if last.1 == value {
+                return; // No change; keep series compact.
+            }
+        }
+        self.points.push((time_ms, value));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn last_value(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    /// Integral of value dt over [t0, t1] in (value × ms).
+    pub fn integral(&self, t0: u64, t1: u64) -> f64 {
+        if t1 <= t0 || self.points.is_empty() {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for (i, &(start, value)) in self.points.iter().enumerate() {
+            let end = self
+                .points
+                .get(i + 1)
+                .map(|&(t, _)| t)
+                .unwrap_or(u64::MAX);
+            let seg0 = start.max(t0);
+            let seg1 = end.min(t1);
+            if seg1 > seg0 {
+                total += value * (seg1 - seg0) as f64;
+            }
+        }
+        total
+    }
+
+    /// Time-weighted average over [t0, t1].
+    pub fn average(&self, t0: u64, t1: u64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        self.integral(t0, t1) / (t1 - t0) as f64
+    }
+
+    /// Sample the value at time `t` (value of the last point at or before `t`).
+    pub fn at(&self, t: u64) -> f64 {
+        match self.points.binary_search_by_key(&t, |&(ts, _)| ts) {
+            Ok(i) => self.points[i].1,
+            Err(0) => 0.0,
+            Err(i) => self.points[i - 1].1,
+        }
+    }
+
+    /// Downsample to at most `n` evenly spaced (time, value) samples over
+    /// [t0, t1] — used by the figure renderers for time-series plots.
+    pub fn sampled(&self, t0: u64, t1: u64, n: usize) -> Vec<(u64, f64)> {
+        if n == 0 || t1 <= t0 {
+            return Vec::new();
+        }
+        (0..n)
+            .map(|i| {
+                let t = t0 + (t1 - t0) * i as u64 / n.max(1) as u64;
+                (t, self.at(t))
+            })
+            .collect()
+    }
+}
+
+/// Fixed-bucket histogram keyed by job size (GPU count) — the bucketing the
+/// paper uses for JWTD/JTTED ("fewer than 8 GPUs", "more than 64", …).
+#[derive(Debug, Clone)]
+pub struct SizeBuckets {
+    bounds: Vec<u32>, // Upper-inclusive GPU-count bound per bucket.
+    labels: Vec<String>,
+    samples: Vec<Vec<f64>>,
+}
+
+impl SizeBuckets {
+    /// The paper's canonical buckets: 1, 2–8, 9–64, 65–256, 257–1024, 1025–2048+.
+    pub fn paper_default() -> SizeBuckets {
+        SizeBuckets::new(&[1, 8, 64, 256, 1024, u32::MAX])
+    }
+
+    pub fn new(bounds: &[u32]) -> SizeBuckets {
+        assert!(!bounds.is_empty());
+        let mut labels = Vec::new();
+        let mut lo = 1u64;
+        for &b in bounds {
+            if b == u32::MAX {
+                labels.push(format!("{lo}+"));
+            } else if u64::from(b) == lo {
+                labels.push(format!("{b}"));
+            } else {
+                labels.push(format!("{lo}-{b}"));
+            }
+            lo = u64::from(b) + 1;
+        }
+        SizeBuckets {
+            bounds: bounds.to_vec(),
+            labels,
+            samples: vec![Vec::new(); bounds.len()],
+        }
+    }
+
+    pub fn bucket_of(&self, gpus: u32) -> usize {
+        self.bounds
+            .iter()
+            .position(|&b| gpus <= b)
+            .unwrap_or(self.bounds.len() - 1)
+    }
+
+    pub fn record(&mut self, gpus: u32, value: f64) {
+        let idx = self.bucket_of(gpus);
+        self.samples[idx].push(value);
+    }
+
+    pub fn labels(&self) -> &[String] {
+        &self.labels
+    }
+
+    pub fn summary(&self, bucket: usize) -> Summary {
+        Summary::from_samples(&self.samples[bucket])
+    }
+
+    pub fn summaries(&self) -> Vec<(String, Summary)> {
+        self.labels
+            .iter()
+            .cloned()
+            .zip(self.samples.iter().map(|s| Summary::from_samples(s)))
+            .collect()
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.bounds.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_samples() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.count, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_empty_is_zeroes() {
+        let s = Summary::from_samples(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&sorted, 0.5), 5.0);
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 1.0), 10.0);
+    }
+
+    #[test]
+    fn time_weighted_integral_and_average() {
+        let mut tw = TimeWeighted::new();
+        tw.push(0, 4.0);
+        tw.push(10, 8.0);
+        tw.push(20, 0.0);
+        // [0,10): 4, [10,20): 8, [20,..): 0.
+        assert_eq!(tw.integral(0, 20), 4.0 * 10.0 + 8.0 * 10.0);
+        assert_eq!(tw.average(0, 20), 6.0);
+        assert_eq!(tw.integral(5, 15), 4.0 * 5.0 + 8.0 * 5.0);
+        assert_eq!(tw.at(0), 4.0);
+        assert_eq!(tw.at(15), 8.0);
+        assert_eq!(tw.at(25), 0.0);
+    }
+
+    #[test]
+    fn time_weighted_dedups_equal_values() {
+        let mut tw = TimeWeighted::new();
+        tw.push(0, 1.0);
+        tw.push(5, 1.0);
+        tw.push(10, 2.0);
+        assert_eq!(tw.len(), 2);
+    }
+
+    #[test]
+    fn time_weighted_same_time_overwrites() {
+        let mut tw = TimeWeighted::new();
+        tw.push(0, 1.0);
+        tw.push(0, 3.0);
+        assert_eq!(tw.at(0), 3.0);
+        assert_eq!(tw.len(), 1);
+    }
+
+    #[test]
+    fn sampled_series_has_n_points() {
+        let mut tw = TimeWeighted::new();
+        tw.push(0, 1.0);
+        tw.push(500, 2.0);
+        let pts = tw.sampled(0, 1000, 10);
+        assert_eq!(pts.len(), 10);
+        assert_eq!(pts[0].1, 1.0);
+        assert_eq!(pts[9].1, 2.0);
+    }
+
+    #[test]
+    fn paper_buckets_classify_sizes() {
+        let b = SizeBuckets::paper_default();
+        assert_eq!(b.bucket_of(1), 0);
+        assert_eq!(b.bucket_of(8), 1);
+        assert_eq!(b.bucket_of(9), 2);
+        assert_eq!(b.bucket_of(64), 2);
+        assert_eq!(b.bucket_of(256), 3);
+        assert_eq!(b.bucket_of(1024), 4);
+        assert_eq!(b.bucket_of(2048), 5);
+        assert_eq!(b.labels()[0], "1");
+        assert_eq!(b.labels()[1], "2-8");
+        assert_eq!(b.labels()[5], "1025+");
+    }
+
+    #[test]
+    fn bucket_records_aggregate() {
+        let mut b = SizeBuckets::paper_default();
+        b.record(4, 10.0);
+        b.record(6, 20.0);
+        b.record(2048, 100.0);
+        assert_eq!(b.summary(1).mean, 15.0);
+        assert_eq!(b.summary(5).count, 1);
+        assert_eq!(b.summary(0).count, 0);
+    }
+}

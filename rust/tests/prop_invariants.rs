@@ -1,0 +1,294 @@
+//! System-level property tests: invariants that must hold for *any*
+//! workload, checked over randomized end-to-end simulations.
+
+use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
+use kant::cluster::ids::{GpuTypeId, JobId, TenantId};
+use kant::cluster::tenant::{QuotaLedger, QuotaMode};
+use kant::job::spec::{JobKind, JobSpec, Priority};
+use kant::job::state::Phase;
+use kant::prop_assert;
+use kant::qsch::policy::{QschConfig, QueuePolicy};
+use kant::qsch::Qsch;
+use kant::rsch::{Rsch, RschConfig};
+use kant::sim::{run, SimConfig};
+use kant::util::prop;
+use kant::util::rng::Pcg32;
+
+const G: GpuTypeId = GpuTypeId(0);
+
+fn random_job(rng: &mut Pcg32, id: u64, horizon_ms: u64) -> JobSpec {
+    let sizes = [1u32, 2, 4, 8, 16, 32, 64];
+    let gpus = *rng.choose(&sizes).unwrap();
+    let (replicas, gpp) = if gpus > 8 { (gpus / 8, 8) } else { (1, gpus) };
+    let kind = if rng.chance(0.7) {
+        JobKind::Training
+    } else {
+        JobKind::Inference
+    };
+    let mut j = JobSpec::homogeneous(JobId(id), TenantId(rng.below(3) as u32), kind, G, replicas, gpp)
+        .with_times(rng.below(horizon_ms), rng.range_inclusive(30_000, 600_000));
+    j.priority = *rng
+        .choose(&[Priority::LOW, Priority::NORMAL, Priority::HIGH])
+        .unwrap();
+    j
+}
+
+fn random_stack(rng: &mut Pcg32) -> (kant::cluster::state::ClusterState, Qsch, Rsch) {
+    let groups = rng.range_inclusive(1, 3) as u32;
+    let nodes = rng.range_inclusive(2, 6) as u32;
+    let state = ClusterBuilder::build(&ClusterSpec::homogeneous("p", 1, groups, nodes));
+    let mode = if rng.chance(0.5) {
+        QuotaMode::Shared
+    } else {
+        QuotaMode::Isolated
+    };
+    let mut ledger = QuotaLedger::new(3, 1, mode);
+    for t in 0..3 {
+        ledger.set_limit(
+            TenantId(t),
+            G,
+            rng.range_inclusive(8, state.total_gpus() as u64) as u32,
+        );
+    }
+    let policy = *rng
+        .choose(&[
+            QueuePolicy::StrictFifo,
+            QueuePolicy::BestEffortFifo,
+            QueuePolicy::Backfill,
+        ])
+        .unwrap();
+    let qcfg = QschConfig {
+        policy,
+        backfill_timeout_ms: rng.range_inclusive(60_000, 1_800_000),
+        ..QschConfig::default()
+    };
+    let rcfg = RschConfig {
+        two_level: rng.chance(0.7),
+        snapshot_mode: if rng.chance(0.5) {
+            kant::cluster::snapshot::SnapshotMode::Incremental
+        } else {
+            kant::cluster::snapshot::SnapshotMode::DeepCopy
+        },
+        ..RschConfig::default()
+    };
+    let rsch = Rsch::new(rcfg, &state);
+    (state, Qsch::new(qcfg, ledger), rsch)
+}
+
+#[test]
+fn random_sims_preserve_core_invariants() {
+    prop::check(25, |rng| {
+        let (mut state, mut qsch, mut rsch) = random_stack(rng);
+        let horizon = 2 * 3_600_000;
+        let n_jobs = rng.range_inclusive(5, 60);
+        let mut jobs: Vec<JobSpec> = (1..=n_jobs)
+            .map(|id| random_job(rng, id, horizon))
+            .collect();
+        jobs.sort_by_key(|j| j.submit_ms);
+        let total = state.total_gpus();
+        let cfg = SimConfig {
+            horizon_ms: horizon * 4,
+            stall_cycles: 500,
+            ..SimConfig::default()
+        };
+        let out = run(&mut state, &mut qsch, &mut rsch, jobs, &cfg);
+
+        // 1. Metric bounds.
+        prop_assert!(
+            (0.0..=1.0).contains(&out.metrics.gar_avg()),
+            "GAR out of range: {}",
+            out.metrics.gar_avg()
+        );
+        prop_assert!(
+            (0.0..=1.0).contains(&out.metrics.sor_final()),
+            "SOR out of range"
+        );
+        prop_assert!(
+            (0.0..=1.0).contains(&out.metrics.gfr_avg()),
+            "GFR out of range"
+        );
+
+        // 2. Conservation: every finished job released its GPUs; no
+        //    devices leak.
+        let allocated_now = state.allocated_gpus();
+        let holding: u32 = out
+            .store
+            .iter()
+            .filter(|j| j.holds_resources())
+            .map(|j| j.spec.total_gpus())
+            .sum();
+        prop_assert!(
+            allocated_now == holding,
+            "allocation leak: state {allocated_now} vs holders {holding}"
+        );
+        prop_assert!(allocated_now <= total, "over-allocation");
+
+        // 3. No double allocation at device level.
+        for node in &state.nodes {
+            let mut seen = std::collections::HashSet::new();
+            for gpu in &node.gpus {
+                if let Some(pod) = gpu.allocated_to {
+                    prop_assert!(
+                        seen.insert((pod, gpu.index)),
+                        "duplicate device binding on {}",
+                        node.id
+                    );
+                }
+            }
+        }
+
+        // 4. Gang jobs: every scheduled gang job has ALL replicas placed.
+        for j in out.store.iter() {
+            if j.holds_resources() {
+                let placements = state.placements_of(j.id()).expect("holder has placement");
+                prop_assert!(
+                    placements.len() as u32 == j.spec.total_replicas(),
+                    "job {} holds {} of {} pods",
+                    j.id(),
+                    placements.len(),
+                    j.spec.total_replicas()
+                );
+                let gpus: u32 = placements.iter().map(|p| p.devices.len() as u32).sum();
+                prop_assert!(
+                    gpus == j.spec.total_gpus(),
+                    "job {} device-count mismatch",
+                    j.id()
+                );
+            }
+        }
+
+        // 5. Terminal jobs hold nothing.
+        for j in out.store.iter() {
+            if j.is_terminal() {
+                prop_assert!(
+                    state.placements_of(j.id()).is_none(),
+                    "finished job {} still placed",
+                    j.id()
+                );
+            }
+        }
+
+        // 6. Quota ledger zeroed for finished-everything runs.
+        if out.unfinished_jobs == 0 {
+            for t in 0..3 {
+                let e = qsch.ledger.entry(TenantId(t), G);
+                prop_assert!(
+                    e.used_own == 0 && e.borrowed == 0 && e.lent == 0,
+                    "ledger not drained for tenant {t}: {e:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn preemption_never_loses_jobs() {
+    // Under heavy HIGH-priority pressure with preemption enabled, every
+    // job must end Finished or still-tracked — never dropped.
+    prop::check(10, |rng| {
+        let state0 = ClusterBuilder::build(&ClusterSpec::homogeneous("p", 1, 2, 3));
+        let mut ledger = QuotaLedger::new(3, 1, QuotaMode::Shared);
+        ledger.set_limit(TenantId(0), G, 48);
+        ledger.set_limit(TenantId(1), G, 48);
+        ledger.set_limit(TenantId(2), G, 48);
+        let mut qsch = Qsch::new(
+            QschConfig {
+                policy: QueuePolicy::Backfill,
+                backfill_timeout_ms: 120_000,
+                priority_preempt_min_wait_ms: 60_000,
+                ..QschConfig::default()
+            },
+            ledger,
+        );
+        let mut state = state0;
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        let n = rng.range_inclusive(10, 40);
+        let mut jobs: Vec<JobSpec> = (1..=n)
+            .map(|id| random_job(rng, id, 1_800_000))
+            .collect();
+        // Make a third of them HIGH priority to force preemption churn.
+        for j in jobs.iter_mut() {
+            if rng.chance(0.3) {
+                j.priority = Priority::HIGH;
+            }
+        }
+        jobs.sort_by_key(|j| j.submit_ms);
+        let cfg = SimConfig {
+            horizon_ms: 24 * 3_600_000,
+            stall_cycles: 500,
+            ..SimConfig::default()
+        };
+        let out = run(&mut state, &mut qsch, &mut rsch, jobs, &cfg);
+        prop_assert!(out.store.len() == n as usize, "job lost from the store");
+        for j in out.store.iter() {
+            prop_assert!(
+                matches!(
+                    j.phase,
+                    Phase::Finished | Phase::Queued | Phase::Scheduled | Phase::Running
+                ),
+                "job {} in impossible terminal state {:?}",
+                j.id(),
+                j.phase
+            );
+        }
+        // Preempted work is eventually re-run: if everything finished, all
+        // remaining_ms are zero.
+        if out.unfinished_jobs == 0 {
+            for j in out.store.iter() {
+                prop_assert!(j.remaining_ms == 0, "job {} kept owed work", j.id());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn strict_fifo_never_reorders_same_priority() {
+    // Under Strict FIFO, same-priority jobs must be *scheduled* in
+    // submission order.
+    prop::check(10, |rng| {
+        let state0 = ClusterBuilder::build(&ClusterSpec::homogeneous("p", 1, 1, 4));
+        let mut ledger = QuotaLedger::new(1, 1, QuotaMode::Shared);
+        ledger.set_limit(TenantId(0), G, 32);
+        let mut qsch = Qsch::new(QschConfig::strict_fifo(), ledger);
+        let mut state = state0;
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        let n = rng.range_inclusive(5, 25);
+        let mut jobs: Vec<JobSpec> = (1..=n)
+            .map(|id| {
+                let mut j = random_job(rng, id, 600_000);
+                j.priority = Priority::NORMAL;
+                j.tenant = TenantId(0);
+                j
+            })
+            .collect();
+        jobs.sort_by_key(|j| j.submit_ms);
+        let cfg = SimConfig {
+            horizon_ms: 48 * 3_600_000,
+            stall_cycles: 300,
+            ..SimConfig::default()
+        };
+        let out = run(&mut state, &mut qsch, &mut rsch, jobs.clone(), &cfg);
+        let mut scheduled: Vec<(u64, u64)> = out
+            .store
+            .iter()
+            .filter_map(|j| j.scheduled_ms.map(|t| (t, j.submit_ms)))
+            .collect();
+        scheduled.sort_unstable();
+        // For any two schedule times, the earlier-scheduled job must not
+        // have been submitted later than one scheduled strictly earlier...
+        // i.e. schedule order respects submit order.
+        for w in scheduled.windows(2) {
+            if w[0].0 < w[1].0 {
+                prop_assert!(
+                    w[0].1 <= w[1].1,
+                    "strict FIFO reordered: submit {} scheduled before submit {}",
+                    w[1].1,
+                    w[0].1
+                );
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,182 @@
+//! Parity: the AOT XLA scorer artifacts must reproduce the native Rust
+//! scorer bit-for-bit (within f32 tolerance) on randomized inputs — the
+//! contract that makes the two backends interchangeable on the hot path.
+//!
+//! Requires `make artifacts`; tests self-skip when artifacts are missing.
+
+use kant::rsch::features::{GROUP_F, NODE_F};
+use kant::rsch::score::{
+    group_weights, node_weights, NativeBackend, Phase, ScoreBackend, GROUP_COMPONENTS,
+    NUM_COMPONENTS,
+};
+use kant::job::spec::PlacementStrategy;
+use kant::runtime::XlaBackend;
+use kant::util::rng::Pcg32;
+
+fn artifacts() -> Option<&'static str> {
+    std::path::Path::new("artifacts/manifest.json")
+        .exists()
+        .then_some("artifacts")
+}
+
+fn random_node_features(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    let mut feat = vec![0.0f32; n * NODE_F];
+    for i in 0..n {
+        let row = &mut feat[i * NODE_F..(i + 1) * NODE_F];
+        let total = *rng.choose(&[4.0f32, 8.0]).unwrap();
+        let alloc = rng.below(total as u64 + 1) as f32;
+        row[0] = total - alloc; // free
+        row[1] = total;
+        row[2] = alloc;
+        row[3] = if rng.chance(0.9) { 1.0 } else { 0.0 };
+        row[4] = rng.below(257) as f32; // group_free
+        row[5] = 256.0;
+        row[6] = rng.below(9) as f32; // pods_on_node
+        row[7] = rng.below(17) as f32;
+        row[8] = rng.below(4) as f32; // topo tier
+        row[9] = if rng.chance(0.3) { 1.0 } else { 0.0 };
+        row[10] = rng.below(65) as f32;
+        row[11] = rng.below(row[0] as u64 + 1) as f32;
+    }
+    feat
+}
+
+fn random_group_features(rng: &mut Pcg32, g: usize) -> Vec<f32> {
+    let mut feat = vec![0.0f32; g * GROUP_F];
+    for i in 0..g {
+        let row = &mut feat[i * GROUP_F..(i + 1) * GROUP_F];
+        row[0] = rng.below(257) as f32;
+        row[1] = 256.0;
+        row[2] = rng.below(33) as f32;
+        row[3] = rng.f64() as f32;
+        row[4] = rng.uniform(0.5, 1.0) as f32;
+        row[5] = rng.below(33) as f32;
+    }
+    feat
+}
+
+#[test]
+fn node_scorer_parity_random_sweep() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut xla = XlaBackend::new(dir).unwrap();
+    let mut native = NativeBackend;
+    let mut rng = Pcg32::seed_from_u64(0xA11CE);
+    let strategies = [
+        PlacementStrategy::NativeFirstFit,
+        PlacementStrategy::Binpack,
+        PlacementStrategy::EBinpack,
+        PlacementStrategy::Spread,
+        PlacementStrategy::ESpread,
+    ];
+    for case in 0..20 {
+        let n = rng.range_inclusive(1, 700) as usize;
+        let feat = random_node_features(&mut rng, n);
+        let gpp = *rng.choose(&[1.0f32, 2.0, 4.0, 8.0]).unwrap();
+        let job = [gpp, gpp * 4.0, 1.0, 0.0, 0.0, 2.0, 0.0, 0.0];
+        let strat = *rng.choose(&strategies).unwrap();
+        let phase = if rng.chance(0.5) {
+            Phase::Primary
+        } else {
+            Phase::Fallback
+        };
+        let w: [f32; NUM_COMPONENTS] = node_weights(strat, phase, rng.chance(0.3));
+        let a = xla.score_nodes(&feat, n, &job, &w);
+        let b = native.score_nodes(&feat, n, &job, &w);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-3 * y.abs().max(1.0),
+                "case {case} node {i}: xla={x} native={y} (n={n}, strat={strat:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn group_scorer_parity_random_sweep() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut xla = XlaBackend::new(dir).unwrap();
+    let mut native = NativeBackend;
+    let mut rng = Pcg32::seed_from_u64(0xB0B);
+    for case in 0..15 {
+        let g = rng.range_inclusive(1, 200) as usize;
+        let feat = random_group_features(&mut rng, g);
+        let job = [8.0, 256.0, 1.0, 0.0, 1.0, 2.0, 0.0, 0.0];
+        let w: [f32; GROUP_COMPONENTS] =
+            group_weights(PlacementStrategy::EBinpack, Phase::Primary, rng.chance(0.5));
+        let a = xla.score_groups(&feat, g, &job, &w);
+        let b = native.score_groups(&feat, g, &job, &w);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-3 * y.abs().max(1.0),
+                "case {case} group {i}: xla={x} native={y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn chunking_over_largest_artifact() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut xla = XlaBackend::new(dir).unwrap();
+    let mut native = NativeBackend;
+    let mut rng = Pcg32::seed_from_u64(0xC0FFEE);
+    // Bigger than the largest (4096) artifact → must chunk.
+    let n = 5000;
+    let feat = random_node_features(&mut rng, n);
+    let job = [4.0, 64.0, 1.0, 0.0, 0.0, 2.0, 0.0, 0.0];
+    let w = node_weights(PlacementStrategy::EBinpack, Phase::Primary, false);
+    let a = xla.score_nodes(&feat, n, &job, &w);
+    let b = native.score_nodes(&feat, n, &job, &w);
+    assert_eq!(a.len(), n);
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() <= 1e-3 * y.abs().max(1.0));
+    }
+    assert!(xla.launches >= 2, "must have chunked");
+}
+
+#[test]
+fn full_scheduler_run_is_decision_identical() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    use kant::config::{training_cluster, Scale};
+    use kant::job::workload::WorkloadGen;
+    use kant::qsch::Qsch;
+    use kant::rsch::{Rsch, RschConfig};
+    use kant::sim::{run, SimConfig};
+
+    let mut env = training_cluster(Scale::Small, 3, 0.9);
+    env.horizon_ms = 2 * 3_600_000;
+    let jobs = WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms);
+    let sim = SimConfig {
+        horizon_ms: env.horizon_ms + 6 * 3_600_000,
+        ..SimConfig::default()
+    };
+
+    let mut s1 = env.state.clone();
+    let mut q1 = Qsch::new(kant::qsch::policy::QschConfig::default(), env.ledger.clone());
+    let backend = XlaBackend::new(dir).unwrap();
+    let mut r1 = Rsch::with_backend(RschConfig::default(), &s1, Box::new(backend));
+    let xla_out = run(&mut s1, &mut q1, &mut r1, jobs.clone(), &sim);
+
+    let mut s2 = env.state.clone();
+    let mut q2 = Qsch::new(kant::qsch::policy::QschConfig::default(), env.ledger.clone());
+    let mut r2 = Rsch::new(RschConfig::default(), &s2);
+    let native_out = run(&mut s2, &mut q2, &mut r2, jobs, &sim);
+
+    assert_eq!(xla_out.metrics.jobs_finished, native_out.metrics.jobs_finished);
+    assert_eq!(xla_out.end_ms, native_out.end_ms);
+    assert!((xla_out.metrics.sor_final() - native_out.metrics.sor_final()).abs() < 1e-12);
+    assert!((xla_out.metrics.gfr_avg() - native_out.metrics.gfr_avg()).abs() < 1e-12);
+}
