@@ -153,4 +153,13 @@ fn main() {
             );
         }
     }
+
+    // Seed/refresh the committed perf baseline when requested (CWD is the
+    // package root, so this writes rust/BENCH_baseline.json):
+    //   BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench sched_cycle
+    if let Ok(path) = std::env::var("BENCH_BASELINE_OUT") {
+        let doc = kant::util::benchkit::baseline_json("sched_cycle", "default-grid", b.results());
+        std::fs::write(&path, doc + "\n").expect("writing bench baseline");
+        eprintln!("wrote bench baseline to {path}");
+    }
 }

@@ -3,12 +3,12 @@
 //! composition; the native path is the production default at sim scale —
 //! this bench quantifies the crossover.
 //!
-//! Run with: `cargo bench --bench scorer` (XLA rows need `make artifacts`)
+//! Run with: `cargo bench --bench scorer`
+//! (XLA rows need `--features xla`, the real xla crate and `make artifacts`)
 
 use kant::job::spec::PlacementStrategy;
-use kant::rsch::features::NODE_F;
-use kant::rsch::score::{node_weights, NativeBackend, Phase, ScoreBackend};
-use kant::runtime::XlaBackend;
+use kant::rsch::features::{JOB_D, NODE_F};
+use kant::rsch::score::{node_weights, NativeBackend, Phase, ScoreBackend, NUM_COMPONENTS};
 use kant::util::benchkit::Bench;
 use kant::util::rng::Pcg32;
 use std::time::Duration;
@@ -30,6 +30,28 @@ fn random_features(rng: &mut Pcg32, n: usize) -> Vec<f32> {
     feat
 }
 
+#[cfg(feature = "xla")]
+fn bench_xla(b: &mut Bench, rng: &mut Pcg32, job: &[f32; JOB_D], w: &[f32; NUM_COMPONENTS]) {
+    use kant::runtime::XlaBackend;
+    match XlaBackend::new("artifacts") {
+        Ok(mut xla) => {
+            xla.warmup().expect("artifact warmup");
+            for n in [32usize, 256, 1024, 4096] {
+                let feat = random_features(rng, n);
+                b.run_throughput(&format!("score-nodes/xla/{n}"), n as f64, || {
+                    xla.score_nodes(&feat, n, job, w)
+                });
+            }
+        }
+        Err(e) => eprintln!("skipping XLA rows (run `make artifacts`): {e}"),
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn bench_xla(_b: &mut Bench, _rng: &mut Pcg32, _job: &[f32; JOB_D], _w: &[f32; NUM_COMPONENTS]) {
+    eprintln!("skipping XLA rows (built without the `xla` feature)");
+}
+
 fn main() {
     let mut b = Bench::new()
         .warmup(3)
@@ -48,16 +70,5 @@ fn main() {
         });
     }
 
-    match XlaBackend::new("artifacts") {
-        Ok(mut xla) => {
-            xla.warmup().expect("artifact warmup");
-            for n in [32usize, 256, 1024, 4096] {
-                let feat = random_features(&mut rng, n);
-                b.run_throughput(&format!("score-nodes/xla/{n}"), n as f64, || {
-                    xla.score_nodes(&feat, n, &job, &w)
-                });
-            }
-        }
-        Err(e) => eprintln!("skipping XLA rows (run `make artifacts`): {e}"),
-    }
+    bench_xla(&mut b, &mut rng, &job, &w);
 }

@@ -15,7 +15,13 @@ use kant::util::rng::Pcg32;
 use std::time::Duration;
 
 /// Apply `k` random allocate/release mutations.
-fn mutate(state: &mut ClusterState, rng: &mut Pcg32, next_job: &mut u64, live: &mut Vec<u64>, k: usize) {
+fn mutate(
+    state: &mut ClusterState,
+    rng: &mut Pcg32,
+    next_job: &mut u64,
+    live: &mut Vec<u64>,
+    k: usize,
+) {
     for _ in 0..k {
         if !live.is_empty() && rng.chance(0.5) {
             let i = rng.below(live.len() as u64) as usize;

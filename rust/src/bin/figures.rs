@@ -101,7 +101,7 @@ fn main() -> anyhow::Result<()> {
         };
         println!("{report}");
         let path = out_dir.join(format!("{id}.txt"));
-        std::fs::write(&path, &report)?;
+        std::fs::write(&path, report)?;
         eprintln!("    wrote {}", path.display());
     }
     Ok(())

@@ -6,6 +6,8 @@
 //! device indices to this pod); policy — which devices to pick — lives in
 //! `rsch::device_alloc`.
 
+use std::fmt;
+
 use super::gpu::{GpuDevice, GpuType, Health, Nic};
 use super::ids::{GpuTypeId, GroupId, HbdId, NodeId, PodId};
 
@@ -162,15 +164,24 @@ impl Node {
 
 /// Device-level allocation failures (distinct from scheduling failures —
 /// these indicate races/bugs and abort the gang transaction).
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum AllocError {
-    #[error("node {0} is unhealthy")]
     NodeUnhealthy(NodeId),
-    #[error("node {0} has no GPU device {1}")]
     NoSuchDevice(NodeId, u8),
-    #[error("node {0} GPU device {1} is busy")]
     DeviceBusy(NodeId, u8),
 }
+
+impl fmt::Display for AllocError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AllocError::NodeUnhealthy(n) => write!(f, "node {n} is unhealthy"),
+            AllocError::NoSuchDevice(n, d) => write!(f, "node {n} has no GPU device {d}"),
+            AllocError::DeviceBusy(n, d) => write!(f, "node {n} GPU device {d} is busy"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 #[cfg(test)]
 mod tests {

@@ -4,6 +4,7 @@
 //! log that feeds incremental snapshots (§3.4.3).
 
 use std::collections::HashMap;
+use std::fmt;
 
 use super::gpu::{GpuType, Health};
 use super::ids::{GpuTypeId, GroupId, HbdId, JobId, NodeId, PodId, PoolId};
@@ -23,14 +24,39 @@ pub struct PodPlacement {
 }
 
 /// Errors from state mutations.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StateError {
-    #[error("job {0} already placed")]
     AlreadyPlaced(JobId),
-    #[error("job {0} has no placement")]
     NotPlaced(JobId),
-    #[error(transparent)]
-    Alloc(#[from] AllocError),
+    Alloc(AllocError),
+}
+
+impl fmt::Display for StateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StateError::AlreadyPlaced(j) => write!(f, "job {j} already placed"),
+            StateError::NotPlaced(j) => write!(f, "job {j} has no placement"),
+            StateError::Alloc(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for StateError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        // `Alloc` is transparent: Display already forwards the inner
+        // message, so forward the inner error's source (not the inner
+        // error itself) to avoid double-rendering in error chains.
+        match self {
+            StateError::Alloc(e) => e.source(),
+            _ => None,
+        }
+    }
+}
+
+impl From<AllocError> for StateError {
+    fn from(e: AllocError) -> StateError {
+        StateError::Alloc(e)
+    }
 }
 
 /// The authoritative cluster state.

@@ -9,6 +9,7 @@
 //!   can find exactly which jobs to evict when a lender wants capacity back.
 
 use std::collections::HashMap;
+use std::fmt;
 
 use super::ids::{GpuTypeId, JobId, TenantId};
 
@@ -76,20 +77,32 @@ pub struct BorrowRecord {
 }
 
 /// Errors from quota operations.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum QuotaError {
-    #[error("tenant {tenant} over quota for type {gpu_type}: need {need}, available {available}")]
     OverQuota {
         tenant: TenantId,
         gpu_type: GpuTypeId,
         need: u32,
         available: u32,
     },
-    #[error("job {0} already charged")]
     AlreadyCharged(JobId),
-    #[error("job {0} not charged")]
     NotCharged(JobId),
 }
+
+impl fmt::Display for QuotaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QuotaError::OverQuota { tenant, gpu_type, need, available } => write!(
+                f,
+                "tenant {tenant} over quota for type {gpu_type}: need {need}, available {available}"
+            ),
+            QuotaError::AlreadyCharged(j) => write!(f, "job {j} already charged"),
+            QuotaError::NotCharged(j) => write!(f, "job {j} not charged"),
+        }
+    }
+}
+
+impl std::error::Error for QuotaError {}
 
 /// The quota ledger: the static-quota half of QSCH admission.
 #[derive(Debug, Clone)]

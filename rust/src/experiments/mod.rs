@@ -368,7 +368,14 @@ pub fn table1(c: &PolicyComparison) -> String {
     ];
     table(
         "Table 1 — queueing policies (measured)",
-        &["policy", "SOR", "small-job wait", "largest-job wait", "bypass-scheduled", "backfill-preempt"],
+        &[
+            "policy",
+            "SOR",
+            "small-job wait",
+            "largest-job wait",
+            "bypass-scheduled",
+            "backfill-preempt",
+        ],
         &rows,
     )
 }
@@ -703,7 +710,9 @@ pub fn ablation_defrag(seed: u64) -> String {
         &["config", "GFR(steady)", "GAR", "migrations"],
         &rows,
     );
-    s.push_str("\npaper (planned): consolidating scattered resources via rescheduling improves utilization\n");
+    s.push_str(
+        "\npaper (planned): consolidating scattered resources via rescheduling improves utilization\n",
+    );
     s
 }
 

@@ -21,6 +21,7 @@ pub mod experiments;
 pub mod job;
 pub mod qsch;
 pub mod rsch;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sim;
 pub mod metrics;

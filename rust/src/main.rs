@@ -110,14 +110,7 @@ fn simulate(args: &[String]) -> Result<()> {
     );
 
     let mut qsch = Qsch::new(qsch_cfg, env.ledger.clone());
-    let mut rsch = if has_flag(args, "--xla-scorer") {
-        let mut backend = kant::runtime::XlaBackend::new("artifacts")
-            .context("loading XLA scorer artifacts (run `make artifacts`)")?;
-        backend.warmup().context("compiling artifacts")?;
-        Rsch::with_backend(rsch_cfg, &env.state, Box::new(backend))
-    } else {
-        Rsch::new(rsch_cfg, &env.state)
-    };
+    let mut rsch = build_rsch(args, rsch_cfg, &env.state)?;
     let sim_cfg = SimConfig {
         horizon_ms: env.horizon_ms + 24 * 3_600_000,
         ..SimConfig::default()
@@ -146,6 +139,34 @@ fn simulate(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
+fn build_rsch(
+    args: &[String],
+    cfg: RschConfig,
+    state: &kant::cluster::state::ClusterState,
+) -> Result<Rsch> {
+    if has_flag(args, "--xla-scorer") {
+        let mut backend = kant::runtime::XlaBackend::new("artifacts")
+            .context("loading XLA scorer artifacts (run `make artifacts`)")?;
+        backend.warmup().context("compiling artifacts")?;
+        Ok(Rsch::with_backend(cfg, state, Box::new(backend)))
+    } else {
+        Ok(Rsch::new(cfg, state))
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn build_rsch(
+    args: &[String],
+    cfg: RschConfig,
+    state: &kant::cluster::state::ClusterState,
+) -> Result<Rsch> {
+    if has_flag(args, "--xla-scorer") {
+        bail!("this build has no XLA runtime; rebuild with `--features xla`");
+    }
+    Ok(Rsch::new(cfg, state))
+}
+
 fn gen_trace(args: &[String]) -> Result<()> {
     let seed: u64 = flag_value(args, "--seed").unwrap_or("42").parse()?;
     let n: usize = flag_value(args, "--jobs").unwrap_or("1000").parse()?;
@@ -161,6 +182,12 @@ fn gen_trace(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn validate(_args: &[String]) -> Result<()> {
+    bail!("`kant validate` needs the XLA runtime; rebuild with `--features xla`")
+}
+
+#[cfg(feature = "xla")]
 fn validate(args: &[String]) -> Result<()> {
     let dir = flag_value(args, "--artifacts").unwrap_or("artifacts");
     let mut backend = kant::runtime::XlaBackend::new(dir)

@@ -246,8 +246,9 @@ mod tests {
     fn jwtd_and_jtted_record_on_schedule() {
         let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 2, 2));
         let mut m = Metrics::new(&state, 0);
-        let spec = JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Training, GpuTypeId(0), 2, 8)
-            .with_times(0, 1000);
+        let spec =
+            JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Training, GpuTypeId(0), 2, 8)
+                .with_times(0, 1000);
         let mut job = Job::new(spec);
         // Spans two groups (worst case for a 2-node job here).
         place(&mut state, 1, 0, (0..8).collect());

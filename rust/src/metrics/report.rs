@@ -90,7 +90,7 @@ pub fn bucket_comparison(
     value_fmt: fn(f64) -> String,
 ) -> String {
     let mut headers = vec!["size"];
-    for (name, _) in arms {
+    for &(name, _) in arms {
         headers.push(name);
     }
     let num_buckets = arms.first().map(|(_, s)| s.len()).unwrap_or(0);

@@ -96,7 +96,7 @@ mod tests {
             TenantId(0),
             JobKind::Training,
             GpuTypeId(0),
-            gpus / 8.max(1),
+            (gpus / 8).max(1),
             8,
         )
     }

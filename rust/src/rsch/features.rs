@@ -169,7 +169,7 @@ mod tests {
         let mut snap = Snapshot::new(SnapshotMode::DeepCopy);
         snap.refresh(&state);
         let plan = EmptyPlan { snapshot: &snap };
-        let cands: Vec<NodeId> = (0..4).map(|i| NodeId(i)).collect();
+        let cands: Vec<NodeId> = (0..4).map(NodeId).collect();
         let feat = node_features(&snap, &state.fabric, &plan, &cands);
         assert_eq!(feat.len(), 4 * NODE_F);
         // Row 0: all free, healthy, tier 3 (nothing placed).

@@ -175,15 +175,10 @@ impl Rsch {
             _ => vec![(Phase::Primary, ZoneFilter::All)],
         }
     }
-
-    /// Representative LeafGroup capacity for the large-job threshold.
-    fn group_capacity(&self, state: &ClusterState, pool_idx: usize) -> u32 {
-        self.pool_groups[pool_idx]
-            .first()
-            .map(|&g| state.group_total(g))
-            .unwrap_or(0)
-    }
 }
+
+/// One job's planned pod placements (or why planning failed).
+type PlanResult = Result<Vec<crate::cluster::state::PodPlacement>, PlaceFailure>;
 
 /// Borrow-split planning context: snapshot immutably feeds the
 /// [`PlanBuilder`] while the backend/stats stay mutably borrowable.
@@ -336,7 +331,7 @@ impl Planner<'_> {
         state: &ClusterState,
         spec: &JobSpec,
         default_strategy: PlacementStrategy,
-    ) -> Result<Vec<crate::cluster::state::PodPlacement>, PlaceFailure> {
+    ) -> PlanResult {
         // Sanity: every demand must be satisfiable in principle.
         for d in &spec.demands {
             let Some(pool) = state.pools.pool_for_type(d.gpu_type) else {
@@ -398,7 +393,7 @@ impl Planner<'_> {
             .score_nodes(&feat, candidates.len(), job, &w);
         self.stats.nodes_scored += candidates.len() as u64;
         let best = argmax(&scores)?;
-        feasible(scores[best]).then(|| candidates[best])
+        feasible(scores[best]).then_some(candidates[best])
     }
 }
 
@@ -471,8 +466,7 @@ impl Rsch {
         };
 
         // Phase 1: parallel planning against the shared snapshot.
-        let mut plans: Vec<Option<Result<Vec<crate::cluster::state::PodPlacement>, PlaceFailure>>> =
-            (0..specs.len()).map(|_| None).collect();
+        let mut plans: Vec<Option<PlanResult>> = (0..specs.len()).map(|_| None).collect();
         let snapshot = &self.snapshot;
         let strategies: Vec<PlacementStrategy> =
             specs.iter().map(|sp| self.strategy_for(sp)).collect();
@@ -480,13 +474,13 @@ impl Rsch {
         let mut thread_stats: Vec<RschStats> = vec![RschStats::default(); threads];
 
         let plans_ref = &mut plans;
-        crossbeam_utils::thread::scope(|scope| {
+        std::thread::scope(|scope| {
             let mut handles = Vec::new();
             for (t, stats_slot) in thread_stats.iter_mut().enumerate() {
                 let strategies = &strategies;
                 let shard = &sharded_groups[t];
                 let parallel_cfg = &parallel_cfg;
-                let handle = scope.spawn(move |_| {
+                let handle = scope.spawn(move || {
                     let mut backend = NativeBackend;
                     let mut stats = RschStats::default();
                     let mut out = Vec::new();
@@ -514,8 +508,7 @@ impl Rsch {
                     plans_ref[i] = Some(r);
                 }
             }
-        })
-        .expect("scoped threads");
+        });
         for ts in thread_stats {
             self.stats.nodes_scored += ts.nodes_scored;
             self.stats.groups_scored += ts.groups_scored;
@@ -618,8 +611,10 @@ mod tests {
     #[test]
     fn spread_scatters_inference_replicas() {
         let mut state = state_2x4();
-        let mut cfg = RschConfig::default();
-        cfg.inference_strategy = PlacementStrategy::Spread;
+        let cfg = RschConfig {
+            inference_strategy: PlacementStrategy::Spread,
+            ..RschConfig::default()
+        };
         let mut rsch = Rsch::new(cfg, &state);
         let mut spec = JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Inference, G, 4, 1);
         spec.strategy = Some(PlacementStrategy::Spread);

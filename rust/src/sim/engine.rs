@@ -95,15 +95,6 @@ impl Engine {
         self.schedule(self.now + delay, event);
     }
 
-    /// Pop the next event, advancing the clock.
-    pub fn next(&mut self) -> Option<(SimTime, Event)> {
-        let Reverse(s) = self.heap.pop()?;
-        debug_assert!(s.time >= self.now, "time went backwards");
-        self.now = s.time;
-        self.processed += 1;
-        Some((s.time, s.event))
-    }
-
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -117,6 +108,19 @@ impl Engine {
         self.heap
             .iter()
             .any(|Reverse(s)| !matches!(s.event, Event::Cycle | Event::Sample | Event::Defrag))
+    }
+}
+
+/// Popping the next event advances the clock.
+impl Iterator for Engine {
+    type Item = (SimTime, Event);
+
+    fn next(&mut self) -> Option<(SimTime, Event)> {
+        let Reverse(s) = self.heap.pop()?;
+        debug_assert!(s.time >= self.now, "time went backwards");
+        self.now = s.time;
+        self.processed += 1;
+        Some((s.time, s.event))
     }
 }
 

@@ -141,8 +141,8 @@ pub fn run_with_events(
                 if live && !deadlocked {
                     engine.schedule_in(cfg.cycle_ms, Event::Cycle);
                 } else if deadlocked {
-                    log::warn!(
-                        "scheduling stalled at t={now}ms with {} unfinished jobs",
+                    eprintln!(
+                        "warning: scheduling stalled at t={now}ms with {} unfinished jobs",
                         total_jobs - finished
                     );
                 }
@@ -313,8 +313,10 @@ mod tests {
     #[test]
     fn unsatisfiable_job_does_not_hang_the_sim() {
         let (mut state, mut qsch, mut rsch) = stack(2);
-        let mut cfg = SimConfig::default();
-        cfg.stall_cycles = 10;
+        let cfg = SimConfig {
+            stall_cycles: 10,
+            ..SimConfig::default()
+        };
         let jobs = vec![
             train(1, 1, 8, 0, 20_000),
             train(2, 5, 8, 0, 20_000), // 40 GPUs on a 16-GPU cluster.
@@ -369,8 +371,10 @@ mod tests {
         // SOR accrues from scheduling (binding), including the platform
         // overhead window (§4.2).
         let (mut state, mut qsch, mut rsch) = stack(1);
-        let mut cfg = SimConfig::default();
-        cfg.platform_overhead_ms = 60_000; // Long image pull.
+        let cfg = SimConfig {
+            platform_overhead_ms: 60_000, // Long image pull.
+            ..SimConfig::default()
+        };
         let out = run(
             &mut state,
             &mut qsch,

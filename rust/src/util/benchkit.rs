@@ -148,6 +148,34 @@ fn print_result(r: &BenchResult) {
     );
 }
 
+/// Render a result set as the `BENCH_baseline.json` document the perf
+/// trajectory tracks across PRs (regenerate from the package root with
+/// `BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench sched_cycle`).
+pub fn baseline_json(bench: &str, scale: &str, results: &[BenchResult]) -> String {
+    use super::json::Json;
+    let entries: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut e = Json::obj();
+            e.set("name", r.name.as_str())
+                .set("iters", r.iters)
+                .set("mean_ns", r.mean_ns)
+                .set("p50_ns", r.p50_ns)
+                .set("p99_ns", r.p99_ns);
+            if let Some(items) = r.items_per_iter {
+                e.set("items_per_iter", items);
+            }
+            e
+        })
+        .collect();
+    let mut doc = Json::obj();
+    doc.set("schema", "benchkit-v1")
+        .set("bench", bench)
+        .set("scale", scale)
+        .set("results", entries);
+    doc.to_string_compact()
+}
+
 /// Render nanoseconds with an adaptive unit.
 pub fn format_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -188,6 +216,23 @@ mod tests {
             .target_time(Duration::from_millis(1));
         let r = b.run_throughput("sum", 1000.0, || (0..1000u64).sum::<u64>());
         assert_eq!(r.items_per_iter, Some(1000.0));
+    }
+
+    #[test]
+    fn baseline_json_roundtrips() {
+        let mut b = Bench::new()
+            .warmup(0)
+            .min_iters(3)
+            .max_iters(3)
+            .target_time(Duration::from_millis(1));
+        b.run_throughput("case", 2.0, || 1 + 1);
+        let doc = baseline_json("sched_cycle", "Small", b.results());
+        let parsed = crate::util::json::Json::parse(&doc).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("benchkit-v1"));
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("case"));
+        assert_eq!(results[0].get("items_per_iter").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

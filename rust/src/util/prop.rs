@@ -44,7 +44,7 @@ where
 }
 
 fn derive_seed(case: usize) -> u64 {
-    0x6b61_6e74_0000_0000u64 ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    MASTER_SEED ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// Assert helper that formats into the property's Err channel.

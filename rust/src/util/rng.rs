@@ -23,7 +23,7 @@ impl SplitMix64 {
     }
 
     #[inline]
-    pub fn next(&mut self) -> u64 {
+    pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
         z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
@@ -44,8 +44,8 @@ impl Pcg32 {
     /// generators with different seeds are fully decorrelated.
     pub fn seed_from_u64(seed: u64) -> Self {
         let mut sm = SplitMix64::new(seed);
-        let state = sm.next();
-        let inc = sm.next() | 1;
+        let state = sm.next_u64();
+        let inc = sm.next_u64() | 1;
         let mut pcg = Self { state: 0, inc };
         pcg.state = pcg.state.wrapping_add(state);
         pcg.next_u32();

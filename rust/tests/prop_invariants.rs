@@ -25,8 +25,9 @@ fn random_job(rng: &mut Pcg32, id: u64, horizon_ms: u64) -> JobSpec {
     } else {
         JobKind::Inference
     };
-    let mut j = JobSpec::homogeneous(JobId(id), TenantId(rng.below(3) as u32), kind, G, replicas, gpp)
-        .with_times(rng.below(horizon_ms), rng.range_inclusive(30_000, 600_000));
+    let mut j =
+        JobSpec::homogeneous(JobId(id), TenantId(rng.below(3) as u32), kind, G, replicas, gpp)
+            .with_times(rng.below(horizon_ms), rng.range_inclusive(30_000, 600_000));
     j.priority = *rng
         .choose(&[Priority::LOW, Priority::NORMAL, Priority::HIGH])
         .unwrap();

@@ -1,0 +1,97 @@
+//! Smoke test mirroring `examples/quickstart.rs`'s core path — small
+//! cluster, short horizon, the default Kant stack — so example rot is
+//! caught by tier-1 (`cargo test`) instead of only by humans running the
+//! example. Keep in lockstep with the example's workload.
+
+use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
+use kant::cluster::ids::{GpuTypeId, JobId, TenantId};
+use kant::cluster::tenant::{QuotaLedger, QuotaMode};
+use kant::job::spec::{JobKind, JobSpec, Priority};
+use kant::metrics::report::headline;
+use kant::qsch::policy::QschConfig;
+use kant::qsch::Qsch;
+use kant::rsch::{Rsch, RschConfig};
+use kant::sim::{run, SimConfig};
+
+/// The quickstart workload: one big gang, small training jobs, an HA
+/// inference deployment, then a second large gang.
+fn quickstart_jobs() -> Vec<JobSpec> {
+    let mut jobs = vec![
+        JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Training, GpuTypeId(0), 8, 8)
+            .with_times(0, 30 * 60_000)
+            .with_priority(Priority::HIGH),
+        JobSpec::homogeneous(JobId(2), TenantId(0), JobKind::Training, GpuTypeId(0), 1, 4)
+            .with_times(10_000, 20 * 60_000),
+        JobSpec::homogeneous(JobId(3), TenantId(1), JobKind::Training, GpuTypeId(0), 1, 2)
+            .with_times(15_000, 10 * 60_000),
+        JobSpec::homogeneous(JobId(4), TenantId(1), JobKind::Inference, GpuTypeId(0), 6, 1)
+            .with_times(20_000, 60 * 60_000),
+        JobSpec::homogeneous(JobId(5), TenantId(0), JobKind::Training, GpuTypeId(0), 16, 8)
+            .with_times(30_000, 45 * 60_000),
+    ];
+    jobs.sort_by_key(|j| j.submit_ms);
+    jobs
+}
+
+#[test]
+fn quickstart_core_path_drains_cleanly() {
+    // Same shape as the example: 2 spines × 2 groups × 8 nodes = 256 GPUs.
+    let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("quickstart", 2, 2, 8));
+    assert_eq!(state.total_gpus(), 256);
+
+    let mut ledger = QuotaLedger::new(2, 1, QuotaMode::Shared);
+    ledger.set_limit(TenantId(0), GpuTypeId(0), 160);
+    ledger.set_limit(TenantId(1), GpuTypeId(0), 96);
+
+    let mut qsch = Qsch::new(QschConfig::default(), ledger);
+    let mut rsch = Rsch::new(RschConfig::default(), &state);
+
+    let out = run(
+        &mut state,
+        &mut qsch,
+        &mut rsch,
+        quickstart_jobs(),
+        &SimConfig::default(),
+    );
+
+    // Every job must finish and release its resources.
+    assert_eq!(out.unfinished_jobs, 0, "quickstart workload must drain");
+    assert_eq!(out.metrics.jobs_finished, 5);
+    assert_eq!(state.allocated_gpus(), 0);
+
+    // The metrics the example prints must be populated and sane.
+    assert!(out.metrics.sor_final() > 0.0);
+    assert!(out.metrics.gar_avg() > 0.0 && out.metrics.gar_avg() <= 1.0);
+    let report = headline("quickstart", &out.metrics);
+    assert!(report.contains("quickstart"));
+
+    // Per-job lifecycle fields the example reads.
+    for id in 1..=5u64 {
+        let j = out.store.expect(JobId(id));
+        assert!(j.is_terminal(), "job {id} not finished: {:?}", j.phase);
+        assert!(j.scheduled_ms.is_some(), "job {id} never scheduled");
+    }
+}
+
+#[test]
+fn quickstart_big_gang_gets_whole_nodes() {
+    let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("quickstart", 2, 2, 8));
+    let mut ledger = QuotaLedger::new(2, 1, QuotaMode::Shared);
+    ledger.set_limit(TenantId(0), GpuTypeId(0), 160);
+    ledger.set_limit(TenantId(1), GpuTypeId(0), 96);
+    let mut qsch = Qsch::new(QschConfig::default(), ledger);
+    let mut rsch = Rsch::new(RschConfig::default(), &state);
+
+    // Only the 64-GPU gang: it must land on exactly 8 whole nodes.
+    let jobs = vec![quickstart_jobs().remove(0)];
+    let horizon = SimConfig {
+        horizon_ms: 5 * 60_000, // Cut before it finishes: still placed.
+        ..SimConfig::default()
+    };
+    run(&mut state, &mut qsch, &mut rsch, jobs, &horizon);
+    let nodes = state.nodes_of(JobId(1));
+    assert_eq!(nodes.len(), 8);
+    for n in &nodes {
+        assert_eq!(state.node(*n).free_gpus(), 0, "gang pods take whole boards");
+    }
+}

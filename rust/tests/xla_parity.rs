@@ -2,7 +2,11 @@
 //! scorer bit-for-bit (within f32 tolerance) on randomized inputs — the
 //! contract that makes the two backends interchangeable on the hot path.
 //!
-//! Requires `make artifacts`; tests self-skip when artifacts are missing.
+//! Requires the `xla` cargo feature (the whole file is compiled out
+//! otherwise) and `make artifacts`; tests self-skip when artifacts are
+//! missing.
+
+#![cfg(feature = "xla")]
 
 use kant::rsch::features::{GROUP_F, NODE_F};
 use kant::rsch::score::{

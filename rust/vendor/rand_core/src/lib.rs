@@ -1,0 +1,80 @@
+//! Minimal vendored subset of the `rand_core` 0.6 API: the [`RngCore`]
+//! trait and its [`Error`] type. The offline build environment has no
+//! crates.io access; kant's own PRNG (`kant::util::rng::Pcg32`) implements
+//! this trait so downstream code written against `rand_core` interoperates.
+//! Swap for the real crate by replacing the `path` dependency in
+//! `rust/Cargo.toml` with a version requirement.
+
+use std::fmt;
+
+/// The core of a random number generator (rand_core 0.6 shape).
+pub trait RngCore {
+    fn next_u32(&mut self) -> u32;
+    fn next_u64(&mut self) -> u64;
+    fn fill_bytes(&mut self, dest: &mut [u8]);
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error>;
+}
+
+/// Error type for fallible RNG operations (infallible generators never
+/// construct it).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            msg: msg.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "RNG error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter(u64);
+
+    impl RngCore for Counter {
+        fn next_u32(&mut self) -> u32 {
+            self.next_u64() as u32
+        }
+        fn next_u64(&mut self) -> u64 {
+            self.0 += 1;
+            self.0
+        }
+        fn fill_bytes(&mut self, dest: &mut [u8]) {
+            for b in dest {
+                *b = self.next_u32() as u8;
+            }
+        }
+        fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error> {
+            self.fill_bytes(dest);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn trait_is_object_safe_and_usable() {
+        let mut c = Counter(0);
+        let rng: &mut dyn RngCore = &mut c;
+        assert_eq!(rng.next_u64(), 1);
+        let mut buf = [0u8; 3];
+        rng.try_fill_bytes(&mut buf).unwrap();
+        assert_eq!(buf, [2, 3, 4]);
+    }
+
+    #[test]
+    fn error_displays() {
+        assert_eq!(Error::new("x").to_string(), "RNG error: x");
+    }
+}

@@ -1,0 +1,127 @@
+//! Type-level stub of the `xla` (xla-rs) API surface `kant::runtime` uses.
+//!
+//! The real crate binds the PJRT C API and needs an XLA toolchain the
+//! hermetic build environment does not provide. This stub keeps
+//! `--features xla` type-checking (so the AOT-artifact path cannot rot)
+//! while every runtime entry point returns a descriptive error. To actually
+//! execute artifacts, point the `xla` path dependency in `rust/Cargo.toml`
+//! at the real xla-rs crate — the API below mirrors its shapes.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error for every stubbed operation.
+#[derive(Debug)]
+pub struct Error {
+    what: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "xla stub: {} unavailable (link the real xla crate; see rust/README.md)",
+            self.what
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error {
+        what: what.to_string(),
+    })
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compilation")
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Mirrors xla-rs: returns per-device, per-output buffers.
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execution")
+    }
+}
+
+/// A device buffer produced by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("buffer readback")
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HLO text parsing")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A host literal (stub holds no data).
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("reshape")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("literal readback")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("untupling")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_stub() {
+        assert!(PjRtClient::cpu().is_err());
+        let e = Literal::vec1(&[1.0f32]).reshape(&[1, 1]).unwrap_err();
+        assert!(e.to_string().contains("xla stub"));
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}
