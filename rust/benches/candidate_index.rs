@@ -1,0 +1,153 @@
+//! Candidate-selection ablation: the incremental free-capacity node index
+//! vs the linear scan, up to `xlarge` (1,250 nodes / 10,000 GPUs) — the
+//! "tens of thousands of GPUs" scale of the paper's abstract claim. The
+//! cluster is warmed to a realistic load first (mostly-full nodes plus a
+//! fragmented tail), because that is the regime where pruning the
+//! candidate walk pays: on an idle cluster every node is a candidate and
+//! no data structure can help.
+//!
+//! Run with: `cargo bench --bench candidate_index`
+
+use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
+use kant::cluster::ids::{GpuTypeId, JobId, NodeId, PodId, TenantId};
+use kant::cluster::state::{ClusterState, PodPlacement};
+use kant::job::spec::{JobKind, JobSpec};
+use kant::qsch::Placer;
+use kant::rsch::{Rsch, RschConfig};
+use kant::util::benchkit::Bench;
+use std::time::Duration;
+
+/// Deterministically load a fresh cluster: of every 16 nodes, one stays
+/// whole-free, one is fragmented to 2 free GPUs, the rest are filled
+/// whole. Small pods then fit on ~1/8 of the cluster — the bucket walk —
+/// while the linear scan still touches everything.
+fn warmed_state(spec: &ClusterSpec) -> ClusterState {
+    let mut state = ClusterBuilder::build(spec);
+    let mut id = 1_000_000u64;
+    for n in 0..state.nodes.len() as u32 {
+        let devices: Vec<u8> = match n % 16 {
+            0 => continue,           // whole-free
+            1 => (0u8..6).collect(), // fragmented: 2 free
+            _ => (0u8..8).collect(), // full
+        };
+        state
+            .commit_placements(
+                JobId(id),
+                vec![PodPlacement {
+                    pod: PodId::new(JobId(id), 0),
+                    node: NodeId(n),
+                    devices,
+                    nic: 0,
+                }],
+            )
+            .expect("warm placement");
+        id += 1;
+    }
+    state
+}
+
+fn small_job(id: u64, gpus: u32) -> JobSpec {
+    JobSpec::homogeneous(JobId(id), TenantId(0), JobKind::Training, GpuTypeId(0), 1, gpus)
+}
+
+/// Place-and-release throughput of a 2-GPU pod on the warmed cluster.
+fn bench_placement(b: &mut Bench, spec: &ClusterSpec, indexed: bool, two_level: bool) {
+    let mut state = warmed_state(spec);
+    let n = state.nodes.len();
+    let cfg = RschConfig {
+        indexed_candidates: indexed,
+        two_level,
+        ..RschConfig::default()
+    };
+    let mut rsch = Rsch::new(cfg, &state);
+    let mode = match (two_level, indexed) {
+        (false, false) => "flat-linear",
+        (false, true) => "flat-indexed",
+        (true, false) => "two-level-linear",
+        (true, true) => "two-level-indexed",
+    };
+    let mut id = 1u64;
+    b.run_throughput(&format!("place-2gpu/{mode}/{n}nodes"), 1.0, || {
+        let spec = small_job(id, 2);
+        id += 1;
+        if rsch.place(&mut state, &spec).is_ok() {
+            state.release_job(JobId(id - 1)).unwrap();
+        }
+    });
+}
+
+/// Nodes examined per placed pod over a fixed job batch (the §3.4 work
+/// counter the acceptance criterion reads).
+fn examined_per_pod(spec: &ClusterSpec, indexed: bool, two_level: bool) -> f64 {
+    let mut state = warmed_state(spec);
+    let cfg = RschConfig {
+        indexed_candidates: indexed,
+        two_level,
+        ..RschConfig::default()
+    };
+    let mut rsch = Rsch::new(cfg, &state);
+    for k in 0..256u64 {
+        let spec = small_job(1 + k, 2);
+        if rsch.place(&mut state, &spec).is_ok() {
+            state.release_job(spec.id).unwrap();
+        }
+    }
+    rsch.stats.nodes_examined as f64 / rsch.stats.pods_placed.max(1) as f64
+}
+
+fn main() {
+    let scales: Vec<(&str, ClusterSpec)> = vec![
+        ("small-256", ClusterSpec::homogeneous("idx256", 2, 4, 32)),
+        ("xlarge-10k", ClusterSpec::train10000()),
+    ];
+
+    println!("== candidate selection: free-capacity index vs linear scan ==");
+    let mut b = Bench::new()
+        .warmup(3)
+        .target_time(Duration::from_secs(2))
+        .max_iters(50_000);
+    for (_, spec) in &scales {
+        for two_level in [false, true] {
+            bench_placement(&mut b, spec, false, two_level);
+            bench_placement(&mut b, spec, true, two_level);
+        }
+    }
+
+    // Speedup summary per (scale, mode) pair: results interleave
+    // linear/indexed in that order.
+    let results = b.results().to_vec();
+    for pair in results.chunks(2) {
+        if let [linear, indexed] = pair {
+            println!(
+                "=> {} vs {}: {:.1}x faster",
+                linear.name,
+                indexed.name,
+                linear.mean_ns / indexed.mean_ns.max(1.0)
+            );
+        }
+    }
+
+    println!("== nodes examined per placed pod (flat mode isolates the index) ==");
+    for (label, spec) in &scales {
+        let flat_linear = examined_per_pod(spec, false, false);
+        let flat_indexed = examined_per_pod(spec, true, false);
+        let tl_linear = examined_per_pod(spec, false, true);
+        let tl_indexed = examined_per_pod(spec, true, true);
+        println!(
+            "{label}: flat {flat_linear:.1} -> indexed {flat_indexed:.1} \
+             ({:.1}x fewer); two-level {tl_linear:.1} -> indexed {tl_indexed:.1}",
+            flat_linear / flat_indexed.max(1e-9),
+        );
+        assert!(
+            flat_linear >= 5.0 * flat_indexed,
+            "{label}: expected >=5x reduction (flat {flat_linear:.1} vs indexed {flat_indexed:.1})"
+        );
+    }
+
+    if let Ok(path) = std::env::var("BENCH_BASELINE_OUT") {
+        let doc =
+            kant::util::benchkit::baseline_json("candidate_index", "small+xlarge", b.results());
+        std::fs::write(&path, doc + "\n").expect("writing bench baseline");
+        eprintln!("wrote bench baseline to {path}");
+    }
+}

@@ -2,9 +2,9 @@
 //! evaluation (see DESIGN.md §5 for the experiment index).
 //!
 //! Usage:
-//!   figures [--scale small|paper] [--seed N] [--out results/] <id>...
+//!   figures [--scale small|paper|xlarge] [--seed N] [--out results/] <id>...
 //!   ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15
-//!        table1 ablation-espread all
+//!        table1 ablation-espread ablation-defrag ablation-index all
 //!   (fig10 covers 10-12; fig13 covers 13-14; snapshot/two-level ablations
 //!    live in `cargo bench`.)
 
@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
         ids = vec![
             "fig2", "fig3", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
             "fig10", "fig13", "fig15", "ablation-espread", "ablation-defrag",
+            "ablation-index",
         ]
         .into_iter()
         .map(String::from)
@@ -94,6 +95,7 @@ fn main() -> anyhow::Result<()> {
             "fig15" => exp::fig15(seed),
             "ablation-espread" => exp::ablation_espread(seed),
             "ablation-defrag" => exp::ablation_defrag(seed),
+            "ablation-index" => exp::ablation_candidate_index(scale, seed),
             other => {
                 eprintln!("unknown figure id: {other}");
                 continue;
@@ -109,5 +111,6 @@ fn main() -> anyhow::Result<()> {
 
 const HELP: &str = "\
 figures — regenerate the paper's tables and figures
-usage: figures [--scale small|paper] [--seed N] [--out DIR] <id>... | all
-ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15 table1 ablation-espread ablation-defrag";
+usage: figures [--scale small|paper|xlarge] [--seed N] [--out DIR] <id>... | all
+ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15 table1 \
+ablation-espread ablation-defrag ablation-index";

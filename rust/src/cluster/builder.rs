@@ -88,6 +88,13 @@ impl ClusterSpec {
         ClusterSpec::homogeneous("train8000", 8, 4, 32)
     }
 
+    /// The "tens of thousands of GPUs" end of the paper's abstract claim:
+    /// 1,250 × 8-GPU nodes = exactly 10,000 GPUs, in 50 LeafGroups of 25
+    /// nodes. The scale the candidate-index ablation proves itself at.
+    pub fn train10000() -> ClusterSpec {
+        ClusterSpec::homogeneous("train10000", 10, 5, 25)
+    }
+
     pub fn total_groups(&self) -> u32 {
         self.gpu_types.iter().map(|p| p.groups).sum()
     }
@@ -214,6 +221,15 @@ mod tests {
         assert_eq!(s.nodes.len(), 1024);
         assert_eq!(s.total_gpus(), 8192);
         assert_eq!(s.fabric.num_groups(), 32);
+    }
+
+    #[test]
+    fn train10000_is_ten_thousand_gpu_scale() {
+        let spec = ClusterSpec::train10000();
+        let s = ClusterBuilder::build(&spec);
+        assert_eq!(s.nodes.len(), 1250);
+        assert_eq!(s.total_gpus(), 10_000);
+        assert_eq!(s.fabric.num_groups(), 50);
     }
 
     #[test]

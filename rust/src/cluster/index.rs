@@ -1,0 +1,441 @@
+//! Incremental free-capacity node index: sublinear candidate selection
+//! for RSCH's per-pod hot path.
+//!
+//! Kant's headline claim is stable scheduling "in clusters ranging from
+//! hundreds to tens of thousands of GPUs"; the §3.4 mechanisms (GPU-type
+//! pools, two-level NodeNetGroup scheduling, incremental snapshots) all
+//! exist to keep per-cycle work from scaling with cluster size. This
+//! module closes the remaining O(pool) scan in candidate filtering:
+//! schedulable nodes are bucketed by **(NodeNetGroup, zone class,
+//! free-GPU count)**, so selecting candidates for a pod needing `g` GPUs
+//! walks only the buckets with `free >= g` instead of every node in the
+//! pool. Whole-node placements (`g` = board size) degenerate to reading
+//! the single whole-node-free bucket directly — exactly the set E-Spread's
+//! fallback and large-gang E-Binpack care about.
+//!
+//! The index is maintained **incrementally from the same mutation log
+//! that feeds [`Snapshot::refresh`]**: a full rebuild on the first
+//! refresh (or after log compaction), then one [`NodeIndex::update_record`]
+//! per touched node. It therefore always mirrors the *snapshot's* view —
+//! the consistent scheduling-time state — never a half-applied one.
+//!
+//! Correctness contract: for any `(group, min_free, zone)` query the
+//! index returns exactly the nodes whose **snapshot record** satisfies
+//! `healthy && free >= min_free && zone matches`, in ascending [`NodeId`]
+//! order. Callers re-apply plan-local conditions (in-flight device
+//! takings, HBD pinning) on this superset, which is what makes indexed
+//! selection produce placements byte-identical to the linear scan — a
+//! property-tested invariant (`tests/prop_invariants.rs`).
+//!
+//! [`Snapshot::refresh`]: super::snapshot::Snapshot::refresh
+
+use super::ids::{GroupId, NodeId};
+use super::snapshot::NodeRecord;
+use super::state::ClusterState;
+
+/// Zone-class predicate for queries (mirrors RSCH's E-Spread phases).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ZoneQuery {
+    /// Both zone classes.
+    Any,
+    /// Only nodes inside the inference dedicated zone.
+    ZoneOnly,
+    /// Only general-pool nodes.
+    GeneralOnly,
+}
+
+/// The slice of one node's state the index buckets on.
+#[derive(Debug, Clone, Copy)]
+pub struct IndexEntry {
+    pub id: NodeId,
+    pub group: GroupId,
+    pub free: u32,
+    pub total: u32,
+    pub zoned: bool,
+    pub healthy: bool,
+}
+
+impl IndexEntry {
+    fn of_record(r: &NodeRecord) -> IndexEntry {
+        IndexEntry {
+            id: r.id,
+            group: r.group,
+            free: r.free,
+            total: r.total,
+            zoned: r.in_inference_zone,
+            healthy: r.healthy,
+        }
+    }
+}
+
+/// Where one node currently sits (for O(log bucket) removal on update).
+#[derive(Debug, Clone, Copy, Default)]
+struct Slot {
+    free: u32,
+    zoned: bool,
+    present: bool,
+}
+
+/// Free-count buckets of one NodeNetGroup, split by zone class
+/// (`[0]` = general pool, `[1]` = inference dedicated zone). Bucket `f`
+/// holds the schedulable member nodes with exactly `f` free GPUs, each
+/// bucket sorted ascending by node id.
+#[derive(Debug, Clone, Default)]
+struct GroupBuckets {
+    by_free: [Vec<Vec<NodeId>>; 2],
+}
+
+/// The free-capacity index. See the module docs for the contract.
+#[derive(Debug, Clone, Default)]
+pub struct NodeIndex {
+    groups: Vec<GroupBuckets>,
+    slots: Vec<Slot>,
+}
+
+fn zone_idx(zoned: bool) -> usize {
+    usize::from(zoned)
+}
+
+impl NodeIndex {
+    /// Build from a snapshot's node records (full-rebuild path).
+    pub fn from_records(records: &[NodeRecord], num_groups: usize) -> NodeIndex {
+        Self::build(records.iter().map(IndexEntry::of_record), num_groups, records.len())
+    }
+
+    /// Build directly from the authoritative state (used by consumers that
+    /// run outside the snapshot cycle, e.g. defragmentation rounds).
+    pub fn from_state(state: &ClusterState) -> NodeIndex {
+        let entries = state.nodes.iter().map(|n| IndexEntry {
+            id: n.id,
+            group: n.group,
+            free: n.free_gpus(),
+            total: n.total_gpus(),
+            zoned: n.zone == super::node::Zone::InferenceDedicated,
+            healthy: n.health.schedulable(),
+        });
+        Self::build(entries, state.fabric.num_groups(), state.nodes.len())
+    }
+
+    fn build(
+        entries: impl Iterator<Item = IndexEntry> + Clone,
+        num_groups: usize,
+        num_nodes: usize,
+    ) -> NodeIndex {
+        let mut caps = vec![0u32; num_groups];
+        for e in entries.clone() {
+            let c = &mut caps[e.group.index()];
+            *c = (*c).max(e.total);
+        }
+        let mut ix = NodeIndex {
+            groups: caps
+                .iter()
+                .map(|&c| GroupBuckets {
+                    by_free: [
+                        vec![Vec::new(); c as usize + 1],
+                        vec![Vec::new(); c as usize + 1],
+                    ],
+                })
+                .collect(),
+            slots: vec![Slot::default(); num_nodes],
+        };
+        for e in entries {
+            ix.insert(&e);
+        }
+        ix
+    }
+
+    fn insert(&mut self, e: &IndexEntry) {
+        self.slots[e.id.index()] = Slot {
+            free: e.free,
+            zoned: e.zoned,
+            present: e.healthy,
+        };
+        if e.healthy {
+            let b = &mut self.groups[e.group.index()].by_free[zone_idx(e.zoned)][e.free as usize];
+            let pos = b.partition_point(|&n| n < e.id);
+            b.insert(pos, e.id);
+        }
+    }
+
+    /// Re-slot one node after its snapshot record changed (the incremental
+    /// path, driven by the cluster's mutation log).
+    pub fn update_record(&mut self, rec: &NodeRecord) {
+        let e = IndexEntry::of_record(rec);
+        let old = self.slots[e.id.index()];
+        if old.present {
+            let b =
+                &mut self.groups[e.group.index()].by_free[zone_idx(old.zoned)][old.free as usize];
+            if let Ok(pos) = b.binary_search(&e.id) {
+                b.remove(pos);
+            }
+        }
+        self.insert(&e);
+    }
+
+    /// Append every indexed node of `group` with `min_free <= free <=
+    /// max_free` and a matching zone class to `out`. Returns how many
+    /// nodes were walked (== appended) — the work counter the §3.4
+    /// ablation reports. Each bucket is ascending by id; callers merging
+    /// several buckets/groups sort once at the end.
+    pub fn for_group_range(
+        &self,
+        group: GroupId,
+        min_free: u32,
+        max_free: u32,
+        zone: ZoneQuery,
+        out: &mut Vec<NodeId>,
+    ) -> u64 {
+        let Some(gb) = self.groups.get(group.index()) else {
+            return 0;
+        };
+        let mut walked = 0u64;
+        for (zi, buckets) in gb.by_free.iter().enumerate() {
+            let keep = match zone {
+                ZoneQuery::Any => true,
+                ZoneQuery::ZoneOnly => zi == 1,
+                ZoneQuery::GeneralOnly => zi == 0,
+            };
+            if !keep || buckets.is_empty() {
+                continue;
+            }
+            let lo = min_free as usize;
+            let hi = (max_free as usize).min(buckets.len() - 1);
+            if lo > hi {
+                continue;
+            }
+            for b in &buckets[lo..=hi] {
+                walked += b.len() as u64;
+                out.extend_from_slice(b);
+            }
+        }
+        walked
+    }
+
+    /// [`for_group_range`](Self::for_group_range) with no upper bound.
+    pub fn for_group(
+        &self,
+        group: GroupId,
+        min_free: u32,
+        zone: ZoneQuery,
+        out: &mut Vec<NodeId>,
+    ) -> u64 {
+        self.for_group_range(group, min_free, u32::MAX, zone, out)
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::gpu::Health;
+    use crate::cluster::ids::{JobId, PodId};
+    use crate::cluster::snapshot::{Snapshot, SnapshotMode};
+    use crate::cluster::state::PodPlacement;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn state() -> ClusterState {
+        // 2 spines x 2 groups x 4 nodes x 8 GPUs = 16 nodes.
+        ClusterBuilder::build(&ClusterSpec::homogeneous("ix", 2, 2, 4))
+    }
+
+    fn placement(job: u64, node: u32, devs: Vec<u8>) -> PodPlacement {
+        PodPlacement {
+            pod: PodId::new(JobId(job), 0),
+            node: NodeId(node),
+            devices: devs,
+            nic: 0,
+        }
+    }
+
+    /// Reference query: linear scan over the snapshot records.
+    fn brute(
+        snap: &Snapshot,
+        group: GroupId,
+        min_free: u32,
+        max_free: u32,
+        zone: ZoneQuery,
+    ) -> Vec<NodeId> {
+        snap.nodes
+            .iter()
+            .filter(|r| {
+                r.group == group
+                    && r.healthy
+                    && r.free >= min_free
+                    && r.free <= max_free
+                    && match zone {
+                        ZoneQuery::Any => true,
+                        ZoneQuery::ZoneOnly => r.in_inference_zone,
+                        ZoneQuery::GeneralOnly => !r.in_inference_zone,
+                    }
+            })
+            .map(|r| r.id)
+            .collect()
+    }
+
+    fn query(ix: &NodeIndex, group: GroupId, min: u32, max: u32, zone: ZoneQuery) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        ix.for_group_range(group, min, max, zone, &mut out);
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn fresh_cluster_is_all_whole_free() {
+        let s = state();
+        let mut snap = Snapshot::with_index(SnapshotMode::DeepCopy, true);
+        snap.refresh(&s);
+        let ix = snap.index().unwrap();
+        // Every node sits in the free==8 bucket; asking for whole nodes
+        // walks exactly the group's node count and nothing else.
+        let mut out = Vec::new();
+        let walked = ix.for_group(GroupId(0), 8, ZoneQuery::Any, &mut out);
+        assert_eq!(walked, 4);
+        assert_eq!(out, (0..4).map(NodeId).collect::<Vec<_>>());
+        // And a 1-GPU query walks the same nodes (no emptier buckets).
+        let mut out1 = Vec::new();
+        assert_eq!(ix.for_group(GroupId(0), 1, ZoneQuery::Any, &mut out1), 4);
+    }
+
+    #[test]
+    fn allocations_move_nodes_between_buckets() {
+        let mut s = state();
+        let mut snap = Snapshot::with_index(SnapshotMode::Incremental, true);
+        snap.refresh(&s);
+        s.commit_placements(JobId(1), vec![placement(1, 0, vec![0, 1, 2])])
+            .unwrap();
+        snap.refresh(&s);
+        let ix = snap.index().unwrap();
+        // Node 0 now has 5 free: excluded from a 6-GPU query, included in 5.
+        assert_eq!(
+            query(ix, GroupId(0), 6, u32::MAX, ZoneQuery::Any),
+            (1..4).map(NodeId).collect::<Vec<_>>()
+        );
+        assert!(query(ix, GroupId(0), 5, u32::MAX, ZoneQuery::Any).contains(&NodeId(0)));
+        // Whole-free count in the group dropped to 3.
+        assert_eq!(query(ix, GroupId(0), 8, u32::MAX, ZoneQuery::Any).len(), 3);
+    }
+
+    #[test]
+    fn unhealthy_nodes_leave_the_index() {
+        let mut s = state();
+        let mut snap = Snapshot::with_index(SnapshotMode::Incremental, true);
+        snap.refresh(&s);
+        s.set_node_health(NodeId(2), Health::Cordoned);
+        snap.refresh(&s);
+        let ix = snap.index().unwrap();
+        let all = query(ix, GroupId(0), 0, u32::MAX, ZoneQuery::Any);
+        assert!(!all.contains(&NodeId(2)));
+        s.set_node_health(NodeId(2), Health::Healthy);
+        snap.refresh(&s);
+        let healed = query(snap.index().unwrap(), GroupId(0), 8, u32::MAX, ZoneQuery::Any);
+        assert!(healed.contains(&NodeId(2)));
+    }
+
+    #[test]
+    fn zone_classes_are_disjoint() {
+        let mut spec = ClusterSpec::homogeneous("z", 1, 4, 4);
+        spec.inference_zone_frac = 0.25; // Group 3 zoned.
+        let s = ClusterBuilder::build(&spec);
+        let mut snap = Snapshot::with_index(SnapshotMode::DeepCopy, true);
+        snap.refresh(&s);
+        let ix = snap.index().unwrap();
+        assert!(query(ix, GroupId(3), 1, u32::MAX, ZoneQuery::GeneralOnly).is_empty());
+        assert_eq!(query(ix, GroupId(3), 1, u32::MAX, ZoneQuery::ZoneOnly).len(), 4);
+        assert!(query(ix, GroupId(0), 1, u32::MAX, ZoneQuery::ZoneOnly).is_empty());
+    }
+
+    #[test]
+    fn from_state_matches_snapshot_built_index() {
+        let mut s = state();
+        s.commit_placements(JobId(1), vec![placement(1, 5, vec![0, 1])])
+            .unwrap();
+        s.set_node_health(NodeId(9), Health::Cordoned);
+        let mut snap = Snapshot::with_index(SnapshotMode::DeepCopy, true);
+        snap.refresh(&s);
+        let from_state = NodeIndex::from_state(&s);
+        let from_snap = snap.index().unwrap();
+        for g in 0..s.fabric.num_groups() {
+            for min in [0u32, 1, 4, 8] {
+                for zone in [ZoneQuery::Any, ZoneQuery::ZoneOnly, ZoneQuery::GeneralOnly] {
+                    assert_eq!(
+                        query(&from_state, GroupId(g as u32), min, u32::MAX, zone),
+                        query(from_snap, GroupId(g as u32), min, u32::MAX, zone),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_incremental_index_matches_brute_force() {
+        prop::check(40, |rng: &mut Pcg32| {
+            let mut s = state();
+            let mut snap = Snapshot::with_index(SnapshotMode::Incremental, true);
+            snap.refresh(&s);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next = 1u64;
+            for step in 0..rng.range_inclusive(1, 40) {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let node = NodeId(rng.below(16) as u32);
+                        let want = rng.range_inclusive(1, 4) as usize;
+                        let free = s.node(node).free_gpu_indices();
+                        if free.len() >= want && s.node(node).health.schedulable() {
+                            s.commit_placements(
+                                JobId(next),
+                                vec![placement(next, node.0, free[..want].to_vec())],
+                            )
+                            .unwrap();
+                            live.push(next);
+                            next += 1;
+                        }
+                    }
+                    2 => {
+                        if let Some(i) = (!live.is_empty())
+                            .then(|| rng.below(live.len() as u64) as usize)
+                        {
+                            let j = live.swap_remove(i);
+                            s.release_job(JobId(j)).unwrap();
+                        }
+                    }
+                    _ => {
+                        let node = NodeId(rng.below(16) as u32);
+                        if s.node(node).allocated_gpus() == 0 {
+                            let h = if s.node(node).health.schedulable() {
+                                Health::Cordoned
+                            } else {
+                                Health::Healthy
+                            };
+                            s.set_node_health(node, h);
+                        }
+                    }
+                }
+                if rng.chance(0.4) || step == 0 {
+                    snap.refresh(&s);
+                    let ix = snap.index().unwrap();
+                    for g in 0..4u32 {
+                        let min = rng.below(9) as u32;
+                        let max = min + rng.below(9) as u32;
+                        let zones = [ZoneQuery::Any, ZoneQuery::ZoneOnly, ZoneQuery::GeneralOnly];
+                        for zone in zones {
+                            let got = query(ix, GroupId(g), min, max, zone);
+                            let want = brute(&snap, GroupId(g), min, max, zone);
+                            prop_assert!(
+                                got == want,
+                                "index diverged at step {step} (group {g}, \
+                                 free {min}..={max}, {zone:?}): {got:?} vs {want:?}"
+                            );
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

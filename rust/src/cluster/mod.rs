@@ -5,6 +5,7 @@
 pub mod builder;
 pub mod gpu;
 pub mod ids;
+pub mod index;
 pub mod node;
 pub mod pool;
 pub mod snapshot;
@@ -17,6 +18,7 @@ pub use gpu::{GpuDevice, GpuType, Health, Nic};
 pub use ids::{
     GpuTypeId, GroupId, HbdId, JobId, NodeId, PodId, PoolId, SpineId, SuperSpineId, TenantId,
 };
+pub use index::{NodeIndex, ZoneQuery};
 pub use node::{AllocError, Node, Zone};
 pub use pool::{NodePool, PoolSet};
 pub use snapshot::{GroupRecord, NodeRecord, Snapshot, SnapshotMode, SnapshotStats};

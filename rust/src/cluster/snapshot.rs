@@ -10,6 +10,7 @@
 //! property-tested and the ablation bench measures the gap.
 
 use super::ids::{GpuTypeId, GroupId, NodeId};
+use super::index::NodeIndex;
 use super::node::Zone;
 use super::state::ClusterState;
 
@@ -61,6 +62,10 @@ pub struct Snapshot {
     /// Mutation-log cursor (Incremental mode).
     cursor: u64,
     initialized: bool,
+    /// Optional free-capacity index over the records (see
+    /// [`crate::cluster::index`]), kept in lockstep by the same
+    /// mutation-log delta that refreshes the records themselves.
+    index: Option<NodeIndex>,
     /// Refresh-cost counters for the §3.4.3 ablation.
     pub stats: SnapshotStats,
 }
@@ -81,8 +86,24 @@ impl Snapshot {
             mode,
             cursor: 0,
             initialized: false,
+            index: None,
             stats: SnapshotStats::default(),
         }
+    }
+
+    /// Like [`Snapshot::new`], optionally carrying a [`NodeIndex`] that is
+    /// maintained from the same mutation-log delta as the records.
+    pub fn with_index(mode: SnapshotMode, indexed: bool) -> Snapshot {
+        let mut s = Snapshot::new(mode);
+        if indexed {
+            s.index = Some(NodeIndex::default());
+        }
+        s
+    }
+
+    /// The free-capacity index, if this snapshot maintains one.
+    pub fn index(&self) -> Option<&NodeIndex> {
+        self.index.as_ref()
     }
 
     pub fn mode(&self) -> SnapshotMode {
@@ -142,6 +163,9 @@ impl Snapshot {
             })
             .collect();
         self.rebuild_all_groups(state);
+        if let Some(ix) = &mut self.index {
+            *ix = NodeIndex::from_records(&self.nodes, state.fabric.num_groups());
+        }
         self.cursor = state.log_head();
         self.initialized = true;
     }
@@ -162,6 +186,9 @@ impl Snapshot {
             largest_free_island: n.largest_free_island(gpu_type),
         };
         self.nodes[id.index()] = rec;
+        if let Some(ix) = &mut self.index {
+            ix.update_record(&rec);
+        }
         self.rebuild_group(state, n.group);
         // HBD free counts are cluster aggregates: any member node's record
         // may be stale after a mutation elsewhere in the domain. Refresh

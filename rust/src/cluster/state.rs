@@ -169,6 +169,24 @@ impl ClusterState {
         self.hbd_free[h.index()]
     }
 
+    /// Groups containing each pool's nodes (pool index → sorted, deduped
+    /// group list). Static topology, derived on demand — the per-pool
+    /// group walk both RSCH construction and defrag rounds rely on.
+    pub fn pool_groups(&self) -> Vec<Vec<GroupId>> {
+        let mut pg: Vec<Vec<GroupId>> = vec![Vec::new(); self.pools.len()];
+        for pool in self.pools.iter() {
+            let mut gs: Vec<GroupId> = pool
+                .nodes
+                .iter()
+                .map(|&n| self.node(n).group)
+                .collect();
+            gs.sort_unstable();
+            gs.dedup();
+            pg[pool.id.index()] = gs;
+        }
+        pg
+    }
+
     /// Free GPUs in the pool serving `gpu_type` (dynamic-admission input).
     pub fn pool_free_for_type(&self, gpu_type: GpuTypeId) -> u32 {
         self.pools

@@ -7,11 +7,15 @@ use crate::cluster::state::ClusterState;
 use crate::cluster::tenant::{QuotaLedger, QuotaMode};
 use crate::job::workload::WorkloadConfig;
 
-/// Run scale: `Paper` mirrors §5's sizes; `Small` is CI-friendly.
+/// Run scale: `Paper` mirrors §5's sizes; `Small` is CI-friendly;
+/// `XLarge` is the "tens of thousands of GPUs" end of the abstract's
+/// claim (1,250 nodes / 10,000 GPUs) — the scale where sublinear
+/// candidate selection earns its keep.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scale {
     Small,
     Paper,
+    XLarge,
 }
 
 impl Scale {
@@ -19,6 +23,7 @@ impl Scale {
         match s {
             "small" => Some(Scale::Small),
             "paper" | "full" => Some(Scale::Paper),
+            "xlarge" | "10k" => Some(Scale::XLarge),
             _ => None,
         }
     }
@@ -38,9 +43,11 @@ pub struct Environment {
 ///
 /// `Paper`: 1,024 nodes / 8,192 GPUs (the paper's "8,000-GPU" cluster),
 /// 32-node LeafGroups. `Small`: 128 nodes / 1,024 GPUs, same group shape.
+/// `XLarge`: 1,250 nodes / 10,000 GPUs in 50 LeafGroups of 25.
 pub fn training_cluster(scale: Scale, seed: u64, rho: f64) -> Environment {
     let (spec, days) = match scale {
         Scale::Paper => (ClusterSpec::train8000(), 14.0),
+        Scale::XLarge => (ClusterSpec::train10000(), 14.0),
         Scale::Small => (ClusterSpec::homogeneous("train1024", 2, 2, 32), 4.0),
     };
     let state = ClusterBuilder::build(&spec);
@@ -207,6 +214,9 @@ mod tests {
         let paper = training_cluster(Scale::Paper, 1, 0.9);
         assert_eq!(paper.state.total_gpus(), 8192);
         assert!(paper.horizon_ms > small.horizon_ms);
+        let xlarge = training_cluster(Scale::XLarge, 1, 0.9);
+        assert_eq!(xlarge.state.total_gpus(), 10_000);
+        assert_eq!(xlarge.state.nodes.len(), 1250);
     }
 
     #[test]
@@ -240,6 +250,8 @@ mod tests {
     fn scale_parses() {
         assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
         assert_eq!(Scale::parse("small"), Some(Scale::Small));
+        assert_eq!(Scale::parse("xlarge"), Some(Scale::XLarge));
+        assert_eq!(Scale::parse("10k"), Some(Scale::XLarge));
         assert_eq!(InferencePreset::parse("a10"), Some(InferencePreset::A10));
     }
 }

@@ -40,12 +40,18 @@ const HELP: &str = "\
 kant — unified scheduling system for large-scale AI clusters (paper reproduction)
 
 usage:
-  kant simulate [--cluster train|i2|i7|a10] [--scale small|paper] [--seed N]
+  kant simulate [--cluster train|i2|i7|a10] [--scale small|paper|xlarge] [--seed N]
                 [--policy strict-fifo|best-effort|backfill]
                 [--strategy native|binpack|e-binpack|spread|e-spread]
                 [--trace FILE] [--xla-scorer] [--flat] [--deep-snapshot]
+                [--no-index]
   kant gen-trace [--seed N] [--jobs N] [--mix training|inference] --out FILE
   kant validate [--artifacts DIR]
+
+flags:
+  --flat           disable two-level (NodeNetGroup preselect) scheduling
+  --deep-snapshot  rebuild the full snapshot every cycle (no §3.4.3 delta)
+  --no-index       linear candidate scans instead of the free-capacity index
 ";
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
@@ -93,19 +99,23 @@ fn simulate(args: &[String]) -> Result<()> {
     if has_flag(args, "--deep-snapshot") {
         rsch_cfg.snapshot_mode = kant::cluster::snapshot::SnapshotMode::DeepCopy;
     }
+    if has_flag(args, "--no-index") {
+        rsch_cfg.indexed_candidates = false;
+    }
 
     let jobs = match flag_value(args, "--trace") {
         Some(path) => trace::read_trace(&PathBuf::from(path))?,
         None => WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms),
     };
     println!(
-        "cluster={} gpus={} jobs={} policy={} two_level={} snapshot={:?} scorer={}",
+        "cluster={} gpus={} jobs={} policy={} two_level={} snapshot={:?} indexed={} scorer={}",
         env.label,
         env.state.total_gpus(),
         jobs.len(),
         policy.as_str(),
         rsch_cfg.two_level,
         rsch_cfg.snapshot_mode,
+        rsch_cfg.indexed_candidates,
         if has_flag(args, "--xla-scorer") { "xla" } else { "native" },
     );
 

@@ -101,7 +101,28 @@ impl Metrics {
         self.gar.at(t) / self.total_gpus.max(1) as f64
     }
 
-    /// Time-averaged GAR over the whole run.
+    /// **GAR** (GPU Allocation Ratio, §4.1): allocated GPUs / total GPUs,
+    /// time-averaged over the whole observation window.
+    ///
+    /// ```
+    /// use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
+    /// use kant::cluster::ids::{JobId, NodeId, PodId};
+    /// use kant::cluster::state::PodPlacement;
+    /// use kant::metrics::Metrics;
+    ///
+    /// // 2 nodes x 8 GPUs = 16 GPUs.
+    /// let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2));
+    /// let mut m = Metrics::new(&state, 0);
+    /// state.commit_placements(JobId(1), vec![PodPlacement {
+    ///     pod: PodId::new(JobId(1), 0),
+    ///     node: NodeId(0),
+    ///     devices: (0..8).collect(),
+    ///     nic: 0,
+    /// }]).unwrap();
+    /// m.observe_cluster(0, &state);   // 8/16 GPUs held from t = 0 ms ...
+    /// m.observe_cluster(100, &state); // ... through t = 100 ms.
+    /// assert!((m.gar_avg() - 0.5).abs() < 1e-9);
+    /// ```
     pub fn gar_avg(&self) -> f64 {
         let (a, b) = self.window();
         if b <= a {
@@ -131,10 +152,64 @@ impl Metrics {
         self.gar.integral(self.t0, t) / (self.total_gpus.max(1) as f64 * (t - self.t0) as f64)
     }
 
+    /// **SOR** (Scheduling Occupancy Rate, §4.2) at the end of the run:
+    /// cumulative allocated GPU-time over available GPU-time. Unlike
+    /// [`Metrics::gar_avg`] sampled at an instant, SOR integrates the
+    /// whole history, so it also charges the §4.2 binding window (image
+    /// pull, container start) where GPUs are held but not yet running.
+    ///
+    /// ```
+    /// use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
+    /// use kant::cluster::ids::{JobId, NodeId, PodId};
+    /// use kant::cluster::state::PodPlacement;
+    /// use kant::metrics::Metrics;
+    ///
+    /// let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2));
+    /// let mut m = Metrics::new(&state, 0);
+    /// state.commit_placements(JobId(1), vec![PodPlacement {
+    ///     pod: PodId::new(JobId(1), 0),
+    ///     node: NodeId(0),
+    ///     devices: (0..8).collect(),
+    ///     nic: 0,
+    /// }]).unwrap();
+    /// m.observe_cluster(0, &state);
+    /// m.observe_cluster(100, &state);
+    /// state.release_job(JobId(1)).unwrap();
+    /// m.observe_cluster(100, &state);
+    /// m.observe_cluster(200, &state);
+    /// // 8 GPUs held for 100 of 200 ms on a 16-GPU cluster: SOR = 0.25.
+    /// assert!((m.sor_final() - 0.25).abs() < 1e-9);
+    /// ```
     pub fn sor_final(&self) -> f64 {
         self.sor_at(self.last_ms)
     }
 
+    /// **GFR** (GPU node Fragmentation Ratio, §4.3): fragmented nodes /
+    /// schedulable nodes, time-averaged over the run. A node is
+    /// *fragmented* when partially allocated — neither fully idle nor
+    /// fully occupied (see [`crate::cluster::Node::is_fragmented`]); the
+    /// instantaneous value comes from
+    /// [`crate::cluster::ClusterState::fragmentation_ratio`].
+    ///
+    /// ```
+    /// use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
+    /// use kant::cluster::ids::{JobId, NodeId, PodId};
+    /// use kant::cluster::state::PodPlacement;
+    /// use kant::metrics::Metrics;
+    ///
+    /// let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2));
+    /// let mut m = Metrics::new(&state, 0);
+    /// // 2 of 8 GPUs on one node: 1 of 2 nodes fragmented.
+    /// state.commit_placements(JobId(1), vec![PodPlacement {
+    ///     pod: PodId::new(JobId(1), 0),
+    ///     node: NodeId(0),
+    ///     devices: vec![0, 1],
+    ///     nic: 0,
+    /// }]).unwrap();
+    /// m.observe_cluster(0, &state);
+    /// m.observe_cluster(100, &state);
+    /// assert!((m.gfr_avg() - 0.5).abs() < 1e-9);
+    /// ```
     pub fn gfr_avg(&self) -> f64 {
         let (a, b) = self.window();
         if b <= a {
@@ -177,14 +252,78 @@ impl Metrics {
             .collect()
     }
 
+    /// **JWTD** (Job Waiting Time Distribution, §4.4): per-size-bucket
+    /// summaries of submit→schedule waits, recorded by
+    /// [`Metrics::on_scheduled`]. Buckets follow the paper (1, 2–8, 9–64,
+    /// 65–256, 257–1024, 1025+ GPUs). For censored waits of
+    /// never-scheduled jobs use [`crate::experiments::jwtd_buckets`].
+    ///
+    /// ```
+    /// use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
+    /// use kant::cluster::ids::{GpuTypeId, JobId, TenantId};
+    /// use kant::job::spec::{JobKind, JobSpec};
+    /// use kant::job::state::Job;
+    /// use kant::metrics::Metrics;
+    ///
+    /// let state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2));
+    /// let mut m = Metrics::new(&state, 0);
+    /// let spec = JobSpec::homogeneous(
+    ///     JobId(7), TenantId(0), JobKind::Training, GpuTypeId(0), 1, 8);
+    /// let mut job = Job::new(spec); // Submitted at t = 0 ...
+    /// job.mark_admitted();
+    /// job.mark_scheduled(30_000);   // ... scheduled 30 s later.
+    /// m.on_scheduled(30_000, &state, &job);
+    /// let buckets = m.jwtd_summaries();
+    /// assert_eq!(buckets[1].0, "2-8"); // An 8-GPU job: the 2–8 bucket.
+    /// assert_eq!(buckets[1].1.count, 1);
+    /// assert!((buckets[1].1.mean - 30_000.0).abs() < 1e-9);
+    /// ```
     pub fn jwtd_summaries(&self) -> Vec<(String, Summary)> {
         self.jwtd.summaries()
     }
 
+    /// **JTTED** node deviation (Job Training Time Estimation Distribution,
+    /// §4.5): actual node count / optimal node count per size bucket — 1.0
+    /// is a perfect packing, higher means the job was scattered across
+    /// more nodes than its GPU demand requires.
+    ///
+    /// ```
+    /// use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
+    /// use kant::cluster::ids::{GpuTypeId, JobId, NodeId, PodId, TenantId};
+    /// use kant::cluster::state::PodPlacement;
+    /// use kant::job::spec::{JobKind, JobSpec};
+    /// use kant::job::state::Job;
+    /// use kant::metrics::Metrics;
+    ///
+    /// let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2));
+    /// let mut m = Metrics::new(&state, 0);
+    /// // An 8-GPU job on exactly one 8-GPU node: the optimal packing.
+    /// state.commit_placements(JobId(1), vec![PodPlacement {
+    ///     pod: PodId::new(JobId(1), 0),
+    ///     node: NodeId(0),
+    ///     devices: (0..8).collect(),
+    ///     nic: 0,
+    /// }]).unwrap();
+    /// let spec = JobSpec::homogeneous(
+    ///     JobId(1), TenantId(0), JobKind::Training, GpuTypeId(0), 1, 8);
+    /// let mut job = Job::new(spec);
+    /// job.mark_admitted();
+    /// job.mark_scheduled(1_000);
+    /// m.on_scheduled(1_000, &state, &job);
+    /// let dev = m.jtted_node_summaries();
+    /// assert_eq!(dev[1].1.count, 1);
+    /// assert!((dev[1].1.mean - 1.0).abs() < 1e-9); // actual/optimal = 1/1.
+    /// ```
     pub fn jtted_node_summaries(&self) -> Vec<(String, Summary)> {
         self.jtted_node.summaries()
     }
 
+    /// **JTTED** NodeNetGroup deviation (§4.5): actual groups spanned /
+    /// optimal group count per size bucket — the communication-locality
+    /// half of the JTTED story (crossing LeafGroups costs bandwidth).
+    /// Recorded alongside [`Metrics::jtted_node_summaries`] by
+    /// [`Metrics::on_scheduled`]; the same example yields a 1.0 mean here
+    /// too (one node ⇒ one group).
     pub fn jtted_group_summaries(&self) -> Vec<(String, Summary)> {
         self.jtted_group.summaries()
     }

@@ -13,7 +13,8 @@
 //! the simulator replays it as release→place, so metrics see the real
 //! cost.
 
-use crate::cluster::ids::{JobId, NodeId};
+use crate::cluster::ids::{GroupId, JobId, NodeId};
+use crate::cluster::index::{NodeIndex, ZoneQuery};
 use crate::cluster::state::{ClusterState, PodPlacement};
 use crate::job::store::JobStore;
 
@@ -64,11 +65,27 @@ pub fn plan_round(
     store: &JobStore,
     cfg: &DefragConfig,
 ) -> Vec<Migration> {
+    // One O(nodes) free-capacity index build per round replaces both the
+    // O(cluster) fragmented-source scan and the per-pod O(pool)
+    // destination scans: only buckets that can matter are walked, and
+    // exact eligibility is re-checked per candidate, so plans are
+    // identical to the full scans.
+    let index = NodeIndex::from_state(state);
+    // Pool→groups is static topology; deriving it here is one O(nodes)
+    // pass per round, kept local so plan_round stays a free function.
+    let pool_groups = state.pool_groups();
+
     // Source candidates: fragmented nodes with little to drain, emptiest
-    // first (cheapest whole-node wins).
-    let mut sources: Vec<&crate::cluster::node::Node> = state
-        .nodes
+    // first (cheapest whole-node wins). Fragmented nodes have >= 1 free
+    // GPU, so fully-allocated nodes — the bulk of a busy cluster — are
+    // never walked; whole-free ones are rejected by the exact check.
+    let mut source_ids: Vec<NodeId> = Vec::new();
+    for g in 0..index.num_groups() {
+        index.for_group(GroupId(g as u32), 1, ZoneQuery::Any, &mut source_ids);
+    }
+    let mut sources: Vec<&crate::cluster::node::Node> = source_ids
         .iter()
+        .map(|&n| state.node(n))
         .filter(|n| n.is_fragmented() && n.allocated_gpus() <= cfg.max_source_alloc)
         .collect();
     sources.sort_by_key(|n| (n.allocated_gpus(), n.id));
@@ -116,11 +133,13 @@ pub fn plan_round(
             let want = devs_here.len() as u32;
             // Destination: a *more* allocated, still-capable node of the
             // same pool (never an idle node — that would undo the work).
-            let mut dests: Vec<NodeId> = state
-                .pools
-                .pool_for_type(src.gpu_type)
-                .map(|p| p.nodes.clone())
-                .unwrap_or_default();
+            // Bucket walk: only pool nodes with `free >= want` right now.
+            let mut dests: Vec<NodeId> = Vec::new();
+            if let Some(p) = state.pools.pool_for_type(src.gpu_type) {
+                for &g in &pool_groups[p.id.index()] {
+                    index.for_group(g, want, ZoneQuery::Any, &mut dests);
+                }
+            }
             dests.retain(|&d| {
                 d != src.id
                     && !planned_sources.contains(&d)

@@ -14,6 +14,7 @@ pub mod plan;
 pub mod score;
 
 use crate::cluster::ids::{GroupId, NodeId};
+use crate::cluster::index::ZoneQuery;
 use crate::cluster::snapshot::{Snapshot, SnapshotMode};
 use crate::cluster::state::ClusterState;
 use crate::job::spec::{JobKind, JobSpec, PlacementStrategy, TypedDemand};
@@ -40,6 +41,12 @@ pub struct RschConfig {
     pub snapshot_mode: SnapshotMode,
     /// Groups to try per pod in two-level mode (top-K preselection).
     pub group_fanout: usize,
+    /// Sublinear candidate selection through the snapshot's incremental
+    /// free-capacity [`NodeIndex`](crate::cluster::index::NodeIndex):
+    /// walk only buckets with `free >= gpus_per_pod` instead of scanning
+    /// every node. Off = the linear scan (the ablation baseline).
+    /// Placements are identical either way (property-tested).
+    pub indexed_candidates: bool,
 }
 
 impl Default for RschConfig {
@@ -51,6 +58,7 @@ impl Default for RschConfig {
             two_level: true,
             snapshot_mode: SnapshotMode::Incremental,
             group_fanout: 4,
+            indexed_candidates: true,
         }
     }
 }
@@ -69,6 +77,7 @@ impl RschConfig {
             two_level: false,
             snapshot_mode: SnapshotMode::DeepCopy,
             group_fanout: 4,
+            indexed_candidates: false,
         }
     }
 
@@ -81,6 +90,7 @@ impl RschConfig {
             two_level: false,
             snapshot_mode: SnapshotMode::DeepCopy,
             group_fanout: 4,
+            indexed_candidates: false,
         }
     }
 }
@@ -91,6 +101,9 @@ pub struct RschStats {
     pub placements: u64,
     pub pods_placed: u64,
     pub failures: u64,
+    /// Nodes touched during candidate filtering — the work the
+    /// free-capacity index collapses (compare indexed vs linear runs).
+    pub nodes_examined: u64,
     pub nodes_scored: u64,
     pub groups_scored: u64,
     pub snapshot_refreshes: u64,
@@ -124,19 +137,9 @@ impl Rsch {
         state: &ClusterState,
         backend: Box<dyn ScoreBackend>,
     ) -> Rsch {
-        let mut pool_groups: Vec<Vec<GroupId>> = vec![Vec::new(); state.pools.len()];
-        for pool in state.pools.iter() {
-            let mut gs: Vec<GroupId> = pool
-                .nodes
-                .iter()
-                .map(|&n| state.node(n).group)
-                .collect();
-            gs.sort_unstable();
-            gs.dedup();
-            pool_groups[pool.id.index()] = gs;
-        }
+        let pool_groups = state.pool_groups();
         Rsch {
-            snapshot: Snapshot::new(cfg.snapshot_mode),
+            snapshot: Snapshot::with_index(cfg.snapshot_mode, cfg.indexed_candidates),
             cfg,
             backend,
             pool_groups,
@@ -191,6 +194,13 @@ struct Planner<'a> {
 }
 
 impl Planner<'_> {
+    /// Indexed selection needs both the config flag and an index-carrying
+    /// snapshot; the two only diverge if `Rsch::cfg` is mutated after
+    /// construction — degrade to the linear scan instead of panicking.
+    fn use_index(&self) -> bool {
+        self.cfg.indexed_candidates && self.snapshot.index().is_some()
+    }
+
     /// Plan one pod; returns the chosen node or None.
     fn plan_pod(
         &mut self,
@@ -211,8 +221,12 @@ impl Planner<'_> {
                     pool.id.index(),
                 )
             } else {
-                let candidates =
-                    self.filter_candidates(state, pb, &pool.nodes, demand, spec, zone_filter);
+                let candidates = if self.use_index() {
+                    let groups: &[GroupId] = &self.pool_groups[pool.id.index()];
+                    self.indexed_candidates(state, pb, groups, demand, spec, zone_filter)
+                } else {
+                    self.filter_candidates(state, pb, &pool.nodes, demand, spec, zone_filter)
+                };
                 self.pick_node(state, pb, &candidates, &job, strategy, phase, large)
             };
             if let Some(n) = node {
@@ -263,9 +277,19 @@ impl Planner<'_> {
             if !feasible(gscores[gi]) {
                 break;
             }
-            let group_nodes = &state.fabric.groups[groups[gi].index()].nodes;
-            let candidates =
-                self.filter_candidates(state, pb, group_nodes, demand, spec, zone_filter);
+            let candidates = if self.use_index() {
+                self.indexed_candidates(
+                    state,
+                    pb,
+                    std::slice::from_ref(&groups[gi]),
+                    demand,
+                    spec,
+                    zone_filter,
+                )
+            } else {
+                let group_nodes = &state.fabric.groups[groups[gi].index()].nodes;
+                self.filter_candidates(state, pb, group_nodes, demand, spec, zone_filter)
+            };
             if candidates.is_empty() {
                 continue;
             }
@@ -278,9 +302,53 @@ impl Planner<'_> {
         None
     }
 
-    /// Cheap pre-filters before scoring (health, capacity, zone, HBD pin).
-    fn filter_candidates(
+    /// The single admission predicate both candidate-selection paths
+    /// share: health, GPU type, plan-adjusted capacity, zone, HBD pin.
+    /// Keeping it in one place is what guarantees the indexed walk stays
+    /// behaviorally identical to the linear scan.
+    fn admit(
         &self,
+        state: &ClusterState,
+        pb: &PlanBuilder,
+        n: NodeId,
+        demand: &TypedDemand,
+        spec: &JobSpec,
+        zone_filter: ZoneFilter,
+    ) -> bool {
+        use features::PlanView;
+        let rec = &self.snapshot.nodes[n.index()];
+        if !rec.healthy || rec.gpu_type != demand.gpu_type {
+            return false;
+        }
+        if pb.free_gpus(n) < demand.gpus_per_pod {
+            return false;
+        }
+        match zone_filter {
+            ZoneFilter::All => {}
+            ZoneFilter::ZoneOnly if !rec.in_inference_zone => return false,
+            ZoneFilter::GeneralOnly if rec.in_inference_zone => return false,
+            _ => {}
+        }
+        if spec.needs_hbd {
+            match (pb.hbd_lock, state.node(n).hbd) {
+                (Some(lock), Some(h)) if lock == h => {}
+                (Some(_), _) => return false,
+                (None, Some(h)) => {
+                    // First pod: the HBD must fit the whole job.
+                    if state.hbd_free(h) < spec.total_gpus() {
+                        return false;
+                    }
+                }
+                (None, None) => return false,
+            }
+        }
+        true
+    }
+
+    /// Linear candidate selection: scan every node of the slice (the
+    /// ablation baseline; `RschConfig::indexed_candidates = false`).
+    fn filter_candidates(
+        &mut self,
         state: &ClusterState,
         pb: &PlanBuilder,
         nodes: &[NodeId],
@@ -288,40 +356,48 @@ impl Planner<'_> {
         spec: &JobSpec,
         zone_filter: ZoneFilter,
     ) -> Vec<NodeId> {
-        use features::PlanView;
-        nodes
-            .iter()
-            .copied()
-            .filter(|&n| {
-                let rec = &self.snapshot.nodes[n.index()];
-                if !rec.healthy || rec.gpu_type != demand.gpu_type {
-                    return false;
-                }
-                if pb.free_gpus(n) < demand.gpus_per_pod {
-                    return false;
-                }
-                match zone_filter {
-                    ZoneFilter::All => {}
-                    ZoneFilter::ZoneOnly if !rec.in_inference_zone => return false,
-                    ZoneFilter::GeneralOnly if rec.in_inference_zone => return false,
-                    _ => {}
-                }
-                if spec.needs_hbd {
-                    match (pb.hbd_lock, state.node(n).hbd) {
-                        (Some(lock), Some(h)) if lock == h => {}
-                        (Some(_), _) => return false,
-                        (None, Some(h)) => {
-                            // First pod: the HBD must fit the whole job.
-                            if state.hbd_free(h) < spec.total_gpus() {
-                                return false;
-                            }
-                        }
-                        (None, None) => return false,
-                    }
-                }
-                true
-            })
-            .collect()
+        self.stats.nodes_examined += nodes.len() as u64;
+        let mut out = Vec::new();
+        for &n in nodes {
+            if self.admit(state, pb, n, demand, spec, zone_filter) {
+                out.push(n);
+            }
+        }
+        out
+    }
+
+    /// Sublinear candidate selection: walk only the free-capacity buckets
+    /// that can hold the pod (`free >= gpus_per_pod`, matching zone class),
+    /// then re-apply [`Planner::admit`] for plan-local state the index
+    /// cannot know (in-flight device takings, HBD pinning). Sorted
+    /// ascending so the result is byte-identical to the linear scan.
+    fn indexed_candidates(
+        &mut self,
+        state: &ClusterState,
+        pb: &PlanBuilder,
+        groups: &[GroupId],
+        demand: &TypedDemand,
+        spec: &JobSpec,
+        zone_filter: ZoneFilter,
+    ) -> Vec<NodeId> {
+        let ix = self
+            .snapshot
+            .index()
+            .expect("indexed_candidates needs Snapshot::with_index");
+        let zone = match zone_filter {
+            ZoneFilter::All => ZoneQuery::Any,
+            ZoneFilter::ZoneOnly => ZoneQuery::ZoneOnly,
+            ZoneFilter::GeneralOnly => ZoneQuery::GeneralOnly,
+        };
+        let mut walked = Vec::new();
+        let mut examined = 0u64;
+        for &g in groups {
+            examined += ix.for_group(g, demand.gpus_per_pod, zone, &mut walked);
+        }
+        self.stats.nodes_examined += examined;
+        walked.retain(|&n| self.admit(state, pb, n, demand, spec, zone_filter));
+        walked.sort_unstable();
+        walked
     }
 
     /// Plan a whole job against the snapshot (no state mutation). Returns
@@ -510,6 +586,7 @@ impl Rsch {
             }
         });
         for ts in thread_stats {
+            self.stats.nodes_examined += ts.nodes_examined;
             self.stats.nodes_scored += ts.nodes_scored;
             self.stats.groups_scored += ts.groups_scored;
             self.stats.failures += ts.failures;
@@ -786,7 +863,128 @@ mod tests {
         rsch.place(&mut state, &train(1, 2, 4)).unwrap();
         assert_eq!(rsch.stats.placements, 1);
         assert_eq!(rsch.stats.pods_placed, 2);
+        assert!(rsch.stats.nodes_examined > 0);
         assert!(rsch.stats.nodes_scored > 0);
         assert!(rsch.stats.groups_scored > 0);
+    }
+
+    /// Run the same job sequence through an indexed and a linear-scan RSCH
+    /// and demand byte-identical placements plus strictly less filter work
+    /// on the indexed side once the cluster is loaded.
+    fn assert_indexed_matches_linear(two_level: bool, specs: &[JobSpec]) {
+        let mut s_idx = state_2x4();
+        let mut s_lin = state_2x4();
+        let base = RschConfig {
+            two_level,
+            ..RschConfig::default()
+        };
+        let mut idx = Rsch::new(base.clone(), &s_idx);
+        let mut lin = Rsch::new(
+            RschConfig {
+                indexed_candidates: false,
+                ..base
+            },
+            &s_lin,
+        );
+        for spec in specs {
+            let a = idx.place(&mut s_idx, spec);
+            let b = lin.place(&mut s_lin, spec);
+            assert_eq!(a, b, "outcome diverged for job {}", spec.id);
+            assert_eq!(
+                s_idx.placements_of(spec.id),
+                s_lin.placements_of(spec.id),
+                "placements diverged for job {}",
+                spec.id
+            );
+        }
+        assert_eq!(s_idx.allocated_gpus(), s_lin.allocated_gpus());
+    }
+
+    #[test]
+    fn indexed_candidates_match_linear_scan_flat_and_two_level() {
+        let specs: Vec<JobSpec> = (1..=14)
+            .map(|id| train(id, ((id % 3) + 1) as u32, ((id % 4) + 1) as u32 * 2))
+            .collect();
+        assert_indexed_matches_linear(false, &specs);
+        assert_indexed_matches_linear(true, &specs);
+    }
+
+    #[test]
+    fn indexed_candidates_examine_fewer_nodes_when_loaded() {
+        // Fill 6 of 8 nodes whole; small pods then only fit on 2 nodes,
+        // which is all the index should walk in flat mode.
+        let mut s = state_2x4();
+        let cfg = RschConfig {
+            two_level: false,
+            ..RschConfig::default()
+        };
+        let mut rsch = Rsch::new(cfg, &s);
+        rsch.place(&mut s, &train(1, 6, 8)).unwrap();
+        rsch.stats = RschStats::default();
+        rsch.place(&mut s, &train(2, 1, 2)).unwrap();
+        let indexed = rsch.stats.nodes_examined;
+        assert_eq!(indexed, 2, "index must walk only the two free nodes");
+
+        let mut s2 = state_2x4();
+        let mut lin = Rsch::new(
+            RschConfig {
+                two_level: false,
+                indexed_candidates: false,
+                ..RschConfig::default()
+            },
+            &s2,
+        );
+        lin.place(&mut s2, &train(1, 6, 8)).unwrap();
+        lin.stats = RschStats::default();
+        lin.place(&mut s2, &train(2, 1, 2)).unwrap();
+        assert_eq!(lin.stats.nodes_examined, 8, "linear scan walks the pool");
+    }
+
+    #[test]
+    fn indexed_parallel_placement_matches_linear_parallel() {
+        let specs: Vec<JobSpec> = (1..=12)
+            .map(|id| train(id, 1, ((id % 4) + 1) as u32 * 2))
+            .collect();
+        let mut s_idx = state_2x4();
+        let mut idx = Rsch::new(RschConfig::default(), &s_idx);
+        let r_idx = idx.place_many_parallel(&mut s_idx, &specs, 4);
+        let mut s_lin = state_2x4();
+        let mut lin = Rsch::new(
+            RschConfig {
+                indexed_candidates: false,
+                ..RschConfig::default()
+            },
+            &s_lin,
+        );
+        let r_lin = lin.place_many_parallel(&mut s_lin, &specs, 4);
+        assert_eq!(r_idx, r_lin);
+        for spec in &specs {
+            assert_eq!(s_idx.placements_of(spec.id), s_lin.placements_of(spec.id));
+        }
+    }
+
+    #[test]
+    fn indexed_espread_zone_phases_match_linear() {
+        let mut spec3 = ClusterSpec::homogeneous("z", 1, 4, 2);
+        spec3.inference_zone_frac = 0.25;
+        let mut s_idx = ClusterBuilder::build(&spec3);
+        let mut s_lin = s_idx.clone();
+        let mut idx = Rsch::new(RschConfig::default(), &s_idx);
+        let mut lin = Rsch::new(
+            RschConfig {
+                indexed_candidates: false,
+                ..RschConfig::default()
+            },
+            &s_lin,
+        );
+        for id in 1..=10u64 {
+            let mut inf =
+                JobSpec::homogeneous(JobId(id), TenantId(0), JobKind::Inference, G, 2, 1);
+            inf.strategy = Some(PlacementStrategy::ESpread);
+            let a = idx.place(&mut s_idx, &inf);
+            let b = lin.place(&mut s_lin, &inf);
+            assert_eq!(a, b);
+            assert_eq!(s_idx.placements_of(JobId(id)), s_lin.placements_of(JobId(id)));
+        }
     }
 }

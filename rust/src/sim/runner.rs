@@ -6,6 +6,7 @@ use crate::cluster::state::ClusterState;
 use crate::job::spec::JobSpec;
 use crate::job::state::Phase;
 use crate::job::store::JobStore;
+use crate::metrics::report::fmt_ms;
 use crate::metrics::Metrics;
 use crate::qsch::Qsch;
 use crate::rsch::Rsch;
@@ -24,8 +25,16 @@ pub struct SimConfig {
     pub platform_overhead_ms: u64,
     /// Hard stop (0 = run to completion).
     pub horizon_ms: u64,
-    /// Abort after this many consecutive no-progress cycles with no other
-    /// events pending (scheduling deadlock detection).
+    /// Scheduling-deadlock heuristic: abort after this many *consecutive*
+    /// no-progress cycles (a cycle that neither scheduled nor preempted
+    /// anything) once no substantive events remain queued. Any progress
+    /// resets the counter, and pending arrivals/finishes/defrag/health
+    /// events keep the simulation alive regardless — so a stall can only
+    /// trip when queued jobs genuinely cannot ever be placed (e.g. a gang
+    /// larger than what failures left schedulable). At the default
+    /// `cycle_ms` of 5 s, the default 10,000 cycles ≈ 14 simulated hours
+    /// of standstill before the runner gives up and reports the
+    /// diagnostic (sim time, unfinished jobs, queue depth) on stderr.
     pub stall_cycles: u64,
     /// Periodic fragmentation reorganization (§3.3.3); 0 = disabled.
     pub defrag_interval_ms: u64,
@@ -142,8 +151,14 @@ pub fn run_with_events(
                     engine.schedule_in(cfg.cycle_ms, Event::Cycle);
                 } else if deadlocked {
                     eprintln!(
-                        "warning: scheduling stalled at t={now}ms with {} unfinished jobs",
-                        total_jobs - finished
+                        "warning: scheduling deadlock at t={} (sim time {}): \
+                         {} unfinished job(s), {} queued, no substantive events \
+                         pending after {} idle cycles",
+                        now,
+                        fmt_ms(now as f64),
+                        total_jobs - finished,
+                        qsch.queues.len(),
+                        stall,
                     );
                 }
             }

@@ -73,7 +73,8 @@ impl Bench {
         self.run_with_items(name, None, &mut f)
     }
 
-    /// Like [`run`], also reporting `items` per iteration as throughput.
+    /// Like [`Bench::run`], also reporting `items` per iteration as
+    /// throughput.
     pub fn run_throughput<T>(
         &mut self,
         name: &str,

@@ -184,6 +184,147 @@ fn random_sims_preserve_core_invariants() {
 }
 
 #[test]
+fn indexed_candidate_selection_matches_linear_scan() {
+    // The free-capacity node index is a pure acceleration structure:
+    // across random clusters (zones, HBDs), random job streams (all
+    // strategies, gangs, releases) and random health churn, every
+    // placement it produces must be byte-identical to the linear scan's.
+    use kant::cluster::gpu::Health;
+    use kant::cluster::ids::NodeId;
+    use kant::job::spec::PlacementStrategy;
+    use kant::qsch::Placer;
+
+    prop::check(20, |rng| {
+        let mut spec_c = ClusterSpec::homogeneous(
+            "ix",
+            1,
+            rng.range_inclusive(1, 4) as u32,
+            rng.range_inclusive(2, 6) as u32,
+        );
+        if rng.chance(0.4) {
+            spec_c.inference_zone_frac = 0.25;
+        }
+        if rng.chance(0.3) {
+            spec_c.hbd_size = 2;
+        }
+        let mut s_lin = ClusterBuilder::build(&spec_c);
+        let mut s_idx = s_lin.clone();
+        let num_nodes = s_lin.nodes.len() as u64;
+        let base = RschConfig {
+            two_level: rng.chance(0.5),
+            snapshot_mode: if rng.chance(0.5) {
+                kant::cluster::snapshot::SnapshotMode::Incremental
+            } else {
+                kant::cluster::snapshot::SnapshotMode::DeepCopy
+            },
+            ..RschConfig::default()
+        };
+        let mut lin = Rsch::new(
+            RschConfig {
+                indexed_candidates: false,
+                ..base.clone()
+            },
+            &s_lin,
+        );
+        let mut idx = Rsch::new(
+            RschConfig {
+                indexed_candidates: true,
+                ..base
+            },
+            &s_idx,
+        );
+        let mut live: Vec<JobId> = Vec::new();
+        let mut next = 1u64;
+        for step in 0..rng.range_inclusive(10, 50) {
+            match rng.below(5) {
+                0..=2 => {
+                    let gpp = rng.range_inclusive(1, 8) as u32;
+                    let replicas = rng.range_inclusive(1, 3) as u32;
+                    let kind = if rng.chance(0.6) {
+                        JobKind::Training
+                    } else {
+                        JobKind::Inference
+                    };
+                    let mut j = JobSpec::homogeneous(
+                        JobId(next),
+                        TenantId(0),
+                        kind,
+                        G,
+                        replicas,
+                        gpp,
+                    );
+                    if rng.chance(0.6) {
+                        j.strategy = Some(
+                            *rng.choose(&[
+                                PlacementStrategy::NativeFirstFit,
+                                PlacementStrategy::Binpack,
+                                PlacementStrategy::EBinpack,
+                                PlacementStrategy::Spread,
+                                PlacementStrategy::ESpread,
+                            ])
+                            .unwrap(),
+                        );
+                    }
+                    if spec_c.hbd_size > 1 && rng.chance(0.3) {
+                        j.needs_hbd = true;
+                    }
+                    j.gang = rng.chance(0.7);
+                    let a = lin.place(&mut s_lin, &j);
+                    let b = idx.place(&mut s_idx, &j);
+                    prop_assert!(
+                        a == b,
+                        "outcome diverged at step {step} for job {}: {a:?} vs {b:?}",
+                        j.id
+                    );
+                    prop_assert!(
+                        s_lin.placements_of(j.id) == s_idx.placements_of(j.id),
+                        "placements diverged at step {step} for job {}",
+                        j.id
+                    );
+                    if a.is_ok() {
+                        live.push(j.id);
+                    }
+                    next += 1;
+                }
+                3 => {
+                    if let Some(i) = (!live.is_empty())
+                        .then(|| rng.below(live.len() as u64) as usize)
+                    {
+                        let j = live.swap_remove(i);
+                        s_lin.release_job(j).unwrap();
+                        s_idx.release_job(j).unwrap();
+                    }
+                }
+                _ => {
+                    // Health churn on idle nodes (both worlds identically).
+                    let node = NodeId(rng.below(num_nodes) as u32);
+                    if s_lin.node(node).allocated_gpus() == 0 {
+                        let h = if s_lin.node(node).health.schedulable() {
+                            Health::Cordoned
+                        } else {
+                            Health::Healthy
+                        };
+                        s_lin.set_node_health(node, h);
+                        s_idx.set_node_health(node, h);
+                    }
+                }
+            }
+        }
+        prop_assert!(
+            s_lin.allocated_gpus() == s_idx.allocated_gpus(),
+            "allocation totals diverged"
+        );
+        for &j in &live {
+            prop_assert!(
+                s_lin.placements_of(j) == s_idx.placements_of(j),
+                "final placements diverged for job {j}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn preemption_never_loses_jobs() {
     // Under heavy HIGH-priority pressure with preemption enabled, every
     // job must end Finished or still-tracked — never dropped.
