@@ -125,21 +125,35 @@ fn bench_parallel(b: &mut Bench, threads: usize) {
 }
 
 fn main() {
+    // BENCH_SCALE=small is the CI-artifact preset: one 256-node grid at a
+    // short target time so the workflow job finishes in seconds. The
+    // default is the full 256/1024/4096-node sweep for real baselines.
+    let small = std::env::var("BENCH_SCALE").map(|s| s == "small").unwrap_or(false);
     println!("== §3.4.2 two-level vs flat scheduling ==");
-    let mut b = Bench::new()
-        .warmup(3)
-        .target_time(Duration::from_secs(2))
-        .max_iters(20_000);
-    for groups in [8u32, 32, 128] {
+    let mut b = if small {
+        Bench::new()
+            .warmup(1)
+            .target_time(Duration::from_millis(200))
+            .max_iters(2_000)
+    } else {
+        Bench::new()
+            .warmup(3)
+            .target_time(Duration::from_secs(2))
+            .max_iters(20_000)
+    };
+    let groups_grid: &[u32] = if small { &[8] } else { &[8, 32, 128] };
+    for &groups in groups_grid {
         bench_placement(&mut b, groups, false);
         bench_placement(&mut b, groups, true);
     }
-    bench_gang(&mut b, 32, false);
-    bench_gang(&mut b, 32, true);
+    bench_gang(&mut b, if small { 8 } else { 32 }, false);
+    bench_gang(&mut b, if small { 8 } else { 32 }, true);
 
-    println!("== §3.1 multi-instance parallel planning ==");
-    for threads in [1usize, 2, 4, 8] {
-        bench_parallel(&mut b, threads);
+    if !small {
+        println!("== §3.1 multi-instance parallel planning ==");
+        for threads in [1usize, 2, 4, 8] {
+            bench_parallel(&mut b, threads);
+        }
     }
 
     // Summarize two-level speedups.
@@ -154,11 +168,14 @@ fn main() {
         }
     }
 
-    // Seed/refresh the committed perf baseline when requested (CWD is the
-    // package root, so this writes rust/BENCH_baseline.json):
+    // Seed/refresh a perf baseline when requested. From the package root:
     //   BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench sched_cycle
+    // regenerates the committed default-grid baseline; CI additionally
+    // publishes a BENCH_SCALE=small run as a workflow artifact on every
+    // push (the bench trajectory across PRs).
     if let Ok(path) = std::env::var("BENCH_BASELINE_OUT") {
-        let doc = kant::util::benchkit::baseline_json("sched_cycle", "default-grid", b.results());
+        let scale_label = if small { "small" } else { "default-grid" };
+        let doc = kant::util::benchkit::baseline_json("sched_cycle", scale_label, b.results());
         std::fs::write(&path, doc + "\n").expect("writing bench baseline");
         eprintln!("wrote bench baseline to {path}");
     }

@@ -4,7 +4,8 @@
 //! Usage:
 //!   figures [--scale small|paper|xlarge] [--seed N] [--out results/] <id>...
 //!   ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15
-//!        table1 ablation-espread ablation-defrag ablation-index all
+//!        table1 ablation-espread ablation-defrag ablation-index
+//!        elastic-inference all
 //!   (fig10 covers 10-12; fig13 covers 13-14; snapshot/two-level ablations
 //!    live in `cargo bench`.)
 
@@ -50,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         ids = vec![
             "fig2", "fig3", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
             "fig10", "fig13", "fig15", "ablation-espread", "ablation-defrag",
-            "ablation-index",
+            "ablation-index", "elastic-inference",
         ]
         .into_iter()
         .map(String::from)
@@ -96,6 +97,7 @@ fn main() -> anyhow::Result<()> {
             "ablation-espread" => exp::ablation_espread(seed),
             "ablation-defrag" => exp::ablation_defrag(seed),
             "ablation-index" => exp::ablation_candidate_index(scale, seed),
+            "elastic-inference" => exp::elastic_inference(seed),
             other => {
                 eprintln!("unknown figure id: {other}");
                 continue;
@@ -113,4 +115,4 @@ const HELP: &str = "\
 figures — regenerate the paper's tables and figures
 usage: figures [--scale small|paper|xlarge] [--seed N] [--out DIR] <id>... | all
 ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15 table1 \
-ablation-espread ablation-defrag ablation-index";
+ablation-espread ablation-defrag ablation-index elastic-inference";

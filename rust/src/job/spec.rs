@@ -86,6 +86,46 @@ impl PlacementStrategy {
     }
 }
 
+/// Elastic replica-set parameters for an inference service: a replica
+/// envelope plus a deterministic diurnal demand curve. The controller
+/// (`sim::elastic`) samples the curve and scales the service between
+/// `min_replicas` and `max_replicas`; freed night-time capacity is what
+/// tidal training backfills into.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElasticService {
+    /// Floor the service never shrinks below (the base replica set).
+    pub min_replicas: u32,
+    /// Daytime peak replica count.
+    pub max_replicas: u32,
+    /// Phase offset of the diurnal curve (ms into the period).
+    pub phase_ms: u64,
+    /// Swing of the curve in [0, 1]: 1.0 oscillates over the full
+    /// min..max envelope, 0.0 pins demand at the midpoint.
+    pub amplitude: f64,
+    /// Curve period in ms (24 h for a diurnal cycle).
+    pub period_ms: u64,
+}
+
+impl ElasticService {
+    pub const DAY_MS: u64 = 24 * 3_600_000;
+
+    /// Normalized demand in [0, 1] at sim time `t`: a cosine day curve
+    /// (trough at phase 0, peak half a period later), centered on 0.5
+    /// with the configured amplitude. Deterministic in `t`.
+    pub fn load(&self, t: u64) -> f64 {
+        let period = self.period_ms.max(1);
+        let x = ((t + self.phase_ms) % period) as f64 / period as f64;
+        let wave = -(2.0 * std::f64::consts::PI * x).cos(); // [-1, 1]
+        (0.5 + 0.5 * self.amplitude.clamp(0.0, 1.0) * wave).clamp(0.0, 1.0)
+    }
+
+    /// Replicas the load curve demands at `t` (within the envelope).
+    pub fn demand_replicas(&self, t: u64) -> u32 {
+        let span = self.max_replicas.saturating_sub(self.min_replicas) as f64;
+        self.min_replicas + (self.load(t) * span).round() as u32
+    }
+}
+
 /// Resource demand for one GPU model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TypedDemand {
@@ -124,6 +164,19 @@ pub struct JobSpec {
     /// Whether the job needs its pods inside one HBD (EP/TP patterns,
     /// §3.3.5 scale-up).
     pub needs_hbd: bool,
+    /// Elastic replica-set parameters (inference autoscaling). `Some`
+    /// marks this job as the *base* replica set of an elastic service;
+    /// its `demands` hold `min_replicas` and the controller grows it via
+    /// replica-delta child jobs.
+    pub elastic: Option<ElasticService>,
+    /// Replica-delta marker: `Some(parent)` makes this job a scale-up
+    /// child of an elastic service. Such jobs are eligible for
+    /// SLO-pressure reclamation of tidal training on placement failure.
+    pub service: Option<JobId>,
+    /// Tidally-backfilled training: runs opportunistically in capacity
+    /// freed by inference scale-down and is the designated victim of
+    /// SLO-pressure preemption when inference must scale back up.
+    pub tidal: bool,
 }
 
 impl JobSpec {
@@ -169,6 +222,9 @@ impl JobSpec {
             duration_ms: 60_000,
             strategy: None,
             needs_hbd: false,
+            elastic: None,
+            service: None,
+            tidal: false,
         }
     }
 
@@ -191,6 +247,27 @@ impl JobSpec {
     pub fn with_gang(mut self, gang: bool) -> JobSpec {
         self.gang = gang;
         self
+    }
+
+    /// Turn this job into an elastic service base: replicas pinned to
+    /// `min_replicas`, the envelope/curve recorded for the controller.
+    pub fn with_elastic(mut self, e: ElasticService) -> JobSpec {
+        for d in &mut self.demands {
+            d.replicas = e.min_replicas.max(1);
+        }
+        self.elastic = Some(e);
+        self
+    }
+
+    /// Mark as tidal backfill (preemptible under SLO pressure).
+    pub fn with_tidal(mut self) -> JobSpec {
+        self.tidal = true;
+        self
+    }
+
+    /// GPUs per replica of an elastic service (sole-demand services).
+    pub fn gpus_per_replica(&self) -> u32 {
+        self.demands.first().map(|d| d.gpus_per_pod).unwrap_or(0)
     }
 }
 
@@ -261,5 +338,48 @@ mod tests {
     fn priority_ordering() {
         assert!(Priority::HIGH > Priority::NORMAL);
         assert!(Priority::NORMAL > Priority::LOW);
+    }
+
+    #[test]
+    fn elastic_curve_troughs_and_peaks() {
+        let e = ElasticService {
+            min_replicas: 2,
+            max_replicas: 10,
+            phase_ms: 0,
+            amplitude: 1.0,
+            period_ms: ElasticService::DAY_MS,
+        };
+        // Trough at phase 0 (night), peak half a day later.
+        assert_eq!(e.demand_replicas(0), 2);
+        assert_eq!(e.demand_replicas(ElasticService::DAY_MS / 2), 10);
+        // Quarter-day sits at the midpoint.
+        assert_eq!(e.demand_replicas(ElasticService::DAY_MS / 4), 6);
+        // Periodic.
+        assert_eq!(e.demand_replicas(100), e.demand_replicas(100 + ElasticService::DAY_MS));
+        // Amplitude 0 pins the midpoint.
+        let flat = ElasticService { amplitude: 0.0, ..e };
+        for t in [0, ElasticService::DAY_MS / 2] {
+            assert_eq!(flat.demand_replicas(t), 6);
+        }
+    }
+
+    #[test]
+    fn with_elastic_pins_base_to_min() {
+        let e = ElasticService {
+            min_replicas: 3,
+            max_replicas: 12,
+            phase_ms: 0,
+            amplitude: 0.8,
+            period_ms: ElasticService::DAY_MS,
+        };
+        let j = JobSpec::homogeneous(JobId(9), TenantId(0), JobKind::Inference, GpuTypeId(0), 8, 1)
+            .with_elastic(e);
+        assert_eq!(j.total_replicas(), 3);
+        assert_eq!(j.gpus_per_replica(), 1);
+        assert!(j.elastic.is_some());
+        assert!(!j.tidal);
+        let t = JobSpec::homogeneous(JobId(10), TenantId(0), JobKind::Training, GpuTypeId(0), 1, 8)
+            .with_tidal();
+        assert!(t.tidal);
     }
 }

@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
 use crate::util::json::Json;
 
-use super::spec::{JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand};
+use super::spec::{ElasticService, JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand};
 
 /// Serialize one job to a JSON object.
 pub fn job_to_json(j: &JobSpec) -> Json {
@@ -25,6 +25,21 @@ pub fn job_to_json(j: &JobSpec) -> Json {
         .set("needs_hbd", j.needs_hbd);
     if let Some(s) = j.strategy {
         o.set("strategy", s.as_str());
+    }
+    if let Some(e) = j.elastic {
+        let mut m = Json::obj();
+        m.set("min_replicas", e.min_replicas)
+            .set("max_replicas", e.max_replicas)
+            .set("phase_ms", e.phase_ms)
+            .set("amplitude", e.amplitude)
+            .set("period_ms", e.period_ms);
+        o.set("elastic", m);
+    }
+    if let Some(parent) = j.service {
+        o.set("service", parent.0);
+    }
+    if j.tidal {
+        o.set("tidal", true);
     }
     let demands: Vec<Json> = j
         .demands
@@ -74,6 +89,31 @@ pub fn job_from_json(v: &Json) -> Result<JobSpec> {
         }
         None => None,
     };
+    let elastic = match v.get("elastic") {
+        Some(e) => Some(ElasticService {
+            min_replicas: e
+                .get("min_replicas")
+                .and_then(Json::as_u64)
+                .context("elastic.min_replicas")? as u32,
+            max_replicas: e
+                .get("max_replicas")
+                .and_then(Json::as_u64)
+                .context("elastic.max_replicas")? as u32,
+            phase_ms: e
+                .get("phase_ms")
+                .and_then(Json::as_u64)
+                .context("elastic.phase_ms")?,
+            amplitude: e
+                .get("amplitude")
+                .and_then(Json::as_f64)
+                .context("elastic.amplitude")?,
+            period_ms: e
+                .get("period_ms")
+                .and_then(Json::as_u64)
+                .context("elastic.period_ms")?,
+        }),
+        None => None,
+    };
     Ok(JobSpec {
         id: JobId(get("id")?.as_u64().context("id")?),
         tenant: TenantId(get("tenant")?.as_u64().context("tenant")? as u32),
@@ -85,6 +125,9 @@ pub fn job_from_json(v: &Json) -> Result<JobSpec> {
         duration_ms: get("duration_ms")?.as_u64().context("duration_ms")?,
         strategy,
         needs_hbd: v.get("needs_hbd").and_then(Json::as_bool).unwrap_or(false),
+        elastic,
+        service: v.get("service").and_then(Json::as_u64).map(JobId),
+        tidal: v.get("tidal").and_then(Json::as_bool).unwrap_or(false),
     })
 }
 
@@ -148,6 +191,36 @@ mod tests {
         let back = read_trace(&path).unwrap();
         assert_eq!(back, jobs);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn json_roundtrip_elastic_and_tidal() {
+        let svc = JobSpec::homogeneous(
+            JobId(11),
+            TenantId(1),
+            JobKind::Inference,
+            GpuTypeId(0),
+            4,
+            1,
+        )
+        .with_elastic(ElasticService {
+            min_replicas: 2,
+            max_replicas: 9,
+            phase_ms: 3_600_000,
+            amplitude: 0.85,
+            period_ms: ElasticService::DAY_MS,
+        });
+        assert_eq!(job_from_json(&job_to_json(&svc)).unwrap(), svc);
+        let tidal = JobSpec::homogeneous(
+            JobId(12),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            1,
+            8,
+        )
+        .with_tidal();
+        assert_eq!(job_from_json(&job_to_json(&tidal)).unwrap(), tidal);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
 use crate::util::rng::Pcg32;
 
-use super::spec::{JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand};
+use super::spec::{ElasticService, JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand};
 
 /// One size class of the Figure-2 distribution.
 #[derive(Debug, Clone, Copy)]
@@ -54,6 +54,11 @@ pub struct WorkloadConfig {
     pub high_priority_frac: f64,
     /// Cap sizes at this many GPUs (small clusters); 0 = uncapped.
     pub max_gpus: u32,
+    /// Fraction of inference services generated as *elastic* replica
+    /// sets (single-GPU replicas, diurnal demand curve with per-service
+    /// phase/amplitude drawn from the seeded RNG). 0 = classic static
+    /// services (all pre-elastic presets are unchanged).
+    pub elastic_frac: f64,
 }
 
 impl WorkloadConfig {
@@ -86,6 +91,7 @@ impl WorkloadConfig {
             duration_sigma: 0.35,
             high_priority_frac: 0.05,
             max_gpus: 0,
+            elastic_frac: 0.0,
         }
     }
 
@@ -111,6 +117,17 @@ impl WorkloadConfig {
             duration_sigma: 0.5,
             high_priority_frac: 0.1,
             max_gpus: 8,
+            elastic_frac: 0.0,
+        }
+    }
+
+    /// Elastic inference mix: the `paper_inference` services, but most of
+    /// them are diurnal replica sets (the §2 "unified co-scheduling"
+    /// workload the elastic controller drives).
+    pub fn paper_elastic_inference(seed: u64) -> WorkloadConfig {
+        WorkloadConfig {
+            elastic_frac: 0.7,
+            ..WorkloadConfig::paper_inference(seed)
         }
     }
 
@@ -201,11 +218,35 @@ impl WorkloadGen {
             JobKind::Dev
         };
 
+        // Elastic replica sets: a slice of inference services scales with
+        // a diurnal curve. Per-service phase/amplitude come from the
+        // seeded RNG, so the whole tide replays per seed. The draws only
+        // happen when the mix enables elasticity, keeping pre-elastic
+        // presets byte-identical per seed.
+        let elastic = if kind == JobKind::Inference
+            && self.cfg.elastic_frac > 0.0
+            && self.rng.chance(self.cfg.elastic_frac)
+        {
+            let max_replicas = gpus.max(2);
+            Some(ElasticService {
+                min_replicas: (max_replicas / 4).max(1),
+                max_replicas,
+                phase_ms: self.rng.below(ElasticService::DAY_MS),
+                amplitude: self.rng.uniform(0.6, 1.0),
+                period_ms: ElasticService::DAY_MS,
+            })
+        } else {
+            None
+        };
+
         // Shape: jobs larger than one node become N whole-node pods;
         // sub-node jobs are a single pod (training) or `gpus` single-GPU
-        // replicas (inference services scale by replica).
+        // replicas (inference services scale by replica). Elastic
+        // services start at their floor and grow by child deltas.
         let per_node = node_size.max(1);
-        let (replicas, gpus_per_pod) = if gpus > per_node {
+        let (replicas, gpus_per_pod) = if let Some(e) = elastic {
+            (e.min_replicas, 1)
+        } else if gpus > per_node {
             let pods = gpus.div_ceil(per_node);
             (pods, per_node)
         } else if kind == JobKind::Inference && gpus > 1 {
@@ -255,6 +296,9 @@ impl WorkloadGen {
             duration_ms,
             strategy: None,
             needs_hbd: false,
+            elastic,
+            service: None,
+            tidal: false,
         }
     }
 
@@ -275,6 +319,46 @@ impl WorkloadGen {
         }
         out
     }
+}
+
+/// Deterministic tidal-training stream: `n` LOW-priority gang jobs of
+/// `replicas` pods × `gpus_per_pod` GPUs, arriving evenly (with seeded
+/// jitter) over `[0, horizon_ms)` and flagged `tidal` — the backfill
+/// fuel for the elastic+tidal co-scheduling arm. Tidal jobs run in
+/// whatever capacity inference scale-down frees and are the designated
+/// victims of SLO-pressure reclamation.
+#[allow(clippy::too_many_arguments)]
+pub fn tidal_training_stream(
+    seed: u64,
+    first_id: u64,
+    tenant: TenantId,
+    gpu_type: GpuTypeId,
+    n: usize,
+    replicas: u32,
+    gpus_per_pod: u32,
+    horizon_ms: u64,
+    mean_duration_ms: u64,
+) -> Vec<JobSpec> {
+    let mut rng = Pcg32::seed_from_u64(seed ^ 0x71da_1ca1);
+    let slot = horizon_ms / n.max(1) as u64;
+    (0..n)
+        .map(|i| {
+            let submit = i as u64 * slot + rng.below(slot.max(1));
+            let duration =
+                (rng.uniform(0.5, 1.5) * mean_duration_ms as f64).max(60_000.0) as u64;
+            JobSpec::homogeneous(
+                JobId(first_id + i as u64),
+                tenant,
+                JobKind::Training,
+                gpu_type,
+                replicas,
+                gpus_per_pod,
+            )
+            .with_times(submit, duration)
+            .with_priority(Priority::LOW)
+            .with_tidal()
+        })
+        .collect()
 }
 
 /// Assign every job a fixed strategy (for A/B experiment arms).
@@ -438,5 +522,61 @@ mod tests {
         cfg.max_gpus = 8;
         let jobs = WorkloadGen::new(cfg).generate(2_000);
         assert!(jobs.iter().all(|j| j.total_gpus() <= 8));
+    }
+
+    #[test]
+    fn elastic_mix_generates_diurnal_replica_sets() {
+        let jobs = WorkloadGen::new(WorkloadConfig::paper_elastic_inference(31)).generate(2_000);
+        let b = WorkloadGen::new(WorkloadConfig::paper_elastic_inference(31)).generate(2_000);
+        assert_eq!(jobs, b, "elastic generation must replay per seed");
+        let inference: Vec<&JobSpec> =
+            jobs.iter().filter(|j| j.kind == JobKind::Inference).collect();
+        let elastic: Vec<&JobSpec> =
+            inference.iter().copied().filter(|j| j.elastic.is_some()).collect();
+        let frac = elastic.len() as f64 / inference.len() as f64;
+        assert!((frac - 0.7).abs() < 0.05, "elastic frac {frac}");
+        for j in &elastic {
+            let e = j.elastic.unwrap();
+            assert!(e.min_replicas >= 1 && e.min_replicas <= e.max_replicas);
+            assert_eq!(j.total_replicas(), e.min_replicas, "base starts at floor");
+            assert_eq!(j.gpus_per_replica(), 1, "elastic replicas are single-GPU");
+            assert!(e.amplitude >= 0.6 && e.amplitude <= 1.0);
+            assert!(e.phase_ms < ElasticService::DAY_MS);
+            assert_eq!(e.period_ms, ElasticService::DAY_MS);
+        }
+        // Phases actually vary across services (per-service RNG draws).
+        let phases: std::collections::HashSet<u64> =
+            elastic.iter().map(|j| j.elastic.unwrap().phase_ms).collect();
+        assert!(phases.len() > 1);
+    }
+
+    #[test]
+    fn tidal_stream_is_low_priority_gang_and_deterministic() {
+        use crate::job::workload::tidal_training_stream;
+        let mk = || {
+            tidal_training_stream(
+                9,
+                1_000,
+                TenantId(1),
+                GpuTypeId(0),
+                20,
+                1,
+                8,
+                24 * 3_600_000,
+                2 * 3_600_000,
+            )
+        };
+        let a = mk();
+        assert_eq!(a, mk());
+        assert_eq!(a.len(), 20);
+        for (i, j) in a.iter().enumerate() {
+            assert!(j.tidal && j.gang);
+            assert_eq!(j.priority, Priority::LOW);
+            assert_eq!(j.id, JobId(1_000 + i as u64));
+            assert!(j.submit_ms < 24 * 3_600_000);
+            assert!(j.duration_ms >= 60_000);
+        }
+        // Arrivals are sorted by construction (one per slot).
+        assert!(a.windows(2).all(|w| w[0].submit_ms <= w[1].submit_ms));
     }
 }

@@ -44,7 +44,7 @@ usage:
                 [--policy strict-fifo|best-effort|backfill]
                 [--strategy native|binpack|e-binpack|spread|e-spread]
                 [--trace FILE] [--xla-scorer] [--flat] [--deep-snapshot]
-                [--no-index]
+                [--no-index] [--elastic] [--digest FILE]
   kant gen-trace [--seed N] [--jobs N] [--mix training|inference] --out FILE
   kant validate [--artifacts DIR]
 
@@ -52,6 +52,10 @@ flags:
   --flat           disable two-level (NodeNetGroup preselect) scheduling
   --deep-snapshot  rebuild the full snapshot every cycle (no §3.4.3 delta)
   --no-index       linear candidate scans instead of the free-capacity index
+  --elastic        elastic inference: most services become diurnal replica
+                   sets and the autoscaling controller runs every 5 min
+  --digest FILE    write the deterministic run digest (JSON) to FILE — the
+                   golden-gate CI job diffs two same-seed digests
 ";
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
@@ -103,6 +107,10 @@ fn simulate(args: &[String]) -> Result<()> {
         rsch_cfg.indexed_candidates = false;
     }
 
+    let elastic = has_flag(args, "--elastic");
+    if elastic {
+        env.workload.elastic_frac = 0.7;
+    }
     let jobs = match flag_value(args, "--trace") {
         Some(path) => trace::read_trace(&PathBuf::from(path))?,
         None => WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms),
@@ -123,9 +131,21 @@ fn simulate(args: &[String]) -> Result<()> {
     let mut rsch = build_rsch(args, rsch_cfg, &env.state)?;
     let sim_cfg = SimConfig {
         horizon_ms: env.horizon_ms + 24 * 3_600_000,
+        elastic: if elastic {
+            kant::sim::elastic::ElasticConfig::enabled()
+        } else {
+            kant::sim::elastic::ElasticConfig::default()
+        },
         ..SimConfig::default()
     };
     let out = run(&mut env.state, &mut qsch, &mut rsch, jobs, &sim_cfg);
+
+    if let Some(path) = flag_value(args, "--digest") {
+        let doc = out.digest_json().to_string_compact();
+        std::fs::write(path, doc.clone() + "\n")
+            .with_context(|| format!("writing digest to {path}"))?;
+        println!("digest: {doc}");
+    }
 
     println!("{}", headline(env.label.as_str(), &out.metrics));
     let arms = vec![("wait", jwtd_buckets(&out.store, out.end_ms).summaries())];
@@ -146,6 +166,17 @@ fn simulate(args: &[String]) -> Result<()> {
         pct(out.metrics.sor_final()),
         pct(out.metrics.gfr_avg()),
     );
+    if elastic {
+        let (a, b) = out.metrics.window();
+        println!(
+            "elastic: services={} slo-violation={} churn={} elastic-util={} slo-preempt={}",
+            out.metrics.elastic.services,
+            pct(out.metrics.elastic.slo_violation_rate()),
+            out.metrics.elastic.replica_churn(),
+            pct(out.metrics.elastic.elastic_utilization(a, b)),
+            out.qsch_stats.slo_pressure_preemptions,
+        );
+    }
     Ok(())
 }
 

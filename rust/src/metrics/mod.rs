@@ -7,6 +7,73 @@ use crate::cluster::state::ClusterState;
 use crate::job::state::Job;
 use crate::util::stats::{SizeBuckets, Summary, TimeWeighted};
 
+/// Elastic-inference telemetry: the SLO and tidal-co-scheduling metrics
+/// the elasticity loop (`sim::elastic`) reports into.
+///
+/// * **SLO violation rate** — share of per-service load samples where the
+///   replicas actually holding resources fell short of the diurnal
+///   demand (a service serving under capacity).
+/// * **Elastic-capacity utilization** — GPU-time tidal training ran in
+///   the capacity inference scale-down freed, over that freed GPU-time
+///   (how well the night-time tide is harvested).
+/// * **Replica churn** — total scale-up plus scale-down replica
+///   transitions (the control-plane cost of following the curve).
+#[derive(Debug, Clone, Default)]
+pub struct ElasticTelemetry {
+    /// Elastic services observed (live base replica sets).
+    pub services: u64,
+    /// Per-service load samples taken.
+    pub samples: u64,
+    /// Samples where active replicas < diurnal demand.
+    pub slo_violations: u64,
+    /// Replicas added by scale-up decisions.
+    pub scale_up_replicas: u64,
+    /// Replicas released by scale-down decisions.
+    pub scale_down_replicas: u64,
+    /// GPUs of elastic headroom currently released below the services'
+    /// peak envelope (the tidal pool), over time.
+    freed_gpus: TimeWeighted,
+    /// GPUs held by tidal training jobs, over time.
+    tidal_gpus: TimeWeighted,
+}
+
+impl ElasticTelemetry {
+    /// Record a load-sample observation of the elastic state.
+    pub fn observe(&mut self, now: u64, freed_gpus: u32, tidal_gpus: u32) {
+        self.freed_gpus.push(now, freed_gpus as f64);
+        self.tidal_gpus.push(now, tidal_gpus as f64);
+    }
+
+    /// Share of service-samples violating the demand SLO.
+    pub fn slo_violation_rate(&self) -> f64 {
+        if self.samples == 0 {
+            return 0.0;
+        }
+        self.slo_violations as f64 / self.samples as f64
+    }
+
+    /// Total replica transitions (scale-ups + scale-downs).
+    pub fn replica_churn(&self) -> u64 {
+        self.scale_up_replicas + self.scale_down_replicas
+    }
+
+    /// Tidal GPU-time over freed GPU-time in `[t0, t1]` (0 when nothing
+    /// was freed). Can exceed 1.0 when tidal training also consumes
+    /// capacity the services never claimed.
+    pub fn elastic_utilization(&self, t0: u64, t1: u64) -> f64 {
+        let freed = self.freed_gpus.integral(t0, t1);
+        if freed <= 0.0 {
+            return 0.0;
+        }
+        self.tidal_gpus.integral(t0, t1) / freed
+    }
+
+    /// Tidal training GPU-hours harvested in `[t0, t1]`.
+    pub fn tidal_gpu_hours(&self, t0: u64, t1: u64) -> f64 {
+        self.tidal_gpus.integral(t0, t1) / 3_600_000.0
+    }
+}
+
 /// Live metrics collector. The runner calls the hooks; figures read the
 /// accessors.
 #[derive(Debug, Clone)]
@@ -27,6 +94,12 @@ pub struct Metrics {
     pub jobs_submitted: u64,
     pub jobs_finished: u64,
     pub jobs_scheduled: u64,
+    /// Jobs deliberately cancelled before natural completion (elastic
+    /// scale-down / service retirement) — together with `jobs_finished`
+    /// and the run's unfinished count these partition `jobs_submitted`.
+    pub jobs_cancelled: u64,
+    /// Elastic-inference telemetry (SLO, tidal co-scheduling, churn).
+    pub elastic: ElasticTelemetry,
 }
 
 impl Metrics {
@@ -43,6 +116,8 @@ impl Metrics {
             jobs_submitted: 0,
             jobs_finished: 0,
             jobs_scheduled: 0,
+            jobs_cancelled: 0,
+            elastic: ElasticTelemetry::default(),
         };
         m.observe_cluster(t0, state);
         m
@@ -88,6 +163,10 @@ impl Metrics {
 
     pub fn on_finished(&mut self) {
         self.jobs_finished += 1;
+    }
+
+    pub fn on_cancelled(&mut self) {
+        self.jobs_cancelled += 1;
     }
 
     // ---- accessors (figures) ----
@@ -415,6 +494,26 @@ mod tests {
         // (degenerate because we hand-placed half the job — the value just
         // needs to be recorded).
         assert_eq!(node_dev[2].1.count, 1);
+    }
+
+    #[test]
+    fn elastic_telemetry_rates_and_utilization() {
+        let mut e = ElasticTelemetry::default();
+        e.samples = 10;
+        e.slo_violations = 2;
+        assert!((e.slo_violation_rate() - 0.2).abs() < 1e-12);
+        e.scale_up_replicas = 3;
+        e.scale_down_replicas = 4;
+        assert_eq!(e.replica_churn(), 7);
+        // 10 GPUs freed, 5 used by tidal training over [0, 100).
+        e.observe(0, 10, 5);
+        e.observe(100, 0, 0);
+        assert!((e.elastic_utilization(0, 100) - 0.5).abs() < 1e-12);
+        assert!((e.tidal_gpu_hours(0, 100) - 500.0 / 3_600_000.0).abs() < 1e-12);
+        // Empty telemetry divides to zero, not NaN.
+        let empty = ElasticTelemetry::default();
+        assert_eq!(empty.slo_violation_rate(), 0.0);
+        assert_eq!(empty.elastic_utilization(0, 100), 0.0);
     }
 
     #[test]

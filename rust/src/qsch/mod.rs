@@ -64,7 +64,11 @@ pub struct QschStats {
     pub backfill_preemptions: u64,
     pub priority_preemptions: u64,
     pub quota_reclaim_preemptions: u64,
+    /// Tidal training jobs evicted so inference could scale back up.
+    pub slo_pressure_preemptions: u64,
     pub requeues: u64,
+    /// Jobs cancelled before natural completion (elastic scale-down).
+    pub cancellations: u64,
 }
 
 /// The queue-based scheduler.
@@ -130,6 +134,34 @@ impl Qsch {
         state.release_job(job).expect("finished job held resources");
         self.ledger.refund(job).expect("finished job was charged");
         store.expect_mut(job).mark_finished(now);
+    }
+
+    /// Cancel a job before natural completion — the elastic scale-down
+    /// path releasing a replica-delta child. Queued jobs just leave the
+    /// queue; resource-holding jobs release devices and refund quota.
+    /// Returns `false` (no-op) for jobs already terminal.
+    pub fn cancel_job(
+        &mut self,
+        store: &mut JobStore,
+        state: &mut ClusterState,
+        job: JobId,
+        now: u64,
+    ) -> bool {
+        let j = store.expect(job);
+        match j.phase {
+            Phase::Queued | Phase::Preempted => {
+                self.queues.remove(job);
+            }
+            Phase::Scheduled | Phase::Running => {
+                state.release_job(job).expect("cancelled job held resources");
+                self.ledger.refund(job).expect("cancelled job was charged");
+            }
+            Phase::Finished => return false,
+            Phase::Admitted => unreachable!("Admitted is cycle-internal"),
+        }
+        store.expect_mut(job).mark_finished(now);
+        self.stats.cancellations += 1;
+        true
     }
 
     /// Evict a running job due to an external failure (node fault) and
@@ -233,6 +265,20 @@ impl Qsch {
                     placer,
                     entry.job,
                     PreemptKind::Priority,
+                    &mut report,
+                );
+            }
+            // SLO pressure: a blocked scale-up replica delta reclaims
+            // capacity from tidal training immediately — inference SLOs
+            // do not wait out backfill timeouts.
+            if !rescued && self.cfg.enable_slo_reclaim && spec.service.is_some() {
+                rescued = self.try_preempt_and_place(
+                    now,
+                    store,
+                    state,
+                    placer,
+                    entry.job,
+                    PreemptKind::SloPressure,
                     &mut report,
                 );
             }
@@ -341,6 +387,19 @@ impl Qsch {
             PreemptKind::Priority => {
                 select_victims(state, store, &need, |j| j.spec.priority < prio)
             }
+            PreemptKind::SloPressure => {
+                let shortage = select_victims(state, store, &need, |j| j.spec.tidal);
+                match shortage {
+                    // Capacity exists but is fragmented: consolidate by
+                    // evicting tidal jobs on fragmented nodes instead.
+                    Some(v) if v.is_empty() => {
+                        preemption::select_defrag_victims(state, store, &need, |j| {
+                            j.spec.tidal
+                        })
+                    }
+                    other => other,
+                }
+            }
             PreemptKind::QuotaReclaim => unreachable!("handled in try_quota_reclaim"),
         };
         let Some(victims) = victims else {
@@ -358,6 +417,9 @@ impl Qsch {
         match kind {
             PreemptKind::Backfill => self.stats.backfill_preemptions += victims.len() as u64,
             PreemptKind::Priority => self.stats.priority_preemptions += victims.len() as u64,
+            PreemptKind::SloPressure => {
+                self.stats.slo_pressure_preemptions += victims.len() as u64
+            }
             PreemptKind::QuotaReclaim => {}
         }
         self.attempt_place(now, store, state, placer, job, false)
@@ -661,6 +723,79 @@ mod tests {
         let r = q.cycle(0, &mut store, &mut state, &mut FirstFit);
         assert!(r.scheduled.is_empty());
         assert_eq!(state.allocated_gpus(), 0);
+    }
+
+    #[test]
+    fn slo_pressure_evicts_tidal_training_for_scale_up() {
+        let (mut q, mut store, mut state) = setup(QschConfig::default());
+        // Fill the whole cluster with tidal LOW-priority training.
+        for i in 1..=4 {
+            q.submit(
+                &mut store,
+                job(i, 8, 1)
+                    .with_times(0, 1_000_000)
+                    .with_priority(Priority::LOW)
+                    .with_tidal(),
+            );
+        }
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(state.allocated_gpus(), 32);
+        // An elastic scale-up replica delta arrives: 2 single-GPU pods.
+        let mut child = job(5, 1, 2).with_times(10, 100_000);
+        child.kind = JobKind::Inference;
+        child.gang = false;
+        child.service = Some(JobId(900));
+        q.submit(&mut store, child);
+        // Long before any backfill timeout, SLO pressure reclaims.
+        let r = q.cycle(1_000, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.scheduled, vec![JobId(5)]);
+        assert_eq!(r.preempted.len(), 1);
+        assert!(store.expect(r.preempted[0]).spec.tidal);
+        assert_eq!(q.stats.slo_pressure_preemptions, 1);
+        // The victim is requeued for the next tide.
+        assert!(q.queues.contains(r.preempted[0]));
+    }
+
+    #[test]
+    fn slo_pressure_never_touches_non_tidal_jobs() {
+        let (mut q, mut store, mut state) = setup(QschConfig::default());
+        for i in 1..=4 {
+            // Plain (non-tidal) training fills the cluster.
+            q.submit(&mut store, job(i, 8, 1).with_times(0, 1_000_000));
+        }
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        let mut child = job(5, 1, 2).with_times(10, 100_000);
+        child.kind = JobKind::Inference;
+        child.gang = false;
+        child.service = Some(JobId(900));
+        q.submit(&mut store, child);
+        let r = q.cycle(1_000, &mut store, &mut state, &mut FirstFit);
+        assert!(r.scheduled.is_empty());
+        assert!(r.preempted.is_empty());
+        assert_eq!(q.stats.slo_pressure_preemptions, 0);
+    }
+
+    #[test]
+    fn cancel_job_releases_or_dequeues() {
+        let (mut q, mut store, mut state) = setup(QschConfig::default());
+        // A placed job: cancel releases devices and refunds quota.
+        q.submit(&mut store, job(1, 8, 1));
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(state.allocated_gpus(), 8);
+        assert!(q.cancel_job(&mut store, &mut state, JobId(1), 5_000));
+        assert_eq!(state.allocated_gpus(), 0);
+        assert_eq!(q.ledger.entry(TenantId(0), G).used_own, 0);
+        assert!(store.expect(JobId(1)).is_terminal());
+        // A queued job: cancel just removes it from the queue.
+        q.submit(&mut store, job(2, 8, 5)); // 40 > 32: never admits.
+        q.cycle(6_000, &mut store, &mut state, &mut FirstFit);
+        assert!(q.queues.contains(JobId(2)));
+        assert!(q.cancel_job(&mut store, &mut state, JobId(2), 7_000));
+        assert!(!q.queues.contains(JobId(2)));
+        assert!(store.expect(JobId(2)).is_terminal());
+        // Cancelling a terminal job is a no-op.
+        assert!(!q.cancel_job(&mut store, &mut state, JobId(2), 8_000));
+        assert_eq!(q.stats.cancellations, 2);
     }
 
     #[test]

@@ -52,6 +52,10 @@ pub struct QschConfig {
     /// Quota-reclamation preemption (§3.2.3): a lender may evict debtor
     /// jobs to reclaim loaned quota.
     pub enable_quota_reclaim: bool,
+    /// SLO-pressure reclamation: when an elastic scale-up replica delta
+    /// cannot place, evict tidally-backfilled training to make room —
+    /// the reclamation half of tidal co-scheduling.
+    pub enable_slo_reclaim: bool,
 }
 
 impl Default for QschConfig {
@@ -62,6 +66,7 @@ impl Default for QschConfig {
             enable_priority_preemption: true,
             priority_preempt_min_wait_ms: 5 * 60 * 1000,
             enable_quota_reclaim: true,
+            enable_slo_reclaim: true,
         }
     }
 }

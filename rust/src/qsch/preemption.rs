@@ -20,6 +20,9 @@ pub enum PreemptKind {
     Backfill,
     Priority,
     QuotaReclaim,
+    /// SLO-pressure reclamation: an elastic inference scale-up evicts
+    /// tidally-backfilled training to win its capacity back.
+    SloPressure,
 }
 
 /// Select a minimal-cost victim set among resource-holding jobs matching

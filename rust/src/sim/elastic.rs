@@ -1,0 +1,449 @@
+//! The elasticity loop: diurnal autoscaling of inference replica sets
+//! plus tidal training co-scheduling.
+//!
+//! Every `Event::LoadSample` the controller reads each elastic service's
+//! deterministic demand curve ([`ElasticService::demand_replicas`]) and
+//! drives the replica count toward it:
+//!
+//! * **scale-up** — immediately submits single-replica *child* jobs
+//!   (`JobSpec::service = Some(base)`) into QSCH; they place through the
+//!   ordinary cycle/RSCH path (E-Spread zone rules and the free-capacity
+//!   `NodeIndex` apply unchanged), and a blocked delta triggers
+//!   SLO-pressure reclamation of tidal training
+//!   ([`crate::qsch::preemption::PreemptKind::SloPressure`]).
+//! * **scale-down** — after a hysteresis window, cancels the *newest*
+//!   children first (least progress lost), releasing their devices and
+//!   refunding their quota; the freed capacity is what tidal training
+//!   backfills overnight.
+//!
+//! The controller is pure bookkeeping over the seeded workload: same
+//! seed + config ⇒ the same replica-delta sequence, which is what the
+//! golden-gate determinism CI job pins.
+
+use crate::cluster::ids::JobId;
+use crate::cluster::state::ClusterState;
+use crate::job::spec::{ElasticService, JobKind, JobSpec, TypedDemand};
+use crate::job::store::JobStore;
+use crate::metrics::Metrics;
+use crate::qsch::Qsch;
+
+/// Elasticity-loop tunables (carried by `SimConfig`).
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Load-sample period in ms; 0 disables the loop entirely (no
+    /// `LoadSample` events are scheduled).
+    pub sample_ms: u64,
+    /// Headroom factor: desired = ceil(demand / target_utilization),
+    /// clamped to the service envelope. 1.0 provisions exactly the
+    /// demand; lower values keep spare replicas.
+    pub target_utilization: f64,
+    /// Hysteresis: consecutive samples demand must sit below the current
+    /// size before scaling down. Scale-up is immediate — SLO pressure
+    /// does not wait out a stability window.
+    pub scale_down_stable_samples: u32,
+    /// When false the controller only observes (SLO accounting for the
+    /// static arm); no replica deltas are issued.
+    pub controller: bool,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            sample_ms: 0,
+            target_utilization: 1.0,
+            scale_down_stable_samples: 3,
+            controller: true,
+        }
+    }
+}
+
+impl ElasticConfig {
+    /// The loop enabled at a 5-minute sampling period.
+    pub fn enabled() -> ElasticConfig {
+        ElasticConfig {
+            sample_ms: 5 * 60_000,
+            ..ElasticConfig::default()
+        }
+    }
+
+    /// Observe-only variant (the static experiment arm): SLO violations
+    /// are measured against the same curves, but nothing scales.
+    pub fn observe_only() -> ElasticConfig {
+        ElasticConfig {
+            controller: false,
+            ..ElasticConfig::enabled()
+        }
+    }
+}
+
+/// Net job-count delta of one load sample, fed back into the runner's
+/// liveness accounting (children enter and leave the job population
+/// outside the pre-generated workload).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SampleDelta {
+    /// Replica-delta child jobs submitted (scale-up).
+    pub submitted: u64,
+    /// Jobs cancelled (scale-down releases + retired services' children).
+    pub cancelled: u64,
+}
+
+/// Controller state for one elastic service.
+#[derive(Debug)]
+struct ServiceState {
+    base: JobId,
+    curve: ElasticService,
+    /// Live single-replica children, oldest first (scale-down pops the
+    /// back: newest replicas are the lowest-value ones).
+    children: Vec<JobId>,
+    /// Replicas the controller currently asks for: base floor + live
+    /// children (placed or still queued).
+    requested: u32,
+    /// Consecutive samples with desired < requested (hysteresis).
+    below: u32,
+    /// The service retires once its base job is terminal.
+    retired: bool,
+}
+
+/// The target-utilization elastic controller (one per simulation run).
+pub struct ElasticController {
+    cfg: ElasticConfig,
+    services: Vec<ServiceState>,
+    next_child: u64,
+}
+
+impl ElasticController {
+    /// Build from the workload; `None` when the loop is disabled or no
+    /// job carries an [`ElasticService`].
+    pub fn from_jobs(cfg: &ElasticConfig, jobs: &[JobSpec]) -> Option<ElasticController> {
+        if cfg.sample_ms == 0 {
+            return None;
+        }
+        let mut services: Vec<ServiceState> = jobs
+            .iter()
+            .filter_map(|j| {
+                j.elastic.map(|curve| ServiceState {
+                    base: j.id,
+                    curve,
+                    children: Vec::new(),
+                    requested: j.total_replicas().max(curve.min_replicas),
+                    below: 0,
+                    retired: false,
+                })
+            })
+            .collect();
+        if services.is_empty() {
+            return None;
+        }
+        // Deterministic walk order + child-id base above every workload id.
+        services.sort_by_key(|s| s.base);
+        let next_child = jobs.iter().map(|j| j.id.0).max().unwrap_or(0) + 1;
+        Some(ElasticController {
+            cfg: cfg.clone(),
+            services,
+            next_child,
+        })
+    }
+
+    pub fn num_services(&self) -> usize {
+        self.services.len()
+    }
+
+    /// One `Event::LoadSample`: SLO accounting for every live service,
+    /// then (controller mode) replica deltas toward the demand curve.
+    pub fn on_sample(
+        &mut self,
+        now: u64,
+        store: &mut JobStore,
+        state: &mut ClusterState,
+        qsch: &mut Qsch,
+        metrics: &mut Metrics,
+    ) -> SampleDelta {
+        let mut delta = SampleDelta::default();
+        let mut live_services = 0u64;
+        let mut freed_gpus = 0u64;
+
+        // Detach the service list so the loop can borrow self.cfg /
+        // self.next_child freely alongside each mutable service entry.
+        let mut services = std::mem::take(&mut self.services);
+        for svc in services.iter_mut() {
+            let Some(base_job) = store.get(svc.base) else {
+                continue; // Not yet submitted to QSCH.
+            };
+            if svc.retired {
+                continue;
+            }
+            if base_job.is_terminal() {
+                // Service over: cancel whatever children remain.
+                for c in std::mem::take(&mut svc.children) {
+                    if qsch.cancel_job(store, state, c, now) {
+                        delta.cancelled += 1;
+                        metrics.on_cancelled();
+                    }
+                }
+                svc.retired = true;
+                continue;
+            }
+            live_services += 1;
+
+            let spec = base_job.spec.clone();
+            let gpus_per_pod = spec.gpus_per_replica().max(1);
+            let base_replicas = spec.total_replicas();
+            let service_end = spec.submit_ms.saturating_add(spec.duration_ms);
+
+            // Prune children that reached a natural end (service tail).
+            let mut natural = 0u32;
+            svc.children.retain(|&c| {
+                let done = store.get(c).map(|j| j.is_terminal()).unwrap_or(true);
+                if done {
+                    natural += 1;
+                }
+                !done
+            });
+            svc.requested = svc.requested.saturating_sub(natural);
+
+            // Demand vs what actually holds resources right now.
+            let demand = svc.curve.demand_replicas(now);
+            let base_active = if store.expect(svc.base).holds_resources() {
+                base_replicas
+            } else {
+                0
+            };
+            let child_active = svc
+                .children
+                .iter()
+                .filter(|&&c| store.expect(c).holds_resources())
+                .count() as u32;
+            let active = base_active + child_active;
+            metrics.elastic.samples += 1;
+            if active < demand {
+                metrics.elastic.slo_violations += 1;
+            }
+
+            if self.cfg.controller && base_active > 0 {
+                let target = self.cfg.target_utilization.clamp(0.05, 1.0);
+                let desired = ((demand as f64 / target).ceil() as u32)
+                    .clamp(svc.curve.min_replicas, svc.curve.max_replicas);
+                if desired > svc.requested {
+                    // Scale-up: one single-replica child per missing
+                    // replica, submitted into the ordinary QSCH queue.
+                    svc.below = 0;
+                    let grow = desired - svc.requested;
+                    for _ in 0..grow {
+                        let child = replica_delta_spec(
+                            &spec,
+                            JobId(self.next_child),
+                            now,
+                            service_end,
+                            gpus_per_pod,
+                        );
+                        self.next_child += 1;
+                        svc.children.push(child.id);
+                        metrics.on_submit();
+                        qsch.submit(store, child);
+                        delta.submitted += 1;
+                    }
+                    metrics.elastic.scale_up_replicas += grow as u64;
+                    svc.requested = desired;
+                } else if desired < svc.requested {
+                    svc.below += 1;
+                    if svc.below >= self.cfg.scale_down_stable_samples {
+                        // Scale-down: release the newest children first,
+                        // never below the base floor.
+                        let mut released = 0u64;
+                        while svc.requested > desired {
+                            let Some(c) = svc.children.pop() else {
+                                break; // At the base floor already.
+                            };
+                            if qsch.cancel_job(store, state, c, now) {
+                                delta.cancelled += 1;
+                                released += 1;
+                                metrics.on_cancelled();
+                            }
+                            svc.requested -= 1;
+                        }
+                        metrics.elastic.scale_down_replicas += released;
+                        svc.below = 0;
+                    }
+                } else {
+                    svc.below = 0;
+                }
+            }
+
+            freed_gpus += svc.curve.max_replicas.saturating_sub(svc.requested) as u64
+                * gpus_per_pod as u64;
+        }
+        self.services = services;
+
+        // Tidal harvest: GPUs currently held by tidal training.
+        let tidal_gpus: u64 = store
+            .holding_resources()
+            .filter(|j| j.spec.tidal)
+            .map(|j| j.spec.total_gpus() as u64)
+            .sum();
+        metrics.elastic.services = metrics.elastic.services.max(live_services);
+        metrics.elastic.observe(now, freed_gpus as u32, tidal_gpus as u32);
+        delta
+    }
+}
+
+/// A single-replica scale-up child of `base`, inheriting tenant,
+/// priority, strategy, HBD constraint, and GPU model; retires with the
+/// service. Elastic services are sole-demand by construction
+/// ([`crate::job::spec::JobSpec::with_elastic`] pins every demand to the
+/// floor, and the generator emits single-demand services), so the child
+/// replicates `demands[0]`.
+fn replica_delta_spec(
+    base: &JobSpec,
+    id: JobId,
+    now: u64,
+    service_end: u64,
+    gpus_per_pod: u32,
+) -> JobSpec {
+    JobSpec {
+        id,
+        tenant: base.tenant,
+        kind: JobKind::Inference,
+        priority: base.priority,
+        gang: false,
+        demands: vec![TypedDemand {
+            gpu_type: base.demands[0].gpu_type,
+            replicas: 1,
+            gpus_per_pod,
+        }],
+        submit_ms: now,
+        duration_ms: service_end.saturating_sub(now).max(60_000),
+        strategy: base.strategy,
+        needs_hbd: base.needs_hbd,
+        elastic: None,
+        service: Some(base.id),
+        tidal: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{GpuTypeId, TenantId};
+    use crate::cluster::tenant::{QuotaLedger, QuotaMode};
+    use crate::qsch::policy::QschConfig;
+    use crate::rsch::{Rsch, RschConfig};
+
+    const G: GpuTypeId = GpuTypeId(0);
+    const DAY: u64 = ElasticService::DAY_MS;
+
+    fn curve(min: u32, max: u32) -> ElasticService {
+        ElasticService {
+            min_replicas: min,
+            max_replicas: max,
+            phase_ms: 0,
+            amplitude: 1.0,
+            period_ms: DAY,
+        }
+    }
+
+    fn service(id: u64, min: u32, max: u32) -> JobSpec {
+        JobSpec::homogeneous(JobId(id), TenantId(0), JobKind::Inference, G, max, 1)
+            .with_times(0, 2 * DAY)
+            .with_elastic(curve(min, max))
+    }
+
+    /// Cluster + QSCH + RSCH + store with the base service placed.
+    fn harness(min: u32, max: u32) -> (ClusterState, Qsch, Rsch, JobStore, Metrics) {
+        let state = ClusterBuilder::build(&ClusterSpec::homogeneous("e", 1, 2, 4));
+        let mut ledger = QuotaLedger::new(2, 1, QuotaMode::Shared);
+        ledger.set_limit(TenantId(0), G, 64);
+        ledger.set_limit(TenantId(1), G, 0);
+        let mut qsch = Qsch::new(QschConfig::default(), ledger);
+        let rsch = Rsch::new(RschConfig::default(), &state);
+        let mut store = JobStore::new();
+        let metrics = Metrics::new(&state, 0);
+        qsch.submit(&mut store, service(1, min, max));
+        (state, qsch, rsch, store, metrics)
+    }
+
+    #[test]
+    fn disabled_or_inelastic_workloads_have_no_controller() {
+        let jobs = vec![service(1, 2, 8)];
+        assert!(ElasticController::from_jobs(&ElasticConfig::default(), &jobs).is_none());
+        let plain = vec![JobSpec::homogeneous(
+            JobId(1),
+            TenantId(0),
+            JobKind::Training,
+            G,
+            1,
+            8,
+        )];
+        assert!(ElasticController::from_jobs(&ElasticConfig::enabled(), &plain).is_none());
+    }
+
+    #[test]
+    fn scale_up_submits_children_and_scale_down_cancels_newest() {
+        let (mut state, mut qsch, mut rsch, mut store, mut metrics) = harness(2, 10);
+        let jobs = vec![service(1, 2, 10)];
+        let mut cfg = ElasticConfig::enabled();
+        cfg.scale_down_stable_samples = 2;
+        let mut ctrl = ElasticController::from_jobs(&cfg, &jobs).unwrap();
+        assert_eq!(ctrl.num_services(), 1);
+
+        // Place the base set (2 replicas).
+        qsch.cycle(0, &mut store, &mut state, &mut rsch);
+        assert_eq!(state.allocated_gpus(), 2);
+
+        // Midday: demand 10 → 8 children submitted.
+        let noon = DAY / 2;
+        let d = ctrl.on_sample(noon, &mut store, &mut state, &mut qsch, &mut metrics);
+        assert_eq!(d.submitted, 8);
+        assert_eq!(metrics.elastic.scale_up_replicas, 8);
+        qsch.cycle(noon + 1, &mut store, &mut state, &mut rsch);
+        assert_eq!(state.allocated_gpus(), 10);
+
+        // Same demand: no extra submissions (requested tracking).
+        let d = ctrl.on_sample(noon + 60_000, &mut store, &mut state, &mut qsch, &mut metrics);
+        assert_eq!(d, SampleDelta::default());
+
+        // Night: demand 2. Hysteresis holds one sample, then releases.
+        let night = DAY;
+        let d = ctrl.on_sample(night, &mut store, &mut state, &mut qsch, &mut metrics);
+        assert_eq!(d.cancelled, 0, "first below-sample waits");
+        let d = ctrl.on_sample(night + 60_000, &mut store, &mut state, &mut qsch, &mut metrics);
+        assert_eq!(d.cancelled, 8);
+        assert_eq!(metrics.elastic.scale_down_replicas, 8);
+        assert_eq!(state.allocated_gpus(), 2, "base floor survives");
+        assert_eq!(qsch.stats.cancellations, 8);
+    }
+
+    #[test]
+    fn slo_violations_recorded_when_under_demand() {
+        let (mut state, mut qsch, mut rsch, mut store, mut metrics) = harness(2, 10);
+        let jobs = vec![service(1, 2, 10)];
+        // Observe-only: the static arm measures, never scales.
+        let cfg = ElasticConfig::observe_only();
+        let mut ctrl = ElasticController::from_jobs(&cfg, &jobs).unwrap();
+        qsch.cycle(0, &mut store, &mut state, &mut rsch);
+        let d = ctrl.on_sample(DAY / 2, &mut store, &mut state, &mut qsch, &mut metrics);
+        assert_eq!(d, SampleDelta::default(), "observe-only never acts");
+        assert_eq!(metrics.elastic.samples, 1);
+        assert_eq!(metrics.elastic.slo_violations, 1, "2 active < 10 demanded");
+        assert!(metrics.elastic.slo_violation_rate() > 0.99);
+    }
+
+    #[test]
+    fn retired_service_cancels_children() {
+        let (mut state, mut qsch, mut rsch, mut store, mut metrics) = harness(2, 6);
+        let jobs = vec![service(1, 2, 6)];
+        let mut ctrl = ElasticController::from_jobs(&ElasticConfig::enabled(), &jobs).unwrap();
+        qsch.cycle(0, &mut store, &mut state, &mut rsch);
+        ctrl.on_sample(DAY / 2, &mut store, &mut state, &mut qsch, &mut metrics);
+        qsch.cycle(DAY / 2 + 1, &mut store, &mut state, &mut rsch);
+        assert_eq!(state.allocated_gpus(), 6);
+        // Base job ends.
+        qsch.finish_job(&mut store, &mut state, JobId(1), DAY / 2 + 2);
+        let d = ctrl.on_sample(DAY / 2 + 60_000, &mut store, &mut state, &mut qsch, &mut metrics);
+        assert_eq!(d.cancelled, 4);
+        assert_eq!(state.allocated_gpus(), 0);
+        // A retired service stays quiet.
+        let d = ctrl.on_sample(DAY, &mut store, &mut state, &mut qsch, &mut metrics);
+        assert_eq!(d, SampleDelta::default());
+    }
+}

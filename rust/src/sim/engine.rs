@@ -25,6 +25,9 @@ pub enum Event {
     Finish { job: JobId, epoch: u32 },
     /// Periodic metrics sample.
     Sample,
+    /// Periodic elastic-inference load sample: the controller reads each
+    /// service's diurnal demand and issues replica-delta requests.
+    LoadSample,
     /// Periodic fragmentation reorganization round (§3.3.3).
     Defrag,
     /// Inject a node health flip (failure injection tests).
@@ -105,9 +108,12 @@ impl Engine {
 
     /// Does the queue hold anything besides Cycle/Sample ticks?
     pub fn has_substantive_events(&self) -> bool {
-        self.heap
-            .iter()
-            .any(|Reverse(s)| !matches!(s.event, Event::Cycle | Event::Sample | Event::Defrag))
+        self.heap.iter().any(|Reverse(s)| {
+            !matches!(
+                s.event,
+                Event::Cycle | Event::Sample | Event::LoadSample | Event::Defrag
+            )
+        })
     }
 }
 
@@ -163,6 +169,7 @@ mod tests {
         let mut e = Engine::new();
         e.schedule(1, Event::Cycle);
         e.schedule(2, Event::Sample);
+        e.schedule(3, Event::LoadSample);
         assert!(!e.has_substantive_events());
         e.schedule(3, Event::Finish {
             job: JobId(1),

@@ -1,7 +1,10 @@
-//! Discrete-event simulation: the engine and the experiment runner.
+//! Discrete-event simulation: the engine, the elasticity loop, and the
+//! experiment runner.
 
+pub mod elastic;
 pub mod engine;
 pub mod runner;
 
+pub use elastic::{ElasticConfig, ElasticController};
 pub use engine::{Engine, Event, SimTime};
 pub use runner::{run, run_with_events, SimConfig, SimOutcome};

@@ -42,6 +42,9 @@ pub struct SimConfig {
     pub migration_penalty_ms: u64,
     /// Defrag planner tunables.
     pub defrag: crate::rsch::defrag::DefragConfig,
+    /// Elasticity loop (diurnal inference autoscaling + tidal
+    /// co-scheduling); `elastic.sample_ms == 0` disables it.
+    pub elastic: super::elastic::ElasticConfig,
 }
 
 impl Default for SimConfig {
@@ -55,6 +58,7 @@ impl Default for SimConfig {
             defrag_interval_ms: 0,
             migration_penalty_ms: 30_000,
             defrag: crate::rsch::defrag::DefragConfig::default(),
+            elastic: super::elastic::ElasticConfig::default(),
         }
     }
 }
@@ -71,6 +75,69 @@ pub struct SimOutcome {
     pub store: JobStore,
     /// Total defrag migrations executed.
     pub migrations: u64,
+}
+
+impl SimOutcome {
+    /// Deterministic digest of the whole run for the golden-gate
+    /// determinism CI job: two runs with the same seed and config must
+    /// produce byte-identical renderings of this document. Covers the
+    /// headline metrics, every scheduler counter, and an
+    /// order-independent FNV-1a fingerprint of each job's trajectory
+    /// (schedule/run/finish times, preemptions, requeues, migrations).
+    pub fn digest_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut rows: Vec<[u64; 7]> = self
+            .store
+            .iter()
+            .map(|j| {
+                [
+                    j.id().0,
+                    j.scheduled_ms.map(|t| t + 1).unwrap_or(0),
+                    j.running_ms.map(|t| t + 1).unwrap_or(0),
+                    j.finished_ms.map(|t| t + 1).unwrap_or(0),
+                    j.preemptions as u64,
+                    j.requeues as u64,
+                    j.migrations as u64,
+                ]
+            })
+            .collect();
+        rows.sort_unstable();
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis.
+        for row in &rows {
+            for &x in row {
+                for b in x.to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x0000_0100_0000_01b3);
+                }
+            }
+        }
+        let mut d = Json::obj();
+        d.set("schema", "kant-sim-digest-v1")
+            .set("end_ms", self.end_ms)
+            .set("events", self.events_processed)
+            .set("jobs_submitted", self.metrics.jobs_submitted)
+            .set("jobs_scheduled", self.metrics.jobs_scheduled)
+            .set("jobs_finished", self.metrics.jobs_finished)
+            .set("jobs_cancelled", self.metrics.jobs_cancelled)
+            .set("unfinished", self.unfinished_jobs)
+            .set("migrations", self.migrations)
+            .set("gar_avg", self.metrics.gar_avg())
+            .set("sor_final", self.metrics.sor_final())
+            .set("gfr_avg", self.metrics.gfr_avg())
+            .set("slo_violation_rate", self.metrics.elastic.slo_violation_rate())
+            .set("replica_churn", self.metrics.elastic.replica_churn())
+            .set("qsch_scheduled", self.qsch_stats.scheduled)
+            .set("qsch_backfilled", self.qsch_stats.scheduled_backfilled)
+            .set("qsch_preempt_backfill", self.qsch_stats.backfill_preemptions)
+            .set("qsch_preempt_priority", self.qsch_stats.priority_preemptions)
+            .set("qsch_preempt_quota", self.qsch_stats.quota_reclaim_preemptions)
+            .set("qsch_preempt_slo", self.qsch_stats.slo_pressure_preemptions)
+            .set("qsch_cancellations", self.qsch_stats.cancellations)
+            .set("rsch_pods_placed", self.rsch_stats.pods_placed)
+            .set("rsch_nodes_examined", self.rsch_stats.nodes_examined)
+            .set("jobs_fingerprint", format!("{h:016x}"));
+        d
+    }
 }
 
 /// Run a workload to completion (or horizon) against a scheduler stack.
@@ -100,12 +167,18 @@ pub fn run_with_events(
     let mut store = JobStore::new();
     let mut metrics = Metrics::new(state, 0);
 
-    let total_jobs = jobs.len() as u64;
+    // Elastic services spawn/cancel replica-delta children at runtime, so
+    // the job population (and with it the liveness accounting) is mutable.
+    let mut elastic = super::elastic::ElasticController::from_jobs(&cfg.elastic, &jobs);
+    let mut total_jobs = jobs.len() as u64;
     for j in jobs {
         engine.schedule(j.submit_ms, Event::Arrival(Box::new(j)));
     }
     engine.schedule(0, Event::Cycle);
     engine.schedule(0, Event::Sample);
+    if elastic.is_some() {
+        engine.schedule(0, Event::LoadSample);
+    }
     if cfg.defrag_interval_ms > 0 {
         engine.schedule(cfg.defrag_interval_ms, Event::Defrag);
     }
@@ -183,6 +256,21 @@ pub fn run_with_events(
                 metrics.observe_cluster(now, state);
                 if finished < total_jobs && !deadlocked {
                     engine.schedule_in(cfg.sample_ms, Event::Sample);
+                }
+            }
+            Event::LoadSample => {
+                if let Some(ctrl) = elastic.as_mut() {
+                    let d = ctrl.on_sample(now, &mut store, state, qsch, &mut metrics);
+                    total_jobs += d.submitted;
+                    finished += d.cancelled;
+                    if d.cancelled > 0 {
+                        // Scale-down released capacity; sample it so GAR
+                        // sees the tide recede at the release instant.
+                        metrics.observe_cluster(now, state);
+                    }
+                    if finished < total_jobs && !deadlocked {
+                        engine.schedule_in(cfg.elastic.sample_ms, Event::LoadSample);
+                    }
                 }
             }
             Event::Defrag => {
@@ -379,6 +467,66 @@ mod tests {
         let preempted: u32 = (1..=2).map(|i| out.store.expect(JobId(i)).preemptions).sum();
         assert_eq!(preempted, 1);
         assert_eq!(state.allocated_gpus(), 0);
+    }
+
+    #[test]
+    fn elastic_service_scales_through_the_sim() {
+        use crate::job::spec::ElasticService;
+        let (mut state, mut qsch, mut rsch) = stack(2); // 16 GPUs.
+        let day = ElasticService::DAY_MS;
+        let svc = JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Inference, G, 8, 1)
+            .with_times(0, day)
+            .with_elastic(ElasticService {
+                min_replicas: 2,
+                max_replicas: 8,
+                phase_ms: 0,
+                amplitude: 1.0,
+                period_ms: day,
+            });
+        let cfg = SimConfig {
+            elastic: crate::sim::elastic::ElasticConfig::enabled(),
+            ..SimConfig::default()
+        };
+        let out = run(&mut state, &mut qsch, &mut rsch, vec![svc], &cfg);
+        assert_eq!(out.unfinished_jobs, 0);
+        assert_eq!(state.allocated_gpus(), 0);
+        // The service climbed toward its 8-replica noon peak and let the
+        // tide back out (scale-downs or end-of-service cancellations).
+        assert!(
+            out.metrics.elastic.scale_up_replicas >= 6,
+            "scale-ups {}",
+            out.metrics.elastic.scale_up_replicas
+        );
+        assert!(out.metrics.elastic.samples > 100);
+        assert!(out.metrics.elastic.replica_churn() >= out.metrics.elastic.scale_up_replicas);
+        // Every job ended exactly one way: natural finish or cancellation.
+        assert_eq!(
+            out.metrics.jobs_submitted,
+            out.metrics.jobs_finished + out.metrics.jobs_cancelled
+        );
+        // Demand tracking keeps violations rare.
+        assert!(
+            out.metrics.elastic.slo_violation_rate() < 0.1,
+            "slo violation rate {}",
+            out.metrics.elastic.slo_violation_rate()
+        );
+    }
+
+    #[test]
+    fn digest_replays_byte_identical() {
+        let run_once = |perturb: bool| {
+            let (mut state, mut qsch, mut rsch) = stack(2);
+            let jobs = vec![
+                train(1, 1, 8, 0, 50_000),
+                train(2, 1, 8, 0, 50_000),
+                train(3, 2, 8, 10_000, if perturb { 45_000 } else { 40_000 }),
+            ];
+            run(&mut state, &mut qsch, &mut rsch, jobs, &SimConfig::default())
+                .digest_json()
+                .to_string_compact()
+        };
+        assert_eq!(run_once(false), run_once(false));
+        assert_ne!(run_once(false), run_once(true));
     }
 
     #[test]

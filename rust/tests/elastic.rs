@@ -1,0 +1,121 @@
+//! Integration tests for the elasticity loop: shared-quota borrowing by
+//! scale-up replicas and its §3.2.3 quota-reclamation counterpart, plus
+//! the per-seed determinism property of the elastic controller.
+
+use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
+use kant::cluster::ids::{GpuTypeId, JobId, TenantId};
+use kant::cluster::tenant::{QuotaLedger, QuotaMode};
+use kant::config::{inference_cluster, InferencePreset};
+use kant::job::spec::{ElasticService, JobKind, JobSpec};
+use kant::job::store::JobStore;
+use kant::job::workload::WorkloadGen;
+use kant::metrics::Metrics;
+use kant::qsch::policy::QschConfig;
+use kant::qsch::Qsch;
+use kant::rsch::{Rsch, RschConfig};
+use kant::sim::elastic::{ElasticConfig, ElasticController};
+use kant::sim::{run, SimConfig};
+
+const G: GpuTypeId = GpuTypeId(0);
+const DAY: u64 = ElasticService::DAY_MS;
+
+/// Scale-up beyond the tenant's own quota borrows from the lender
+/// (§3.2.1 Shared mode); when the lender needs its quota back,
+/// quota-reclamation preemption evicts *exactly* the borrowed replicas —
+/// the owned base set and owned children stay untouched.
+#[test]
+fn scale_up_borrows_quota_and_reclaim_evicts_exactly_borrowed_replicas() {
+    // 8 nodes / 64 GPUs. Tenant 0 owns 8 GPUs of quota, tenant 1 the
+    // remaining 56 — Shared mode lets tenant 0 burst beyond its slice.
+    let state_spec = ClusterSpec::homogeneous("q", 1, 2, 4);
+    let mut state = ClusterBuilder::build(&state_spec);
+    let mut ledger = QuotaLedger::new(2, 1, QuotaMode::Shared);
+    ledger.set_limit(TenantId(0), G, 8);
+    ledger.set_limit(TenantId(1), G, 56);
+    let mut qsch = Qsch::new(QschConfig::default(), ledger);
+    let mut rsch = Rsch::new(RschConfig::default(), &state);
+    let mut store = JobStore::new();
+    let mut metrics = Metrics::new(&state, 0);
+
+    // One elastic service (floor 2, peak 16, full-amplitude tide).
+    let svc = JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Inference, G, 16, 1)
+        .with_times(0, 2 * DAY)
+        .with_elastic(ElasticService {
+            min_replicas: 2,
+            max_replicas: 16,
+            phase_ms: 0,
+            amplitude: 1.0,
+            period_ms: DAY,
+        });
+    let jobs = vec![svc.clone()];
+    let mut ctrl = ElasticController::from_jobs(&ElasticConfig::enabled(), &jobs).unwrap();
+    qsch.submit(&mut store, svc);
+    qsch.cycle(0, &mut store, &mut state, &mut rsch);
+    assert_eq!(state.allocated_gpus(), 2);
+
+    // Noon: demand 16 → 14 scale-up children; 6 fit the tenant's own
+    // remaining quota, 8 borrow from tenant 1.
+    let noon = DAY / 2;
+    let d = ctrl.on_sample(noon, &mut store, &mut state, &mut qsch, &mut metrics);
+    assert_eq!(d.submitted, 14);
+    qsch.cycle(noon + 1, &mut store, &mut state, &mut rsch);
+    assert_eq!(state.allocated_gpus(), 16);
+    assert_eq!(qsch.ledger.entry(TenantId(0), G).used_own, 8);
+    assert_eq!(qsch.ledger.entry(TenantId(0), G).borrowed, 8);
+    assert_eq!(qsch.ledger.entry(TenantId(1), G).lent, 8);
+    let borrowed: Vec<JobId> = (2..=15)
+        .map(JobId)
+        .filter(|&j| qsch.ledger.is_borrowing(j))
+        .collect();
+    assert_eq!(borrowed.len(), 8, "8 replicas run on borrowed quota");
+
+    // Tenant 1 claims its full quota: 56 GPUs against 48 own-free →
+    // quota reclamation must evict the 8 borrowed replicas, exactly.
+    let claim = JobSpec::homogeneous(JobId(500), TenantId(1), JobKind::Training, G, 7, 8)
+        .with_times(noon + 2, 3_600_000);
+    qsch.submit(&mut store, claim);
+    let r = qsch.cycle(noon + 10_000, &mut store, &mut state, &mut rsch);
+    let mut preempted = r.preempted.clone();
+    preempted.sort_unstable();
+    let mut expected = borrowed.clone();
+    expected.sort_unstable();
+    assert_eq!(preempted, expected, "victims are exactly the borrowed replicas");
+    assert_eq!(qsch.stats.quota_reclaim_preemptions, 8);
+    // The owned base set and owned children keep their resources.
+    assert!(store.expect(JobId(1)).holds_resources());
+    assert_eq!(qsch.ledger.entry(TenantId(0), G).borrowed, 0);
+    assert_eq!(qsch.ledger.entry(TenantId(1), G).lent, 0);
+    assert_eq!(qsch.ledger.entry(TenantId(0), G).used_own, 8);
+}
+
+/// Property: the elastic controller (and everything downstream of it) is
+/// deterministic per seed — the full-run digest replays byte-identically
+/// for the same seed and diverges across seeds.
+#[test]
+fn elastic_controller_is_deterministic_per_seed() {
+    fn digest_for(seed: u64) -> String {
+        let mut env = inference_cluster(InferencePreset::A10, seed);
+        env.workload.elastic_frac = 0.7;
+        env.horizon_ms = 24 * 3_600_000;
+        let mut state = env.state.clone();
+        let mut qsch = Qsch::new(QschConfig::default(), env.ledger.clone());
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        let jobs = WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms);
+        let cfg = SimConfig {
+            horizon_ms: env.horizon_ms + 12 * 3_600_000,
+            elastic: ElasticConfig::enabled(),
+            ..SimConfig::default()
+        };
+        run(&mut state, &mut qsch, &mut rsch, jobs, &cfg)
+            .digest_json()
+            .to_string_compact()
+    }
+    let mut digests = Vec::new();
+    for seed in [1u64, 7, 23] {
+        let a = digest_for(seed);
+        assert_eq!(a, digest_for(seed), "seed {seed} must replay identically");
+        digests.push(a);
+    }
+    digests.dedup();
+    assert_eq!(digests.len(), 3, "different seeds must diverge");
+}
