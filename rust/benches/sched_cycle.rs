@@ -6,7 +6,8 @@
 //! Run with: `cargo bench --bench sched_cycle`
 
 use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
-use kant::cluster::ids::{GpuTypeId, JobId, TenantId};
+use kant::cluster::gpu::Health;
+use kant::cluster::ids::{GpuTypeId, JobId, NodeId, TenantId};
 use kant::job::spec::{JobKind, JobSpec};
 use kant::qsch::Placer;
 use kant::rsch::{Rsch, RschConfig};
@@ -91,6 +92,41 @@ fn bench_gang(b: &mut Bench, groups: u32, two_level: bool) {
     });
 }
 
+/// Reliability: placement cost under a steady churn of node
+/// cordons/drains/repairs — every health flip dirties the mutation log,
+/// so each placement's snapshot refresh re-slots churned nodes in the
+/// free-capacity index. This is the health-mutation overhead the fault
+/// subsystem adds to the scheduling cycle.
+fn bench_fault_storm(b: &mut Bench, groups: u32) {
+    let mut state = make_state(groups);
+    let mut rsch = Rsch::new(RschConfig::default(), &state);
+    let n = state.nodes.len();
+    let mut id = 1u64;
+    let mut cursor = 0usize;
+    b.run_throughput(&format!("place-8gpu-job/fault-storm/{n}nodes"), 1.0, || {
+        // Rolling churn: one node cordons, one drains, one returns.
+        let cordon = cursor % n;
+        let drain = (cursor + n / 3) % n;
+        let heal = (cursor + 2 * n / 3) % n;
+        state.set_node_health(NodeId(cordon as u32), Health::Cordoned);
+        state.set_node_health(NodeId(drain as u32), Health::Draining);
+        state.set_node_health(NodeId(heal as u32), Health::Healthy);
+        cursor += 1;
+        let spec = JobSpec::homogeneous(
+            JobId(id),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            1,
+            8,
+        );
+        id += 1;
+        if rsch.place(&mut state, &spec).is_ok() {
+            state.release_job(JobId(id - 1)).unwrap();
+        }
+    });
+}
+
 /// §3.1 multi-instance parallel planning throughput.
 fn bench_parallel(b: &mut Bench, threads: usize) {
     let mut state = make_state(32);
@@ -156,7 +192,8 @@ fn main() {
         }
     }
 
-    // Summarize two-level speedups.
+    // Summarize two-level speedups (flat/two-level pairs only — the
+    // fault-storm scenario below is unpaired).
     let results = b.results().to_vec();
     for pair in results.chunks(2) {
         if let [flat, two] = pair {
@@ -167,6 +204,12 @@ fn main() {
             );
         }
     }
+
+    // Reliability: health-mutation churn in the placement path (drains /
+    // cordons / repairs between placements). Included in the baseline
+    // artifact so the bench trajectory covers the fault subsystem.
+    println!("== reliability: fault-storm churn ==");
+    bench_fault_storm(&mut b, if small { 8 } else { 32 });
 
     // Seed/refresh a perf baseline when requested. From the package root:
     //   BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench sched_cycle

@@ -5,7 +5,7 @@
 //!   figures [--scale small|paper|xlarge] [--seed N] [--out results/] <id>...
 //!   ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15
 //!        table1 ablation-espread ablation-defrag ablation-index
-//!        elastic-inference all
+//!        elastic-inference fault-tolerance all
 //!   (fig10 covers 10-12; fig13 covers 13-14; snapshot/two-level ablations
 //!    live in `cargo bench`.)
 
@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         ids = vec![
             "fig2", "fig3", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
             "fig10", "fig13", "fig15", "ablation-espread", "ablation-defrag",
-            "ablation-index", "elastic-inference",
+            "ablation-index", "elastic-inference", "fault-tolerance",
         ]
         .into_iter()
         .map(String::from)
@@ -98,6 +98,7 @@ fn main() -> anyhow::Result<()> {
             "ablation-defrag" => exp::ablation_defrag(seed),
             "ablation-index" => exp::ablation_candidate_index(scale, seed),
             "elastic-inference" => exp::elastic_inference(seed),
+            "fault-tolerance" => exp::fault_tolerance(seed),
             other => {
                 eprintln!("unknown figure id: {other}");
                 continue;
@@ -115,4 +116,4 @@ const HELP: &str = "\
 figures — regenerate the paper's tables and figures
 usage: figures [--scale small|paper|xlarge] [--seed N] [--out DIR] <id>... | all
 ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15 table1 \
-ablation-espread ablation-defrag ablation-index elastic-inference";
+ablation-espread ablation-defrag ablation-index elastic-inference fault-tolerance";

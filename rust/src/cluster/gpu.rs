@@ -79,13 +79,28 @@ impl GpuType {
     }
 }
 
-/// Health of a device or node. `Cordoned` is administratively unschedulable
-/// (still counted in totals); `Faulty` is hardware-failed.
+/// Health of a device or node — the reliability lifecycle
+/// `Healthy → Cordoned/Draining → Faulty → Repairing → Healthy`.
+///
+/// Only `Healthy` units accept new placements; every other state is
+/// excluded from the free-capacity aggregates, the snapshot's `healthy`
+/// flag, the `NodeIndex` buckets, and the GFR denominator alike.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Health {
     Healthy,
+    /// Administratively unschedulable (hot spares, manual holds); still
+    /// counted in totals. Residents, if any, keep running.
     Cordoned,
+    /// Being emptied for maintenance: no new placements, residents keep
+    /// running, and defragmentation rounds migrate them away
+    /// (drain-aware scheduling — see `rsch::defrag`).
+    Draining,
+    /// Hardware-failed; residents are evicted (§3.2.4 requeue). The
+    /// simulator's fault injector detects failures instantly, so a unit
+    /// transitions on to `Repairing` within the same fault event.
     Faulty,
+    /// A failed unit waiting out its MTTR before returning to service.
+    Repairing,
 }
 
 impl Health {

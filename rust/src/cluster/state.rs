@@ -319,32 +319,41 @@ impl ClusterState {
 
     fn note_alloc_delta(&mut self, node: NodeId, gpus: u32, alloc: bool) {
         let n = &self.nodes[node.index()];
+        // Free-count aggregates mirror `Node::free_gpus`, which reports 0
+        // for unschedulable nodes — a release on a Draining/Repairing node
+        // (a resident finishing mid-drain) must not re-add capacity the
+        // aggregates never counted. Allocations only land on schedulable
+        // nodes (`commit_placements` validates), so they always track.
+        let track_free = n.health.schedulable();
         let g = n.group.index();
         let p = self.node_pool[node.index()].index();
+        let hbd = n.hbd;
         if alloc {
-            self.group_free[g] -= gpus;
-            self.pool_free[p] -= gpus;
+            debug_assert!(track_free, "allocation on unschedulable node");
             self.allocated_gpus += gpus;
-            if let Some(h) = n.hbd {
-                self.hbd_free[h.index()] -= gpus;
+            if track_free {
+                self.group_free[g] -= gpus;
+                self.pool_free[p] -= gpus;
+                if let Some(h) = hbd {
+                    self.hbd_free[h.index()] -= gpus;
+                }
             }
         } else {
-            self.group_free[g] += gpus;
-            self.pool_free[p] += gpus;
             self.allocated_gpus -= gpus;
-            if let Some(h) = n.hbd {
-                self.hbd_free[h.index()] += gpus;
+            if track_free {
+                self.group_free[g] += gpus;
+                self.pool_free[p] += gpus;
+                if let Some(h) = hbd {
+                    self.hbd_free[h.index()] += gpus;
+                }
             }
         }
         self.log_touch(node);
     }
 
-    /// Change a node's health; aggregates update (free counts depend on
-    /// schedulability) and the mutation log records the touch.
-    pub fn set_node_health(&mut self, node: NodeId, health: Health) {
-        let old_free = self.nodes[node.index()].free_gpus();
-        self.nodes[node.index()].health = health;
-        let new_free = self.nodes[node.index()].free_gpus();
+    /// Apply a node's free-GPU-count change to the group/pool/HBD
+    /// aggregates and record the touch in the mutation log.
+    fn apply_free_delta(&mut self, node: NodeId, old_free: u32, new_free: u32) {
         let n = &self.nodes[node.index()];
         let g = n.group.index();
         let p = self.node_pool[node.index()].index();
@@ -365,6 +374,28 @@ impl ClusterState {
             }
         }
         self.log_touch(node);
+    }
+
+    /// Change a node's health; aggregates update (free counts depend on
+    /// schedulability) and the mutation log records the touch.
+    pub fn set_node_health(&mut self, node: NodeId, health: Health) {
+        let old_free = self.nodes[node.index()].free_gpus();
+        self.nodes[node.index()].health = health;
+        let new_free = self.nodes[node.index()].free_gpus();
+        self.apply_free_delta(node, old_free, new_free);
+    }
+
+    /// Change one GPU device's health (device-level fault injection).
+    /// The node's free aggregates follow — a faulted device leaves the
+    /// free count — and the mutation log records the touch so the next
+    /// snapshot refresh re-slots the node in the index.
+    pub fn set_gpu_health(&mut self, node: NodeId, device: u8, health: Health) {
+        let old_free = self.nodes[node.index()].free_gpus();
+        if let Some(g) = self.nodes[node.index()].gpus.get_mut(device as usize) {
+            g.health = health;
+        }
+        let new_free = self.nodes[node.index()].free_gpus();
+        self.apply_free_delta(node, old_free, new_free);
     }
 
     pub fn placements_of(&self, job: JobId) -> Option<&[PodPlacement]> {
@@ -530,6 +561,45 @@ mod tests {
         assert_eq!(s.pool_free_for_type(GpuTypeId(0)), 120);
         s.set_node_health(NodeId(0), Health::Healthy);
         assert_eq!(s.group_free(g0), before);
+    }
+
+    #[test]
+    fn release_on_draining_node_keeps_aggregates_consistent() {
+        // A resident finishing while its node drains must not re-add
+        // free capacity the aggregates stopped counting at drain time.
+        let mut s = small_state();
+        let g0 = s.node(NodeId(0)).group;
+        let before = s.group_free(g0);
+        s.commit_placements(JobId(1), vec![place(1, 0, vec![0, 1, 2])])
+            .unwrap();
+        s.set_node_health(NodeId(0), Health::Draining);
+        assert_eq!(s.group_free(g0), before - 8); // Whole node left the pool.
+        s.release_job(JobId(1)).unwrap();
+        assert_eq!(s.group_free(g0), before - 8, "release must not leak free count");
+        assert_eq!(s.allocated_gpus(), 0);
+        s.set_node_health(NodeId(0), Health::Healthy);
+        assert_eq!(s.group_free(g0), before);
+        // Aggregates agree with a from-scratch recount.
+        let sum: u32 = s.nodes.iter().map(|n| n.free_gpus()).sum();
+        assert_eq!(sum, 128);
+    }
+
+    #[test]
+    fn gpu_health_changes_update_free_aggregates() {
+        let mut s = small_state();
+        let g0 = s.node(NodeId(0)).group;
+        let before = s.group_free(g0);
+        s.set_gpu_health(NodeId(0), 3, Health::Faulty);
+        assert_eq!(s.group_free(g0), before - 1);
+        assert_eq!(s.node(NodeId(0)).free_gpus(), 7);
+        // Repairing → Healthy restores the device.
+        s.set_gpu_health(NodeId(0), 3, Health::Healthy);
+        assert_eq!(s.group_free(g0), before);
+        // A device fault on an unschedulable node is a free-count no-op.
+        s.set_node_health(NodeId(1), Health::Repairing);
+        let mid = s.group_free(g0);
+        s.set_gpu_health(NodeId(1), 0, Health::Faulty);
+        assert_eq!(s.group_free(g0), mid);
     }
 
     #[test]

@@ -126,6 +126,23 @@ impl ElasticService {
     }
 }
 
+/// How a job persists progress across fault restarts — the knob the
+/// reliability experiments sweep (`experiments::run_fault_tolerance`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckpointPolicy {
+    /// Idealized continuous checkpointing: every completed millisecond
+    /// survives an eviction (the legacy pre-reliability semantics, and
+    /// the default).
+    Continuous,
+    /// Periodic checkpoints every given ms of running wall-clock time
+    /// (driven by `Event::CheckpointTick`): an eviction loses the work
+    /// done since the last tick.
+    Interval(u64),
+    /// No checkpointing: an eviction restarts the job from scratch (the
+    /// naive-restart baseline).
+    None,
+}
+
 /// Resource demand for one GPU model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TypedDemand {
@@ -177,6 +194,9 @@ pub struct JobSpec {
     /// freed by inference scale-down and is the designated victim of
     /// SLO-pressure preemption when inference must scale back up.
     pub tidal: bool,
+    /// Progress persistence across restarts (fault evictions and
+    /// preemptions): what an eviction costs in redone work.
+    pub checkpoint: CheckpointPolicy,
 }
 
 impl JobSpec {
@@ -225,6 +245,7 @@ impl JobSpec {
             elastic: None,
             service: None,
             tidal: false,
+            checkpoint: CheckpointPolicy::Continuous,
         }
     }
 
@@ -262,6 +283,12 @@ impl JobSpec {
     /// Mark as tidal backfill (preemptible under SLO pressure).
     pub fn with_tidal(mut self) -> JobSpec {
         self.tidal = true;
+        self
+    }
+
+    /// Set the checkpoint/restart policy.
+    pub fn with_checkpoint(mut self, c: CheckpointPolicy) -> JobSpec {
+        self.checkpoint = c;
         self
     }
 
@@ -361,6 +388,16 @@ mod tests {
         for t in [0, ElasticService::DAY_MS / 2] {
             assert_eq!(flat.demand_replicas(t), 6);
         }
+    }
+
+    #[test]
+    fn checkpoint_policy_defaults_continuous() {
+        let j = spec();
+        assert_eq!(j.checkpoint, CheckpointPolicy::Continuous);
+        let naive = spec().with_checkpoint(CheckpointPolicy::None);
+        assert_eq!(naive.checkpoint, CheckpointPolicy::None);
+        let ckpt = spec().with_checkpoint(CheckpointPolicy::Interval(900_000));
+        assert_eq!(ckpt.checkpoint, CheckpointPolicy::Interval(900_000));
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! JWTD measures Submitted→Scheduled; SOR accrues from Scheduled (resource
 //! binding) even before Running (§4.2's image-pull window).
 
-use super::spec::JobSpec;
+use super::spec::{CheckpointPolicy, JobSpec};
 use crate::cluster::ids::JobId;
 
 /// Lifecycle phase.
@@ -53,6 +53,13 @@ pub struct Job {
     pub requeues: u32,
     /// Remaining work (ms of runtime still owed); preemption pauses it.
     pub remaining_ms: u64,
+    /// Completed work (ms) persisted by the last checkpoint — what an
+    /// eviction rolls back to under `CheckpointPolicy::Interval`.
+    pub checkpointed_ms: u64,
+    /// Cumulative work (ms) discarded by evictions: the gap between
+    /// progress at eviction time and the restart point the checkpoint
+    /// policy allows. Feeds `ReliabilityTelemetry`'s lost GPU-hours.
+    pub lost_work_ms: u64,
     /// Whether the job was scheduled by bypassing a blocked queue head
     /// (Backfill) — such jobs are the preferred victims of backfill
     /// preemption (§3.2.2/§3.2.3).
@@ -75,6 +82,8 @@ impl Job {
             epoch: 0,
             requeues: 0,
             remaining_ms,
+            checkpointed_ms: 0,
+            lost_work_ms: 0,
             backfilled: false,
         }
     }
@@ -119,11 +128,52 @@ impl Job {
         self.phase = Phase::Finished;
     }
 
-    /// Preempt at `now`, crediting completed runtime.
+    /// Completed work (ms) at time `now` for a Running job, derived from
+    /// what would still be owed under ideal checkpointing. Migration
+    /// penalties inflate `remaining_ms`, so a penalized run segment first
+    /// pays the penalty debt before it counts as completed work —
+    /// consistent with how the simulator charges the interruption.
+    fn completed_at(&self, now: u64) -> u64 {
+        let ran = self
+            .running_ms
+            .map(|start| now.saturating_sub(start))
+            .unwrap_or(0);
+        self.spec
+            .duration_ms
+            .saturating_sub(self.remaining_ms.saturating_sub(ran))
+    }
+
+    /// Persist progress at a checkpoint tick: everything completed up to
+    /// `now` survives future evictions (`CheckpointPolicy::Interval`).
+    pub fn mark_checkpoint(&mut self, now: u64) {
+        if self.phase == Phase::Running {
+            self.checkpointed_ms = self.checkpointed_ms.max(self.completed_at(now));
+        }
+    }
+
+    /// Preempt at `now`. How much completed runtime survives depends on
+    /// the spec's [`CheckpointPolicy`]: `Continuous` keeps everything
+    /// (the legacy semantics, byte-for-byte — including any outstanding
+    /// migration-penalty debt above `duration_ms`), `Interval` rolls back
+    /// to the last `mark_checkpoint`, `None` restarts from scratch. The
+    /// work re-added relative to ideal checkpointing accrues
+    /// `lost_work_ms`.
     pub fn mark_preempted(&mut self, now: u64) {
         if let Some(start) = self.running_ms {
             let ran = now.saturating_sub(start);
-            self.remaining_ms = self.remaining_ms.saturating_sub(ran);
+            // Owed under ideal (continuous) checkpointing; may exceed
+            // duration_ms while a migration penalty is outstanding, and
+            // that debt survives the restart under every policy.
+            let owed_ideal = self.remaining_ms.saturating_sub(ran);
+            let done = self.spec.duration_ms.saturating_sub(owed_ideal);
+            let kept = match self.spec.checkpoint {
+                CheckpointPolicy::Continuous => done,
+                CheckpointPolicy::Interval(_) => self.checkpointed_ms.min(done),
+                CheckpointPolicy::None => 0,
+            };
+            let owed_new = (self.spec.duration_ms - kept).max(owed_ideal);
+            self.lost_work_ms += owed_new - owed_ideal;
+            self.remaining_ms = owed_new;
         }
         self.preemptions += 1;
         self.epoch += 1;
@@ -231,5 +281,62 @@ mod tests {
         j.mark_scheduled(200);
         j.mark_preempted(400);
         assert_eq!(j.remaining_ms, 5_000);
+        assert_eq!(j.lost_work_ms, 0);
+    }
+
+    #[test]
+    fn preemption_after_migration_keeps_penalty_debt() {
+        // A migration penalty can push remaining_ms above duration_ms;
+        // a following preemption must not forgive the debt (legacy
+        // Continuous semantics) nor count it as lost work.
+        let mut j = job();
+        j.mark_admitted();
+        j.mark_scheduled(200);
+        j.mark_running(200);
+        j.mark_migrated(300, 2_000); // Ran 100ms, owes 4_900 + 2_000.
+        assert_eq!(j.remaining_ms, 6_900);
+        j.mark_preempted(400); // Another 100ms ran, paying down penalty.
+        assert_eq!(j.remaining_ms, 6_800);
+        assert_eq!(j.lost_work_ms, 0);
+    }
+
+    #[test]
+    fn naive_restart_loses_all_progress() {
+        let mut j = job();
+        j.spec = j.spec.clone().with_checkpoint(crate::job::spec::CheckpointPolicy::None);
+        j.mark_admitted();
+        j.mark_scheduled(200);
+        j.mark_running(200);
+        j.mark_preempted(2_200); // Ran 2s of 5s — all of it discarded.
+        assert_eq!(j.remaining_ms, 5_000);
+        assert_eq!(j.lost_work_ms, 2_000);
+    }
+
+    #[test]
+    fn interval_checkpoint_rolls_back_to_last_tick() {
+        let mut j = job();
+        j.spec = j
+            .spec
+            .clone()
+            .with_checkpoint(crate::job::spec::CheckpointPolicy::Interval(1_000));
+        j.mark_admitted();
+        j.mark_scheduled(0);
+        j.mark_running(0);
+        j.mark_checkpoint(1_000);
+        j.mark_checkpoint(2_000);
+        assert_eq!(j.checkpointed_ms, 2_000);
+        j.mark_preempted(2_700); // 700ms since the last tick is lost.
+        assert_eq!(j.remaining_ms, 3_000);
+        assert_eq!(j.lost_work_ms, 700);
+        // The restart resumes from the checkpoint and keeps accruing.
+        j.mark_requeued();
+        j.mark_admitted();
+        j.mark_scheduled(5_000);
+        j.mark_running(5_000);
+        j.mark_checkpoint(6_000); // 2s checkpointed + 1s more run.
+        assert_eq!(j.checkpointed_ms, 3_000);
+        j.mark_preempted(6_500);
+        assert_eq!(j.remaining_ms, 2_000);
+        assert_eq!(j.lost_work_ms, 700 + 500);
     }
 }

@@ -10,7 +10,9 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
 use crate::util::json::Json;
 
-use super::spec::{ElasticService, JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand};
+use super::spec::{
+    CheckpointPolicy, ElasticService, JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand,
+};
 
 /// Serialize one job to a JSON object.
 pub fn job_to_json(j: &JobSpec) -> Json {
@@ -40,6 +42,15 @@ pub fn job_to_json(j: &JobSpec) -> Json {
     }
     if j.tidal {
         o.set("tidal", true);
+    }
+    match j.checkpoint {
+        CheckpointPolicy::Continuous => {}
+        CheckpointPolicy::Interval(i) => {
+            o.set("checkpoint_ms", i);
+        }
+        CheckpointPolicy::None => {
+            o.set("checkpoint", "none");
+        }
     }
     let demands: Vec<Json> = j
         .demands
@@ -128,6 +139,13 @@ pub fn job_from_json(v: &Json) -> Result<JobSpec> {
         elastic,
         service: v.get("service").and_then(Json::as_u64).map(JobId),
         tidal: v.get("tidal").and_then(Json::as_bool).unwrap_or(false),
+        checkpoint: match v.get("checkpoint_ms").and_then(Json::as_u64) {
+            Some(i) => CheckpointPolicy::Interval(i),
+            None if v.get("checkpoint").and_then(Json::as_str) == Some("none") => {
+                CheckpointPolicy::None
+            }
+            None => CheckpointPolicy::Continuous,
+        },
     })
 }
 
@@ -221,6 +239,20 @@ mod tests {
         )
         .with_tidal();
         assert_eq!(job_from_json(&job_to_json(&tidal)).unwrap(), tidal);
+    }
+
+    #[test]
+    fn json_roundtrip_checkpoint_policies() {
+        let base =
+            JobSpec::homogeneous(JobId(20), TenantId(0), JobKind::Training, GpuTypeId(0), 2, 8);
+        for policy in [
+            CheckpointPolicy::Continuous,
+            CheckpointPolicy::Interval(900_000),
+            CheckpointPolicy::None,
+        ] {
+            let j = base.clone().with_checkpoint(policy);
+            assert_eq!(job_from_json(&job_to_json(&j)).unwrap(), j);
+        }
     }
 
     #[test]

@@ -298,6 +298,7 @@ impl WorkloadGen {
             needs_hbd: false,
             elastic,
             service: None,
+            checkpoint: crate::job::spec::CheckpointPolicy::Continuous,
             tidal: false,
         }
     }

@@ -44,7 +44,8 @@ usage:
                 [--policy strict-fifo|best-effort|backfill]
                 [--strategy native|binpack|e-binpack|spread|e-spread]
                 [--trace FILE] [--xla-scorer] [--flat] [--deep-snapshot]
-                [--no-index] [--elastic] [--digest FILE]
+                [--no-index] [--elastic] [--faults] [--checkpoint-min N]
+                [--digest FILE]
   kant gen-trace [--seed N] [--jobs N] [--mix training|inference] --out FILE
   kant validate [--artifacts DIR]
 
@@ -54,6 +55,12 @@ flags:
   --no-index       linear candidate scans instead of the free-capacity index
   --elastic        elastic inference: most services become diurnal replica
                    sets and the autoscaling controller runs every 5 min
+  --faults         stochastic fault injection: seeded MTBF/MTTR storms per
+                   GPU / node / HBD plus maintenance drains; training jobs
+                   checkpoint every 30 min (see --checkpoint-min) and
+                   drain-aware defrag runs every 30 min
+  --checkpoint-min N  checkpoint interval for training jobs under --faults
+                   (minutes; 0 = naive restart-from-scratch)
   --digest FILE    write the deterministic run digest (JSON) to FILE — the
                    golden-gate CI job diffs two same-seed digests
 ";
@@ -86,8 +93,16 @@ fn simulate(args: &[String]) -> Result<()> {
         }
     };
 
+    let faults = has_flag(args, "--faults");
     let qsch_cfg = QschConfig {
         policy,
+        // Fault runs opt into requeue priority aging (anti-starvation
+        // for repeatedly-hit gangs); fault-free runs keep legacy order.
+        requeue_aging_cap: if faults {
+            kant::experiments::FAULT_REQUEUE_AGING_CAP
+        } else {
+            0
+        },
         ..QschConfig::default()
     };
     let mut rsch_cfg = RschConfig::default();
@@ -111,10 +126,24 @@ fn simulate(args: &[String]) -> Result<()> {
     if elastic {
         env.workload.elastic_frac = 0.7;
     }
-    let jobs = match flag_value(args, "--trace") {
+    let mut jobs = match flag_value(args, "--trace") {
         Some(path) => trace::read_trace(&PathBuf::from(path))?,
         None => WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms),
     };
+    if faults {
+        // Training checkpoints every N minutes (0 = naive restarts).
+        let ckpt_min: u64 = flag_value(args, "--checkpoint-min").unwrap_or("30").parse()?;
+        let ckpt = if ckpt_min == 0 {
+            kant::job::spec::CheckpointPolicy::None
+        } else {
+            kant::job::spec::CheckpointPolicy::Interval(ckpt_min * 60_000)
+        };
+        for j in &mut jobs {
+            if j.kind == kant::job::spec::JobKind::Training {
+                j.checkpoint = ckpt;
+            }
+        }
+    }
     println!(
         "cluster={} gpus={} jobs={} policy={} two_level={} snapshot={:?} indexed={} scorer={}",
         env.label,
@@ -136,6 +165,13 @@ fn simulate(args: &[String]) -> Result<()> {
         } else {
             kant::sim::elastic::ElasticConfig::default()
         },
+        faults: if faults {
+            kant::sim::faults::FaultConfig::storm(seed ^ 0xFA)
+        } else {
+            kant::sim::faults::FaultConfig::default()
+        },
+        // Drain-aware reorganization needs defrag rounds to act on.
+        defrag_interval_ms: if faults { 30 * 60_000 } else { 0 },
         ..SimConfig::default()
     };
     let out = run(&mut env.state, &mut qsch, &mut rsch, jobs, &sim_cfg);
@@ -175,6 +211,27 @@ fn simulate(args: &[String]) -> Result<()> {
             out.metrics.elastic.replica_churn(),
             pct(out.metrics.elastic.elastic_utilization(a, b)),
             out.qsch_stats.slo_pressure_preemptions,
+        );
+    }
+    if faults {
+        let r = &out.metrics.reliability;
+        println!(
+            "reliability: faults={} (node {} / gpu {} / hbd {} / drain {}) repairs={} \
+             evictions={} lost={:.1} GPU-h goodput={:.0} GPU-h eff-GAR={} \
+             goodput-frac={} inflation-p99={:.2} migrations={}",
+            r.faults_injected(),
+            r.node_faults,
+            r.gpu_faults,
+            r.hbd_faults,
+            r.drains,
+            r.repairs,
+            r.fault_evictions,
+            r.lost_gpu_hours(),
+            r.goodput_gpu_hours(),
+            pct(out.metrics.effective_gar()),
+            pct(out.metrics.goodput_fraction()),
+            r.inflation_summary().p99,
+            out.migrations,
         );
     }
     Ok(())

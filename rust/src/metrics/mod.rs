@@ -74,6 +74,90 @@ impl ElasticTelemetry {
     }
 }
 
+/// Reliability telemetry: the goodput/restart accounting of the fault
+/// subsystem (`sim::faults`).
+///
+/// * **Goodput** — GPU-time that produced surviving work: Σ over finished
+///   jobs of `duration × GPUs`. Redone (lost) work, binding overhead and
+///   early-cancelled replicas allocate GPUs without adding goodput.
+/// * **Effective GAR** — goodput over the window's total GPU-time: the
+///   fraction of the fleet that produced durable work
+///   ([`Metrics::effective_gar`]).
+/// * **Restart inflation** — per finished job, bind→finish wall time
+///   over the fault-free ideal (duration + platform overhead). 1.0 means
+///   the job was never hit; the p99 is the JTTED tail that restarts
+///   inflate.
+#[derive(Debug, Clone, Default)]
+pub struct ReliabilityTelemetry {
+    /// Node-failure events delivered.
+    pub node_faults: u64,
+    /// GPU-device-failure events delivered.
+    pub gpu_faults: u64,
+    /// HBD / switch-group failure events delivered.
+    pub hbd_faults: u64,
+    /// Maintenance-drain windows started.
+    pub drains: u64,
+    /// Repair / drain-end events delivered.
+    pub repairs: u64,
+    /// Jobs that lost their resources to a fault or health flip.
+    pub fault_evictions: u64,
+    /// Work discarded by evictions, in GPU-milliseconds (what the
+    /// checkpoint policy could not save).
+    pub lost_gpu_ms: u64,
+    /// GPU-milliseconds of finished (surviving) work.
+    goodput_gpu_ms: u64,
+    /// Per-finished-job completion-inflation samples.
+    inflation: Vec<f64>,
+}
+
+impl ReliabilityTelemetry {
+    /// A job lost its resources: `gpus` held, `lost_ms` of work discarded.
+    pub fn on_eviction(&mut self, gpus: u64, lost_ms: u64) {
+        self.fault_evictions += 1;
+        self.lost_gpu_ms += gpus.saturating_mul(lost_ms);
+    }
+
+    /// A job finished: credit its useful GPU-time and record how much
+    /// restarts inflated its completion (1.0 = fault-free ideal).
+    pub fn on_job_complete(&mut self, goodput_gpu_ms: u64, inflation: f64) {
+        self.goodput_gpu_ms += goodput_gpu_ms;
+        self.inflation.push(inflation);
+    }
+
+    /// Total fault events delivered (node + GPU + HBD + drains).
+    pub fn faults_injected(&self) -> u64 {
+        self.node_faults + self.gpu_faults + self.hbd_faults + self.drains
+    }
+
+    /// GPU-hours of work discarded by evictions.
+    pub fn lost_gpu_hours(&self) -> f64 {
+        self.lost_gpu_ms as f64 / 3_600_000.0
+    }
+
+    /// GPU-hours of finished (surviving) work.
+    pub fn goodput_gpu_hours(&self) -> f64 {
+        self.goodput_gpu_ms as f64 / 3_600_000.0
+    }
+
+    /// Raw goodput in GPU-ms (digest-stable integer form).
+    pub fn goodput_gpu_ms(&self) -> u64 {
+        self.goodput_gpu_ms
+    }
+
+    /// Fault-driven restarts per finished job.
+    pub fn restarts_per_finished_job(&self) -> f64 {
+        if self.inflation.is_empty() {
+            return 0.0;
+        }
+        self.fault_evictions as f64 / self.inflation.len() as f64
+    }
+
+    /// Distribution of per-job completion inflation (p99 is the headline).
+    pub fn inflation_summary(&self) -> Summary {
+        Summary::from_samples(&self.inflation)
+    }
+}
+
 /// Live metrics collector. The runner calls the hooks; figures read the
 /// accessors.
 #[derive(Debug, Clone)]
@@ -100,6 +184,8 @@ pub struct Metrics {
     pub jobs_cancelled: u64,
     /// Elastic-inference telemetry (SLO, tidal co-scheduling, churn).
     pub elastic: ElasticTelemetry,
+    /// Reliability telemetry (faults, goodput, lost work, inflation).
+    pub reliability: ReliabilityTelemetry,
 }
 
 impl Metrics {
@@ -118,6 +204,7 @@ impl Metrics {
             jobs_scheduled: 0,
             jobs_cancelled: 0,
             elastic: ElasticTelemetry::default(),
+            reliability: ReliabilityTelemetry::default(),
         };
         m.observe_cluster(t0, state);
         m
@@ -295,6 +382,34 @@ impl Metrics {
             return 0.0;
         }
         self.gfr.average(a, b)
+    }
+
+    /// **Effective GAR** (reliability extension): goodput — GPU-time of
+    /// *finished* work — over the window's total GPU-time. Plain GAR
+    /// counts a GPU as productive while it redoes lost work; effective
+    /// GAR only counts work that survived, so the gap between the two is
+    /// the price of failures the checkpoint policy could not cover.
+    pub fn effective_gar(&self) -> f64 {
+        let (a, b) = self.window();
+        if b <= a {
+            return 0.0;
+        }
+        self.reliability.goodput_gpu_ms() as f64
+            / (self.total_gpus.max(1) as f64 * (b - a) as f64)
+    }
+
+    /// **Goodput fraction** (reliability extension): finished-work
+    /// GPU-time over *allocated* GPU-time — of everything the scheduler
+    /// handed out, how much produced durable results. The complement is
+    /// redone work, binding overhead and abandoned (unfinished or
+    /// cancelled) allocations.
+    pub fn goodput_fraction(&self) -> f64 {
+        let (a, b) = self.window();
+        let allocated = self.gar.integral(a, b);
+        if allocated <= 0.0 {
+            return 0.0;
+        }
+        self.reliability.goodput_gpu_ms() as f64 / allocated
     }
 
     /// Time-averaged GAR over an explicit window (steady-state reporting).
@@ -514,6 +629,35 @@ mod tests {
         let empty = ElasticTelemetry::default();
         assert_eq!(empty.slo_violation_rate(), 0.0);
         assert_eq!(empty.elastic_utilization(0, 100), 0.0);
+    }
+
+    #[test]
+    fn reliability_goodput_and_inflation_accessors() {
+        let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2)); // 16 GPUs.
+        let mut m = Metrics::new(&state, 0);
+        place(&mut state, 1, 0, (0..8).collect());
+        m.observe_cluster(0, &state);
+        m.observe_cluster(100, &state);
+        state.release_job(JobId(1)).unwrap();
+        m.observe_cluster(100, &state);
+        m.observe_cluster(200, &state);
+        // The job held 8 GPUs for 100 ms but only 50 ms was useful work
+        // (the rest was a redo): goodput 400 GPU-ms of 800 allocated.
+        m.reliability.on_job_complete(8 * 50, 2.0);
+        m.reliability.on_eviction(8, 50);
+        assert!((m.goodput_fraction() - 0.5).abs() < 1e-9);
+        // Effective GAR: 400 GPU-ms over 16 GPUs × 200 ms.
+        assert!((m.effective_gar() - 400.0 / 3200.0).abs() < 1e-9);
+        assert_eq!(m.reliability.lost_gpu_ms, 400);
+        assert_eq!(m.reliability.fault_evictions, 1);
+        assert!((m.reliability.restarts_per_finished_job() - 1.0).abs() < 1e-12);
+        let infl = m.reliability.inflation_summary();
+        assert_eq!(infl.count, 1);
+        assert!((infl.p99 - 2.0).abs() < 1e-12);
+        // Empty telemetry divides to zero, not NaN.
+        let empty = Metrics::new(&state, 0);
+        assert_eq!(empty.goodput_fraction(), 0.0);
+        assert_eq!(empty.reliability.restarts_per_finished_job(), 0.0);
     }
 
     #[test]

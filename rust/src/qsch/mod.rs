@@ -108,15 +108,21 @@ impl Qsch {
 
     /// Re-enqueue a job that lost its resources (preemption, node failure)
     /// or needs another attempt — the §3.2.4 requeueing mechanism.
+    ///
+    /// With `requeue_aging_cap > 0`, each preemption the job has suffered
+    /// raises its queue priority one step (capped) — repeatedly-hit gangs
+    /// climb the queue instead of starving behind fresher arrivals.
     pub fn requeue(&mut self, store: &JobStore, job: JobId) {
         let j = store.expect(job);
         debug_assert_eq!(j.phase, Phase::Queued, "requeue expects a Queued job");
         self.stats.requeues += 1;
         if !self.queues.contains(job) {
+            let boost = (j.preemptions.min(u32::from(u8::MAX)) as u8)
+                .min(self.cfg.requeue_aging_cap);
             self.queues.push(QueueEntry {
                 job,
                 tenant: j.spec.tenant,
-                priority: j.spec.priority,
+                priority: Priority(j.spec.priority.0.saturating_add(boost)),
                 submit_ms: j.submit_ms, // Keep original position.
                 total_gpus: j.spec.total_gpus(),
             });
@@ -796,6 +802,33 @@ mod tests {
         // Cancelling a terminal job is a no-op.
         assert!(!q.cancel_job(&mut store, &mut state, JobId(2), 8_000));
         assert_eq!(q.stats.cancellations, 2);
+    }
+
+    #[test]
+    fn requeue_aging_lifts_repeatedly_evicted_jobs() {
+        let run_order = |aging_cap: u8| -> Vec<u64> {
+            let cfg = QschConfig {
+                requeue_aging_cap: aging_cap,
+                ..QschConfig::default()
+            };
+            let (mut q, mut store, mut state) = setup(cfg);
+            // 24 of 32 GPUs busy; a 16-GPU job blocks; an 8-GPU job
+            // backfills into the last node.
+            q.submit(&mut store, job(1, 8, 3).with_times(0, 1_000_000));
+            q.cycle(0, &mut store, &mut state, &mut FirstFit);
+            q.submit(&mut store, job(2, 8, 2).with_times(5, 1_000_000));
+            q.submit(&mut store, job(3, 8, 1).with_times(10, 1_000_000));
+            q.cycle(100, &mut store, &mut state, &mut FirstFit);
+            assert!(store.expect(JobId(3)).holds_resources());
+            // A node fault evicts the backfilled job; it requeues behind
+            // (or, aged, ahead of) the blocked 16-GPU job.
+            q.evict_and_requeue(&mut store, &mut state, JobId(3), 1_000);
+            q.queues.global_order().iter().map(|e| e.job.0).collect()
+        };
+        // Aged: one suffered preemption lifts job 3 above the NORMAL head.
+        assert_eq!(run_order(4), vec![3, 2]);
+        // Aging disabled: submit order rules; the evicted job waits.
+        assert_eq!(run_order(0), vec![2, 3]);
     }
 
     #[test]

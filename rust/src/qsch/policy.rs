@@ -56,6 +56,14 @@ pub struct QschConfig {
     /// cannot place, evict tidally-backfilled training to make room —
     /// the reclamation half of tidal co-scheduling.
     pub enable_slo_reclaim: bool,
+    /// Requeue priority aging (anti-starvation for repeatedly-evicted
+    /// gangs): each preemption a job has suffered raises its *queue*
+    /// priority by one step on requeue, capped here; 0 (the default)
+    /// disables, keeping the pre-reliability queue order — the
+    /// fault-tolerance arms and `kant simulate --faults` opt in. Aging
+    /// affects ordering only — preemption rights still read the spec's
+    /// base priority, so an aged LOW job cannot start evicting others.
+    pub requeue_aging_cap: u8,
 }
 
 impl Default for QschConfig {
@@ -67,6 +75,7 @@ impl Default for QschConfig {
             priority_preempt_min_wait_ms: 5 * 60 * 1000,
             enable_quota_reclaim: true,
             enable_slo_reclaim: true,
+            requeue_aging_cap: 0,
         }
     }
 }

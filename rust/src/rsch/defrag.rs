@@ -9,10 +9,17 @@
 //!   already fragmented or busier (never create a new fragmented node);
 //! * per-round migration budget caps churn.
 //!
+//! **Drain-aware scheduling** (reliability subsystem): nodes in the
+//! [`Health::Draining`] lifecycle state are first-class sources — they
+//! must be emptied regardless of fragmentation class or drain cost, and
+//! (unlike fragmentation consolidation) their pods may land on idle
+//! nodes, because vacating the drain target outranks packing quality.
+//!
 //! Each migration is modelled with a configurable service interruption:
 //! the simulator replays it as release→place, so metrics see the real
 //! cost.
 
+use crate::cluster::gpu::Health;
 use crate::cluster::ids::{GroupId, JobId, NodeId};
 use crate::cluster::index::{NodeIndex, ZoneQuery};
 use crate::cluster::state::{ClusterState, PodPlacement};
@@ -90,6 +97,16 @@ pub fn plan_round(
         .collect();
     sources.sort_by_key(|n| (n.allocated_gpus(), n.id));
 
+    // Drain-aware sources: Draining nodes with residents come FIRST and
+    // bypass the fragmentation/drain-cost filters — they must be emptied.
+    // (The index excludes unschedulable nodes, so they need a direct scan.)
+    let mut drain_sources: Vec<&crate::cluster::node::Node> = state
+        .nodes
+        .iter()
+        .filter(|n| n.health == Health::Draining && n.allocated_gpus() > 0)
+        .collect();
+    drain_sources.sort_by_key(|n| (n.allocated_gpus(), n.id));
+
     let mut migrations: Vec<Migration> = Vec::new();
     // Track planned deltas so one round's plans don't conflict, and keep
     // sources/destinations disjoint (otherwise two fragmented nodes just
@@ -109,7 +126,12 @@ pub fn plan_round(
             .unwrap_or_else(|| state.node(n).free_gpu_indices())
     };
 
-    'source: for src in sources {
+    let ordered: Vec<(&crate::cluster::node::Node, bool)> = drain_sources
+        .into_iter()
+        .map(|n| (n, true))
+        .chain(sources.into_iter().map(|n| (n, false)))
+        .collect();
+    'source: for (src, draining_src) in ordered {
         if migrations.len() >= cfg.max_migrations_per_round {
             break;
         }
@@ -144,7 +166,9 @@ pub fn plan_round(
                 d != src.id
                     && !planned_sources.contains(&d)
                     && state.node(d).health.schedulable()
-                    && state.node(d).allocated_gpus() > 0
+                    // Consolidation never targets idle nodes (that would
+                    // undo the work); vacating a drain may.
+                    && (draining_src || state.node(d).allocated_gpus() > 0)
                     && free_of(state, &planned_free, d).len() as u32 >= want
             });
             // Best-fit: fullest destination first.
@@ -354,6 +378,63 @@ mod tests {
         // Only one fragmented node and three idle ones: nowhere to go.
         let plan = plan_round(&state, &store, &DefragConfig::default());
         assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn draining_node_is_emptied_even_onto_idle_nodes() {
+        let (mut state, mut store) = setup();
+        place(&mut state, &mut store, 1, 0, 2);
+        state.set_node_health(NodeId(0), Health::Draining);
+        // Only idle destinations exist: plain consolidation would stay
+        // put (see `never_targets_idle_nodes`), a drain moves anyway.
+        let plan = plan_round(&state, &store, &DefragConfig::default());
+        assert_eq!(plan.len(), 1, "drain source must be vacated: {plan:?}");
+        assert_eq!(plan[0].from, NodeId(0));
+        let (report, moved) = execute(&mut state, &plan);
+        assert_eq!(report.migrations, 1);
+        assert_eq!(moved, vec![JobId(1)]);
+        assert_eq!(state.node(NodeId(0)).allocated_gpus(), 0);
+        assert_eq!(state.allocated_gpus(), 2, "no allocation lost in the move");
+    }
+
+    #[test]
+    fn draining_node_with_gang_residents_waits() {
+        let (mut state, mut store) = setup();
+        // A 2-pod gang with one pod on the draining node: untouchable.
+        let spec = JobSpec::homogeneous(
+            JobId(1),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            2,
+            2,
+        );
+        state
+            .commit_placements(
+                JobId(1),
+                vec![
+                    PodPlacement {
+                        pod: PodId::new(JobId(1), 0),
+                        node: NodeId(0),
+                        devices: vec![0, 1],
+                        nic: 0,
+                    },
+                    PodPlacement {
+                        pod: PodId::new(JobId(1), 1),
+                        node: NodeId(1),
+                        devices: vec![0, 1],
+                        nic: 0,
+                    },
+                ],
+            )
+            .unwrap();
+        let mut j = Job::new(spec);
+        j.mark_admitted();
+        j.mark_scheduled(0);
+        store.insert(j);
+        state.set_node_health(NodeId(0), Health::Draining);
+        let plan = plan_round(&state, &store, &DefragConfig::default());
+        assert!(plan.is_empty(), "gang pods must not migrate off a drain");
     }
 
     #[test]

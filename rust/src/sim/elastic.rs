@@ -148,6 +148,24 @@ impl ElasticController {
         self.services.len()
     }
 
+    /// A fault (or health flip) killed one of this controller's
+    /// replica-delta children: drop it from the service's books so the
+    /// next load sample re-provisions the replica instead of
+    /// double-counting a dead one. The caller cancels the job itself
+    /// (releasing devices and refunding quota via `Qsch::cancel_job`).
+    /// Returns whether the id was a live child; base jobs and ordinary
+    /// workload jobs are a no-op.
+    pub fn on_child_evicted(&mut self, child: JobId) -> bool {
+        for svc in self.services.iter_mut() {
+            if let Some(pos) = svc.children.iter().position(|&c| c == child) {
+                svc.children.remove(pos);
+                svc.requested = svc.requested.saturating_sub(1);
+                return true;
+            }
+        }
+        false
+    }
+
     /// One `Event::LoadSample`: SLO accounting for every live service,
     /// then (controller mode) replica deltas toward the demand curve.
     pub fn on_sample(
@@ -317,6 +335,7 @@ fn replica_delta_spec(
         elastic: None,
         service: Some(base.id),
         tidal: false,
+        checkpoint: crate::job::spec::CheckpointPolicy::Continuous,
     }
 }
 
@@ -426,6 +445,30 @@ mod tests {
         assert_eq!(metrics.elastic.samples, 1);
         assert_eq!(metrics.elastic.slo_violations, 1, "2 active < 10 demanded");
         assert!(metrics.elastic.slo_violation_rate() > 0.99);
+    }
+
+    #[test]
+    fn fault_evicted_child_is_reprovisioned_next_sample() {
+        let (mut state, mut qsch, mut rsch, mut store, mut metrics) = harness(2, 10);
+        let jobs = vec![service(1, 2, 10)];
+        let mut ctrl = ElasticController::from_jobs(&ElasticConfig::enabled(), &jobs).unwrap();
+        qsch.cycle(0, &mut store, &mut state, &mut rsch);
+        let noon = DAY / 2;
+        ctrl.on_sample(noon, &mut store, &mut state, &mut qsch, &mut metrics);
+        qsch.cycle(noon + 1, &mut store, &mut state, &mut rsch);
+        assert_eq!(state.allocated_gpus(), 10);
+        // A fault kills child 2 (ids 2..=9 are the scale-up children):
+        // the books drop it and the cancel releases its device.
+        assert!(ctrl.on_child_evicted(JobId(2)));
+        assert!(qsch.cancel_job(&mut store, &mut state, JobId(2), noon + 2));
+        assert_eq!(state.allocated_gpus(), 9);
+        // The base job is not a child; unknown ids are no-ops.
+        assert!(!ctrl.on_child_evicted(JobId(1)));
+        // Same demand next sample: exactly the dead replica is re-made.
+        let d = ctrl.on_sample(noon + 60_000, &mut store, &mut state, &mut qsch, &mut metrics);
+        assert_eq!(d.submitted, 1);
+        qsch.cycle(noon + 60_001, &mut store, &mut state, &mut rsch);
+        assert_eq!(state.allocated_gpus(), 10, "replica count restored");
     }
 
     #[test]

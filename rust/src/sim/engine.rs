@@ -30,11 +30,24 @@ pub enum Event {
     LoadSample,
     /// Periodic fragmentation reorganization round (§3.3.3).
     Defrag,
-    /// Inject a node health flip (failure injection tests).
+    /// Inject a node health flip (hand-scheduled failure injection).
     NodeHealth {
         node: crate::cluster::ids::NodeId,
         healthy: bool,
     },
+    /// A failure domain goes down (stochastic fault injection; see
+    /// [`crate::sim::faults`]).
+    FaultInject {
+        target: crate::sim::faults::FaultTarget,
+    },
+    /// A failed/drained domain returns to service (MTTR elapsed).
+    RepairDone {
+        target: crate::sim::faults::FaultTarget,
+    },
+    /// Periodic per-job checkpoint tick (`CheckpointPolicy::Interval`):
+    /// progress up to the tick survives later evictions. Stale epochs
+    /// (job preempted/migrated meanwhile) are dropped.
+    CheckpointTick { job: JobId, epoch: u32 },
 }
 
 #[derive(Debug)]
@@ -106,12 +119,18 @@ impl Engine {
         self.heap.len()
     }
 
-    /// Does the queue hold anything besides Cycle/Sample ticks?
+    /// Does the queue hold anything besides Cycle/Sample/checkpoint ticks?
+    /// Fault/repair events count as substantive: a repair can unblock a
+    /// queued gang that looks permanently unschedulable right now.
     pub fn has_substantive_events(&self) -> bool {
         self.heap.iter().any(|Reverse(s)| {
             !matches!(
                 s.event,
-                Event::Cycle | Event::Sample | Event::LoadSample | Event::Defrag
+                Event::Cycle
+                    | Event::Sample
+                    | Event::LoadSample
+                    | Event::Defrag
+                    | Event::CheckpointTick { .. }
             )
         })
     }

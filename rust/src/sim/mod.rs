@@ -1,10 +1,12 @@
-//! Discrete-event simulation: the engine, the elasticity loop, and the
-//! experiment runner.
+//! Discrete-event simulation: the engine, the elasticity loop, the
+//! reliability (fault-injection) loop, and the experiment runner.
 
 pub mod elastic;
 pub mod engine;
+pub mod faults;
 pub mod runner;
 
 pub use elastic::{ElasticConfig, ElasticController};
 pub use engine::{Engine, Event, SimTime};
+pub use faults::{FaultConfig, FaultInjector, FaultTarget};
 pub use runner::{run, run_with_events, SimConfig, SimOutcome};

@@ -2,8 +2,9 @@
 //! over the discrete-event engine. This is the §5 experiment driver.
 
 use crate::cluster::gpu::Health;
+use crate::cluster::ids::JobId;
 use crate::cluster::state::ClusterState;
-use crate::job::spec::JobSpec;
+use crate::job::spec::{CheckpointPolicy, JobSpec};
 use crate::job::state::Phase;
 use crate::job::store::JobStore;
 use crate::metrics::report::fmt_ms;
@@ -12,6 +13,7 @@ use crate::qsch::Qsch;
 use crate::rsch::Rsch;
 
 use super::engine::{Engine, Event, SimTime};
+use super::faults::{FaultConfig, FaultInjector, FaultTarget};
 
 /// Runner tunables.
 #[derive(Debug, Clone)]
@@ -45,6 +47,11 @@ pub struct SimConfig {
     /// Elasticity loop (diurnal inference autoscaling + tidal
     /// co-scheduling); `elastic.sample_ms == 0` disables it.
     pub elastic: super::elastic::ElasticConfig,
+    /// Stochastic fault injection (seeded MTBF/MTTR renewal processes per
+    /// GPU / node / HBD plus maintenance drains); the default config
+    /// disables every domain. The trace is pre-generated at sim start, so
+    /// same seed + config replays byte-identically.
+    pub faults: FaultConfig,
 }
 
 impl Default for SimConfig {
@@ -59,6 +66,7 @@ impl Default for SimConfig {
             migration_penalty_ms: 30_000,
             defrag: crate::rsch::defrag::DefragConfig::default(),
             elastic: super::elastic::ElasticConfig::default(),
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -86,7 +94,7 @@ impl SimOutcome {
     /// (schedule/run/finish times, preemptions, requeues, migrations).
     pub fn digest_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        let mut rows: Vec<[u64; 7]> = self
+        let mut rows: Vec<[u64; 8]> = self
             .store
             .iter()
             .map(|j| {
@@ -98,6 +106,7 @@ impl SimOutcome {
                     j.preemptions as u64,
                     j.requeues as u64,
                     j.migrations as u64,
+                    j.lost_work_ms,
                 ]
             })
             .collect();
@@ -135,9 +144,55 @@ impl SimOutcome {
             .set("qsch_cancellations", self.qsch_stats.cancellations)
             .set("rsch_pods_placed", self.rsch_stats.pods_placed)
             .set("rsch_nodes_examined", self.rsch_stats.nodes_examined)
+            .set("faults_injected", self.metrics.reliability.faults_injected())
+            .set("fault_evictions", self.metrics.reliability.fault_evictions)
+            .set("repairs", self.metrics.reliability.repairs)
+            .set("lost_gpu_ms", self.metrics.reliability.lost_gpu_ms)
+            .set("goodput_gpu_ms", self.metrics.reliability.goodput_gpu_ms())
             .set("jobs_fingerprint", format!("{h:016x}"));
         d
     }
+}
+
+/// Evict the victims of a fault or health flip. Elastic replica-delta
+/// children are *cancelled* — devices released, quota refunded, the
+/// controller's books updated — because a dead replica is better
+/// re-provisioned fresh at the next load sample than requeued with a
+/// stale submit window. Everything else requeues (§3.2.4) with priority
+/// aging. Returns how many victims were cancelled (they leave the job
+/// population, so the runner's liveness accounting must see them).
+fn evict_fault_victims(
+    now: u64,
+    victims: &[JobId],
+    store: &mut JobStore,
+    state: &mut ClusterState,
+    qsch: &mut Qsch,
+    elastic: &mut Option<super::elastic::ElasticController>,
+    metrics: &mut Metrics,
+) -> u64 {
+    let mut cancelled = 0u64;
+    for &v in victims {
+        let j = store.expect(v);
+        if !j.holds_resources() {
+            continue; // Already evicted by an overlapping fault.
+        }
+        let gpus = j.spec.total_gpus() as u64;
+        let lost_before = j.lost_work_ms;
+        if j.spec.service.is_some() {
+            if let Some(ctrl) = elastic.as_mut() {
+                ctrl.on_child_evicted(v);
+            }
+            qsch.cancel_job(store, state, v, now);
+            metrics.on_cancelled();
+            metrics.reliability.on_eviction(gpus, 0);
+            cancelled += 1;
+        } else {
+            qsch.evict_and_requeue(store, state, v, now);
+            let lost = store.expect(v).lost_work_ms - lost_before;
+            metrics.reliability.on_eviction(gpus, lost);
+        }
+    }
+    cancelled
 }
 
 /// Run a workload to completion (or horizon) against a scheduler stack.
@@ -164,6 +219,30 @@ pub fn run_with_events(
     for (t, e) in extra_events {
         engine.schedule(t, e);
     }
+
+    // Reliability loop: cordon the hot-spare fleet, then pre-schedule the
+    // seeded fault trace. With no explicit horizon, faults cover the
+    // arrival window plus a one-day drain.
+    let mut faults = if cfg.faults.enabled() {
+        Some(FaultInjector::new(&cfg.faults, state))
+    } else {
+        None
+    };
+    if faults.is_some() {
+        let fault_horizon = if cfg.horizon_ms > 0 {
+            cfg.horizon_ms
+        } else {
+            jobs.iter()
+                .map(|j| j.submit_ms.saturating_add(j.duration_ms))
+                .max()
+                .unwrap_or(0)
+                + 24 * 3_600_000
+        };
+        for (t, e) in FaultInjector::trace(&cfg.faults, state, fault_horizon) {
+            engine.schedule(t, e);
+        }
+    }
+
     let mut store = JobStore::new();
     let mut metrics = Metrics::new(state, 0);
 
@@ -188,7 +267,16 @@ pub fn run_with_events(
     let mut stall: u64 = 0;
     let mut deadlocked = false;
 
-    while let Some((now, event)) = engine.next() {
+    loop {
+        // Every job departed: stop before draining the rest of the fault
+        // trace — pure health churn with no work left would pointlessly
+        // stretch the metrics window.
+        if faults.is_some() && total_jobs > 0 && finished >= total_jobs {
+            break;
+        }
+        let Some((now, event)) = engine.next() else {
+            break;
+        };
         if cfg.horizon_ms > 0 && now > cfg.horizon_ms {
             break;
         }
@@ -240,16 +328,39 @@ pub fn run_with_events(
                 if j.phase == Phase::Scheduled && j.epoch == epoch {
                     j.mark_running(now);
                     let remaining = j.remaining_ms;
+                    if let CheckpointPolicy::Interval(i) = j.spec.checkpoint {
+                        engine.schedule(now + i.max(1), Event::CheckpointTick { job, epoch });
+                    }
                     engine.schedule(now + remaining, Event::Finish { job, epoch });
                 }
             }
             Event::Finish { job, epoch } => {
                 let j = store.expect(job);
                 if j.phase == Phase::Running && j.epoch == epoch {
+                    // Goodput: the finished work survives; inflation is
+                    // bind→finish wall time over the fault-free ideal.
+                    let goodput =
+                        j.spec.duration_ms.saturating_mul(j.spec.total_gpus() as u64);
+                    let ideal = (j.spec.duration_ms + cfg.platform_overhead_ms).max(1);
+                    let actual = now.saturating_sub(j.scheduled_ms.unwrap_or(j.submit_ms));
+                    metrics
+                        .reliability
+                        .on_job_complete(goodput, actual as f64 / ideal as f64);
                     qsch.finish_job(&mut store, state, job, now);
                     metrics.on_finished();
                     metrics.observe_cluster(now, state);
                     finished += 1;
+                }
+            }
+            Event::CheckpointTick { job, epoch } => {
+                if let Some(j) = store.get_mut(job) {
+                    if j.phase == Phase::Running && j.epoch == epoch {
+                        j.mark_checkpoint(now);
+                        if let CheckpointPolicy::Interval(i) = j.spec.checkpoint {
+                            engine
+                                .schedule(now + i.max(1), Event::CheckpointTick { job, epoch });
+                        }
+                    }
                 }
             }
             Event::Sample => {
@@ -299,6 +410,10 @@ pub fn run_with_events(
                         j.mark_migrated(now, cfg.migration_penalty_ms);
                         let epoch = j.epoch;
                         let remaining = j.remaining_ms;
+                        if let CheckpointPolicy::Interval(i) = j.spec.checkpoint {
+                            engine
+                                .schedule(now + i.max(1), Event::CheckpointTick { job, epoch });
+                        }
                         engine.schedule(now + remaining, Event::Finish { job, epoch });
                     }
                     metrics.observe_cluster(now, state);
@@ -309,26 +424,62 @@ pub fn run_with_events(
             }
             Event::NodeHealth { node, healthy } => {
                 // Evict any resident jobs first (they lose their devices),
-                // then flip health — the §3.2.4 requeue path.
+                // then flip health — the §3.2.4 requeue path. Elastic
+                // children are cancelled + re-provisioned instead (see
+                // `evict_fault_victims`).
                 if !healthy {
-                    let victims: Vec<_> = state
+                    let mut victims: Vec<JobId> = state
                         .node(node)
                         .resident_pods()
                         .iter()
                         .map(|p| p.job)
                         .collect();
-                    let mut victims = victims;
                     victims.sort_unstable();
                     victims.dedup();
-                    for v in victims {
-                        qsch.evict_and_requeue(&mut store, state, v, now);
-                    }
+                    finished += evict_fault_victims(
+                        now,
+                        &victims,
+                        &mut store,
+                        state,
+                        qsch,
+                        &mut elastic,
+                        &mut metrics,
+                    );
                 }
                 state.set_node_health(
                     node,
                     if healthy { Health::Healthy } else { Health::Faulty },
                 );
                 metrics.observe_cluster(now, state);
+            }
+            Event::FaultInject { target } => {
+                if let Some(fi) = faults.as_mut() {
+                    let victims = fi.victims(state, target);
+                    finished += evict_fault_victims(
+                        now,
+                        &victims,
+                        &mut store,
+                        state,
+                        qsch,
+                        &mut elastic,
+                        &mut metrics,
+                    );
+                    fi.apply_fault(state, target);
+                    match target {
+                        FaultTarget::Node { .. } => metrics.reliability.node_faults += 1,
+                        FaultTarget::Gpu { .. } => metrics.reliability.gpu_faults += 1,
+                        FaultTarget::Hbd { .. } => metrics.reliability.hbd_faults += 1,
+                        FaultTarget::Drain { .. } => metrics.reliability.drains += 1,
+                    }
+                    metrics.observe_cluster(now, state);
+                }
+            }
+            Event::RepairDone { target } => {
+                if let Some(fi) = faults.as_mut() {
+                    fi.apply_repair(state, target);
+                    metrics.reliability.repairs += 1;
+                    metrics.observe_cluster(now, state);
+                }
             }
         }
     }
@@ -510,6 +661,145 @@ mod tests {
             "slo violation rate {}",
             out.metrics.elastic.slo_violation_rate()
         );
+    }
+
+    #[test]
+    fn checkpoint_policy_bounds_lost_work_on_fault() {
+        use crate::cluster::ids::NodeId;
+        let run_policy = |p: CheckpointPolicy| -> (u64, u64) {
+            let (mut state, mut qsch, mut rsch) = stack(1);
+            let job = train(1, 1, 8, 0, 100_000).with_checkpoint(p);
+            let events = vec![
+                (
+                    80_000,
+                    Event::NodeHealth {
+                        node: NodeId(0),
+                        healthy: false,
+                    },
+                ),
+                (
+                    150_000,
+                    Event::NodeHealth {
+                        node: NodeId(0),
+                        healthy: true,
+                    },
+                ),
+            ];
+            let out = run_with_events(
+                &mut state,
+                &mut qsch,
+                &mut rsch,
+                vec![job],
+                events,
+                &SimConfig::default(),
+            );
+            assert_eq!(out.unfinished_jobs, 0);
+            (
+                out.store.expect(JobId(1)).lost_work_ms,
+                out.metrics.reliability.lost_gpu_ms,
+            )
+        };
+        // Running from t=30s (platform overhead), failed at t=80s: 50s of
+        // the 100s ran. Continuous keeps it all; Interval(20s) ticked at
+        // 50s/70s so 40s survive (10s lost); None redoes everything.
+        assert_eq!(run_policy(CheckpointPolicy::Continuous), (0, 0));
+        assert_eq!(
+            run_policy(CheckpointPolicy::Interval(20_000)),
+            (10_000, 10_000 * 8)
+        );
+        assert_eq!(run_policy(CheckpointPolicy::None), (50_000, 50_000 * 8));
+    }
+
+    #[test]
+    fn fault_storm_is_deterministic_and_releases_everything() {
+        use crate::sim::faults::FaultConfig;
+        let run_once = || {
+            let (mut state, mut qsch, mut rsch) = stack(4);
+            let jobs: Vec<JobSpec> = (1..=12)
+                .map(|i| {
+                    train(i, 1, 8, i * 60_000, 600_000)
+                        .with_checkpoint(CheckpointPolicy::Interval(120_000))
+                })
+                .collect();
+            let cfg = SimConfig {
+                horizon_ms: 24 * 3_600_000,
+                faults: FaultConfig {
+                    seed: 9,
+                    node_mtbf_ms: 2 * 3_600_000,
+                    node_mttr_ms: 600_000,
+                    gpu_mtbf_ms: 8 * 3_600_000,
+                    gpu_mttr_ms: 600_000,
+                    drain_mtbf_ms: 8 * 3_600_000,
+                    drain_duration_ms: 900_000,
+                    ..FaultConfig::default()
+                },
+                ..SimConfig::default()
+            };
+            let out = run(&mut state, &mut qsch, &mut rsch, jobs, &cfg);
+            (
+                out.digest_json().to_string_compact(),
+                state.allocated_gpus(),
+                out.metrics.reliability.faults_injected(),
+                out.unfinished_jobs,
+            )
+        };
+        let (a, alloc, faults, unfinished) = run_once();
+        let (b, _, _, _) = run_once();
+        assert_eq!(a, b, "same-seed fault storms must replay identically");
+        assert!(faults > 0, "a day-long storm must inject something");
+        assert_eq!(unfinished, 0);
+        assert_eq!(alloc, 0, "every device released after the run");
+    }
+
+    #[test]
+    fn drain_migrates_resident_via_defrag_without_eviction() {
+        use crate::job::spec::JobKind;
+        use crate::sim::faults::{FaultConfig, FaultTarget};
+        // Single-pod non-gang job; learn its node from a dry run, then
+        // replay with a maintenance drain on that node.
+        let job = || {
+            let mut j =
+                JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Inference, G, 1, 4)
+                    .with_times(0, 3_600_000);
+            j.gang = false;
+            j
+        };
+        let probe = {
+            let (mut state, mut qsch, mut rsch) = stack(2);
+            let cfg = SimConfig {
+                horizon_ms: 60_000,
+                ..SimConfig::default()
+            };
+            run(&mut state, &mut qsch, &mut rsch, vec![job()], &cfg);
+            state.nodes_of(JobId(1))[0]
+        };
+        let (mut state, mut qsch, mut rsch) = stack(2);
+        // Drains enabled but at an unreachable rate: the only drain is
+        // the hand-scheduled one below.
+        let cfg = SimConfig {
+            defrag_interval_ms: 120_000,
+            faults: FaultConfig {
+                seed: 1,
+                drain_mtbf_ms: u64::MAX,
+                drain_duration_ms: 600_000,
+                ..FaultConfig::default()
+            },
+            ..SimConfig::default()
+        };
+        let events = vec![(
+            30_000,
+            Event::FaultInject {
+                target: FaultTarget::Drain { node: probe },
+            },
+        )];
+        let out = run_with_events(&mut state, &mut qsch, &mut rsch, vec![job()], events, &cfg);
+        assert_eq!(out.unfinished_jobs, 0);
+        let j = out.store.expect(JobId(1));
+        assert_eq!(j.preemptions, 0, "drains never evict");
+        assert_eq!(j.migrations, 1, "defrag must vacate the drain");
+        assert_eq!(out.migrations, 1);
+        assert_eq!(out.metrics.reliability.drains, 1);
+        assert_eq!(state.allocated_gpus(), 0);
     }
 
     #[test]

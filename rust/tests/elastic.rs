@@ -88,6 +88,105 @@ fn scale_up_borrows_quota_and_reclaim_evicts_exactly_borrowed_replicas() {
     assert_eq!(qsch.ledger.entry(TenantId(0), G).used_own, 8);
 }
 
+/// Reliability × elasticity regression: a node fault that kills an
+/// elastic child replica must release its devices, refund its quota, and
+/// notify the controller — so the replica books stay consistent and the
+/// next load sample re-provisions the dead replica instead of
+/// double-counting it. (Previously a fault-evicted child was requeued
+/// like a training gang, leaving the controller blind to the loss.)
+#[test]
+fn fault_evicted_elastic_child_refunds_quota_and_reprovisions() {
+    use kant::cluster::ids::NodeId;
+    use kant::sim::{run_with_events, Event};
+
+    let build = || {
+        let state = ClusterBuilder::build(&ClusterSpec::homogeneous("ef", 1, 2, 4)); // 64 GPUs.
+        let mut ledger = QuotaLedger::new(2, 1, QuotaMode::Shared);
+        ledger.set_limit(TenantId(0), G, 64);
+        ledger.set_limit(TenantId(1), G, 0);
+        let qsch = Qsch::new(QschConfig::default(), ledger);
+        let rsch = Rsch::new(RschConfig::default(), &state);
+        let svc = JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Inference, G, 16, 1)
+            .with_times(0, 2 * DAY)
+            .with_elastic(ElasticService {
+                min_replicas: 2,
+                max_replicas: 16,
+                phase_ms: 0,
+                amplitude: 1.0,
+                period_ms: DAY,
+            });
+        (state, qsch, rsch, svc)
+    };
+    let cfg = |horizon: u64| SimConfig {
+        horizon_ms: horizon,
+        elastic: ElasticConfig::enabled(),
+        ..SimConfig::default()
+    };
+
+    // Dry-run to the fault instant to learn where child 2 lives (the
+    // controller is deterministic, so the replay matches until the fault).
+    let fault_at = DAY / 2 + 10 * 60_000;
+    let child_node: NodeId = {
+        let (mut state, mut qsch, mut rsch, svc) = build();
+        run(&mut state, &mut qsch, &mut rsch, vec![svc], &cfg(fault_at));
+        *state.nodes_of(JobId(2)).first().expect("child 2 placed at noon")
+    };
+
+    let (mut state, mut qsch, mut rsch, svc) = build();
+    let events = vec![
+        (
+            fault_at,
+            Event::NodeHealth {
+                node: child_node,
+                healthy: false,
+            },
+        ),
+        (
+            fault_at + 2 * 3_600_000,
+            Event::NodeHealth {
+                node: child_node,
+                healthy: true,
+            },
+        ),
+    ];
+    let out = run_with_events(
+        &mut state,
+        &mut qsch,
+        &mut rsch,
+        vec![svc],
+        events,
+        &cfg(2 * DAY + 12 * 3_600_000),
+    );
+
+    // The fault really hit replicas, and the books stayed consistent:
+    // nothing leaks, every job ends exactly one way, quota fully refunds.
+    assert!(out.metrics.reliability.fault_evictions > 0);
+    assert_eq!(out.unfinished_jobs, 0);
+    assert_eq!(
+        out.metrics.jobs_submitted,
+        out.metrics.jobs_finished + out.metrics.jobs_cancelled
+    );
+    assert_eq!(state.allocated_gpus(), 0);
+    let e = qsch.ledger.entry(TenantId(0), G);
+    assert!(
+        e.used_own == 0 && e.borrowed == 0 && e.lent == 0,
+        "quota must drain fully: {e:?}"
+    );
+    // The controller re-provisioned the dead replica(s): more scale-up
+    // submissions than the 14 the first morning needed.
+    assert!(
+        out.metrics.elastic.scale_up_replicas > 14,
+        "dead replicas must be re-made (scale-ups {})",
+        out.metrics.elastic.scale_up_replicas
+    );
+    // Post-fault recovery keeps the SLO story intact overall.
+    assert!(
+        out.metrics.elastic.slo_violation_rate() < 0.2,
+        "slo violation rate {}",
+        out.metrics.elastic.slo_violation_rate()
+    );
+}
+
 /// Property: the elastic controller (and everything downstream of it) is
 /// deterministic per seed — the full-run digest replays byte-identically
 /// for the same seed and diverges across seeds.

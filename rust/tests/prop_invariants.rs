@@ -325,6 +325,169 @@ fn indexed_candidate_selection_matches_linear_scan() {
 }
 
 #[test]
+fn health_storms_leak_no_allocations_and_aggregates_match_index() {
+    // Reliability-subsystem invariant: after an arbitrary seeded storm of
+    // health transitions (the full Healthy → Cordoned/Draining → Faulty →
+    // Repairing lifecycle, on allocated nodes too), device-level faults,
+    // fault-style evictions and releases-mid-drain, no device allocation
+    // is leaked and the maintained free-GPU aggregates agree with both a
+    // from-scratch recount and the NodeIndex buckets.
+    use kant::cluster::gpu::Health;
+    use kant::cluster::ids::{GroupId, NodeId, PodId};
+    use kant::cluster::index::{NodeIndex, ZoneQuery};
+    use kant::cluster::snapshot::{Snapshot, SnapshotMode};
+    use kant::cluster::state::PodPlacement;
+
+    prop::check(30, |rng| {
+        let groups = rng.range_inclusive(1, 3) as u32;
+        let nodes_per = rng.range_inclusive(2, 5) as u32;
+        let mut s = ClusterBuilder::build(&ClusterSpec::homogeneous("hs", 1, groups, nodes_per));
+        let mut snap = Snapshot::with_index(SnapshotMode::Incremental, true);
+        snap.refresh(&s);
+        let num_nodes = s.nodes.len();
+        let healths = [
+            Health::Healthy,
+            Health::Cordoned,
+            Health::Draining,
+            Health::Faulty,
+            Health::Repairing,
+        ];
+        let mut live: Vec<(u64, NodeId)> = Vec::new();
+        let mut next = 1u64;
+        for step in 0..rng.range_inclusive(20, 80) {
+            match rng.below(6) {
+                0 | 1 => {
+                    // Place a 1-4 GPU pod on a random schedulable node.
+                    let node = NodeId(rng.below(num_nodes as u64) as u32);
+                    let want = rng.range_inclusive(1, 4) as usize;
+                    let free = s.node(node).free_gpu_indices();
+                    if free.len() >= want && s.node(node).health.schedulable() {
+                        s.commit_placements(
+                            JobId(next),
+                            vec![PodPlacement {
+                                pod: PodId::new(JobId(next), 0),
+                                node,
+                                devices: free[..want].to_vec(),
+                                nic: 0,
+                            }],
+                        )
+                        .unwrap();
+                        live.push((next, node));
+                        next += 1;
+                    }
+                }
+                2 => {
+                    // Release a random job — including residents of nodes
+                    // that went Draining/Faulty meanwhile (the
+                    // finish-mid-drain path).
+                    if let Some(i) =
+                        (!live.is_empty()).then(|| rng.below(live.len() as u64) as usize)
+                    {
+                        let (j, _) = live.swap_remove(i);
+                        s.release_job(JobId(j)).unwrap();
+                    }
+                }
+                3 | 4 => {
+                    // Arbitrary lifecycle transition on ANY node. When a
+                    // node leaves service the fault path evicts residents
+                    // first (mirroring the runner's order of operations).
+                    let node = NodeId(rng.below(num_nodes as u64) as u32);
+                    let h = *rng.choose(&healths).unwrap();
+                    if !h.schedulable() && rng.chance(0.7) {
+                        let victims: Vec<u64> = live
+                            .iter()
+                            .filter(|&&(_, n)| n == node)
+                            .map(|&(j, _)| j)
+                            .collect();
+                        for j in victims {
+                            s.release_job(JobId(j)).unwrap();
+                            live.retain(|&(id, _)| id != j);
+                        }
+                    }
+                    s.set_node_health(node, h);
+                }
+                _ => {
+                    // Device-level fault/repair churn.
+                    let node = NodeId(rng.below(num_nodes as u64) as u32);
+                    let dev = rng.below(8) as usize;
+                    let cur = s.node(node).gpus[dev].health;
+                    let occupied = s.node(node).gpus[dev].allocated_to.is_some();
+                    if occupied {
+                        continue; // Device faults on residents are the runner's (eviction) path.
+                    }
+                    let h = if cur.schedulable() {
+                        Health::Faulty
+                    } else {
+                        Health::Healthy
+                    };
+                    s.set_gpu_health(node, dev as u8, h);
+                }
+            }
+
+            // Invariant 1: allocation totals match a device-level recount.
+            let recount: u32 = s.nodes.iter().map(|n| n.allocated_gpus()).sum();
+            prop_assert!(
+                s.allocated_gpus() == recount,
+                "allocation leak at step {step}: tracked {} vs recount {recount}",
+                s.allocated_gpus()
+            );
+            // Invariant 2: maintained free aggregates match a recount.
+            for g in 0..groups {
+                let want: u32 = s
+                    .nodes
+                    .iter()
+                    .filter(|n| n.group == GroupId(g))
+                    .map(|n| n.free_gpus())
+                    .sum();
+                prop_assert!(
+                    s.group_free(GroupId(g)) == want,
+                    "group {g} free drifted at step {step}: {} vs {want}",
+                    s.group_free(GroupId(g))
+                );
+            }
+            let pool_want: u32 = s.nodes.iter().map(|n| n.free_gpus()).sum();
+            prop_assert!(
+                s.pool_free_for_type(G) == pool_want,
+                "pool free drifted at step {step}"
+            );
+
+            // Invariant 3: the NodeIndex buckets agree with the state.
+            if rng.chance(0.5) || step == 0 {
+                snap.refresh(&s);
+                let ix = snap.index().unwrap();
+                let fresh = NodeIndex::from_state(&s);
+                for g in 0..groups {
+                    for min in [1u32, 4, 8] {
+                        let mut got = Vec::new();
+                        ix.for_group(GroupId(g), min, ZoneQuery::Any, &mut got);
+                        got.sort_unstable();
+                        let mut scratch = Vec::new();
+                        fresh.for_group(GroupId(g), min, ZoneQuery::Any, &mut scratch);
+                        scratch.sort_unstable();
+                        let want: Vec<NodeId> = s
+                            .nodes
+                            .iter()
+                            .filter(|n| {
+                                n.group == GroupId(g)
+                                    && n.health.schedulable()
+                                    && n.free_gpus() >= min
+                            })
+                            .map(|n| n.id)
+                            .collect();
+                        prop_assert!(
+                            got == want && scratch == want,
+                            "index diverged at step {step} (group {g}, min {min}): \
+                             incremental {got:?} / fresh {scratch:?} vs state {want:?}"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn preemption_never_loses_jobs() {
     // Under heavy HIGH-priority pressure with preemption enabled, every
     // job must end Finished or still-tracked — never dropped.
