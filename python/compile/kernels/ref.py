@@ -19,8 +19,9 @@ Feature layout — node features ``[N, NODE_F]`` (f32):
    6  job_pods_on_node       this job's pods already placed on the node
    7  job_pods_in_group      this job's pods already placed in the group
    8  topo_tier              min distance tier to already-placed pods
-                             (0 node / 1 leaf / 2 spine / 3 superspine,
-                              3 when the job has no placed pods yet)
+                             (0 node / 1 leaf / 2 spine / 3 superspine /
+                              4 cross-superspine; 4 when the job has no
+                              placed pods yet)
    9  in_inference_zone      1.0 if node is in the E-Spread dedicated zone
   10  hbd_free               free GPUs in the node's HBD (scale-up) domain
   11  nvlink_best_clique     size of the largest free NVLink-connected
@@ -80,7 +81,10 @@ def node_components(feat: jnp.ndarray, job: jnp.ndarray) -> jnp.ndarray:
     # c3: group emptiness — prefer empty groups (large gang jobs).
     group_empty = jnp.clip(group_free / group_total, 0.0, 1.0)
     # c4: topology closeness to already-placed pods of the same job.
-    topo = 1.0 - jnp.clip(topo_tier, 0.0, 3.0) / 3.0
+    #     Truthful 5-tier scale (0 node .. 4 cross-superspine): staying
+    #     under the gang's superspine keeps a 0.25 edge over crossing the
+    #     core layer. Mirrors rust/src/rsch/score.rs; keep in lockstep.
+    topo = 1.0 - jnp.clip(topo_tier, 0.0, 4.0) / 4.0
     # c5: co-location with this job's pods already on the node (E-Binpack
     #     node level), saturating at 8 pods.
     colocate = jnp.clip(pods_on_node, 0.0, 8.0) / 8.0

@@ -65,7 +65,7 @@ def _node_score_block(feat_ref, job_ref, w_ref, out_ref):
     spread = 1.0 - jnp.clip(alloc / total, 0.0, 1.0)
     group_pack = 1.0 - jnp.clip(group_free / group_total, 0.0, 1.0)
     group_empty = jnp.clip(group_free / group_total, 0.0, 1.0)
-    topo = 1.0 - jnp.clip(topo_tier, 0.0, 3.0) / 3.0
+    topo = 1.0 - jnp.clip(topo_tier, 0.0, 4.0) / 4.0
     colocate = jnp.clip(pods_on_node, 0.0, 8.0) / 8.0
     zone = in_zone
     nvlink = (clique >= gpus_per_pod).astype(jnp.float32)

@@ -26,7 +26,7 @@ def make_node_features(n: int, rng: np.random.Generator) -> np.ndarray:
     group_free = np.floor(rng.uniform(0, group_total + 1))
     pods_on_node = np.floor(rng.uniform(0, 9, size=n))
     pods_in_group = pods_on_node + np.floor(rng.uniform(0, 4, size=n))
-    topo_tier = rng.choice([0.0, 1.0, 2.0, 3.0], size=n)
+    topo_tier = rng.choice([0.0, 1.0, 2.0, 3.0, 4.0], size=n)
     in_zone = (rng.uniform(size=n) > 0.7).astype(np.float32)
     hbd_free = np.floor(rng.uniform(0, 64, size=n))
     clique = np.floor(rng.uniform(0, free + 1))

@@ -10,7 +10,7 @@ use kant::cluster::gpu::Health;
 use kant::cluster::ids::{GpuTypeId, JobId, NodeId, TenantId};
 use kant::job::spec::{JobKind, JobSpec};
 use kant::qsch::Placer;
-use kant::rsch::{Rsch, RschConfig};
+use kant::rsch::{GangScoring, Rsch, RschConfig};
 use kant::util::benchkit::Bench;
 use kant::util::rng::Pcg32;
 use std::time::Duration;
@@ -127,6 +127,42 @@ fn bench_fault_storm(b: &mut Bench, groups: u32) {
     });
 }
 
+/// Large-gang scoring: a 512-GPU (64-pod) whole-node gang per iteration,
+/// across the three gang-scoring modes. `PooledIncremental` (default)
+/// must both run faster and rebuild far fewer feature rows than the
+/// per-pod paths — the `nodes_scored` counters printed alongside are the
+/// work-drop evidence the truthful-tier refactor claims.
+fn bench_large_gang(b: &mut Bench, groups: u32, mode: GangScoring, label: &str) {
+    let mut state = make_state(groups);
+    let cfg = RschConfig {
+        gang_scoring: mode,
+        ..RschConfig::default()
+    };
+    let mut rsch = Rsch::new(cfg, &state);
+    let n = state.nodes.len();
+    let mut id = 1u64;
+    b.run_throughput(&format!("place-512gpu-gang/{label}/{n}nodes"), 64.0, || {
+        let spec = JobSpec::homogeneous(
+            JobId(id),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            64,
+            8,
+        );
+        id += 1;
+        if rsch.place(&mut state, &spec).is_ok() {
+            state.release_job(JobId(id - 1)).unwrap();
+        }
+    });
+    eprintln!(
+        "   [{label}] nodes_scored={} pods_placed={} (rows/pod {:.1})",
+        rsch.stats.nodes_scored,
+        rsch.stats.pods_placed,
+        rsch.stats.nodes_scored as f64 / rsch.stats.pods_placed.max(1) as f64,
+    );
+}
+
 /// §3.1 multi-instance parallel planning throughput.
 fn bench_parallel(b: &mut Bench, threads: usize) {
     let mut state = make_state(32);
@@ -210,6 +246,14 @@ fn main() {
     // artifact so the bench trajectory covers the fault subsystem.
     println!("== reliability: fault-storm churn ==");
     bench_fault_storm(&mut b, if small { 8 } else { 32 });
+
+    // Large-gang (512-GPU) scoring modes: per-pod rescan vs pooled
+    // rebuild vs the default pooled-incremental row cache.
+    println!("== large-gang scoring: per-pod vs pooled vs incremental ==");
+    let gg = if small { 8 } else { 32 };
+    bench_large_gang(&mut b, gg, GangScoring::PerPodRescan, "per-pod-rescan");
+    bench_large_gang(&mut b, gg, GangScoring::PooledRebuild, "pooled-rebuild");
+    bench_large_gang(&mut b, gg, GangScoring::PooledIncremental, "pooled-incremental");
 
     // Seed/refresh a perf baseline when requested. From the package root:
     //   BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench sched_cycle

@@ -24,7 +24,7 @@ fn random_features(rng: &mut Pcg32, n: usize) -> Vec<f32> {
         row[3] = 1.0;
         row[4] = rng.below(257) as f32;
         row[5] = 256.0;
-        row[8] = rng.below(4) as f32;
+        row[8] = rng.below(5) as f32; // Tier 0..=4 (cross-superspine).
         row[11] = row[0];
     }
     feat

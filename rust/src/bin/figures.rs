@@ -5,7 +5,7 @@
 //!   figures [--scale small|paper|xlarge] [--seed N] [--out results/] <id>...
 //!   ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15
 //!        table1 ablation-espread ablation-defrag ablation-index
-//!        elastic-inference fault-tolerance all
+//!        elastic-inference fault-tolerance topology-stress all
 //!   (fig10 covers 10-12; fig13 covers 13-14; snapshot/two-level ablations
 //!    live in `cargo bench`.)
 
@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         ids = vec![
             "fig2", "fig3", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
             "fig10", "fig13", "fig15", "ablation-espread", "ablation-defrag",
-            "ablation-index", "elastic-inference", "fault-tolerance",
+            "ablation-index", "elastic-inference", "fault-tolerance", "topology-stress",
         ]
         .into_iter()
         .map(String::from)
@@ -99,6 +99,7 @@ fn main() -> anyhow::Result<()> {
             "ablation-index" => exp::ablation_candidate_index(scale, seed),
             "elastic-inference" => exp::elastic_inference(seed),
             "fault-tolerance" => exp::fault_tolerance(seed),
+            "topology-stress" => exp::topology_stress(scale, seed),
             other => {
                 eprintln!("unknown figure id: {other}");
                 continue;
@@ -116,4 +117,5 @@ const HELP: &str = "\
 figures — regenerate the paper's tables and figures
 usage: figures [--scale small|paper|xlarge] [--seed N] [--out DIR] <id>... | all
 ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15 table1 \
-ablation-espread ablation-defrag ablation-index elastic-inference fault-tolerance";
+ablation-espread ablation-defrag ablation-index elastic-inference fault-tolerance \
+topology-stress";

@@ -194,7 +194,11 @@ impl ClusterBuilder {
             }
         }
 
-        fabric.finalize(nodes.len());
+        // The builder assigns every node to a group above, so finalize
+        // can only fail on a builder bug — surface it loudly.
+        fabric
+            .finalize(nodes.len())
+            .expect("ClusterBuilder left a node outside every NodeNetGroup");
         ClusterState::new(gpu_types, nodes, fabric)
     }
 }

@@ -24,4 +24,6 @@ pub use pool::{NodePool, PoolSet};
 pub use snapshot::{GroupRecord, NodeRecord, Snapshot, SnapshotMode, SnapshotStats};
 pub use state::{ClusterState, PodPlacement, StateError};
 pub use tenant::{BorrowRecord, QuotaEntry, QuotaError, QuotaLedger, QuotaMode, Tenant};
-pub use topology::{Fabric, Hbd, NetGroup, Spine, Tier};
+pub use topology::{
+    Fabric, FootprintDelta, GangFootprint, Hbd, NetGroup, OrphanNodeError, Spine, Tier,
+};

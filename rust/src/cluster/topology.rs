@@ -4,23 +4,55 @@
 //! The fabric is a static tree built once by `cluster::builder`; distance
 //! queries are O(1) from precomputed per-node group/spine/superspine ids.
 
+use std::collections::HashSet;
+use std::fmt;
+
 use super::ids::{GroupId, HbdId, NodeId, SpineId, SuperSpineId};
 
 /// Communication tier between two nodes — lower is better (§3.3.5 orders
-/// preference: same leaf < same spine < same superspine).
+/// preference: same leaf < same spine < same superspine < crossing the
+/// core layer). `CrossSuperSpine` is the truthful worst case: traffic
+/// between different superspines transits the core and is the §3.3.5
+/// overhead E-Binpack large gangs must avoid, so it scores strictly worse
+/// than `SameSuperSpine`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Tier {
     SameNode = 0,
     SameLeaf = 1,
     SameSpine = 2,
     SameSuperSpine = 3,
+    CrossSuperSpine = 4,
 }
 
 impl Tier {
     pub fn as_f32(self) -> f32 {
         self as u8 as f32
     }
+
+    /// The worst (largest) tier — what an empty placement defaults to in
+    /// the feature-8 contract.
+    pub const WORST: Tier = Tier::CrossSuperSpine;
 }
+
+/// Error from [`Fabric::finalize`]: the builder referenced fewer nodes
+/// than exist, leaving a stray node outside every NodeNetGroup. Letting
+/// such a node through would carry `GroupId(u32::MAX)` into `group_of`
+/// and the `NodeIndex` in release builds — a silent corruption — so
+/// finalization refuses instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OrphanNodeError(pub NodeId);
+
+impl fmt::Display for OrphanNodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} belongs to no NodeNetGroup — every node must be assigned before finalize",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for OrphanNodeError {}
 
 /// One NodeNetGroup = one LeafGroup: the basic scheduling management unit.
 #[derive(Debug, Clone, PartialEq)]
@@ -62,7 +94,12 @@ pub struct Fabric {
 impl Fabric {
     /// Build the per-node lookup tables; call once after groups/spines/hbds
     /// are populated. `num_nodes` must cover every node referenced.
-    pub fn finalize(&mut self, num_nodes: usize) {
+    ///
+    /// Errors if any node in `0..num_nodes` belongs to no NodeNetGroup —
+    /// a hard error in every build profile (not just a `debug_assert`),
+    /// because an orphan node would otherwise carry sentinel ids into the
+    /// distance tables and the free-capacity index silently.
+    pub fn finalize(&mut self, num_nodes: usize) -> Result<(), OrphanNodeError> {
         self.node_group = vec![GroupId(u32::MAX); num_nodes];
         self.node_spine = vec![SpineId(u32::MAX); num_nodes];
         self.node_superspine = vec![SuperSpineId(u32::MAX); num_nodes];
@@ -80,10 +117,15 @@ impl Fabric {
                 self.node_hbd[n.index()] = Some(h.id);
             }
         }
-        debug_assert!(
-            self.node_group.iter().all(|g| g.0 != u32::MAX),
-            "every node must belong to a NodeNetGroup"
-        );
+        if let Some(orphan) = self
+            .node_group
+            .iter()
+            .position(|g| g.0 == u32::MAX)
+            .map(|i| NodeId(i as u32))
+        {
+            return Err(OrphanNodeError(orphan));
+        }
+        Ok(())
     }
 
     #[inline]
@@ -106,7 +148,10 @@ impl Fabric {
         self.node_hbd[n.index()]
     }
 
-    /// Communication tier between two nodes.
+    /// Communication tier between two nodes. Truthful across the whole
+    /// tree: two nodes under *different* superspines are
+    /// [`Tier::CrossSuperSpine`], not collapsed into
+    /// [`Tier::SameSuperSpine`].
     pub fn tier(&self, a: NodeId, b: NodeId) -> Tier {
         if a == b {
             Tier::SameNode
@@ -114,19 +159,25 @@ impl Fabric {
             Tier::SameLeaf
         } else if self.spine_of(a) == self.spine_of(b) {
             Tier::SameSpine
-        } else {
+        } else if self.superspine_of(a) == self.superspine_of(b) {
             Tier::SameSuperSpine
+        } else {
+            Tier::CrossSuperSpine
         }
     }
 
-    /// Minimum tier from `n` to any node in `placed` (3 when `placed` empty) —
-    /// feature 8 of the scoring contract.
+    /// Minimum tier from `n` to any node in `placed` ([`Tier::WORST`] when
+    /// `placed` is empty) — feature 8 of the scoring contract.
+    ///
+    /// O(|placed|); the scheduling hot path uses the O(1)
+    /// [`GangFootprint::tier_to`] instead, with this scan kept as the
+    /// property-test oracle.
     pub fn min_tier_to(&self, n: NodeId, placed: &[NodeId]) -> Tier {
         placed
             .iter()
             .map(|&p| self.tier(n, p))
             .min()
-            .unwrap_or(Tier::SameSuperSpine)
+            .unwrap_or(Tier::WORST)
     }
 
     pub fn num_groups(&self) -> usize {
@@ -136,10 +187,122 @@ impl Fabric {
     /// Number of distinct NodeNetGroups spanned by a set of nodes — the
     /// numerator of JTTED's NodeNetGroupNum deviation ratio (§4.5).
     pub fn groups_spanned(&self, nodes: &[NodeId]) -> usize {
-        let mut gs: Vec<GroupId> = nodes.iter().map(|&n| self.group_of(n)).collect();
-        gs.sort_unstable();
-        gs.dedup();
-        gs.len()
+        Self::distinct(nodes.iter().map(|&n| self.group_of(n)))
+    }
+
+    /// Number of distinct spines spanned by a set of nodes — numerator of
+    /// the JTTED spine-span deviation ratio.
+    pub fn spines_spanned(&self, nodes: &[NodeId]) -> usize {
+        Self::distinct(nodes.iter().map(|&n| self.spine_of(n)))
+    }
+
+    /// Number of distinct superspines spanned by a set of nodes —
+    /// numerator of the JTTED superspine-span deviation ratio (each extra
+    /// superspine is a core-layer crossing for the gang's collectives).
+    pub fn superspines_spanned(&self, nodes: &[NodeId]) -> usize {
+        Self::distinct(nodes.iter().map(|&n| self.superspine_of(n)))
+    }
+
+    /// Spines under the superspine of `s` (superspines may be ragged when
+    /// the spine count doesn't divide evenly).
+    pub fn spines_in_superspine(&self, ss: SuperSpineId) -> usize {
+        self.spines.iter().filter(|s| s.superspine == ss).count()
+    }
+
+    fn distinct<T: Ord>(it: impl Iterator<Item = T>) -> usize {
+        let mut v: Vec<T> = it.collect();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    }
+}
+
+/// Incrementally-maintained topology footprint of one job's in-flight
+/// placement: which nodes, NodeNetGroups, spines and superspines the plan
+/// already occupies. Answers the feature-8 "minimum tier to any placed
+/// pod" query in O(1) per candidate instead of the O(|placed|) scan
+/// [`Fabric::min_tier_to`] performs — the difference between
+/// O(pods²·candidates) and O(pods·candidates) per gang on the scoring
+/// hot path.
+///
+/// Invariant (property-tested in `tests/prop_invariants.rs`): for every
+/// node `n`, `footprint.tier_to(fabric, n)` equals
+/// `fabric.min_tier_to(n, placed)` where `placed` is the exact set of
+/// nodes recorded via [`GangFootprint::place`].
+#[derive(Debug, Clone, Default)]
+pub struct GangFootprint {
+    nodes: HashSet<NodeId>,
+    groups: HashSet<GroupId>,
+    spines: HashSet<SpineId>,
+    superspines: HashSet<SuperSpineId>,
+}
+
+/// Which topology layers a [`GangFootprint::place`] call newly entered.
+/// Drives score-row invalidation: only candidates inside a newly-entered
+/// layer can have had their minimum tier improved by the placement.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FootprintDelta {
+    /// The footprint was empty before this placement (every candidate's
+    /// tier changes from [`Tier::WORST`] to its true value).
+    pub first_pod: bool,
+    pub new_node: bool,
+    pub new_group: bool,
+    pub new_spine: bool,
+    pub new_superspine: bool,
+}
+
+impl GangFootprint {
+    pub fn new() -> GangFootprint {
+        GangFootprint::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Record a pod placed on `n`; returns which layers were newly
+    /// entered so callers can invalidate exactly the affected score rows.
+    pub fn place(&mut self, fabric: &Fabric, n: NodeId) -> FootprintDelta {
+        let first_pod = self.nodes.is_empty();
+        FootprintDelta {
+            first_pod,
+            new_node: self.nodes.insert(n),
+            new_group: self.groups.insert(fabric.group_of(n)),
+            new_spine: self.spines.insert(fabric.spine_of(n)),
+            new_superspine: self.superspines.insert(fabric.superspine_of(n)),
+        }
+    }
+
+    /// O(1) minimum communication tier from `n` to the recorded
+    /// placement ([`Tier::WORST`] while empty).
+    pub fn tier_to(&self, fabric: &Fabric, n: NodeId) -> Tier {
+        if self.nodes.contains(&n) {
+            Tier::SameNode
+        } else if self.groups.contains(&fabric.group_of(n)) {
+            Tier::SameLeaf
+        } else if self.spines.contains(&fabric.spine_of(n)) {
+            Tier::SameSpine
+        } else if self.superspines.contains(&fabric.superspine_of(n)) {
+            Tier::SameSuperSpine
+        } else {
+            Tier::CrossSuperSpine
+        }
+    }
+
+    pub fn nodes_spanned(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn groups_spanned(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn spines_spanned(&self) -> usize {
+        self.spines.len()
+    }
+
+    pub fn superspines_spanned(&self) -> usize {
+        self.superspines.len()
     }
 }
 
@@ -178,7 +341,7 @@ mod tests {
             id: HbdId(0),
             nodes: vec![NodeId(0), NodeId(1), NodeId(2), NodeId(3)],
         });
-        f.finalize(16);
+        f.finalize(16).unwrap();
         f
     }
 
@@ -189,18 +352,24 @@ mod tests {
         assert_eq!(f.tier(NodeId(0), NodeId(1)), Tier::SameLeaf);
         assert_eq!(f.tier(NodeId(0), NodeId(2)), Tier::SameSpine);
         assert_eq!(f.tier(NodeId(0), NodeId(4)), Tier::SameSuperSpine);
-        assert_eq!(f.tier(NodeId(0), NodeId(8)), Tier::SameSuperSpine);
+        // Nodes 8.. sit under superspine 1: a truthful CrossSuperSpine,
+        // strictly worse than staying under superspine 0.
+        assert_eq!(f.tier(NodeId(0), NodeId(8)), Tier::CrossSuperSpine);
         assert!(Tier::SameLeaf < Tier::SameSpine);
+        assert!(Tier::SameSpine < Tier::SameSuperSpine);
+        assert!(Tier::SameSuperSpine < Tier::CrossSuperSpine);
+        assert_eq!(Tier::WORST, Tier::CrossSuperSpine);
     }
 
     #[test]
     fn min_tier_to_empty_is_worst() {
         let f = small_fabric();
-        assert_eq!(f.min_tier_to(NodeId(0), &[]), Tier::SameSuperSpine);
+        assert_eq!(f.min_tier_to(NodeId(0), &[]), Tier::CrossSuperSpine);
         assert_eq!(
             f.min_tier_to(NodeId(0), &[NodeId(4), NodeId(1)]),
             Tier::SameLeaf
         );
+        assert_eq!(f.min_tier_to(NodeId(0), &[NodeId(8)]), Tier::CrossSuperSpine);
     }
 
     #[test]
@@ -219,6 +388,20 @@ mod tests {
     }
 
     #[test]
+    fn spine_and_superspine_spans_count_distinct() {
+        let f = small_fabric();
+        // Nodes 0 and 2: groups 0/1 under spine 0 — one spine, one superspine.
+        assert_eq!(f.spines_spanned(&[NodeId(0), NodeId(2)]), 1);
+        assert_eq!(f.superspines_spanned(&[NodeId(0), NodeId(2)]), 1);
+        // Nodes 0 and 4: spines 0 and 1, still superspine 0.
+        assert_eq!(f.spines_spanned(&[NodeId(0), NodeId(4)]), 2);
+        assert_eq!(f.superspines_spanned(&[NodeId(0), NodeId(4)]), 1);
+        // Nodes 0 and 8: the core-layer crossing.
+        assert_eq!(f.superspines_spanned(&[NodeId(0), NodeId(8)]), 2);
+        assert_eq!(f.spines_in_superspine(SuperSpineId(0)), 2);
+    }
+
+    #[test]
     fn lookup_tables_consistent() {
         let f = small_fabric();
         for g in &f.groups {
@@ -227,5 +410,59 @@ mod tests {
                 assert_eq!(f.spine_of(n), g.spine);
             }
         }
+    }
+
+    #[test]
+    fn finalize_rejects_orphan_nodes() {
+        let mut f = small_fabric();
+        // 17 nodes declared, only 16 assigned to groups: hard error, not
+        // a debug-only assert.
+        let err = f.finalize(17).unwrap_err();
+        assert_eq!(err, OrphanNodeError(NodeId(16)));
+        assert!(err.to_string().contains("NodeNetGroup"));
+        // The valid shape still finalizes.
+        assert!(f.finalize(16).is_ok());
+    }
+
+    #[test]
+    fn footprint_tier_matches_min_tier_scan() {
+        let f = small_fabric();
+        let mut fp = GangFootprint::new();
+        let mut placed: Vec<NodeId> = Vec::new();
+        for &n in &[NodeId(5), NodeId(4), NodeId(0), NodeId(12)] {
+            // Before and after each placement, the O(1) footprint query
+            // must agree with the O(|placed|) oracle for every node.
+            for probe in 0..16u32 {
+                assert_eq!(
+                    fp.tier_to(&f, NodeId(probe)),
+                    f.min_tier_to(NodeId(probe), &placed),
+                    "probe {probe} diverged with placed {placed:?}"
+                );
+            }
+            fp.place(&f, n);
+            placed.push(n);
+        }
+        assert_eq!(fp.nodes_spanned(), 4);
+        assert_eq!(fp.groups_spanned(), 4);
+        assert_eq!(fp.superspines_spanned(), 2);
+        assert_eq!(fp.superspines_spanned(), f.superspines_spanned(&placed));
+        assert_eq!(fp.spines_spanned(), f.spines_spanned(&placed));
+    }
+
+    #[test]
+    fn footprint_delta_reports_new_layers() {
+        let f = small_fabric();
+        let mut fp = GangFootprint::new();
+        let d = fp.place(&f, NodeId(0));
+        assert!(d.first_pod && d.new_node && d.new_group && d.new_spine && d.new_superspine);
+        // Same leaf: nothing above the group is new.
+        let d = fp.place(&f, NodeId(1));
+        assert!(!d.first_pod && d.new_node && !d.new_group && !d.new_spine);
+        // Same spine, new group.
+        let d = fp.place(&f, NodeId(2));
+        assert!(d.new_group && !d.new_spine && !d.new_superspine);
+        // New superspine.
+        let d = fp.place(&f, NodeId(8));
+        assert!(d.new_group && d.new_spine && d.new_superspine);
     }
 }

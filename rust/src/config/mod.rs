@@ -48,7 +48,15 @@ pub fn training_cluster(scale: Scale, seed: u64, rho: f64) -> Environment {
     let (spec, days) = match scale {
         Scale::Paper => (ClusterSpec::train8000(), 14.0),
         Scale::XLarge => (ClusterSpec::train10000(), 14.0),
-        Scale::Small => (ClusterSpec::homogeneous("train1024", 2, 2, 32), 4.0),
+        Scale::Small => {
+            // Same 128-node / 1,024-GPU shape as before, but spread over
+            // 4 spines in 2 superspines so small-scale runs exercise the
+            // truthful cross-superspine tier (a single-superspine preset
+            // would never produce `Tier::CrossSuperSpine`).
+            let mut s = ClusterSpec::homogeneous("train1024", 4, 1, 32);
+            s.spines_per_superspine = 2;
+            (s, 4.0)
+        }
     };
     let state = ClusterBuilder::build(&spec);
     let num_tenants = 4;

@@ -307,6 +307,14 @@ pub fn fig9(c: &EBinpackComparison) -> String {
         ("native", c.baseline.metrics.jtted_group_summaries()),
         ("e-binpack", c.ebinpack.metrics.jtted_group_summaries()),
     ];
+    let arms_spine = vec![
+        ("native", c.baseline.metrics.jtted_spine_summaries()),
+        ("e-binpack", c.ebinpack.metrics.jtted_spine_summaries()),
+    ];
+    let arms_ss = vec![
+        ("native", c.baseline.metrics.jtted_superspine_summaries()),
+        ("e-binpack", c.ebinpack.metrics.jtted_superspine_summaries()),
+    ];
     let mut out = bucket_comparison(
         "Figure 9a — JTTED NodeNum deviation ratio (actual/optimal nodes)",
         &arms_node,
@@ -316,6 +324,18 @@ pub fn fig9(c: &EBinpackComparison) -> String {
     out.push_str(&bucket_comparison(
         "Figure 9b — JTTED NodeNetGroupNum deviation ratio (actual/optimal groups)",
         &arms_group,
+        |x| format!("{x:.2}"),
+    ));
+    out.push('\n');
+    out.push_str(&bucket_comparison(
+        "Figure 9c — JTTED spine-span deviation ratio (actual/optimal spines)",
+        &arms_spine,
+        |x| format!("{x:.2}"),
+    ));
+    out.push('\n');
+    out.push_str(&bucket_comparison(
+        "Figure 9d — JTTED superspine-span deviation ratio (actual/optimal superspines)",
+        &arms_ss,
         |x| format!("{x:.2}"),
     ));
     out.push_str("\npaper: deviation shrinks for all sizes except 2048-GPU jobs\n");
@@ -1088,6 +1108,170 @@ pub fn fault_tolerance(seed: u64) -> String {
 }
 
 // ---------------------------------------------------------------------
+// Topology stress: truthful cross-superspine tiers vs the blind baseline
+// (the pre-fix scorer that collapsed every tier beyond same-spine into
+// SameSuperSpine). A multi-superspine cluster takes an oversubscribed
+// stream of whole-node gangs that each exceed one LeafGroup, so every
+// gang must pick which groups to span — exactly the choice the blind
+// scorer got wrong at zero cost. Same seed, same jobs; the arms differ
+// only in `RschConfig::topo_blind`.
+// ---------------------------------------------------------------------
+pub struct TopologyStressComparison {
+    /// The pre-fix baseline: cross-superspine crossings score like
+    /// staying put.
+    pub blind: SimOutcome,
+    /// The truthful 5-tier scorer (the default config).
+    pub truthful: SimOutcome,
+}
+
+/// Sample-weighted mean superspine-span deviation over the large-job
+/// buckets (≥ 65 GPUs) — small jobs never span and would dilute the
+/// signal.
+pub fn large_gang_superspine_dev(out: &SimOutcome) -> f64 {
+    let s = out.metrics.jtted_superspine_summaries();
+    crate::metrics::Metrics::weighted_mean(&s[3..])
+}
+
+/// Same, for the spine-span deviation ratio.
+pub fn large_gang_spine_dev(out: &SimOutcome) -> f64 {
+    let s = out.metrics.jtted_spine_summaries();
+    crate::metrics::Metrics::weighted_mean(&s[3..])
+}
+
+pub fn run_topology_stress(scale: Scale, seed: u64) -> TopologyStressComparison {
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{JobId, TenantId};
+    use crate::cluster::tenant::{QuotaLedger, QuotaMode};
+    use crate::job::spec::{JobKind, JobSpec};
+    use crate::util::rng::Pcg32;
+
+    // Every preset spans multiple superspines (a single-superspine fabric
+    // cannot exhibit the bug).
+    let spec = match scale {
+        Scale::Paper => ClusterSpec::train8000(), // 2 superspines.
+        Scale::XLarge => ClusterSpec::train10000(), // 3 superspines.
+        Scale::Small => {
+            // 96 nodes / 768 GPUs: 6 spines × 2 groups × 8 nodes under
+            // 3 superspines of 2 spines each.
+            let mut s = ClusterSpec::homogeneous("topo-stress", 6, 2, 8);
+            s.spines_per_superspine = 2;
+            s
+        }
+    };
+    let npg = spec.nodes_per_group;
+    let groups = spec.total_groups();
+
+    // Oversubscribed stream: every large gang needs > 1 LeafGroup of
+    // whole nodes (so it must choose what to span), and the offered load
+    // exceeds capacity so gangs keep placing into a churning, unevenly
+    // loaded fabric rather than a pristine one.
+    let arrival_ms: u64 = 8 * 3_600_000;
+    let mut rng = Pcg32::seed_from_u64(seed ^ 0x7090_57e5);
+    let n_large = (groups as u64 * 3) / 2;
+    let n_small = n_large * 2;
+    let mut jobs: Vec<JobSpec> = Vec::new();
+    let mut id = 1u64;
+    for _ in 0..n_large {
+        let replicas = rng.range_inclusive(npg as u64 * 5 / 4, npg as u64 * 5 / 2) as u32;
+        let j = JobSpec::homogeneous(
+            JobId(id),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            replicas,
+            8,
+        )
+        .with_times(
+            rng.below(arrival_ms),
+            rng.range_inclusive(2 * 3_600_000, 5 * 3_600_000),
+        );
+        jobs.push(j);
+        id += 1;
+    }
+    for _ in 0..n_small {
+        let mut j = JobSpec::homogeneous(
+            JobId(id),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            1,
+            rng.range_inclusive(2, 8) as u32,
+        )
+        .with_times(
+            rng.below(arrival_ms),
+            rng.range_inclusive(3_600_000, 3 * 3_600_000),
+        );
+        j.gang = false;
+        jobs.push(j);
+        id += 1;
+    }
+    jobs.sort_by_key(|j| j.submit_ms);
+
+    let run_one = |topo_blind: bool| -> SimOutcome {
+        let mut state = ClusterBuilder::build(&spec);
+        let mut ledger = QuotaLedger::new(1, 1, QuotaMode::Shared);
+        ledger.set_limit(TenantId(0), GpuTypeId(0), state.total_gpus());
+        let mut qsch = Qsch::new(QschConfig::default(), ledger);
+        let rcfg = RschConfig {
+            topo_blind,
+            ..RschConfig::default()
+        };
+        let mut rsch = Rsch::new(rcfg, &state);
+        let cfg = SimConfig {
+            horizon_ms: arrival_ms + 22 * 3_600_000, // Drain window.
+            ..SimConfig::default()
+        };
+        run(&mut state, &mut qsch, &mut rsch, jobs.clone(), &cfg)
+    };
+
+    TopologyStressComparison {
+        blind: run_one(true),
+        truthful: run_one(false),
+    }
+}
+
+/// The `figures topology-stress` report.
+pub fn topology_stress(scale: Scale, seed: u64) -> String {
+    let c = run_topology_stress(scale, seed);
+    let row = |name: &str, o: &SimOutcome| -> Vec<String> {
+        vec![
+            name.to_string(),
+            pct(o.metrics.gar_avg()),
+            pct(o.metrics.sor_final()),
+            pct(o.metrics.gfr_avg()),
+            format!("{:.3}", large_gang_spine_dev(o)),
+            format!("{:.3}", large_gang_superspine_dev(o)),
+            o.rsch_stats.nodes_scored.to_string(),
+            format!("{}/{}", o.metrics.jobs_finished, o.unfinished_jobs),
+        ]
+    };
+    let rows = vec![row("blind (pre-fix)", &c.blind), row("truthful", &c.truthful)];
+    let mut s = table(
+        "Topology stress — truthful cross-superspine tiers vs the blind baseline",
+        &[
+            "arm",
+            "GAR",
+            "SOR",
+            "GFR",
+            "spine-dev",
+            "superspine-dev",
+            "rows-scored",
+            "done/stuck",
+        ],
+        &rows,
+    );
+    s.push_str(&format!(
+        "\nsuperspine-span deviation (large gangs): blind {:.3} -> truthful {:.3}; \
+         GAR delta {:+.2}%\n(the truthful scorer keeps gangs inside one superspine \
+         wherever capacity allows, at no allocation cost)\n",
+        large_gang_superspine_dev(&c.blind),
+        large_gang_superspine_dev(&c.truthful),
+        (c.truthful.metrics.gar_avg() - c.blind.metrics.gar_avg()) * 100.0,
+    ));
+    s
+}
+
+// ---------------------------------------------------------------------
 // Ablation: periodic fragmentation reorganization (§3.3.3, the paper's
 // planned extension) — defrag on/off under a churning small-job workload.
 // ---------------------------------------------------------------------
@@ -1291,6 +1475,65 @@ mod tests {
         assert_eq!(digest(&a), digest(&b), "same seed must replay byte-identically");
         let c = run_fault_tolerance(12, 0.5);
         assert_ne!(digest(&a), digest(&c), "different seeds must diverge");
+    }
+
+    #[test]
+    fn topology_stress_truthful_reduces_superspine_spans_at_no_gar_cost() {
+        let c = run_topology_stress(Scale::Small, 17);
+        let blind = large_gang_superspine_dev(&c.blind);
+        let truthful = large_gang_superspine_dev(&c.truthful);
+        assert!(
+            blind > 1.0,
+            "the blind arm must actually cross superspines ({blind})"
+        );
+        assert!(
+            truthful < blind,
+            "truthful tiers must strictly reduce superspine spans: {truthful} vs {blind}"
+        );
+        // "No GAR cost": topology preference only reorders feasible
+        // choices, so allocation must not degrade beyond noise.
+        let gar_blind = c.blind.metrics.gar_avg();
+        let gar_truthful = c.truthful.metrics.gar_avg();
+        assert!(
+            gar_truthful >= gar_blind - 0.02,
+            "truthful GAR {gar_truthful} fell below blind {gar_blind}"
+        );
+        // Large gangs were recorded into the big buckets at all.
+        assert!(c.truthful.metrics.jtted_superspine_summaries()[3..]
+            .iter()
+            .any(|(_, s)| s.count > 0));
+    }
+
+    #[test]
+    fn binpack_spread_digests_invariant_to_truthful_tiers() {
+        // The truthful-tier refactor's digest guarantee: topology-agnostic
+        // weight rows (Binpack, Spread — zero w_topo) must produce
+        // byte-identical same-seed runs whether or not the scorer can see
+        // cross-superspine crossings.
+        for strat in [PlacementStrategy::Binpack, PlacementStrategy::Spread] {
+            let digest = |topo_blind: bool| {
+                let env = inference_cluster(InferencePreset::A10, 9);
+                let arm = Arm {
+                    label: "invariance",
+                    qsch: QschConfig::default(),
+                    rsch: RschConfig {
+                        training_strategy: strat,
+                        inference_strategy: strat,
+                        dev_strategy: strat,
+                        topo_blind,
+                        ..RschConfig::default()
+                    },
+                };
+                run_arm(&env, &arm, &SimConfig::default())
+                    .digest_json()
+                    .to_string_compact()
+            };
+            assert_eq!(
+                digest(false),
+                digest(true),
+                "{strat:?} digest moved with the topo_blind flag"
+            );
+        }
     }
 
     #[test]

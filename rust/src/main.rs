@@ -44,8 +44,8 @@ usage:
                 [--policy strict-fifo|best-effort|backfill]
                 [--strategy native|binpack|e-binpack|spread|e-spread]
                 [--trace FILE] [--xla-scorer] [--flat] [--deep-snapshot]
-                [--no-index] [--elastic] [--faults] [--checkpoint-min N]
-                [--digest FILE]
+                [--no-index] [--topo-blind] [--elastic] [--faults]
+                [--checkpoint-min N] [--digest FILE]
   kant gen-trace [--seed N] [--jobs N] [--mix training|inference] --out FILE
   kant validate [--artifacts DIR]
 
@@ -53,6 +53,9 @@ flags:
   --flat           disable two-level (NodeNetGroup preselect) scheduling
   --deep-snapshot  rebuild the full snapshot every cycle (no §3.4.3 delta)
   --no-index       linear candidate scans instead of the free-capacity index
+  --topo-blind     pre-fix topology ablation: the scorer cannot distinguish
+                   cross-superspine from same-superspine placement (digests
+                   for topology-agnostic strategies are invariant to this)
   --elastic        elastic inference: most services become diurnal replica
                    sets and the autoscaling controller runs every 5 min
   --faults         stochastic fault injection: seeded MTBF/MTTR storms per
@@ -120,6 +123,9 @@ fn simulate(args: &[String]) -> Result<()> {
     }
     if has_flag(args, "--no-index") {
         rsch_cfg.indexed_candidates = false;
+    }
+    if has_flag(args, "--topo-blind") {
+        rsch_cfg.topo_blind = true;
     }
 
     let elastic = has_flag(args, "--elastic");

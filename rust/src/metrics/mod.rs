@@ -175,6 +175,12 @@ pub struct Metrics {
     jtted_node: SizeBuckets,
     /// NodeNetGroup deviation ratio by job size (§4.5).
     jtted_group: SizeBuckets,
+    /// Spine-span deviation ratio by job size (§4.5 extension).
+    jtted_spine: SizeBuckets,
+    /// Superspine-span deviation ratio by job size (§4.5 extension) —
+    /// each point above 1.0 is a core-layer crossing the topology-blind
+    /// scorer used to hand out for free.
+    jtted_superspine: SizeBuckets,
     pub jobs_submitted: u64,
     pub jobs_finished: u64,
     pub jobs_scheduled: u64,
@@ -199,6 +205,8 @@ impl Metrics {
             jwtd: SizeBuckets::paper_default(),
             jtted_node: SizeBuckets::paper_default(),
             jtted_group: SizeBuckets::paper_default(),
+            jtted_spine: SizeBuckets::paper_default(),
+            jtted_superspine: SizeBuckets::paper_default(),
             jobs_submitted: 0,
             jobs_finished: 0,
             jobs_scheduled: 0,
@@ -246,6 +254,23 @@ impl Metrics {
         let actual_groups = state.fabric.groups_spanned(&nodes) as u32;
         self.jtted_group
             .record(gpus, actual_groups as f64 / optimal_groups as f64);
+
+        // Spine / superspine span deviation: optimal counts follow the
+        // same capacity chain (nodes → groups → spines → superspines),
+        // sized from the first placed node's subtree like the group calc.
+        let spine = state.fabric.spine_of(nodes[0]);
+        let groups_per_spine = state.fabric.spines[spine.index()].groups.len() as u32;
+        let optimal_spines = optimal_groups.div_ceil(groups_per_spine.max(1)).max(1);
+        let actual_spines = state.fabric.spines_spanned(&nodes) as u32;
+        self.jtted_spine
+            .record(gpus, actual_spines as f64 / optimal_spines as f64);
+
+        let ss = state.fabric.superspine_of(nodes[0]);
+        let spines_per_ss = state.fabric.spines_in_superspine(ss) as u32;
+        let optimal_ss = optimal_spines.div_ceil(spines_per_ss.max(1)).max(1);
+        let actual_ss = state.fabric.superspines_spanned(&nodes) as u32;
+        self.jtted_superspine
+            .record(gpus, actual_ss as f64 / optimal_ss as f64);
     }
 
     pub fn on_finished(&mut self) {
@@ -299,12 +324,15 @@ impl Metrics {
 
     /// Median of the sampled instantaneous GAR series (what the paper's
     /// GAR bars report — distinct from the cumulative SOR).
+    /// Samples both endpoints (`points + 1` samples over `[a, b]`): a
+    /// half-open `(a, b]` sweep never sees the window start, which biases
+    /// short windows toward whatever the tail happens to hold.
     pub fn gar_median(&self, points: usize) -> f64 {
         let (a, b) = self.window();
         if b <= a || points == 0 {
             return 0.0;
         }
-        let samples: Vec<f64> = (1..=points)
+        let samples: Vec<f64> = (0..=points)
             .map(|i| self.gar_at(a + (b - a) * i as u64 / points as u64))
             .collect();
         crate::util::stats::median(&samples)
@@ -522,6 +550,38 @@ impl Metrics {
         self.jtted_group.summaries()
     }
 
+    /// **JTTED** spine-span deviation (§4.5 extension): distinct spines
+    /// spanned / optimal spine count per size bucket, recorded alongside
+    /// the node and group ratios by [`Metrics::on_scheduled`].
+    pub fn jtted_spine_summaries(&self) -> Vec<(String, Summary)> {
+        self.jtted_spine.summaries()
+    }
+
+    /// **JTTED** superspine-span deviation (§4.5 extension): distinct
+    /// superspines spanned / optimal superspine count per size bucket.
+    /// 1.0 means the gang never crossed the core layer beyond what its
+    /// size forces; the truthful-tier scorer exists to push this toward
+    /// 1.0 where the blind scorer drifted above it.
+    pub fn jtted_superspine_summaries(&self) -> Vec<(String, Summary)> {
+        self.jtted_superspine.summaries()
+    }
+
+    /// Sample-weighted mean over every bucket of a JTTED distribution —
+    /// the single-number form the run digest and the topology-stress
+    /// experiment compare across arms.
+    pub fn weighted_mean(summaries: &[(String, Summary)]) -> f64 {
+        let (count, sum) = summaries
+            .iter()
+            .fold((0usize, 0.0f64), |(c, s), (_, summary)| {
+                (c + summary.count, s + summary.mean * summary.count as f64)
+            });
+        if count == 0 {
+            0.0
+        } else {
+            sum / count as f64
+        }
+    }
+
     pub fn total_gpus(&self) -> u32 {
         self.total_gpus
     }
@@ -609,6 +669,65 @@ mod tests {
         // (degenerate because we hand-placed half the job — the value just
         // needs to be recorded).
         assert_eq!(node_dev[2].1.count, 1);
+    }
+
+    #[test]
+    fn jtted_spanning_ratios_record_on_schedule() {
+        // 2 spines × 1 group × 2 nodes with one spine per superspine: a
+        // 2-node job split across groups spans 2 spines and 2 superspines
+        // where 1 of each would do — deviation 2.0 in every new bucket.
+        let mut spec = ClusterSpec::homogeneous("span", 2, 1, 2);
+        spec.spines_per_superspine = 1;
+        let mut state = ClusterBuilder::build(&spec);
+        let mut m = Metrics::new(&state, 0);
+        state
+            .commit_placements(
+                JobId(1),
+                vec![
+                    PodPlacement {
+                        pod: PodId::new(JobId(1), 0),
+                        node: NodeId(0),
+                        devices: (0..8).collect(),
+                        nic: 0,
+                    },
+                    PodPlacement {
+                        pod: PodId::new(JobId(1), 1),
+                        node: NodeId(2),
+                        devices: (0..8).collect(),
+                        nic: 0,
+                    },
+                ],
+            )
+            .unwrap();
+        let spec =
+            JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Training, GpuTypeId(0), 2, 8);
+        let mut job = Job::new(spec);
+        job.mark_admitted();
+        job.mark_scheduled(100);
+        m.on_scheduled(100, &state, &job);
+        let spine = m.jtted_spine_summaries();
+        let ss = m.jtted_superspine_summaries();
+        assert_eq!(spine[2].1.count, 1);
+        assert!((spine[2].1.mean - 2.0).abs() < 1e-9, "{}", spine[2].1.mean);
+        assert_eq!(ss[2].1.count, 1);
+        assert!((ss[2].1.mean - 2.0).abs() < 1e-9, "{}", ss[2].1.mean);
+        assert!((Metrics::weighted_mean(&ss) - 2.0).abs() < 1e-9);
+        assert_eq!(Metrics::weighted_mean(&m.jtted_spine_summaries()), 2.0);
+    }
+
+    #[test]
+    fn gar_median_samples_both_endpoints() {
+        // 8/16 GPUs held over [0, 100) of a 150 ms window. Sampling both
+        // endpoints sees [0.5, 0.5, 0.0] at points = 2 → median 0.5; the
+        // old (a, b] sweep saw only [0.5, 0.0] and reported 0.25.
+        let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2));
+        let mut m = Metrics::new(&state, 0);
+        place(&mut state, 1, 0, (0..8).collect());
+        m.observe_cluster(0, &state);
+        state.release_job(JobId(1)).unwrap();
+        m.observe_cluster(100, &state);
+        m.observe_cluster(150, &state);
+        assert!((m.gar_median(2) - 0.5).abs() < 1e-9, "{}", m.gar_median(2));
     }
 
     #[test]

@@ -46,8 +46,13 @@ impl TenantQueues {
     pub fn push(&mut self, e: QueueEntry) {
         let q = self.queues.entry(e.tenant).or_default();
         debug_assert!(q.iter().all(|x| x.job != e.job), "job enqueued twice");
-        q.push(e);
-        q.sort_by_key(QueueEntry::key);
+        // Binary-search insertion into the already-sorted tenant queue:
+        // O(log n + shift) instead of the O(n log n) full re-sort per
+        // enqueue. Inserting after equal keys reproduces the stable-sort
+        // order exactly (keys are strictly total anyway — the job id is
+        // the final tiebreak).
+        let pos = q.partition_point(|x| x.key() <= e.key());
+        q.insert(pos, e);
         self.len += 1;
     }
 
@@ -79,11 +84,29 @@ impl TenantQueues {
         self.queues.values().any(|q| q.iter().any(|e| e.job == job))
     }
 
-    /// The globally ordered candidate list for this cycle.
+    /// The globally ordered candidate list for this cycle: a k-way merge
+    /// of the already-sorted per-tenant queues — O(n log k) per cycle
+    /// instead of re-flattening and re-sorting everything (O(n log n)).
+    /// Byte-identical to the flatten-and-sort order because the entry key
+    /// is strictly total (job id tiebreak); property-tested below.
     pub fn global_order(&self) -> Vec<QueueEntry> {
-        let mut all: Vec<QueueEntry> = self.queues.values().flatten().copied().collect();
-        all.sort_by_key(QueueEntry::key);
-        all
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let lists: Vec<&[QueueEntry]> = self.queues.values().map(Vec::as_slice).collect();
+        let mut heap = BinaryHeap::with_capacity(lists.len());
+        for (li, l) in lists.iter().enumerate() {
+            if let Some(e) = l.first() {
+                heap.push(Reverse((e.key(), li, 0usize)));
+            }
+        }
+        let mut out = Vec::with_capacity(self.len);
+        while let Some(Reverse((_, li, i))) = heap.pop() {
+            out.push(lists[li][i]);
+            if let Some(e) = lists[li].get(i + 1) {
+                heap.push(Reverse((e.key(), li, i + 1)));
+            }
+        }
+        out
     }
 
     /// Head of the global order (the job Strict FIFO would insist on).
@@ -149,5 +172,54 @@ mod tests {
         let q = TenantQueues::new();
         assert!(q.global_head().is_none());
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn merge_matches_flatten_and_sort_on_random_streams() {
+        // The k-way merge and binary insertion must reproduce the legacy
+        // flatten-and-sort global order exactly, under arbitrary
+        // interleavings of pushes and removes.
+        use crate::util::prop;
+        use crate::util::rng::Pcg32;
+        prop::check(40, |rng: &mut Pcg32| {
+            let mut q = TenantQueues::new();
+            let mut live: Vec<JobId> = Vec::new();
+            let mut next = 1u64;
+            for _ in 0..rng.range_inclusive(1, 120) {
+                if live.is_empty() || rng.chance(0.7) {
+                    let entry = e(
+                        next,
+                        rng.below(4) as u32,
+                        *rng.choose(&[0u8, 4, 4, 8]).unwrap(),
+                        rng.below(1_000), // Dense: plenty of key collisions.
+                        rng.range_inclusive(1, 16) as u32,
+                    );
+                    q.push(entry);
+                    live.push(JobId(next));
+                    next += 1;
+                } else {
+                    let i = rng.below(live.len() as u64) as usize;
+                    assert!(q.remove(live.swap_remove(i)));
+                }
+                // Oracle: flatten every tenant queue and stable-sort.
+                let mut want: Vec<QueueEntry> =
+                    q.queues.values().flatten().copied().collect();
+                want.sort_by_key(QueueEntry::key);
+                let got = q.global_order();
+                crate::prop_assert!(got == want, "merge diverged from flatten+sort");
+                crate::prop_assert!(
+                    q.global_head() == want.first().copied(),
+                    "head diverged"
+                );
+                // Per-tenant queues stay sorted under binary insertion.
+                for tq in q.queues.values() {
+                    crate::prop_assert!(
+                        tq.windows(2).all(|w| w[0].key() <= w[1].key()),
+                        "tenant queue unsorted"
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -171,10 +171,15 @@ pub fn plan_round(
                     && (draining_src || state.node(d).allocated_gpus() > 0)
                     && free_of(state, &planned_free, d).len() as u32 >= want
             });
-            // Best-fit: fullest destination first.
+            // Best-fit: fullest destination first; among equally-full
+            // destinations prefer the topologically-nearest (same leaf <
+            // spine < superspine < cross-superspine, now truthful), so a
+            // migration never crosses more fabric than the packing win
+            // requires.
             dests.sort_by_key(|&d| {
                 (
                     free_of(state, &planned_free, d).len(),
+                    state.fabric.tier(src.id, d) as u8,
                     d,
                 )
             });
@@ -435,6 +440,27 @@ mod tests {
         state.set_node_health(NodeId(0), Health::Draining);
         let plan = plan_round(&state, &store, &DefragConfig::default());
         assert!(plan.is_empty(), "gang pods must not migrate off a drain");
+    }
+
+    #[test]
+    fn equally_full_destinations_prefer_nearby_fabric() {
+        // Source on group 0; equally-loaded destinations in the same
+        // group and across the superspine: the migration must stay local.
+        let mut spec = ClusterSpec::homogeneous("near", 2, 1, 2);
+        spec.spines_per_superspine = 1; // 2 superspines of 1 spine each.
+        let mut state = ClusterBuilder::build(&spec);
+        let mut store = JobStore::new();
+        place(&mut state, &mut store, 1, 0, 2); // Source (fragmented).
+        place(&mut state, &mut store, 2, 1, 3); // Same leaf, 5 free.
+        place(&mut state, &mut store, 3, 2, 3); // Cross-superspine, 5 free.
+        let plan = plan_round(&state, &store, &DefragConfig::default());
+        assert!(!plan.is_empty());
+        assert_eq!(plan[0].from, NodeId(0));
+        assert_eq!(
+            plan[0].to,
+            NodeId(1),
+            "equally-full destinations must break ties toward the same leaf: {plan:?}"
+        );
     }
 
     #[test]

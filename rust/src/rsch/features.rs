@@ -8,7 +8,7 @@
 
 use crate::cluster::ids::{GroupId, NodeId};
 use crate::cluster::snapshot::Snapshot;
-use crate::cluster::topology::Fabric;
+use crate::cluster::topology::Tier;
 use crate::job::spec::{JobKind, JobSpec, PlacementStrategy};
 
 /// Node feature indices (see ref.py for semantics).
@@ -21,6 +21,10 @@ pub const F_GROUP_FREE: usize = 4;
 pub const F_GROUP_TOTAL: usize = 5;
 pub const F_PODS_ON_NODE: usize = 6;
 pub const F_PODS_IN_GROUP: usize = 7;
+/// Minimum communication tier to the job's already-placed pods: 0 node /
+/// 1 leaf / 2 spine / 3 superspine / 4 cross-superspine, and 4
+/// ([`Tier::WORST`]) while nothing is placed. Scorers normalize by
+/// `clamp(0, 4) / 4`.
 pub const F_TOPO_TIER: usize = 8;
 pub const F_IN_ZONE: usize = 9;
 pub const F_HBD_FREE: usize = 10;
@@ -51,8 +55,11 @@ pub trait PlanView {
     fn group_free(&self, group: GroupId) -> u32;
     /// Largest free NVLink island on the node under this plan.
     fn largest_free_island(&self, node: NodeId) -> u32;
-    /// Nodes already used by this plan (for topology tiers).
-    fn placed_nodes(&self) -> &[NodeId];
+    /// Minimum communication tier from `node` to this plan's already-
+    /// placed pods ([`Tier::WORST`] while the plan is empty) — feature 8.
+    /// Implementations answer in O(1) from an incrementally-maintained
+    /// [`crate::cluster::topology::GangFootprint`], not a per-pod scan.
+    fn tier_to(&self, node: NodeId) -> Tier;
 }
 
 /// Encode the job descriptor for the scorers.
@@ -80,11 +87,9 @@ pub fn job_descriptor(spec: &JobSpec, gpus_per_pod: u32) -> [f32; JOB_D] {
 /// for the given candidates under an in-flight plan.
 pub fn node_features(
     snapshot: &Snapshot,
-    fabric: &Fabric,
     plan: &dyn PlanView,
     candidates: &[NodeId],
 ) -> Vec<f32> {
-    let placed = plan.placed_nodes();
     let mut out = Vec::with_capacity(candidates.len() * NODE_F);
     for &n in candidates {
         let rec = &snapshot.nodes[n.index()];
@@ -100,7 +105,7 @@ pub fn node_features(
             grec.total as f32,
             plan.pods_on_node(n) as f32,
             plan.pods_in_group(rec.group) as f32,
-            fabric.min_tier_to(n, placed).as_f32(),
+            plan.tier_to(n).as_f32(),
             if rec.in_inference_zone { 1.0 } else { 0.0 },
             rec.hbd_free as f32,
             plan.largest_free_island(n) as f32,
@@ -158,8 +163,8 @@ mod tests {
         fn largest_free_island(&self, node: NodeId) -> u32 {
             self.snapshot.nodes[node.index()].largest_free_island
         }
-        fn placed_nodes(&self) -> &[NodeId] {
-            &[]
+        fn tier_to(&self, _: NodeId) -> Tier {
+            Tier::WORST
         }
     }
 
@@ -170,14 +175,14 @@ mod tests {
         snap.refresh(&state);
         let plan = EmptyPlan { snapshot: &snap };
         let cands: Vec<NodeId> = (0..4).map(NodeId).collect();
-        let feat = node_features(&snap, &state.fabric, &plan, &cands);
+        let feat = node_features(&snap, &plan, &cands);
         assert_eq!(feat.len(), 4 * NODE_F);
-        // Row 0: all free, healthy, tier 3 (nothing placed).
+        // Row 0: all free, healthy, tier 4 = WORST (nothing placed).
         assert_eq!(feat[F_FREE], 8.0);
         assert_eq!(feat[F_ALLOC], 0.0);
         assert_eq!(feat[F_HEALTHY], 1.0);
         assert_eq!(feat[F_GROUP_FREE], 16.0);
-        assert_eq!(feat[F_TOPO_TIER], 3.0);
+        assert_eq!(feat[F_TOPO_TIER], 4.0);
         assert_eq!(feat[F_NVLINK_CLIQUE], 8.0);
     }
 

@@ -20,12 +20,34 @@ use crate::cluster::state::ClusterState;
 use crate::job::spec::{JobKind, JobSpec, PlacementStrategy, TypedDemand};
 use crate::qsch::{PlaceFailure, Placer};
 
-use features::{group_features, job_descriptor, node_features};
+use features::{group_features, job_descriptor, node_features, NODE_F};
 use plan::PlanBuilder;
 use score::{
     argmax, feasible, group_weights, is_large_job, node_weights, NativeBackend, Phase,
-    ScoreBackend,
+    ScoreBackend, W_TOPO,
 };
+
+/// How multi-pod jobs are scored across their pods (the §3.3 gang hot
+/// path). The modes are placement-identical between `PooledRebuild` and
+/// `PooledIncremental` (property-tested); they differ only in how many
+/// feature rows are rebuilt per pod (`RschStats::nodes_scored`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GangScoring {
+    /// Re-select candidates and rebuild the full feature matrix for every
+    /// pod (the historical baseline: O(pods · candidates) feature rows
+    /// per gang, with a fresh group preselect per pod).
+    PerPodRescan,
+    /// Freeze one candidate region sized to the whole gang's demand, but
+    /// still rebuild every feature row for every pod (the ablation arm
+    /// isolating the incremental-update win).
+    PooledRebuild,
+    /// Freeze the region once and re-extract only the rows the previous
+    /// pod's placement invalidated — the placed node, its NodeNetGroup,
+    /// and any topology layer the gang newly entered (tracked by the
+    /// plan's [`crate::cluster::topology::GangFootprint`] delta). The
+    /// default.
+    PooledIncremental,
+}
 
 /// RSCH tunables.
 #[derive(Debug, Clone)]
@@ -47,6 +69,18 @@ pub struct RschConfig {
     /// every node. Off = the linear scan (the ablation baseline).
     /// Placements are identical either way (property-tested).
     pub indexed_candidates: bool,
+    /// Gang scoring mode (see [`GangScoring`]). Only strategies with a
+    /// live topology component (`w[W_TOPO] != 0`) and single-phase,
+    /// non-HBD demands take the pooled paths; everything else keeps the
+    /// per-pod walk, so Binpack / Spread / first-fit placements are
+    /// byte-identical across all three modes.
+    pub gang_scoring: GangScoring,
+    /// Ablation baseline reproducing the pre-fix cross-superspine
+    /// blindness: feature 8 collapses [`crate::cluster::topology::Tier::CrossSuperSpine`]
+    /// into `SameSuperSpine`, so the scorer cannot see core-layer
+    /// crossings. Topology-agnostic strategies (zero `w[W_TOPO]`) are
+    /// digest-invariant to this flag.
+    pub topo_blind: bool,
 }
 
 impl Default for RschConfig {
@@ -59,6 +93,8 @@ impl Default for RschConfig {
             snapshot_mode: SnapshotMode::Incremental,
             group_fanout: 4,
             indexed_candidates: true,
+            gang_scoring: GangScoring::PooledIncremental,
+            topo_blind: false,
         }
     }
 }
@@ -78,6 +114,8 @@ impl RschConfig {
             snapshot_mode: SnapshotMode::DeepCopy,
             group_fanout: 4,
             indexed_candidates: false,
+            gang_scoring: GangScoring::PerPodRescan,
+            topo_blind: false,
         }
     }
 
@@ -91,6 +129,8 @@ impl RschConfig {
             snapshot_mode: SnapshotMode::DeepCopy,
             group_fanout: 4,
             indexed_candidates: false,
+            gang_scoring: GangScoring::PerPodRescan,
+            topo_blind: false,
         }
     }
 }
@@ -183,6 +223,21 @@ impl Rsch {
 /// One job's planned pod placements (or why planning failed).
 type PlanResult = Result<Vec<crate::cluster::state::PodPlacement>, PlaceFailure>;
 
+/// Frozen candidate region for one pooled demand: the node list with its
+/// feature matrix and scores, patched row-wise as the plan grows.
+struct GangCache {
+    candidates: Vec<NodeId>,
+    feat: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl GangCache {
+    /// Best feasible row (argmax with lowest-index tiebreak), if any.
+    fn best(&self) -> Option<usize> {
+        argmax(&self.scores).filter(|&i| feasible(self.scores[i]))
+    }
+}
+
 /// Borrow-split planning context: snapshot immutably feeds the
 /// [`PlanBuilder`] while the backend/stats stay mutably borrowable.
 struct Planner<'a> {
@@ -227,7 +282,7 @@ impl Planner<'_> {
                 } else {
                     self.filter_candidates(state, pb, &pool.nodes, demand, spec, zone_filter)
                 };
-                self.pick_node(state, pb, &candidates, &job, strategy, phase, large)
+                self.pick_node(pb, &candidates, &job, strategy, phase, large)
             };
             if let Some(n) = node {
                 if pb.place_pod(n, demand.gpus_per_pod) {
@@ -293,9 +348,7 @@ impl Planner<'_> {
             if candidates.is_empty() {
                 continue;
             }
-            if let Some(n) =
-                self.pick_node(state, pb, &candidates, job, strategy, phase, large)
-            {
+            if let Some(n) = self.pick_node(pb, &candidates, job, strategy, phase, large) {
                 return Some(n);
             }
         }
@@ -421,7 +474,7 @@ impl Planner<'_> {
             }
         }
         let strategy = spec.strategy.unwrap_or(default_strategy);
-        let mut pb = PlanBuilder::new(state, self.snapshot, spec.id);
+        let mut pb = PlanBuilder::new(state, self.snapshot, spec.id, self.cfg.topo_blind);
         for d in &spec.demands {
             let pool_idx = state
                 .pools
@@ -434,24 +487,247 @@ impl Planner<'_> {
                 .map(|&g| state.group_total(g))
                 .unwrap_or(0);
             let large = is_large_job(spec.total_gpus(), cap);
-            for _ in 0..d.replicas {
-                if self.plan_pod(state, &mut pb, spec, d, strategy, large).is_none() {
-                    // Gang all-or-nothing: abandon the whole plan. (Non-gang
-                    // jobs are treated the same at job granularity; see
-                    // DESIGN.md §6 for the pod-level-admission note.)
-                    self.stats.failures += 1;
-                    return Err(PlaceFailure::Resources);
-                }
+            // Pooled gang scoring applies to single-phase, non-HBD demands
+            // of topology-aware strategies: their pods arbitrate across
+            // the whole candidate region through feature 8, and the score
+            // cache makes that O(1) rows per pod instead of a full
+            // rebuild. Everything else (Binpack / Spread / first-fit /
+            // E-Spread's two-phase small pods / HBD pins) keeps the
+            // legacy per-pod walk, byte-identical to the pre-refactor
+            // path.
+            let phases = Rsch::phases(strategy, d.gpus_per_pod);
+            let pooled = self.cfg.gang_scoring != GangScoring::PerPodRescan
+                && !spec.needs_hbd
+                && phases.len() == 1
+                && node_weights(strategy, phases[0].0, large)[W_TOPO] != 0.0;
+            let ok = if pooled {
+                let (phase, zone_filter) = phases[0];
+                self.plan_demand_pooled(
+                    state, &mut pb, spec, d, strategy, large, phase, zone_filter, pool_idx,
+                )
+            } else {
+                (0..d.replicas)
+                    .all(|_| self.plan_pod(state, &mut pb, spec, d, strategy, large).is_some())
+            };
+            if !ok {
+                // Gang all-or-nothing: abandon the whole plan. (Non-gang
+                // jobs are treated the same at job granularity; see
+                // DESIGN.md §6 for the pod-level-admission note.)
+                self.stats.failures += 1;
+                return Err(PlaceFailure::Resources);
             }
         }
         Ok(pb.into_plan())
+    }
+
+    /// Pooled gang planning: freeze one candidate region sized to the
+    /// demand, score it once, then per pod pick the argmax and refresh
+    /// only the rows the placement invalidated.
+    #[allow(clippy::too_many_arguments)]
+    fn plan_demand_pooled(
+        &mut self,
+        state: &ClusterState,
+        pb: &mut PlanBuilder,
+        spec: &JobSpec,
+        demand: &TypedDemand,
+        strategy: PlacementStrategy,
+        large: bool,
+        phase: Phase,
+        zone_filter: ZoneFilter,
+        pool_idx: usize,
+    ) -> bool {
+        let job = job_descriptor(spec, demand.gpus_per_pod);
+        let w = node_weights(strategy, phase, large);
+        let incremental = self.cfg.gang_scoring == GangScoring::PooledIncremental;
+
+        let mut cache: Option<GangCache> = None;
+        for pod in 0..demand.replicas {
+            let remaining = demand.replicas - pod;
+            let mut fresh = false;
+            if cache.is_none() {
+                cache = Some(self.build_gang_cache(
+                    state, pb, spec, demand, strategy, large, phase, zone_filter, &job, &w,
+                    pool_idx, remaining,
+                ));
+                fresh = true;
+            } else if !incremental {
+                // PooledRebuild: same frozen region, full row rebuild per
+                // pod (the work-counter baseline).
+                let c = cache.as_mut().expect("cache built");
+                c.feat = node_features(self.snapshot, &*pb, &c.candidates);
+                c.scores = self.backend.score_nodes(&c.feat, c.candidates.len(), &job, &w);
+                self.stats.nodes_scored += c.candidates.len() as u64;
+            }
+            let mut pick = cache.as_ref().and_then(GangCache::best);
+            if pick.is_none() && !fresh {
+                // The frozen region ran dry mid-gang (or a stale row
+                // masked the last capacity): one fresh reselection
+                // against the current plan before giving up.
+                cache = Some(self.build_gang_cache(
+                    state, pb, spec, demand, strategy, large, phase, zone_filter, &job, &w,
+                    pool_idx, remaining,
+                ));
+                pick = cache.as_ref().and_then(GangCache::best);
+            }
+            let Some(row) = pick else {
+                return false;
+            };
+            let node = cache.as_ref().expect("cache built").candidates[row];
+            if !pb.place_pod(node, demand.gpus_per_pod) {
+                return false; // Defensive: the mask guarantees capacity.
+            }
+            if incremental && pod + 1 < demand.replicas {
+                self.refresh_invalidated_rows(
+                    state,
+                    pb,
+                    node,
+                    cache.as_mut().expect("cache built"),
+                    &job,
+                    &w,
+                );
+            }
+        }
+        true
+    }
+
+    /// Select the candidate region for a whole (remaining) demand and
+    /// score every row once. Two-level mode takes feasible groups in
+    /// score order until the region both covers the demand's GPUs and
+    /// spans at least `group_fanout` groups (large gangs get a region
+    /// sized to the gang, not to one pod); flat mode pools the whole
+    /// pool. Candidates are ordered group-major by group score so exact
+    /// node-score ties still resolve toward the preferred group.
+    #[allow(clippy::too_many_arguments)]
+    fn build_gang_cache(
+        &mut self,
+        state: &ClusterState,
+        pb: &PlanBuilder,
+        spec: &JobSpec,
+        demand: &TypedDemand,
+        strategy: PlacementStrategy,
+        large: bool,
+        phase: Phase,
+        zone_filter: ZoneFilter,
+        job: &[f32; features::JOB_D],
+        w: &[f32; score::NUM_COMPONENTS],
+        pool_idx: usize,
+        remaining_pods: u32,
+    ) -> GangCache {
+        use features::PlanView;
+        let candidates = if self.cfg.two_level {
+            let groups = &self.pool_groups[pool_idx];
+            let mut region: Vec<NodeId> = Vec::new();
+            if !groups.is_empty() {
+                let gfeat = group_features(self.snapshot, pb, groups);
+                let gw = group_weights(strategy, phase, large);
+                let gscores = self.backend.score_groups(&gfeat, groups.len(), job, &gw);
+                self.stats.groups_scored += groups.len() as u64;
+                let mut order: Vec<usize> = (0..groups.len()).collect();
+                order.sort_by(|&a, &b| {
+                    gscores[b]
+                        .partial_cmp(&gscores[a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+                let demand_gpus = remaining_pods as u64 * demand.gpus_per_pod as u64;
+                let mut capacity = 0u64;
+                let mut taken = 0usize;
+                for &gi in &order {
+                    if !feasible(gscores[gi]) {
+                        break;
+                    }
+                    if taken >= self.cfg.group_fanout.max(1) && capacity >= demand_gpus {
+                        break;
+                    }
+                    let cands = if self.use_index() {
+                        self.indexed_candidates(
+                            state,
+                            pb,
+                            std::slice::from_ref(&groups[gi]),
+                            demand,
+                            spec,
+                            zone_filter,
+                        )
+                    } else {
+                        let group_nodes = &state.fabric.groups[groups[gi].index()].nodes;
+                        self.filter_candidates(state, pb, group_nodes, demand, spec, zone_filter)
+                    };
+                    if cands.is_empty() {
+                        continue;
+                    }
+                    capacity += cands.iter().map(|&n| pb.free_gpus(n) as u64).sum::<u64>();
+                    region.extend(cands);
+                    taken += 1;
+                }
+            }
+            region
+        } else if self.use_index() {
+            let groups: &[GroupId] = &self.pool_groups[pool_idx];
+            self.indexed_candidates(state, pb, groups, demand, spec, zone_filter)
+        } else {
+            let pool = state.pools.pool_for_type(demand.gpu_type).expect("pool exists");
+            self.filter_candidates(state, pb, &pool.nodes, demand, spec, zone_filter)
+        };
+        let feat = node_features(self.snapshot, pb, &candidates);
+        let scores = self.backend.score_nodes(&feat, candidates.len(), job, w);
+        self.stats.nodes_scored += candidates.len() as u64;
+        GangCache {
+            candidates,
+            feat,
+            scores,
+        }
+    }
+
+    /// Re-extract and re-score exactly the rows invalidated by placing a
+    /// pod on `placed`: the node itself (capacity / colocation / NVLink),
+    /// its NodeNetGroup (group-free deltas), and — per the footprint
+    /// delta — any candidates whose minimum tier the placement improved
+    /// (everything on a first pod; otherwise only nodes in a newly-
+    /// entered spine or superspine). All other rows are provably
+    /// score-identical, so the cached values stand.
+    fn refresh_invalidated_rows(
+        &mut self,
+        state: &ClusterState,
+        pb: &PlanBuilder,
+        placed: NodeId,
+        cache: &mut GangCache,
+        job: &[f32; features::JOB_D],
+        w: &[f32; score::NUM_COMPONENTS],
+    ) {
+        let fabric = &state.fabric;
+        let delta = pb.last_delta();
+        let group = fabric.group_of(placed);
+        let spine = fabric.spine_of(placed);
+        let superspine = fabric.superspine_of(placed);
+        let mut rows: Vec<usize> = Vec::new();
+        for (i, &c) in cache.candidates.iter().enumerate() {
+            let invalid = delta.first_pod
+                || c == placed
+                || fabric.group_of(c) == group
+                || (delta.new_spine && fabric.spine_of(c) == spine)
+                || (delta.new_superspine && fabric.superspine_of(c) == superspine);
+            if invalid {
+                rows.push(i);
+            }
+        }
+        if rows.is_empty() {
+            return;
+        }
+        let sub: Vec<NodeId> = rows.iter().map(|&i| cache.candidates[i]).collect();
+        let sfeat = node_features(self.snapshot, pb, &sub);
+        let sscores = self.backend.score_nodes(&sfeat, sub.len(), job, w);
+        self.stats.nodes_scored += sub.len() as u64;
+        for (k, &i) in rows.iter().enumerate() {
+            cache.feat[i * NODE_F..(i + 1) * NODE_F]
+                .copy_from_slice(&sfeat[k * NODE_F..(k + 1) * NODE_F]);
+            cache.scores[i] = sscores[k];
+        }
     }
 
     /// Score candidates and return the best feasible node.
     #[allow(clippy::too_many_arguments)]
     fn pick_node(
         &mut self,
-        state: &ClusterState,
         pb: &PlanBuilder,
         candidates: &[NodeId],
         job: &[f32; features::JOB_D],
@@ -462,7 +738,7 @@ impl Planner<'_> {
         if candidates.is_empty() {
             return None;
         }
-        let feat = node_features(self.snapshot, &state.fabric, pb, candidates);
+        let feat = node_features(self.snapshot, pb, candidates);
         let w = node_weights(strategy, phase, large);
         let scores = self
             .backend
@@ -985,6 +1261,128 @@ mod tests {
             let b = lin.place(&mut s_lin, &inf);
             assert_eq!(a, b);
             assert_eq!(s_idx.placements_of(JobId(id)), s_lin.placements_of(JobId(id)));
+        }
+    }
+
+    /// 4 spines × 1 group × 4 nodes under 2 superspines (2 spines each):
+    /// groups 0/1 sit under superspine 0, groups 2/3 under superspine 1.
+    fn state_two_superspines() -> ClusterState {
+        let mut spec = ClusterSpec::homogeneous("ss", 4, 1, 4);
+        spec.spines_per_superspine = 2;
+        ClusterBuilder::build(&spec)
+    }
+
+    /// Hand-place a 2-GPU non-gang filler so the named group is no longer
+    /// pristine (breaks group-score ties deterministically).
+    fn filler(state: &mut ClusterState, id: u64, node: u32) {
+        use crate::cluster::ids::PodId;
+        use crate::cluster::state::PodPlacement;
+        state
+            .commit_placements(
+                JobId(id),
+                vec![PodPlacement {
+                    pod: PodId::new(JobId(id), 0),
+                    node: NodeId(node),
+                    devices: vec![0, 1],
+                    nic: 0,
+                }],
+            )
+            .unwrap();
+    }
+
+    #[test]
+    fn truthful_tiers_keep_large_gangs_in_one_superspine() {
+        // A 6-node (48-GPU) gang on a half-filler'd fabric. After its
+        // first 4 pods fill group 0, the last 2 pods choose between the
+        // slightly-busy group 1 (same superspine) and the pristine group
+        // 2 (across the core). The truthful scorer stays; the blind
+        // baseline chases the emptier group across the superspine — the
+        // exact §3.3.5 bug this PR fixes.
+        let run = |blind: bool| -> Vec<NodeId> {
+            let mut state = state_two_superspines();
+            filler(&mut state, 90, 4); // group 1, superspine 0.
+            filler(&mut state, 91, 12); // group 3, superspine 1.
+            let cfg = RschConfig {
+                topo_blind: blind,
+                ..RschConfig::default()
+            };
+            let mut rsch = Rsch::new(cfg, &state);
+            rsch.place(&mut state, &train(1, 6, 8)).unwrap();
+            let mut nodes = state.nodes_of(JobId(1));
+            nodes.sort_unstable();
+            nodes
+        };
+        let truthful = run(false);
+        let blind = run(true);
+        let fabric = state_two_superspines().fabric;
+        assert_eq!(
+            fabric.superspines_spanned(&truthful),
+            1,
+            "truthful gang must stay under one superspine: {truthful:?}"
+        );
+        assert_eq!(
+            fabric.superspines_spanned(&blind),
+            2,
+            "the blind baseline crosses the core for an emptier group: {blind:?}"
+        );
+    }
+
+    #[test]
+    fn pooled_incremental_matches_rebuild_with_fewer_rows_scored() {
+        // PooledIncremental must place byte-identically to PooledRebuild
+        // (row invalidation is exact) while rebuilding strictly fewer
+        // feature rows — the `nodes_scored` work counter is the proof.
+        let run = |mode: GangScoring| {
+            let mut state = state_two_superspines();
+            filler(&mut state, 90, 4);
+            filler(&mut state, 91, 12);
+            let cfg = RschConfig {
+                gang_scoring: mode,
+                ..RschConfig::default()
+            };
+            let mut rsch = Rsch::new(cfg, &state);
+            rsch.place(&mut state, &train(1, 6, 8)).unwrap();
+            rsch.place(&mut state, &train(2, 3, 4)).unwrap();
+            let placements: Vec<_> = [1u64, 2]
+                .iter()
+                .map(|&id| state.placements_of(JobId(id)).unwrap().to_vec())
+                .collect();
+            (placements, rsch.stats.nodes_scored)
+        };
+        let (inc_placements, inc_rows) = run(GangScoring::PooledIncremental);
+        let (reb_placements, reb_rows) = run(GangScoring::PooledRebuild);
+        assert_eq!(inc_placements, reb_placements, "modes must place identically");
+        assert!(
+            inc_rows < reb_rows,
+            "incremental must score fewer rows ({inc_rows} vs {reb_rows})"
+        );
+    }
+
+    #[test]
+    fn topology_blindness_cannot_change_topo_agnostic_placements() {
+        // Binpack and Spread carry zero topology weight: their placements
+        // (and hence same-seed digests) must be invariant to both the
+        // truthful-tier fix and the blind ablation flag.
+        for strat in [PlacementStrategy::Binpack, PlacementStrategy::Spread] {
+            let run = |blind: bool| {
+                let mut state = state_two_superspines();
+                let mut rsch = Rsch::new(
+                    RschConfig {
+                        topo_blind: blind,
+                        ..RschConfig::default()
+                    },
+                    &state,
+                );
+                let mut placements = Vec::new();
+                for id in 1..=10u64 {
+                    let mut j = train(id, ((id % 3) + 1) as u32, ((id % 4) + 1) as u32 * 2);
+                    j.strategy = Some(strat);
+                    let _ = rsch.place(&mut state, &j);
+                    placements.push(state.placements_of(JobId(id)).map(|p| p.to_vec()));
+                }
+                placements
+            };
+            assert_eq!(run(false), run(true), "{strat:?} placements moved with the flag");
         }
     }
 }

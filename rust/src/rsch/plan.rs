@@ -7,6 +7,7 @@ use std::collections::HashMap;
 use crate::cluster::ids::{GroupId, HbdId, JobId, NodeId, PodId};
 use crate::cluster::snapshot::Snapshot;
 use crate::cluster::state::{ClusterState, PodPlacement};
+use crate::cluster::topology::{FootprintDelta, GangFootprint, Tier};
 
 use super::device_alloc::{select_devices, select_nic};
 use super::features::PlanView;
@@ -22,7 +23,15 @@ pub struct PlanBuilder<'a> {
     pods_in_group: HashMap<GroupId, u32>,
     /// GPUs taken from each group by this plan.
     group_taken: HashMap<GroupId, u32>,
-    placed_nodes: Vec<NodeId>,
+    /// Topology footprint of the placed pods: O(1) feature-8 tier queries
+    /// plus the per-layer deltas that drive incremental score updates.
+    footprint: GangFootprint,
+    /// Delta reported by the most recent successful [`PlanBuilder::place_pod`].
+    last_delta: FootprintDelta,
+    /// Reproduce the pre-truthful-tier scorer for ablations: tiers beyond
+    /// `SameSpine` are collapsed to `SameSuperSpine`, so the scorer cannot
+    /// see core-layer crossings (the historical bug, kept as a baseline).
+    topo_blind: bool,
     plan: Vec<PodPlacement>,
     next_replica: u32,
     /// HBD the job is pinned to once the first pod of an HBD job lands.
@@ -30,7 +39,12 @@ pub struct PlanBuilder<'a> {
 }
 
 impl<'a> PlanBuilder<'a> {
-    pub fn new(state: &'a ClusterState, snapshot: &'a Snapshot, job: JobId) -> PlanBuilder<'a> {
+    pub fn new(
+        state: &'a ClusterState,
+        snapshot: &'a Snapshot,
+        job: JobId,
+        topo_blind: bool,
+    ) -> PlanBuilder<'a> {
         PlanBuilder {
             state,
             snapshot,
@@ -39,7 +53,9 @@ impl<'a> PlanBuilder<'a> {
             pods_on_node: HashMap::new(),
             pods_in_group: HashMap::new(),
             group_taken: HashMap::new(),
-            placed_nodes: Vec::new(),
+            footprint: GangFootprint::new(),
+            last_delta: FootprintDelta::default(),
+            topo_blind,
             plan: Vec::new(),
             next_replica: 0,
             hbd_lock: None,
@@ -67,9 +83,7 @@ impl<'a> PlanBuilder<'a> {
         let group = self.state.node(node).group;
         *self.pods_in_group.entry(group).or_default() += 1;
         *self.group_taken.entry(group).or_default() += gpus;
-        if !self.placed_nodes.contains(&node) {
-            self.placed_nodes.push(node);
-        }
+        self.last_delta = self.footprint.place(&self.state.fabric, node);
         if self.hbd_lock.is_none() {
             self.hbd_lock = self.state.node(node).hbd;
         }
@@ -85,6 +99,17 @@ impl<'a> PlanBuilder<'a> {
 
     pub fn pods_planned(&self) -> usize {
         self.plan.len()
+    }
+
+    /// The plan's topology footprint so far.
+    pub fn footprint(&self) -> &GangFootprint {
+        &self.footprint
+    }
+
+    /// Which topology layers the most recent placement newly entered
+    /// (drives incremental score-row invalidation).
+    pub fn last_delta(&self) -> FootprintDelta {
+        self.last_delta
     }
 
     /// Consume the builder, yielding the plan for `commit_placements`.
@@ -129,8 +154,13 @@ impl PlanView for PlanBuilder<'_> {
         }
     }
 
-    fn placed_nodes(&self) -> &[NodeId] {
-        &self.placed_nodes
+    fn tier_to(&self, node: NodeId) -> Tier {
+        let t = self.footprint.tier_to(&self.state.fabric, node);
+        if self.topo_blind {
+            t.min(Tier::SameSuperSpine)
+        } else {
+            t
+        }
     }
 }
 
@@ -150,12 +180,16 @@ mod tests {
     #[test]
     fn plan_tracks_deltas_without_touching_state() {
         let (state, snap) = setup();
-        let mut pb = PlanBuilder::new(&state, &snap, JobId(1));
+        let mut pb = PlanBuilder::new(&state, &snap, JobId(1), false);
+        assert_eq!(pb.tier_to(NodeId(0)), Tier::WORST);
         assert!(pb.place_pod(NodeId(0), 4));
         assert_eq!(pb.free_gpus(NodeId(0)), 4);
         assert_eq!(pb.pods_on_node(NodeId(0)), 1);
         assert_eq!(pb.group_free(GroupId(0)), 12);
-        assert_eq!(pb.placed_nodes(), &[NodeId(0)]);
+        assert_eq!(pb.tier_to(NodeId(0)), Tier::SameNode);
+        assert_eq!(pb.tier_to(NodeId(1)), Tier::SameLeaf);
+        assert!(pb.last_delta().first_pod);
+        assert_eq!(pb.footprint().nodes_spanned(), 1);
         // State untouched until commit.
         assert_eq!(state.node(NodeId(0)).free_gpus(), 8);
     }
@@ -163,7 +197,7 @@ mod tests {
     #[test]
     fn plan_rejects_overflow() {
         let (state, snap) = setup();
-        let mut pb = PlanBuilder::new(&state, &snap, JobId(1));
+        let mut pb = PlanBuilder::new(&state, &snap, JobId(1), false);
         assert!(pb.place_pod(NodeId(0), 8));
         assert!(!pb.place_pod(NodeId(0), 1));
         assert_eq!(pb.pods_planned(), 1);
@@ -172,7 +206,7 @@ mod tests {
     #[test]
     fn committed_plan_matches_builder() {
         let (mut state, snap) = setup();
-        let mut pb = PlanBuilder::new(&state, &snap, JobId(1));
+        let mut pb = PlanBuilder::new(&state, &snap, JobId(1), false);
         assert!(pb.place_pod(NodeId(1), 2));
         assert!(pb.place_pod(NodeId(2), 8));
         let plan = pb.into_plan();
@@ -186,9 +220,28 @@ mod tests {
     #[test]
     fn island_tracking_under_plan() {
         let (state, snap) = setup();
-        let mut pb = PlanBuilder::new(&state, &snap, JobId(1));
+        let mut pb = PlanBuilder::new(&state, &snap, JobId(1), false);
         assert_eq!(pb.largest_free_island(NodeId(0)), 8);
         pb.place_pod(NodeId(0), 5);
         assert_eq!(pb.largest_free_island(NodeId(0)), 3);
+    }
+
+    #[test]
+    fn blind_plan_collapses_cross_superspine() {
+        // 2 spines, 1 superspine each: nodes under different spines are
+        // CrossSuperSpine truthfully, SameSuperSpine when blind.
+        let mut spec = ClusterSpec::homogeneous("b", 2, 1, 2);
+        spec.spines_per_superspine = 1;
+        let state = ClusterBuilder::build(&spec);
+        let mut snap = Snapshot::new(SnapshotMode::DeepCopy);
+        snap.refresh(&state);
+        let mut truthful = PlanBuilder::new(&state, &snap, JobId(1), false);
+        let mut blind = PlanBuilder::new(&state, &snap, JobId(2), true);
+        assert!(truthful.place_pod(NodeId(0), 8));
+        assert!(blind.place_pod(NodeId(0), 8));
+        assert_eq!(truthful.tier_to(NodeId(2)), Tier::CrossSuperSpine);
+        assert_eq!(blind.tier_to(NodeId(2)), Tier::SameSuperSpine);
+        // Tiers at or below SameSpine are untouched by blindness.
+        assert_eq!(blind.tier_to(NodeId(1)), Tier::SameLeaf);
     }
 }

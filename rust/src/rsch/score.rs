@@ -9,6 +9,12 @@ use super::features::{GROUP_F, JOB_D, NODE_F};
 
 /// Number of node score components / weights.
 pub const NUM_COMPONENTS: usize = 8;
+/// Index of the topology-closeness component in a node weight row. A
+/// zero `w[W_TOPO]` marks the strategy topology-agnostic: its placements
+/// are invariant to tier truthfulness (the digest guarantee Binpack /
+/// Spread carry across the truthful-tier refactor), and RSCH only takes
+/// the pooled gang-scoring fast path when this component is live.
+pub const W_TOPO: usize = 4;
 /// Number of group score components / weights.
 pub const GROUP_COMPONENTS: usize = 6;
 /// Infeasible-node sink value (finite so sorting stays total).
@@ -63,11 +69,18 @@ pub fn node_weights(
         (PlacementStrategy::EBinpack, _) => {
             if large_job {
                 // Large gangs prefer empty groups (reserve busy groups for
-                // small jobs) and tight topology.
-                [1.0, 0.0, 0.0, 0.6, 0.8, 0.4, -0.5, 0.2]
+                // small jobs) and tight topology. With the truthful 5-tier
+                // scale (topo step = w_topo / 4 per tier), w_topo = 1.6
+                // makes one tier worth 0.4 — so a candidate in another
+                // superspine only wins over a same-superspine one when the
+                // remote group is > 2/3 emptier (0.4 / w_group_empty):
+                // large gangs actively avoid core-layer crossings instead
+                // of scoring them at zero cost.
+                [1.0, 0.0, 0.0, 0.6, 1.6, 0.4, -0.5, 0.2]
             } else {
                 // Small jobs consolidate: busy groups, co-located pods.
-                [1.0, 0.0, 0.6, 0.0, 0.5, 0.8, -0.3, 0.2]
+                // (0.6 / 4 per tier ≈ the old 0.5 / 3 step.)
+                [1.0, 0.0, 0.6, 0.0, 0.6, 0.8, -0.3, 0.2]
             }
         }
         (PlacementStrategy::Spread, _) => {
@@ -78,9 +91,9 @@ pub fn node_weights(
             [0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 2.0, 0.1]
         }
         // E-Spread fallback: consolidate in the general pool (E-Binpack
-        // weights, zone-averse).
+        // weights, zone-averse; topo step matches the small-job row).
         (PlacementStrategy::ESpread, Phase::Fallback) => {
-            [1.0, 0.0, 0.6, 0.0, 0.5, 0.8, -0.5, 0.2]
+            [1.0, 0.0, 0.6, 0.0, 0.6, 0.8, -0.5, 0.2]
         }
     }
 }
@@ -152,7 +165,10 @@ impl ScoreBackend for NativeBackend {
             let spread = 1.0 - (alloc / total).clamp(0.0, 1.0);
             let group_pack = 1.0 - (group_free / group_total).clamp(0.0, 1.0);
             let group_empty = (group_free / group_total).clamp(0.0, 1.0);
-            let topo = 1.0 - topo_tier.clamp(0.0, 3.0) / 3.0;
+            // Truthful 5-tier scale: 0 node … 4 cross-superspine, so a
+            // same-superspine candidate keeps a 0.25 edge over one that
+            // crosses the core layer (mirrors ref.py; keep in lockstep).
+            let topo = 1.0 - topo_tier.clamp(0.0, 4.0) / 4.0;
             let colocate = pods_on_node.clamp(0.0, 8.0) / 8.0;
             let nvlink = if clique >= gpus_per_pod { 1.0 } else { 0.0 };
 
@@ -258,7 +274,7 @@ mod tests {
         r[3] = healthy;
         r[4] = group_free;
         r[5] = group_total;
-        r[8] = 3.0;
+        r[8] = 4.0; // WORST: nothing placed yet.
         r[11] = free;
         r
     }
@@ -366,6 +382,27 @@ mod tests {
         let w = group_weights(PlacementStrategy::EBinpack, Phase::Primary, false);
         let s = b.score_groups(&gfeat, 1, &job, &w);
         assert!(!feasible(s[0]));
+    }
+
+    #[test]
+    fn large_gang_weights_penalize_core_crossings() {
+        // Two otherwise-identical empty nodes; one sits in the gang's
+        // superspine (tier 3), the other across the core (tier 4). The
+        // truthful scorer must prefer staying — and must keep preferring
+        // it even when the remote node's group is moderately emptier.
+        let mut b = NativeBackend;
+        let mut near = row(8.0, 8.0, 0.0, 1.0, 128.0, 256.0);
+        near[8] = 3.0;
+        let mut far = row(8.0, 8.0, 0.0, 1.0, 256.0, 256.0);
+        far[8] = 4.0;
+        let feat: Vec<f32> = [near, far].concat();
+        let job = [8.0, 512.0, 1.0, 0.0, 1.0, 2.0, 0.0, 0.0];
+        let w = node_weights(PlacementStrategy::EBinpack, Phase::Primary, true);
+        let s = b.score_nodes(&feat, 2, &job, &w);
+        assert!(
+            s[0] > s[1],
+            "same-superspine must beat a core crossing despite a half-empty group: {s:?}"
+        );
     }
 
     #[test]

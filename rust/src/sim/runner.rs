@@ -144,6 +144,15 @@ impl SimOutcome {
             .set("qsch_cancellations", self.qsch_stats.cancellations)
             .set("rsch_pods_placed", self.rsch_stats.pods_placed)
             .set("rsch_nodes_examined", self.rsch_stats.nodes_examined)
+            .set("rsch_nodes_scored", self.rsch_stats.nodes_scored)
+            .set(
+                "jtted_spine_dev_mean",
+                Metrics::weighted_mean(&self.metrics.jtted_spine_summaries()),
+            )
+            .set(
+                "jtted_superspine_dev_mean",
+                Metrics::weighted_mean(&self.metrics.jtted_superspine_summaries()),
+            )
             .set("faults_injected", self.metrics.reliability.faults_injected())
             .set("fault_evictions", self.metrics.reliability.fault_evictions)
             .set("repairs", self.metrics.reliability.repairs)

@@ -488,6 +488,141 @@ fn health_storms_leak_no_allocations_and_aggregates_match_index() {
 }
 
 #[test]
+fn gang_footprint_matches_min_tier_oracle() {
+    // The O(1) GangFootprint tier query must equal the O(|placed|)
+    // `Fabric::min_tier_to` scan for every node, under arbitrary
+    // placement sequences on arbitrary multi-superspine fabrics.
+    use kant::cluster::ids::NodeId;
+    use kant::cluster::topology::GangFootprint;
+
+    prop::check(40, |rng| {
+        let mut spec = ClusterSpec::homogeneous(
+            "fp",
+            rng.range_inclusive(1, 6) as u32,
+            rng.range_inclusive(1, 3) as u32,
+            rng.range_inclusive(1, 4) as u32,
+        );
+        spec.spines_per_superspine = rng.range_inclusive(1, 3) as u32;
+        let state = ClusterBuilder::build(&spec);
+        let fabric = &state.fabric;
+        let num_nodes = state.nodes.len() as u64;
+        let mut fp = GangFootprint::new();
+        let mut placed: Vec<NodeId> = Vec::new();
+        for _ in 0..rng.range_inclusive(1, 12) {
+            for probe in 0..num_nodes {
+                let n = NodeId(probe as u32);
+                prop_assert!(
+                    fp.tier_to(fabric, n) == fabric.min_tier_to(n, &placed),
+                    "tier diverged for {n} with placed {placed:?}"
+                );
+            }
+            let next = NodeId(rng.below(num_nodes) as u32);
+            fp.place(fabric, next);
+            placed.push(next);
+            prop_assert!(
+                fp.groups_spanned() == fabric.groups_spanned(&placed)
+                    && fp.spines_spanned() == fabric.spines_spanned(&placed)
+                    && fp.superspines_spanned() == fabric.superspines_spanned(&placed),
+                "span counters diverged with placed {placed:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pooled_incremental_gang_scoring_matches_full_rebuild() {
+    // The incremental row cache is a pure acceleration: across random
+    // multi-superspine clusters and random job streams (gangs, releases,
+    // all topology-aware strategies), placements must be byte-identical
+    // to rebuilding every feature row per pod.
+    use kant::job::spec::PlacementStrategy;
+    use kant::qsch::Placer;
+    use kant::rsch::GangScoring;
+
+    prop::check(15, |rng| {
+        let mut spec = ClusterSpec::homogeneous(
+            "gc",
+            rng.range_inclusive(2, 4) as u32,
+            rng.range_inclusive(1, 2) as u32,
+            rng.range_inclusive(2, 4) as u32,
+        );
+        spec.spines_per_superspine = rng.range_inclusive(1, 2) as u32;
+        let mut s_inc = ClusterBuilder::build(&spec);
+        let mut s_reb = s_inc.clone();
+        let base = RschConfig {
+            two_level: rng.chance(0.6),
+            indexed_candidates: rng.chance(0.7),
+            ..RschConfig::default()
+        };
+        let mut inc = Rsch::new(
+            RschConfig {
+                gang_scoring: GangScoring::PooledIncremental,
+                ..base.clone()
+            },
+            &s_inc,
+        );
+        let mut reb = Rsch::new(
+            RschConfig {
+                gang_scoring: GangScoring::PooledRebuild,
+                ..base
+            },
+            &s_reb,
+        );
+        let mut live: Vec<JobId> = Vec::new();
+        let mut next = 1u64;
+        for step in 0..rng.range_inclusive(8, 30) {
+            if live.is_empty() || rng.chance(0.75) {
+                let replicas = rng.range_inclusive(1, 8) as u32;
+                let gpp = *rng.choose(&[2u32, 4, 8]).unwrap();
+                let mut j = JobSpec::homogeneous(
+                    JobId(next),
+                    TenantId(0),
+                    JobKind::Training,
+                    G,
+                    replicas,
+                    gpp,
+                );
+                j.strategy = Some(
+                    *rng.choose(&[PlacementStrategy::EBinpack, PlacementStrategy::ESpread])
+                        .unwrap(),
+                );
+                let a = inc.place(&mut s_inc, &j);
+                let b = reb.place(&mut s_reb, &j);
+                prop_assert!(
+                    a == b,
+                    "outcome diverged at step {step} for job {}: {a:?} vs {b:?}",
+                    j.id
+                );
+                prop_assert!(
+                    s_inc.placements_of(j.id) == s_reb.placements_of(j.id),
+                    "placements diverged at step {step} for job {}",
+                    j.id
+                );
+                if a.is_ok() {
+                    live.push(j.id);
+                }
+                next += 1;
+            } else {
+                let i = rng.below(live.len() as u64) as usize;
+                let j = live.swap_remove(i);
+                s_inc.release_job(j).unwrap();
+                s_reb.release_job(j).unwrap();
+            }
+        }
+        prop_assert!(
+            s_inc.allocated_gpus() == s_reb.allocated_gpus(),
+            "allocation totals diverged"
+        );
+        prop_assert!(
+            inc.stats.nodes_scored <= reb.stats.nodes_scored,
+            "the incremental cache must never score MORE rows"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn preemption_never_loses_jobs() {
     // Under heavy HIGH-priority pressure with preemption enabled, every
     // job must end Finished or still-tracked — never dropped.

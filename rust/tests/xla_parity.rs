@@ -37,7 +37,7 @@ fn random_node_features(rng: &mut Pcg32, n: usize) -> Vec<f32> {
         row[5] = 256.0;
         row[6] = rng.below(9) as f32; // pods_on_node
         row[7] = rng.below(17) as f32;
-        row[8] = rng.below(4) as f32; // topo tier
+        row[8] = rng.below(5) as f32; // topo tier (0..=4, cross-superspine)
         row[9] = if rng.chance(0.3) { 1.0 } else { 0.0 };
         row[10] = rng.below(65) as f32;
         row[11] = rng.below(row[0] as u64 + 1) as f32;
