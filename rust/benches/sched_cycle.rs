@@ -163,6 +163,69 @@ fn bench_large_gang(b: &mut Bench, groups: u32, mode: GangScoring, label: &str) 
     );
 }
 
+/// Superspine-sharded QSCH cycle on the 100,000-GPU preset: one cycle
+/// over a 64-job batch (mixed 8-GPU singles, 32-GPU and 128-GPU gangs)
+/// with the sharded prefetch planning on `threads` workers across the
+/// 10 structural shards. The digest-checked invariant means
+/// `nodes_examined` must be identical across the 1/4/8-thread rows —
+/// only wall time may move.
+fn bench_sharded_cycle(b: &mut Bench, threads: usize) {
+    use kant::cluster::tenant::{QuotaLedger, QuotaMode};
+    use kant::job::store::JobStore;
+    use kant::qsch::policy::QschConfig;
+    use kant::qsch::Qsch;
+
+    let mut state = ClusterBuilder::build(&ClusterSpec::train100000());
+    let mut ledger = QuotaLedger::new(1, 1, QuotaMode::Shared);
+    ledger.set_limit(TenantId(0), GpuTypeId(0), state.total_gpus());
+    let cfg = QschConfig {
+        batch_shards: threads,
+        ..QschConfig::default()
+    };
+    let mut qsch = Qsch::new(cfg, ledger);
+    let mut store = JobStore::new();
+    let mut rsch = Rsch::new(RschConfig::default(), &state);
+    let n = state.nodes.len();
+    let batch = 64usize;
+    let mut id = 1u64;
+    let mut now = 0u64;
+    b.run_throughput(
+        &format!("qsch-cycle-batch64/shards{threads}/{n}nodes"),
+        batch as f64,
+        || {
+            for k in 0..batch {
+                let replicas = match k % 8 {
+                    0 => 16, // 128-GPU gang.
+                    1 | 2 => 4,
+                    _ => 1,
+                };
+                let spec = JobSpec::homogeneous(
+                    JobId(id),
+                    TenantId(0),
+                    JobKind::Training,
+                    GpuTypeId(0),
+                    replicas,
+                    8,
+                )
+                .with_times(now, 3_600_000);
+                id += 1;
+                qsch.submit(&mut store, spec);
+            }
+            let r = qsch.cycle(now, &mut store, &mut state, &mut rsch);
+            now += 1_000;
+            // Empty the cluster again so every iteration plans the same
+            // batch against the same free fabric.
+            for jid in r.scheduled {
+                state.release_job(jid).unwrap();
+            }
+        },
+    );
+    eprintln!(
+        "   [shards{threads}] nodes_examined={} pods_placed={}",
+        rsch.stats.nodes_examined, rsch.stats.pods_placed
+    );
+}
+
 /// §3.1 multi-instance parallel planning throughput.
 fn bench_parallel(b: &mut Bench, threads: usize) {
     let mut state = make_state(32);
@@ -254,6 +317,15 @@ fn main() {
     bench_large_gang(&mut b, gg, GangScoring::PerPodRescan, "per-pod-rescan");
     bench_large_gang(&mut b, gg, GangScoring::PooledRebuild, "pooled-rebuild");
     bench_large_gang(&mut b, gg, GangScoring::PooledIncremental, "pooled-incremental");
+
+    // Tentpole scenario: the sharded scheduler core at 100k-GPU scale,
+    // 1 vs 4 vs 8 worker threads over the 10 structural superspine
+    // shards. Runs in every preset (small keeps iterations low) so the
+    // per-commit artifact tracks the sharded cycle's trajectory.
+    println!("== superspine-sharded cycle: 100k-GPU preset ==");
+    for threads in [1usize, 4, 8] {
+        bench_sharded_cycle(&mut b, threads);
+    }
 
     // Seed/refresh a perf baseline when requested. From the package root:
     //   BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench sched_cycle

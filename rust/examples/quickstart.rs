@@ -6,12 +6,12 @@
 use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
 use kant::cluster::ids::{GpuTypeId, JobId, TenantId};
 use kant::cluster::tenant::{QuotaLedger, QuotaMode};
+use kant::config::{Scale, SimOptions};
 use kant::job::spec::{JobKind, JobSpec, Priority};
 use kant::metrics::report::{fmt_ms, headline, pct};
-use kant::qsch::policy::QschConfig;
 use kant::qsch::Qsch;
-use kant::rsch::{Rsch, RschConfig};
-use kant::sim::{run, SimConfig};
+use kant::rsch::Rsch;
+use kant::sim::run;
 
 fn main() {
     // A 2-spine × 2-group × 8-node cluster of 8-GPU boards = 256 GPUs.
@@ -29,9 +29,14 @@ fn main() {
     ledger.set_limit(TenantId(1), GpuTypeId(0), 96);
 
     // Kant defaults: Backfill queueing + E-Binpack placement + two-level
-    // NodeNetGroup scheduling + incremental snapshots.
-    let mut qsch = Qsch::new(QschConfig::default(), ledger);
-    let mut rsch = Rsch::new(RschConfig::default(), &state);
+    // NodeNetGroup scheduling + incremental snapshots. `SimOptions` is the
+    // one constructor for the scheduler configs — the same builder the CLI
+    // flags (`--policy`, `--shards`, `--faults`, ...) adapt onto.
+    let (qsch_cfg, rsch_cfg, sim_cfg) = SimOptions::for_scale(Scale::Small)
+        .configs()
+        .expect("default options are always valid");
+    let mut qsch = Qsch::new(qsch_cfg, ledger);
+    let mut rsch = Rsch::new(rsch_cfg, &state);
 
     // A mixed workload: one big distributed training gang, a few small
     // training jobs, and an HA inference deployment.
@@ -50,7 +55,7 @@ fn main() {
     ];
     jobs.sort_by_key(|j| j.submit_ms);
 
-    let out = run(&mut state, &mut qsch, &mut rsch, jobs, &SimConfig::default());
+    let out = run(&mut state, &mut qsch, &mut rsch, jobs, &sim_cfg);
 
     println!("{}", headline("quickstart", &out.metrics));
     for id in 1..=5u64 {

@@ -4,7 +4,7 @@
 //!
 //! Run with: `cargo run --release --example trace_replay`
 
-use kant::config::{training_cluster, Scale};
+use kant::config::{Scale, SimOptions};
 use kant::experiments::{run_arm, Arm};
 use kant::job::trace::{read_trace, write_trace};
 use kant::job::workload::WorkloadGen;
@@ -14,7 +14,10 @@ use kant::rsch::Rsch;
 use kant::sim::{run, SimConfig};
 
 fn main() -> anyhow::Result<()> {
-    let mut env = training_cluster(Scale::Small, 11, 0.9);
+    // The builder is the single constructor of environments + configs; the
+    // replay below still overrides the horizon for a quick run.
+    let setup = SimOptions::for_scale(Scale::Small).seed(11).rho(0.9).build()?;
+    let mut env = setup.env;
     env.horizon_ms = 6 * 3_600_000;
 
     // 1. Generate + persist the trace.
@@ -32,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     // 3. Replay under two arms on the identical input.
     let sim = SimConfig {
         horizon_ms: env.horizon_ms + 12 * 3_600_000,
-        ..SimConfig::default()
+        ..setup.sim
     };
     let mut rows = Vec::new();
     for arm in [Arm::native_baseline(), Arm::kant_ebinpack()] {

@@ -2,7 +2,7 @@
 //! evaluation (see DESIGN.md §5 for the experiment index).
 //!
 //! Usage:
-//!   figures [--scale small|paper|xlarge] [--seed N] [--out results/] <id>...
+//!   figures [--scale small|paper|xlarge|xxlarge] [--seed N] [--out results/] <id>...
 //!   ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15
 //!        table1 ablation-espread ablation-defrag ablation-index
 //!        elastic-inference fault-tolerance topology-stress all
@@ -115,7 +115,7 @@ fn main() -> anyhow::Result<()> {
 
 const HELP: &str = "\
 figures — regenerate the paper's tables and figures
-usage: figures [--scale small|paper|xlarge] [--seed N] [--out DIR] <id>... | all
+usage: figures [--scale small|paper|xlarge|xxlarge] [--seed N] [--out DIR] <id>... | all
 ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15 table1 \
 ablation-espread ablation-defrag ablation-index elastic-inference fault-tolerance \
 topology-stress";

@@ -95,6 +95,16 @@ impl ClusterSpec {
         ClusterSpec::homogeneous("train10000", 10, 5, 25)
     }
 
+    /// The 100,000-GPU frontier cluster: 12,500 × 8-GPU nodes in 500
+    /// LeafGroups of 25, over 50 spines in 10 superspines — the scale the
+    /// superspine-sharded scheduler core targets (one shard per
+    /// superspine, ~10,000 GPUs each).
+    pub fn train100000() -> ClusterSpec {
+        let mut s = ClusterSpec::homogeneous("train100000", 50, 10, 25);
+        s.spines_per_superspine = 5;
+        s
+    }
+
     pub fn total_groups(&self) -> u32 {
         self.gpu_types.iter().map(|p| p.groups).sum()
     }
@@ -234,6 +244,17 @@ mod tests {
         assert_eq!(s.nodes.len(), 1250);
         assert_eq!(s.total_gpus(), 10_000);
         assert_eq!(s.fabric.num_groups(), 50);
+    }
+
+    #[test]
+    fn train100000_is_hundred_thousand_gpu_scale() {
+        let spec = ClusterSpec::train100000();
+        let s = ClusterBuilder::build(&spec);
+        assert_eq!(s.nodes.len(), 12_500);
+        assert_eq!(s.total_gpus(), 100_000);
+        assert_eq!(s.fabric.num_groups(), 500);
+        assert_eq!(s.fabric.spines.len(), 50);
+        assert_eq!(s.fabric.num_superspines, 10);
     }
 
     #[test]

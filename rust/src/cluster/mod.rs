@@ -8,6 +8,7 @@ pub mod ids;
 pub mod index;
 pub mod node;
 pub mod pool;
+pub mod shard;
 pub mod snapshot;
 pub mod state;
 pub mod tenant;
@@ -21,6 +22,7 @@ pub use ids::{
 pub use index::{NodeIndex, ZoneQuery};
 pub use node::{AllocError, Node, Zone};
 pub use pool::{NodePool, PoolSet};
+pub use shard::ShardMap;
 pub use snapshot::{GroupRecord, NodeRecord, Snapshot, SnapshotMode, SnapshotStats};
 pub use state::{ClusterState, PodPlacement, StateError};
 pub use tenant::{BorrowRecord, QuotaEntry, QuotaError, QuotaLedger, QuotaMode, Tenant};

@@ -1,0 +1,122 @@
+//! Superspine shard map: the structural partition behind the sharded
+//! scheduler core.
+//!
+//! Shards are *not* a tunable — one shard per superspine, fixed by the
+//! fabric (`Tier::CrossSuperSpine` is the natural cut: most gangs fit
+//! inside one superspine, so shard-local planning sees the whole
+//! topology a gang's score depends on). The `--shards N` knob only
+//! chooses how many worker threads sweep the fixed shards; because the
+//! structure and the shard→work assignment are derived from topology
+//! and shard ids alone, results are byte-identical for any thread count.
+
+use super::ids::GroupId;
+use super::state::ClusterState;
+
+/// Immutable partition of a cluster's LeafGroups by superspine.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    /// Group index → shard (= superspine) index.
+    shard_of_group: Vec<u32>,
+    /// Shard → pool → that pool's groups inside the shard, in the same
+    /// (sorted) order `ClusterState::pool_groups` yields them, so a
+    /// shard-local group walk visits groups in the exact relative order
+    /// the unsharded planner would.
+    pool_groups: Vec<Vec<Vec<GroupId>>>,
+}
+
+impl ShardMap {
+    pub fn new(state: &ClusterState) -> ShardMap {
+        let num_shards = state.fabric.num_superspines.max(1) as usize;
+        let mut shard_of_group = vec![0u32; state.fabric.num_groups()];
+        for g in &state.fabric.groups {
+            let ss = state.fabric.spines[g.spine.index()].superspine;
+            shard_of_group[g.id.index()] = ss.index() as u32;
+        }
+        let per_pool = state.pool_groups();
+        let mut pool_groups = vec![vec![Vec::new(); per_pool.len()]; num_shards];
+        for (pool, groups) in per_pool.iter().enumerate() {
+            for &g in groups {
+                let shard = shard_of_group[g.index()] as usize;
+                pool_groups[shard][pool].push(g);
+            }
+        }
+        ShardMap {
+            shard_of_group,
+            pool_groups,
+        }
+    }
+
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.pool_groups.len()
+    }
+
+    #[inline]
+    pub fn shard_of_group(&self, g: GroupId) -> usize {
+        self.shard_of_group[g.index()] as usize
+    }
+
+    /// The shard's groups, per pool (pool index → sorted group list).
+    #[inline]
+    pub fn pool_groups(&self, shard: usize) -> &[Vec<GroupId>] {
+        &self.pool_groups[shard]
+    }
+
+    /// Current free GPUs per pool inside `shard` (the shard-routing
+    /// feasibility signal — cheap: sums the state's per-group counters).
+    pub fn free_by_pool(&self, state: &ClusterState, shard: usize) -> Vec<u32> {
+        self.pool_groups[shard]
+            .iter()
+            .map(|groups| groups.iter().map(|&g| state.group_free(g)).sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+
+    #[test]
+    fn shards_partition_groups_by_superspine() {
+        // 4 spines × 1 group × 32 nodes, 2 spines per superspine → 2 shards
+        // of 2 groups each (the Small training preset's shape).
+        let mut spec = ClusterSpec::homogeneous("t", 4, 1, 32);
+        spec.spines_per_superspine = 2;
+        let state = ClusterBuilder::build(&spec);
+        let shards = ShardMap::new(&state);
+        assert_eq!(shards.num_shards(), 2);
+        assert_eq!(shards.shard_of_group(GroupId(0)), 0);
+        assert_eq!(shards.shard_of_group(GroupId(1)), 0);
+        assert_eq!(shards.shard_of_group(GroupId(2)), 1);
+        assert_eq!(shards.shard_of_group(GroupId(3)), 1);
+        // Every pool group lands in exactly one shard, order preserved.
+        let total: usize = (0..shards.num_shards())
+            .map(|s| shards.pool_groups(s)[0].len())
+            .sum();
+        assert_eq!(total, state.fabric.num_groups());
+        assert_eq!(shards.pool_groups(1)[0], vec![GroupId(2), GroupId(3)]);
+    }
+
+    #[test]
+    fn free_by_pool_tracks_group_counters() {
+        let mut spec = ClusterSpec::homogeneous("t", 4, 1, 4);
+        spec.spines_per_superspine = 2;
+        let state = ClusterBuilder::build(&spec);
+        let shards = ShardMap::new(&state);
+        // 2 groups × 4 nodes × 8 GPUs per shard, all free.
+        assert_eq!(shards.free_by_pool(&state, 0), vec![64]);
+        assert_eq!(shards.free_by_pool(&state, 1), vec![64]);
+    }
+
+    #[test]
+    fn hundred_thousand_gpu_preset_has_ten_shards() {
+        let state = ClusterBuilder::build(&ClusterSpec::train100000());
+        let shards = ShardMap::new(&state);
+        assert_eq!(shards.num_shards(), 10);
+        let per_shard: Vec<u32> = (0..10)
+            .map(|s| shards.free_by_pool(&state, s)[0])
+            .collect();
+        assert!(per_shard.iter().all(|&f| f == 10_000));
+    }
+}

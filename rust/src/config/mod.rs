@@ -1,6 +1,10 @@
 //! Experiment presets: the clusters, tenants/quotas and workloads of the
 //! paper's §5 evaluation, plus down-scaled variants for quick runs.
 
+pub mod options;
+
+pub use options::{ClusterChoice, FaultPreset, OptionsError, SimOptions, SimSetup};
+
 use crate::cluster::builder::{ClusterBuilder, ClusterSpec, GpuModel, GpuTypeProfile};
 use crate::cluster::ids::{GpuTypeId, TenantId};
 use crate::cluster::state::ClusterState;
@@ -10,12 +14,15 @@ use crate::job::workload::WorkloadConfig;
 /// Run scale: `Paper` mirrors §5's sizes; `Small` is CI-friendly;
 /// `XLarge` is the "tens of thousands of GPUs" end of the abstract's
 /// claim (1,250 nodes / 10,000 GPUs) — the scale where sublinear
-/// candidate selection earns its keep.
+/// candidate selection earns its keep; `XXLarge` is the 100,000-GPU
+/// frontier cluster (12,500 nodes over 10 superspines) that the
+/// superspine-sharded scheduler core targets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scale {
     Small,
     Paper,
     XLarge,
+    XXLarge,
 }
 
 impl Scale {
@@ -24,6 +31,7 @@ impl Scale {
             "small" => Some(Scale::Small),
             "paper" | "full" => Some(Scale::Paper),
             "xlarge" | "10k" => Some(Scale::XLarge),
+            "xxlarge" | "100k" => Some(Scale::XXLarge),
             _ => None,
         }
     }
@@ -48,6 +56,7 @@ pub fn training_cluster(scale: Scale, seed: u64, rho: f64) -> Environment {
     let (spec, days) = match scale {
         Scale::Paper => (ClusterSpec::train8000(), 14.0),
         Scale::XLarge => (ClusterSpec::train10000(), 14.0),
+        Scale::XXLarge => (ClusterSpec::train100000(), 14.0),
         Scale::Small => {
             // Same 128-node / 1,024-GPU shape as before, but spread over
             // 4 spines in 2 superspines so small-scale runs exercise the
@@ -228,6 +237,14 @@ mod tests {
     }
 
     #[test]
+    fn training_xxlarge_is_hundred_thousand_gpus() {
+        let xx = training_cluster(Scale::XXLarge, 1, 0.9);
+        assert_eq!(xx.state.total_gpus(), 100_000);
+        assert_eq!(xx.state.nodes.len(), 12_500);
+        assert_eq!(xx.state.fabric.num_superspines, 10);
+    }
+
+    #[test]
     fn inference_size_ordering_matches_paper() {
         let i7 = inference_cluster(InferencePreset::I7, 1);
         let i2 = inference_cluster(InferencePreset::I2, 1);
@@ -260,6 +277,8 @@ mod tests {
         assert_eq!(Scale::parse("small"), Some(Scale::Small));
         assert_eq!(Scale::parse("xlarge"), Some(Scale::XLarge));
         assert_eq!(Scale::parse("10k"), Some(Scale::XLarge));
+        assert_eq!(Scale::parse("xxlarge"), Some(Scale::XXLarge));
+        assert_eq!(Scale::parse("100k"), Some(Scale::XXLarge));
         assert_eq!(InferencePreset::parse("a10"), Some(InferencePreset::A10));
     }
 }

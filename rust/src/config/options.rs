@@ -1,0 +1,457 @@
+//! `SimOptions` — the one typed builder behind every entry point.
+//!
+//! Historically each knob (`--flat`, `--deep-snapshot`, `--no-index`,
+//! `--topo-blind`, `--elastic`, `--faults`, `--checkpoint-min`, …) was
+//! hand-threaded through `main.rs`, `bin/figures.rs`, the experiments
+//! and the examples, so defaults could silently drift between entry
+//! points. `SimOptions` is now the single constructor of the
+//! `QschConfig`/`RschConfig`/`SimConfig` product (and, via
+//! [`SimOptions::build`], of the whole preset [`Environment`]); the CLI
+//! is a thin adapter onto it.
+//!
+//! ```no_run
+//! use kant::config::{FaultPreset, Scale, SimOptions};
+//!
+//! let setup = SimOptions::for_scale(Scale::XLarge)
+//!     .seed(7)
+//!     .elastic(true)
+//!     .faults(FaultPreset::Storm)
+//!     .shards(8)
+//!     .build()
+//!     .unwrap();
+//! ```
+
+use std::fmt;
+
+use crate::job::spec::{CheckpointPolicy, JobKind, JobSpec, PlacementStrategy};
+use crate::qsch::policy::{QschConfig, QueuePolicy};
+use crate::rsch::RschConfig;
+use crate::sim::{ElasticConfig, FaultConfig, SimConfig};
+
+use super::{inference_cluster, training_cluster, Environment, InferencePreset, Scale};
+
+/// Which cluster preset a run targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterChoice {
+    /// The §5.1 homogeneous training cluster at the chosen [`Scale`].
+    Training,
+    /// One of the §5.2 inference clusters (scale is fixed by the preset).
+    Inference(InferencePreset),
+}
+
+/// Fault-injection preset (`--faults` maps to [`FaultPreset::Storm`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultPreset {
+    /// No fault injection (the default).
+    #[default]
+    None,
+    /// The seeded MTBF/MTTR storm of the reliability experiments, plus
+    /// requeue priority aging, periodic training checkpoints, and
+    /// drain-aware defrag rounds every 30 simulated minutes.
+    Storm,
+}
+
+/// Invalid option combinations surfaced at build time — the constraints
+/// the ad-hoc flag plumbing used to apply silently.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OptionsError {
+    /// Sharded prefetch workers always plan on the native backend (the
+    /// PJRT client is not `Send`), so combining the XLA scorer with
+    /// `shards >= 1` would silently ignore the requested backend.
+    XlaScorerWithShards { shards: usize },
+}
+
+impl fmt::Display for OptionsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OptionsError::XlaScorerWithShards { shards } => write!(
+                f,
+                "--xla-scorer cannot be combined with --shards {shards}: sharded \
+                 prefetch workers always score on the native backend (the PJRT \
+                 client is not Send); drop --shards or the XLA scorer"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for OptionsError {}
+
+/// Everything [`SimOptions::build`] produces: the preset environment plus
+/// the three scheduler/simulator configs, guaranteed mutually consistent.
+pub struct SimSetup {
+    pub env: Environment,
+    pub qsch: QschConfig,
+    pub rsch: RschConfig,
+    pub sim: SimConfig,
+}
+
+/// The unified option set. Construct with [`SimOptions::for_scale`] (or
+/// [`SimOptions::for_inference`]), chain setters, then [`build`]
+/// (environment + configs) or [`configs`] (configs only, for callers
+/// bringing their own cluster).
+///
+/// [`build`]: SimOptions::build
+/// [`configs`]: SimOptions::configs
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    scale: Scale,
+    cluster: ClusterChoice,
+    seed: u64,
+    rho: f64,
+    policy: QueuePolicy,
+    strategy: Option<PlacementStrategy>,
+    flat: bool,
+    deep_snapshot: bool,
+    no_index: bool,
+    topo_blind: bool,
+    elastic: bool,
+    faults: FaultPreset,
+    checkpoint_min: u64,
+    shards: usize,
+    xla_scorer: bool,
+}
+
+impl SimOptions {
+    /// Training cluster at `scale`, with the defaults every entry point
+    /// used to re-declare by hand: seed 42, ρ = 0.95, backfill queueing,
+    /// kind-default strategies, two-level + incremental snapshot +
+    /// indexed candidates, no elasticity/faults, sequential core.
+    pub fn for_scale(scale: Scale) -> SimOptions {
+        SimOptions {
+            scale,
+            cluster: ClusterChoice::Training,
+            seed: 42,
+            rho: 0.95,
+            policy: QueuePolicy::Backfill,
+            strategy: None,
+            flat: false,
+            deep_snapshot: false,
+            no_index: false,
+            topo_blind: false,
+            elastic: false,
+            faults: FaultPreset::None,
+            checkpoint_min: 30,
+            shards: 0,
+            xla_scorer: false,
+        }
+    }
+
+    /// One of the §5.2 inference clusters (their size is part of the
+    /// preset, so `scale` only affects the label of non-cluster knobs).
+    pub fn for_inference(preset: InferencePreset) -> SimOptions {
+        let mut o = SimOptions::for_scale(Scale::Small);
+        o.cluster = ClusterChoice::Inference(preset);
+        o
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Offered-load factor for the training workload calibration.
+    pub fn rho(mut self, rho: f64) -> Self {
+        self.rho = rho;
+        self
+    }
+
+    pub fn policy(mut self, policy: QueuePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Pin one placement strategy for every job kind (`--strategy`);
+    /// `None` keeps the kind defaults (E-Binpack / E-Spread / Binpack).
+    pub fn strategy(mut self, strategy: Option<PlacementStrategy>) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Disable two-level (NodeNetGroup preselect) scheduling (`--flat`).
+    pub fn flat(mut self, flat: bool) -> Self {
+        self.flat = flat;
+        self
+    }
+
+    /// Rebuild the full snapshot every refresh (`--deep-snapshot`).
+    pub fn deep_snapshot(mut self, deep: bool) -> Self {
+        self.deep_snapshot = deep;
+        self
+    }
+
+    /// Linear candidate scans instead of the free-capacity index
+    /// (`--no-index`).
+    pub fn no_index(mut self, no_index: bool) -> Self {
+        self.no_index = no_index;
+        self
+    }
+
+    /// Pre-fix topology ablation (`--topo-blind`).
+    pub fn topo_blind(mut self, blind: bool) -> Self {
+        self.topo_blind = blind;
+        self
+    }
+
+    /// Elastic inference: diurnal replica sets + the autoscaling loop
+    /// (`--elastic`).
+    pub fn elastic(mut self, elastic: bool) -> Self {
+        self.elastic = elastic;
+        self
+    }
+
+    pub fn faults(mut self, faults: FaultPreset) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Checkpoint interval (minutes) for training jobs under fault
+    /// injection; 0 = naive restart-from-scratch (`--checkpoint-min`).
+    pub fn checkpoint_min(mut self, minutes: u64) -> Self {
+        self.checkpoint_min = minutes;
+        self
+    }
+
+    /// Worker threads for the superspine-sharded placement prefetch
+    /// (`--shards N`). 0 (default) keeps the legacy sequential core; any
+    /// value ≥ 1 enables prefetch — the shard *structure* is fixed by
+    /// the topology, so every N ≥ 1 yields byte-identical digests.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Score through the AOT-compiled XLA artifact (`--xla-scorer`).
+    /// Invalid with [`SimOptions::shards`] ≥ 1 — see
+    /// [`OptionsError::XlaScorerWithShards`].
+    pub fn xla_scorer(mut self, xla: bool) -> Self {
+        self.xla_scorer = xla;
+        self
+    }
+
+    pub fn wants_xla(&self) -> bool {
+        self.xla_scorer
+    }
+
+    pub fn is_elastic(&self) -> bool {
+        self.elastic
+    }
+
+    pub fn has_faults(&self) -> bool {
+        self.faults != FaultPreset::None
+    }
+
+    /// The `QschConfig`/`RschConfig`/`SimConfig` product, validated. The
+    /// `horizon_ms` is left at the `SimConfig` default (run-until-drained)
+    /// — [`SimOptions::build`] stamps the preset horizon; callers with
+    /// their own cluster set their own.
+    pub fn configs(&self) -> Result<(QschConfig, RschConfig, SimConfig), OptionsError> {
+        if self.xla_scorer && self.shards >= 1 {
+            return Err(OptionsError::XlaScorerWithShards {
+                shards: self.shards,
+            });
+        }
+        let faults = self.has_faults();
+        let qsch = QschConfig {
+            policy: self.policy,
+            // Fault runs opt into requeue priority aging (anti-starvation
+            // for repeatedly-hit gangs); fault-free runs keep legacy order.
+            requeue_aging_cap: if faults {
+                crate::experiments::FAULT_REQUEUE_AGING_CAP
+            } else {
+                0
+            },
+            batch_shards: self.shards,
+            ..QschConfig::default()
+        };
+        let mut rsch = RschConfig::default();
+        if let Some(strat) = self.strategy {
+            rsch.training_strategy = strat;
+            rsch.inference_strategy = strat;
+            rsch.dev_strategy = strat;
+        }
+        if self.flat {
+            rsch.two_level = false;
+        }
+        if self.deep_snapshot {
+            rsch.snapshot_mode = crate::cluster::snapshot::SnapshotMode::DeepCopy;
+        }
+        if self.no_index {
+            rsch.indexed_candidates = false;
+        }
+        if self.topo_blind {
+            rsch.topo_blind = true;
+        }
+        let sim = SimConfig {
+            elastic: if self.elastic {
+                ElasticConfig::enabled()
+            } else {
+                ElasticConfig::default()
+            },
+            faults: match self.faults {
+                FaultPreset::None => FaultConfig::default(),
+                // Keep the fault trace decorrelated from the workload seed.
+                FaultPreset::Storm => FaultConfig::storm(self.seed ^ 0xFA),
+            },
+            // Drain-aware reorganization needs defrag rounds to act on.
+            defrag_interval_ms: if faults { 30 * 60_000 } else { 0 },
+            ..SimConfig::default()
+        };
+        Ok((qsch, rsch, sim))
+    }
+
+    /// Build the preset [`Environment`] plus the validated configs — the
+    /// single constructor behind `kant simulate` and the examples.
+    pub fn build(&self) -> Result<SimSetup, OptionsError> {
+        let (qsch, rsch, mut sim) = self.configs()?;
+        let mut env = match self.cluster {
+            ClusterChoice::Training => training_cluster(self.scale, self.seed, self.rho),
+            ClusterChoice::Inference(preset) => inference_cluster(preset, self.seed),
+        };
+        if self.elastic {
+            env.workload.elastic_frac = 0.7;
+        }
+        // Generous grace past the arrival horizon so in-flight jobs drain.
+        sim.horizon_ms = env.horizon_ms + 24 * 3_600_000;
+        Ok(SimSetup {
+            env,
+            qsch,
+            rsch,
+            sim,
+        })
+    }
+
+    /// Apply the per-job policies the options imply (today: periodic
+    /// training checkpoints under fault injection). Call on the generated
+    /// or trace-loaded workload before running.
+    pub fn apply_job_policies(&self, jobs: &mut [JobSpec]) {
+        if !self.has_faults() {
+            return;
+        }
+        let ckpt = if self.checkpoint_min == 0 {
+            CheckpointPolicy::None
+        } else {
+            CheckpointPolicy::Interval(self.checkpoint_min * 60_000)
+        };
+        for j in jobs.iter_mut() {
+            if j.kind == JobKind::Training {
+                j.checkpoint = ckpt;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
+    use crate::cluster::snapshot::SnapshotMode;
+
+    #[test]
+    fn defaults_match_legacy_config_defaults() {
+        let (qsch, rsch, sim) = SimOptions::for_scale(Scale::Small).configs().unwrap();
+        assert_eq!(qsch.policy, QueuePolicy::Backfill);
+        assert_eq!(qsch.requeue_aging_cap, 0);
+        assert_eq!(qsch.batch_shards, 0);
+        assert!(rsch.two_level);
+        assert!(rsch.indexed_candidates);
+        assert!(!rsch.topo_blind);
+        assert_eq!(rsch.snapshot_mode, SnapshotMode::Incremental);
+        assert!(!sim.faults.enabled());
+        assert_eq!(sim.elastic.sample_ms, ElasticConfig::default().sample_ms);
+        assert_eq!(sim.defrag_interval_ms, 0);
+    }
+
+    #[test]
+    fn ablation_knobs_map_onto_rsch() {
+        let (_, rsch, _) = SimOptions::for_scale(Scale::Small)
+            .flat(true)
+            .deep_snapshot(true)
+            .no_index(true)
+            .topo_blind(true)
+            .strategy(Some(PlacementStrategy::Spread))
+            .configs()
+            .unwrap();
+        assert!(!rsch.two_level);
+        assert_eq!(rsch.snapshot_mode, SnapshotMode::DeepCopy);
+        assert!(!rsch.indexed_candidates);
+        assert!(rsch.topo_blind);
+        assert_eq!(rsch.training_strategy, PlacementStrategy::Spread);
+        assert_eq!(rsch.inference_strategy, PlacementStrategy::Spread);
+        assert_eq!(rsch.dev_strategy, PlacementStrategy::Spread);
+    }
+
+    #[test]
+    fn storm_preset_wires_reliability_knobs() {
+        let opts = SimOptions::for_scale(Scale::Small)
+            .seed(7)
+            .faults(FaultPreset::Storm);
+        let (qsch, _, sim) = opts.configs().unwrap();
+        assert_eq!(
+            qsch.requeue_aging_cap,
+            crate::experiments::FAULT_REQUEUE_AGING_CAP
+        );
+        assert!(sim.faults.enabled());
+        assert_eq!(sim.faults.seed, 7 ^ 0xFA);
+        assert_eq!(sim.defrag_interval_ms, 30 * 60_000);
+        // Training jobs get interval checkpoints; inference is untouched.
+        let mut jobs = vec![
+            JobSpec::homogeneous(JobId(1), TenantId(0), JobKind::Training, GpuTypeId(0), 1, 8),
+            JobSpec::homogeneous(JobId(2), TenantId(0), JobKind::Inference, GpuTypeId(0), 1, 1),
+        ];
+        opts.apply_job_policies(&mut jobs);
+        assert_eq!(jobs[0].checkpoint, CheckpointPolicy::Interval(30 * 60_000));
+        assert_eq!(jobs[1].checkpoint, CheckpointPolicy::Continuous);
+        // checkpoint_min = 0 → naive restarts.
+        let naive = SimOptions::for_scale(Scale::Small)
+            .faults(FaultPreset::Storm)
+            .checkpoint_min(0);
+        naive.apply_job_policies(&mut jobs);
+        assert_eq!(jobs[0].checkpoint, CheckpointPolicy::None);
+    }
+
+    #[test]
+    fn elastic_enables_loop_and_workload_mix() {
+        let setup = SimOptions::for_scale(Scale::Small)
+            .elastic(true)
+            .build()
+            .unwrap();
+        assert_eq!(setup.sim.elastic.sample_ms, 5 * 60_000);
+        assert!((setup.env.workload.elastic_frac - 0.7).abs() < 1e-9);
+        assert_eq!(setup.sim.horizon_ms, setup.env.horizon_ms + 24 * 3_600_000);
+    }
+
+    #[test]
+    fn shards_flow_into_qsch_batching() {
+        let (qsch, _, _) = SimOptions::for_scale(Scale::XLarge)
+            .shards(8)
+            .configs()
+            .unwrap();
+        assert_eq!(qsch.batch_shards, 8);
+    }
+
+    #[test]
+    fn xla_scorer_excludes_sharded_prefetch() {
+        let err = SimOptions::for_scale(Scale::Small)
+            .xla_scorer(true)
+            .shards(8)
+            .configs()
+            .unwrap_err();
+        assert_eq!(err, OptionsError::XlaScorerWithShards { shards: 8 });
+        assert!(err.to_string().contains("--shards 8"));
+        // The XLA scorer alone stays valid (sequential core).
+        assert!(SimOptions::for_scale(Scale::Small)
+            .xla_scorer(true)
+            .configs()
+            .is_ok());
+    }
+
+    #[test]
+    fn inference_presets_build() {
+        let setup = SimOptions::for_inference(InferencePreset::A10)
+            .seed(3)
+            .build()
+            .unwrap();
+        assert_eq!(setup.env.state.total_gpus(), 40);
+        assert_eq!(setup.env.label, "a10");
+    }
+}

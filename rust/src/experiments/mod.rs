@@ -4,7 +4,9 @@
 
 use crate::cluster::ids::GpuTypeId;
 use crate::cluster::state::ClusterState;
-use crate::config::{inference_cluster, training_cluster, Environment, InferencePreset, Scale};
+use crate::config::{
+    inference_cluster, training_cluster, Environment, InferencePreset, Scale, SimOptions,
+};
 use crate::job::spec::PlacementStrategy;
 use crate::job::store::JobStore;
 use crate::job::workload::{distribution_report, WorkloadGen};
@@ -23,8 +25,19 @@ pub struct Arm {
 }
 
 impl Arm {
+    /// Build an arm straight from the unified [`SimOptions`] builder —
+    /// the arm then runs exactly what `kant simulate` would run with the
+    /// same options, so defaults cannot drift between entry points.
+    pub fn from_options(label: &'static str, opts: SimOptions) -> Arm {
+        let (qsch, rsch, _) = opts.configs().expect("arm options are statically valid");
+        Arm { label, qsch, rsch }
+    }
+
     /// The paper's "native scheduling system": Strict FIFO + spread-like
-    /// (LeastAllocated) placement, flat scan, deep-copy snapshots.
+    /// (LeastAllocated) placement, flat scan, deep-copy snapshots. Kept
+    /// on the explicit config presets: the baseline also disables
+    /// priority preemption / quota reclaim and rescans per pod, knobs the
+    /// builder deliberately does not expose.
     pub fn native_baseline() -> Arm {
         Arm {
             label: "native",
@@ -35,11 +48,7 @@ impl Arm {
 
     /// Kant with Backfill queueing (placement as configured by default).
     pub fn kant_backfill() -> Arm {
-        Arm {
-            label: "backfill",
-            qsch: QschConfig::default(),
-            rsch: RschConfig::default(),
-        }
+        Arm::from_options("backfill", SimOptions::for_scale(Scale::Small))
     }
 
     pub fn kant_strict() -> Arm {
@@ -60,11 +69,7 @@ impl Arm {
 
     /// E-Binpack enabled (Kant full stack).
     pub fn kant_ebinpack() -> Arm {
-        Arm {
-            label: "e-binpack",
-            qsch: QschConfig::default(),
-            rsch: RschConfig::default(),
-        }
+        Arm::from_options("e-binpack", SimOptions::for_scale(Scale::Small))
     }
 }
 
@@ -544,14 +549,8 @@ pub fn fig15(seed: u64) -> String {
     // Kant's deployed inference config consolidates (E-Binpack fallback);
     // fragmented-node COUNT then tracks churn, so the RATIO rises as the
     // cluster shrinks.
-    let arm = Arm {
-        label: "kant",
-        qsch: QschConfig::default(),
-        rsch: RschConfig {
-            inference_strategy: PlacementStrategy::EBinpack,
-            ..RschConfig::default()
-        },
-    };
+    let mut arm = Arm::from_options("kant", SimOptions::for_scale(Scale::Small));
+    arm.rsch.inference_strategy = PlacementStrategy::EBinpack;
     for preset in [InferencePreset::I7, InferencePreset::I2, InferencePreset::A10] {
         let mut env = inference_cluster(preset, seed);
         env.workload = shared_workload.clone();
@@ -1277,11 +1276,7 @@ pub fn topology_stress(scale: Scale, seed: u64) -> String {
 // ---------------------------------------------------------------------
 pub fn ablation_defrag(seed: u64) -> String {
     let env = inference_cluster(InferencePreset::I2, seed);
-    let arm = Arm {
-        label: "kant",
-        qsch: QschConfig::default(),
-        rsch: RschConfig::default(),
-    };
+    let arm = Arm::from_options("kant", SimOptions::for_scale(Scale::Small));
     let base = SimConfig::default();
     let off = run_arm(&env, &arm, &base);
     let on_cfg = SimConfig {

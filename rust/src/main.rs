@@ -11,16 +11,16 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use kant::config::{inference_cluster, training_cluster, InferencePreset, Scale};
+use kant::config::{FaultPreset, InferencePreset, Scale, SimOptions, SimSetup};
 use kant::experiments::jwtd_buckets;
 use kant::job::spec::PlacementStrategy;
 use kant::job::trace;
 use kant::job::workload::{WorkloadConfig, WorkloadGen};
 use kant::metrics::report::{bucket_comparison, fmt_ms, headline, pct};
-use kant::qsch::policy::{QschConfig, QueuePolicy};
+use kant::qsch::policy::QueuePolicy;
 use kant::qsch::Qsch;
 use kant::rsch::{Rsch, RschConfig};
-use kant::sim::{run, SimConfig};
+use kant::sim::run;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -40,16 +40,23 @@ const HELP: &str = "\
 kant — unified scheduling system for large-scale AI clusters (paper reproduction)
 
 usage:
-  kant simulate [--cluster train|i2|i7|a10] [--scale small|paper|xlarge] [--seed N]
-                [--policy strict-fifo|best-effort|backfill]
+  kant simulate [--cluster train|i2|i7|a10] [--scale small|paper|xlarge|xxlarge]
+                [--seed N] [--policy strict-fifo|best-effort|backfill]
                 [--strategy native|binpack|e-binpack|spread|e-spread]
                 [--trace FILE] [--xla-scorer] [--flat] [--deep-snapshot]
                 [--no-index] [--topo-blind] [--elastic] [--faults]
-                [--checkpoint-min N] [--digest FILE]
+                [--checkpoint-min N] [--shards N] [--digest FILE]
   kant gen-trace [--seed N] [--jobs N] [--mix training|inference] --out FILE
   kant validate [--artifacts DIR]
 
+Every flag is a thin adapter onto the typed `SimOptions` builder
+(kant::config::SimOptions) — the single constructor of the scheduler and
+simulator configs, so defaults cannot drift between entry points.
+
 flags:
+  --scale          cluster preset size; `xxlarge` (alias `100k`) is the
+                   100,000-GPU / 12,500-node frontier cluster spanning 10
+                   superspines (one scheduler shard each)
   --flat           disable two-level (NodeNetGroup preselect) scheduling
   --deep-snapshot  rebuild the full snapshot every cycle (no §3.4.3 delta)
   --no-index       linear candidate scans instead of the free-capacity index
@@ -64,6 +71,10 @@ flags:
                    drain-aware defrag runs every 30 min
   --checkpoint-min N  checkpoint interval for training jobs under --faults
                    (minutes; 0 = naive restart-from-scratch)
+  --shards N       superspine-sharded placement prefetch on N worker
+                   threads (0 = legacy sequential core). The shard
+                   structure is fixed by the topology, so every N >= 1 is
+                   digest-identical; incompatible with --xla-scorer
   --digest FILE    write the deterministic run digest (JSON) to FILE — the
                    golden-gate CI job diffs two same-seed digests
 ";
@@ -80,106 +91,73 @@ fn has_flag(args: &[String], name: &str) -> bool {
 }
 
 fn simulate(args: &[String]) -> Result<()> {
+    // Parse the raw flags, then hand everything to the `SimOptions`
+    // builder — the CLI owns no scheduling defaults of its own.
     let cluster = flag_value(args, "--cluster").unwrap_or("train");
     let scale = Scale::parse(flag_value(args, "--scale").unwrap_or("small"))
         .context("bad --scale")?;
-    let seed: u64 = flag_value(args, "--seed").unwrap_or("42").parse()?;
     let policy = QueuePolicy::parse(flag_value(args, "--policy").unwrap_or("backfill"))
         .context("bad --policy")?;
-
-    let mut env = match cluster {
-        "train" => training_cluster(scale, seed, 0.95),
-        other => {
-            let preset = InferencePreset::parse(other)
-                .with_context(|| format!("unknown cluster '{other}'"))?;
-            inference_cluster(preset, seed)
-        }
+    let strategy = match flag_value(args, "--strategy") {
+        Some(s) => Some(PlacementStrategy::parse(s).context("bad --strategy")?),
+        None => None,
     };
 
-    let faults = has_flag(args, "--faults");
-    let qsch_cfg = QschConfig {
-        policy,
-        // Fault runs opt into requeue priority aging (anti-starvation
-        // for repeatedly-hit gangs); fault-free runs keep legacy order.
-        requeue_aging_cap: if faults {
-            kant::experiments::FAULT_REQUEUE_AGING_CAP
-        } else {
-            0
-        },
-        ..QschConfig::default()
-    };
-    let mut rsch_cfg = RschConfig::default();
-    if let Some(s) = flag_value(args, "--strategy") {
-        let strat = PlacementStrategy::parse(s).context("bad --strategy")?;
-        rsch_cfg.training_strategy = strat;
-        rsch_cfg.inference_strategy = strat;
-        rsch_cfg.dev_strategy = strat;
+    let opts = match cluster {
+        "train" => SimOptions::for_scale(scale),
+        other => SimOptions::for_inference(
+            InferencePreset::parse(other)
+                .with_context(|| format!("unknown cluster '{other}'"))?,
+        ),
     }
-    if has_flag(args, "--flat") {
-        rsch_cfg.two_level = false;
-    }
-    if has_flag(args, "--deep-snapshot") {
-        rsch_cfg.snapshot_mode = kant::cluster::snapshot::SnapshotMode::DeepCopy;
-    }
-    if has_flag(args, "--no-index") {
-        rsch_cfg.indexed_candidates = false;
-    }
-    if has_flag(args, "--topo-blind") {
-        rsch_cfg.topo_blind = true;
-    }
+    .seed(flag_value(args, "--seed").unwrap_or("42").parse()?)
+    .policy(policy)
+    .strategy(strategy)
+    .flat(has_flag(args, "--flat"))
+    .deep_snapshot(has_flag(args, "--deep-snapshot"))
+    .no_index(has_flag(args, "--no-index"))
+    .topo_blind(has_flag(args, "--topo-blind"))
+    .elastic(has_flag(args, "--elastic"))
+    .faults(if has_flag(args, "--faults") {
+        FaultPreset::Storm
+    } else {
+        FaultPreset::None
+    })
+    .checkpoint_min(flag_value(args, "--checkpoint-min").unwrap_or("30").parse()?)
+    .shards(flag_value(args, "--shards").unwrap_or("0").parse()?)
+    .xla_scorer(has_flag(args, "--xla-scorer"));
 
-    let elastic = has_flag(args, "--elastic");
-    if elastic {
-        env.workload.elastic_frac = 0.7;
-    }
+    let SimSetup {
+        mut env,
+        qsch: qsch_cfg,
+        rsch: rsch_cfg,
+        sim: sim_cfg,
+    } = opts.build()?;
+
     let mut jobs = match flag_value(args, "--trace") {
         Some(path) => trace::read_trace(&PathBuf::from(path))?,
         None => WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms),
     };
-    if faults {
-        // Training checkpoints every N minutes (0 = naive restarts).
-        let ckpt_min: u64 = flag_value(args, "--checkpoint-min").unwrap_or("30").parse()?;
-        let ckpt = if ckpt_min == 0 {
-            kant::job::spec::CheckpointPolicy::None
-        } else {
-            kant::job::spec::CheckpointPolicy::Interval(ckpt_min * 60_000)
-        };
-        for j in &mut jobs {
-            if j.kind == kant::job::spec::JobKind::Training {
-                j.checkpoint = ckpt;
-            }
-        }
-    }
+    opts.apply_job_policies(&mut jobs);
+
     println!(
-        "cluster={} gpus={} jobs={} policy={} two_level={} snapshot={:?} indexed={} scorer={}",
+        "cluster={} gpus={} jobs={} policy={} two_level={} snapshot={:?} indexed={} \
+         scorer={} shards={}",
         env.label,
         env.state.total_gpus(),
         jobs.len(),
-        policy.as_str(),
+        qsch_cfg.policy.as_str(),
         rsch_cfg.two_level,
         rsch_cfg.snapshot_mode,
         rsch_cfg.indexed_candidates,
-        if has_flag(args, "--xla-scorer") { "xla" } else { "native" },
+        if opts.wants_xla() { "xla" } else { "native" },
+        qsch_cfg.batch_shards,
     );
 
+    let elastic = opts.is_elastic();
+    let faults = opts.has_faults();
     let mut qsch = Qsch::new(qsch_cfg, env.ledger.clone());
-    let mut rsch = build_rsch(args, rsch_cfg, &env.state)?;
-    let sim_cfg = SimConfig {
-        horizon_ms: env.horizon_ms + 24 * 3_600_000,
-        elastic: if elastic {
-            kant::sim::elastic::ElasticConfig::enabled()
-        } else {
-            kant::sim::elastic::ElasticConfig::default()
-        },
-        faults: if faults {
-            kant::sim::faults::FaultConfig::storm(seed ^ 0xFA)
-        } else {
-            kant::sim::faults::FaultConfig::default()
-        },
-        // Drain-aware reorganization needs defrag rounds to act on.
-        defrag_interval_ms: if faults { 30 * 60_000 } else { 0 },
-        ..SimConfig::default()
-    };
+    let mut rsch = build_rsch(&opts, rsch_cfg, &env.state)?;
     let out = run(&mut env.state, &mut qsch, &mut rsch, jobs, &sim_cfg);
 
     if let Some(path) = flag_value(args, "--digest") {
@@ -245,11 +223,11 @@ fn simulate(args: &[String]) -> Result<()> {
 
 #[cfg(feature = "xla")]
 fn build_rsch(
-    args: &[String],
+    opts: &SimOptions,
     cfg: RschConfig,
     state: &kant::cluster::state::ClusterState,
 ) -> Result<Rsch> {
-    if has_flag(args, "--xla-scorer") {
+    if opts.wants_xla() {
         let mut backend = kant::runtime::XlaBackend::new("artifacts")
             .context("loading XLA scorer artifacts (run `make artifacts`)")?;
         backend.warmup().context("compiling artifacts")?;
@@ -261,11 +239,11 @@ fn build_rsch(
 
 #[cfg(not(feature = "xla"))]
 fn build_rsch(
-    args: &[String],
+    opts: &SimOptions,
     cfg: RschConfig,
     state: &kant::cluster::state::ClusterState,
 ) -> Result<Rsch> {
-    if has_flag(args, "--xla-scorer") {
+    if opts.wants_xla() {
         bail!("this build has no XLA runtime; rebuild with `--features xla`");
     }
     Ok(Rsch::new(cfg, state))

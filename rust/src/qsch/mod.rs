@@ -41,6 +41,14 @@ pub trait Placer {
     /// Try to place `spec`, committing device allocations into `state` on
     /// success (all-or-nothing for gang jobs).
     fn place(&mut self, state: &mut ClusterState, spec: &JobSpec) -> Result<(), PlaceFailure>;
+
+    /// Plan the whole queued batch ahead of the per-job [`Placer::place`]
+    /// calls — the superspine-sharded concurrency hook. A placer may plan
+    /// shard-local jobs on up to `threads` workers and serve the plans
+    /// from a cache when `place` arrives; commits still happen in QSCH's
+    /// single-threaded queue order, which *is* the deterministic merge.
+    /// The default does nothing (sequential placers need no warm-up).
+    fn prefetch(&mut self, _state: &ClusterState, _specs: &[&JobSpec], _threads: usize) {}
 }
 
 /// Outcome of one scheduling cycle.
@@ -194,6 +202,21 @@ impl Qsch {
         self.stats.cycles += 1;
         let mut report = CycleReport::default();
         let candidates = self.queues.global_order();
+        if self.cfg.batch_shards > 0 {
+            // Sharded prefetch: hand the queued batch to the placer so it
+            // can plan across superspine shards concurrently before the
+            // sequential walk below consumes the plans in queue order.
+            let specs: Vec<&JobSpec> = candidates
+                .iter()
+                .filter_map(|e| {
+                    let j = store.expect(e.job);
+                    (j.phase == Phase::Queued).then_some(&j.spec)
+                })
+                .collect();
+            if !specs.is_empty() {
+                placer.prefetch(state, &specs, self.cfg.batch_shards);
+            }
+        }
         let mut head_failed = false;
 
         for (i, entry) in candidates.iter().enumerate() {

@@ -64,6 +64,14 @@ pub struct QschConfig {
     /// affects ordering only — preemption rights still read the spec's
     /// base priority, so an aged LOW job cannot start evicting others.
     pub requeue_aging_cap: u8,
+    /// Superspine-sharded placement prefetch: before walking the queue,
+    /// QSCH hands the whole batch of queued candidates to the placer,
+    /// which plans them concurrently across per-superspine shards on up
+    /// to this many worker threads (`kant simulate --shards N`). The
+    /// shard structure is fixed by the topology, so any value ≥ 1 yields
+    /// byte-identical digests; 0 (the default) disables prefetch and
+    /// keeps the legacy strictly-sequential plan-per-place path.
+    pub batch_shards: usize,
 }
 
 impl Default for QschConfig {
@@ -76,6 +84,7 @@ impl Default for QschConfig {
             enable_quota_reclaim: true,
             enable_slo_reclaim: true,
             requeue_aging_cap: 0,
+            batch_shards: 0,
         }
     }
 }

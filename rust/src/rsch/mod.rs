@@ -13,10 +13,13 @@ pub mod features;
 pub mod plan;
 pub mod score;
 
-use crate::cluster::ids::{GroupId, NodeId};
+use std::collections::HashMap;
+
+use crate::cluster::ids::{GroupId, JobId, NodeId};
 use crate::cluster::index::ZoneQuery;
+use crate::cluster::shard::ShardMap;
 use crate::cluster::snapshot::{Snapshot, SnapshotMode};
-use crate::cluster::state::ClusterState;
+use crate::cluster::state::{ClusterState, PodPlacement};
 use crate::job::spec::{JobKind, JobSpec, PlacementStrategy, TypedDemand};
 use crate::qsch::{PlaceFailure, Placer};
 
@@ -164,6 +167,12 @@ pub struct Rsch {
     backend: Box<dyn ScoreBackend>,
     /// Cached groups per pool id (pool index → group list).
     pool_groups: Vec<Vec<GroupId>>,
+    /// Superspine shard structure (fixed by topology; one shard per
+    /// superspine) — the partition [`Placer::prefetch`] plans across.
+    shards: ShardMap,
+    /// Plans built by the sharded prefetch, consumed by [`Placer::place`]
+    /// in QSCH's single-threaded queue order (the deterministic merge).
+    plan_cache: HashMap<JobId, Vec<PodPlacement>>,
     pub stats: RschStats,
 }
 
@@ -183,6 +192,8 @@ impl Rsch {
             cfg,
             backend,
             pool_groups,
+            shards: ShardMap::new(state),
+            plan_cache: HashMap::new(),
             stats: RschStats::default(),
         }
     }
@@ -461,6 +472,21 @@ impl Planner<'_> {
         spec: &JobSpec,
         default_strategy: PlacementStrategy,
     ) -> PlanResult {
+        self.plan_job_with_claims(state, spec, default_strategy, &[])
+    }
+
+    /// [`Planner::plan_job`] with claim chaining: `claims` are placements
+    /// already planned by *earlier* jobs against the same snapshot (the
+    /// sharded prefetch path); their devices and group capacity are
+    /// invisible to this plan, so shard-local plans are mutually
+    /// device-disjoint and commit cleanly in queue order.
+    fn plan_job_with_claims(
+        &mut self,
+        state: &ClusterState,
+        spec: &JobSpec,
+        default_strategy: PlacementStrategy,
+        claims: &[PodPlacement],
+    ) -> PlanResult {
         // Sanity: every demand must be satisfiable in principle.
         for d in &spec.demands {
             let Some(pool) = state.pools.pool_for_type(d.gpu_type) else {
@@ -475,6 +501,9 @@ impl Planner<'_> {
         }
         let strategy = spec.strategy.unwrap_or(default_strategy);
         let mut pb = PlanBuilder::new(state, self.snapshot, spec.id, self.cfg.topo_blind);
+        if !claims.is_empty() {
+            pb.preclaim(claims);
+        }
         for d in &spec.demands {
             let pool_idx = state
                 .pools
@@ -751,6 +780,20 @@ impl Planner<'_> {
 
 impl Placer for Rsch {
     fn place(&mut self, state: &mut ClusterState, spec: &JobSpec) -> Result<(), PlaceFailure> {
+        // Serve a prefetched shard-local plan when one exists. Claim
+        // chaining makes same-shard plans device-disjoint and routing
+        // makes cross-shard plans node-disjoint, so the commit normally
+        // succeeds; if the world changed since the prefetch (preemption,
+        // fault) the stale plan is discarded and the job falls through to
+        // a fresh sequential replan — both outcomes are thread-invariant.
+        if let Some(plan) = self.plan_cache.remove(&spec.id) {
+            let pods = plan.len() as u64;
+            if state.commit_placements(spec.id, plan).is_ok() {
+                self.stats.placements += 1;
+                self.stats.pods_placed += pods;
+                return Ok(());
+            }
+        }
         self.snapshot.refresh(state);
         self.stats.snapshot_refreshes += 1;
         let default_strategy = self.strategy_for(spec);
@@ -769,6 +812,162 @@ impl Placer for Rsch {
         self.stats.placements += 1;
         self.stats.pods_placed += pods;
         Ok(())
+    }
+
+    /// Superspine-sharded batch planning (the PR-6 sharded core).
+    ///
+    /// The shard structure is the fixed per-superspine [`ShardMap`];
+    /// `threads` only sets how many workers sweep it, so any thread count
+    /// produces byte-identical plans, stats, and digests:
+    ///
+    /// 1. **Route** each queued job, in queue order, to the feasible home
+    ///    shard with the most remaining free GPUs (ties → lowest shard
+    ///    id), debiting the shard's headroom. Jobs no single shard can
+    ///    hold — cross-superspine gangs — get no cache entry and take
+    ///    the serialized global phase (the sequential [`Placer::place`]
+    ///    path against the whole fabric, still in queue order).
+    /// 2. **Plan** each shard's jobs sequentially against one shared
+    ///    snapshot, chaining claims so same-shard plans are mutually
+    ///    device-disjoint. Workers force two-level mode (the shard *is*
+    ///    a group partition) on the native backend — the same constraint
+    ///    `place_many_parallel` applies, surfaced by `SimOptions` as the
+    ///    `--xla-scorer`-excludes-`--shards` rule.
+    /// 3. **Merge** per-shard plan logs and counters in shard-id order.
+    fn prefetch(&mut self, state: &ClusterState, specs: &[&JobSpec], threads: usize) {
+        self.plan_cache.clear();
+        if specs.is_empty() {
+            return;
+        }
+        self.snapshot.refresh(state);
+        self.stats.snapshot_refreshes += 1;
+        let num_shards = self.shards.num_shards();
+        let workers = threads.clamp(1, num_shards);
+
+        // ---- 1. Route jobs to home shards (queue order). ----
+        let mut remaining: Vec<Vec<i64>> = (0..num_shards)
+            .map(|s| {
+                self.shards
+                    .free_by_pool(state, s)
+                    .iter()
+                    .map(|&f| f as i64)
+                    .collect()
+            })
+            .collect();
+        let mut routed: Vec<Vec<usize>> = vec![Vec::new(); num_shards];
+        for (i, spec) in specs.iter().enumerate() {
+            // Aggregate the demand per pool; unknown pools go to the
+            // global phase (the sequential path reports Unsatisfiable).
+            let mut need: Vec<(usize, i64)> = Vec::new();
+            let mut known = true;
+            for d in &spec.demands {
+                match state.pools.pool_for_type(d.gpu_type) {
+                    Some(p) => {
+                        let idx = p.id.index();
+                        match need.iter_mut().find(|(pi, _)| *pi == idx) {
+                            Some((_, amt)) => *amt += d.total_gpus() as i64,
+                            None => need.push((idx, d.total_gpus() as i64)),
+                        }
+                    }
+                    None => {
+                        known = false;
+                        break;
+                    }
+                }
+            }
+            if !known {
+                continue;
+            }
+            let mut best: Option<(usize, i64)> = None;
+            for (s, rem) in remaining.iter().enumerate() {
+                if need.iter().all(|&(p, amt)| rem[p] >= amt) {
+                    let headroom: i64 = rem.iter().sum();
+                    let better = match best {
+                        Some((_, h)) => headroom > h,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((s, headroom));
+                    }
+                }
+            }
+            if let Some((s, _)) = best {
+                for &(p, amt) in &need {
+                    remaining[s][p] -= amt;
+                }
+                routed[s].push(i);
+            }
+        }
+
+        // ---- 2. Plan shards concurrently (shard→worker round-robin). ----
+        let strategies: Vec<PlacementStrategy> =
+            specs.iter().map(|sp| self.strategy_for(sp)).collect();
+        let shard_cfg = RschConfig {
+            two_level: true,
+            ..self.cfg.clone()
+        };
+        let snapshot = &self.snapshot;
+        let shards = &self.shards;
+        type ShardLog = (Vec<(JobId, Vec<PodPlacement>)>, RschStats);
+        let mut per_shard: Vec<ShardLog> = (0..num_shards)
+            .map(|_| (Vec::new(), RschStats::default()))
+            .collect();
+        let per_shard_ref = &mut per_shard;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..workers {
+                let routed = &routed;
+                let strategies = &strategies;
+                let shard_cfg = &shard_cfg;
+                handles.push(scope.spawn(move || {
+                    let mut out: Vec<(usize, ShardLog)> = Vec::new();
+                    let mut s = t;
+                    while s < num_shards {
+                        let mut backend = NativeBackend;
+                        let mut stats = RschStats::default();
+                        let mut planner = Planner {
+                            cfg: shard_cfg,
+                            snapshot,
+                            backend: &mut backend,
+                            pool_groups: shards.pool_groups(s),
+                            stats: &mut stats,
+                        };
+                        let mut claims: Vec<PodPlacement> = Vec::new();
+                        let mut plans = Vec::new();
+                        for &i in &routed[s] {
+                            if let Ok(plan) = planner.plan_job_with_claims(
+                                state,
+                                specs[i],
+                                strategies[i],
+                                &claims,
+                            ) {
+                                claims.extend(plan.iter().cloned());
+                                plans.push((specs[i].id, plan));
+                            }
+                        }
+                        drop(planner);
+                        out.push((s, (plans, stats)));
+                        s += workers;
+                    }
+                    out
+                }));
+            }
+            for h in handles {
+                for (s, log) in h.join().expect("shard planner thread panicked") {
+                    per_shard_ref[s] = log;
+                }
+            }
+        });
+
+        // ---- 3. Deterministic merge in shard-id order. ----
+        for (plans, stats) in per_shard {
+            self.stats.nodes_examined += stats.nodes_examined;
+            self.stats.nodes_scored += stats.nodes_scored;
+            self.stats.groups_scored += stats.groups_scored;
+            self.stats.failures += stats.failures;
+            for (job, plan) in plans {
+                self.plan_cache.insert(job, plan);
+            }
+        }
     }
 }
 
@@ -1384,5 +1583,67 @@ mod tests {
             };
             assert_eq!(run(false), run(true), "{strat:?} placements moved with the flag");
         }
+    }
+
+    #[test]
+    fn prefetch_placements_are_thread_invariant() {
+        // The shard structure is topological; `threads` only picks how
+        // many workers sweep it — placements, allocation totals, and the
+        // digest-visible work counters must be byte-identical.
+        let specs: Vec<JobSpec> = (1..=10)
+            .map(|id| train(id, ((id % 3) + 1) as u32, ((id % 4) + 1) as u32 * 2))
+            .collect();
+        let run = |threads: usize| {
+            let mut state = state_two_superspines();
+            let mut rsch = Rsch::new(RschConfig::default(), &state);
+            let refs: Vec<&JobSpec> = specs.iter().collect();
+            rsch.prefetch(&state, &refs, threads);
+            for spec in &specs {
+                let _ = rsch.place(&mut state, spec);
+            }
+            let placements: Vec<_> = specs
+                .iter()
+                .map(|sp| state.placements_of(sp.id).map(|p| p.to_vec()))
+                .collect();
+            (
+                placements,
+                state.allocated_gpus(),
+                rsch.stats.nodes_examined,
+                rsch.stats.nodes_scored,
+            )
+        };
+        let one = run(1);
+        assert!(one.1 > 0, "batch must place something");
+        assert_eq!(one, run(2));
+        assert_eq!(one, run(8));
+    }
+
+    #[test]
+    fn prefetched_plans_commit_without_replanning() {
+        let mut state = state_two_superspines();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        let spec = train(1, 2, 8);
+        rsch.prefetch(&state, &[&spec], 4);
+        assert!(rsch.plan_cache.contains_key(&JobId(1)));
+        rsch.place(&mut state, &spec).unwrap();
+        assert_eq!(state.allocated_gpus(), 16);
+        // One refresh for the prefetch, none for the cached commit.
+        assert_eq!(rsch.stats.snapshot_refreshes, 1);
+        assert!(rsch.plan_cache.is_empty());
+    }
+
+    #[test]
+    fn cross_superspine_gang_takes_global_phase() {
+        // Each superspine holds 64 GPUs; an 80-GPU gang fits no single
+        // shard, so prefetch must leave it to the serialized global path.
+        let mut state = state_two_superspines();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        let spec = train(1, 10, 8);
+        rsch.prefetch(&state, &[&spec], 4);
+        assert!(rsch.plan_cache.is_empty());
+        rsch.place(&mut state, &spec).unwrap();
+        assert_eq!(state.allocated_gpus(), 80);
+        // Refresh for the prefetch and for the sequential fallback.
+        assert_eq!(rsch.stats.snapshot_refreshes, 2);
     }
 }

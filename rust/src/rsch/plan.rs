@@ -69,6 +69,20 @@ impl<'a> PlanBuilder<'a> {
             .or_insert_with(|| state.node(node).free_gpu_indices())
     }
 
+    /// Pre-seed the builder with placements already claimed by *other*
+    /// plans built against the same (stale) snapshot — the claim-chaining
+    /// mechanism of the sharded prefetch path. Claimed devices and group
+    /// capacity become invisible to this plan, but the gang footprint,
+    /// replica numbering and pod-affinity counters stay per-job: a
+    /// neighbour's pods must not change this job's topology score.
+    pub fn preclaim(&mut self, prior: &[PodPlacement]) {
+        for p in prior {
+            self.free_of(p.node).retain(|d| !p.devices.contains(d));
+            let group = self.state.node(p.node).group;
+            *self.group_taken.entry(group).or_default() += p.devices.len() as u32;
+        }
+    }
+
     /// Place one pod of `gpus` devices on `node`. Returns false (no
     /// mutation) if the node can't hold it under the current plan.
     pub fn place_pod(&mut self, node: NodeId, gpus: u32) -> bool {
@@ -215,6 +229,29 @@ mod tests {
         assert_eq!(plan[1].pod, PodId::new(JobId(1), 1));
         state.commit_placements(JobId(1), plan).unwrap();
         assert_eq!(state.allocated_gpus(), 10);
+    }
+
+    #[test]
+    fn preclaim_hides_devices_without_touching_footprint() {
+        let (state, snap) = setup();
+        let mut prior = PlanBuilder::new(&state, &snap, JobId(1), false);
+        assert!(prior.place_pod(NodeId(0), 6));
+        let claimed = prior.into_plan();
+
+        let mut pb = PlanBuilder::new(&state, &snap, JobId(2), false);
+        pb.preclaim(&claimed);
+        // Node 0 has only 2 free devices under the claim; group capacity
+        // shrinks too — but the footprint and pod counters stay this-job.
+        assert_eq!(pb.free_gpus(NodeId(0)), 2);
+        assert_eq!(pb.group_free(GroupId(0)), 10);
+        assert_eq!(pb.pods_on_node(NodeId(0)), 0);
+        assert_eq!(pb.tier_to(NodeId(0)), Tier::WORST);
+        assert!(!pb.place_pod(NodeId(0), 4));
+        assert!(pb.place_pod(NodeId(0), 2));
+        // Replica numbering starts at 0 for this job despite the claims.
+        let plan = pb.into_plan();
+        assert_eq!(plan[0].pod, PodId::new(JobId(2), 0));
+        assert!(plan[0].devices.iter().all(|d| !claimed[0].devices.contains(d)));
     }
 
     #[test]

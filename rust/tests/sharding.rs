@@ -1,0 +1,134 @@
+//! Property test for the superspine-sharded scheduler core: the shard
+//! *structure* is fixed by the topology and `--shards N` only chooses the
+//! worker-thread count, so every N ≥ 1 must produce byte-identical
+//! `SimOutcome::digest_json` output — including the counters
+//! (`rsch_nodes_examined`, `rsch_nodes_scored`) that would immediately
+//! expose a thread-count-dependent planning order.
+
+use kant::config::{FaultPreset, Scale, SimOptions, SimSetup};
+use kant::job::workload::WorkloadGen;
+use kant::qsch::Qsch;
+use kant::rsch::Rsch;
+use kant::sim::run;
+
+/// One full simulate run through the unified builder, horizon truncated
+/// for test runtime, digested to the golden-gate JSON string.
+fn digest(
+    scale: Scale,
+    seed: u64,
+    elastic: bool,
+    faults: FaultPreset,
+    shards: usize,
+    arrival_ms: u64,
+) -> String {
+    let opts = SimOptions::for_scale(scale)
+        .seed(seed)
+        .elastic(elastic)
+        .faults(faults)
+        .shards(shards);
+    let SimSetup {
+        mut env,
+        qsch,
+        rsch,
+        mut sim,
+    } = opts.build().expect("options are valid");
+    env.horizon_ms = arrival_ms;
+    sim.horizon_ms = arrival_ms + 12 * 3_600_000; // Drain window.
+    let mut jobs = WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms);
+    opts.apply_job_policies(&mut jobs);
+    let mut state = env.state;
+    let mut qsch = Qsch::new(qsch, env.ledger);
+    let mut rsch = Rsch::new(rsch, &state);
+    run(&mut state, &mut qsch, &mut rsch, jobs, &sim)
+        .digest_json()
+        .to_string_compact()
+}
+
+const SMALL_ARRIVAL_MS: u64 = 12 * 3_600_000;
+const XLARGE_ARRIVAL_MS: u64 = 2 * 3_600_000;
+
+#[test]
+fn small_sharded_digests_invariant_across_thread_counts() {
+    // Small preset spans 2 superspines (PR 5), so the sharded core has
+    // real structure to get wrong. Three seeds × the plain, elastic and
+    // fault-storm arms; shards ∈ {2, 4, 8} must replay shards = 1 exactly.
+    for seed in [3u64, 7, 11] {
+        for (elastic, faults) in [
+            (false, FaultPreset::None),
+            (true, FaultPreset::None),
+            (false, FaultPreset::Storm),
+        ] {
+            let base = digest(Scale::Small, seed, elastic, faults, 1, SMALL_ARRIVAL_MS);
+            for shards in [2usize, 4, 8] {
+                let got = digest(Scale::Small, seed, elastic, faults, shards, SMALL_ARRIVAL_MS);
+                assert_eq!(
+                    base, got,
+                    "digest moved with thread count: seed={seed} elastic={elastic} \
+                     faults={faults:?} shards={shards}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn small_sharded_digests_track_the_seed() {
+    // Sanity: the digest is actually sensitive to the workload — a
+    // constant digest would pass the invariance test vacuously.
+    let a = digest(Scale::Small, 3, false, FaultPreset::None, 8, SMALL_ARRIVAL_MS);
+    let b = digest(Scale::Small, 4, false, FaultPreset::None, 8, SMALL_ARRIVAL_MS);
+    assert_ne!(a, b, "different seeds must diverge");
+}
+
+#[test]
+fn xlarge_sharded_digests_invariant_across_thread_counts() {
+    // The acceptance-bar preset: 1,250 nodes / 10,000 GPUs over 3
+    // superspines, truncated arrival horizon for runtime.
+    for seed in [3u64, 7, 11] {
+        let base = digest(
+            Scale::XLarge,
+            seed,
+            false,
+            FaultPreset::None,
+            1,
+            XLARGE_ARRIVAL_MS,
+        );
+        for shards in [2usize, 8] {
+            let got = digest(
+                Scale::XLarge,
+                seed,
+                false,
+                FaultPreset::None,
+                shards,
+                XLARGE_ARRIVAL_MS,
+            );
+            assert_eq!(
+                base, got,
+                "xlarge digest moved with thread count: seed={seed} shards={shards}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xlarge_elastic_fault_arm_is_thread_invariant() {
+    // The kitchen-sink arm on the xlarge preset: autoscaling loop, fault
+    // storm, drain-aware defrag and sharded prefetch all at once.
+    let base = digest(
+        Scale::XLarge,
+        5,
+        true,
+        FaultPreset::Storm,
+        1,
+        XLARGE_ARRIVAL_MS,
+    );
+    let got = digest(
+        Scale::XLarge,
+        5,
+        true,
+        FaultPreset::Storm,
+        8,
+        XLARGE_ARRIVAL_MS,
+    );
+    assert_eq!(base, got, "elastic+faults xlarge digest moved with thread count");
+}
