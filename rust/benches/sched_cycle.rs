@@ -226,6 +226,86 @@ fn bench_sharded_cycle(b: &mut Bench, threads: usize) {
     );
 }
 
+/// Adaptive-controller overhead at the xlarge (10k-GPU) preset: the same
+/// 64-job QSCH cycle with the weight controller disabled (frozen static
+/// tables) vs enabled and ticked with oscillating synthetic signals
+/// before every cycle — the runner's exact call order. The delta is the
+/// per-cycle cost of `--adapt`: one overlay fold plus the blended weight
+/// rows on the scoring path.
+fn bench_adapt_cycle(b: &mut Bench, adaptive: bool) {
+    use kant::cluster::tenant::{QuotaLedger, QuotaMode};
+    use kant::job::spec::Priority;
+    use kant::job::store::JobStore;
+    use kant::qsch::policy::QschConfig;
+    use kant::qsch::Qsch;
+    use kant::rsch::adapt::{AdaptConfig, AdaptSignals};
+
+    let mut state = ClusterBuilder::build(&ClusterSpec::train10000());
+    let mut ledger = QuotaLedger::new(1, 1, QuotaMode::Shared);
+    ledger.set_limit(TenantId(0), GpuTypeId(0), state.total_gpus());
+    let mut qsch = Qsch::new(QschConfig::default(), ledger);
+    let mut store = JobStore::new();
+    let rcfg = RschConfig {
+        adapt: AdaptConfig {
+            enabled: adaptive,
+            seed: 7,
+            ..AdaptConfig::default()
+        },
+        ..RschConfig::default()
+    };
+    let mut rsch = Rsch::new(rcfg, &state);
+    let n = state.nodes.len();
+    let label = if adaptive { "adapt-adaptive" } else { "adapt-static" };
+    let batch = 64usize;
+    let mut id = 1u64;
+    let mut now = 0u64;
+    let mut tick = 0u64;
+    b.run_throughput(
+        &format!("qsch-cycle-batch64/{label}/{n}nodes"),
+        batch as f64,
+        || {
+            if rsch.wants_adapt() {
+                // Oscillate GFR across the dead band so the controller
+                // keeps shifting — the worst case, not the settled one.
+                let gfr = if tick % 2 == 0 { 0.15 } else { 0.01 };
+                tick += 1;
+                rsch.adapt_tick(&AdaptSignals {
+                    gar: 0.9,
+                    gfr,
+                    class_p99_wait_ms: [0.0; Priority::NUM_CLASSES],
+                });
+            }
+            for k in 0..batch {
+                let replicas = match k % 8 {
+                    0 => 16, // 128-GPU gang.
+                    1 | 2 => 4,
+                    _ => 1,
+                };
+                let spec = JobSpec::homogeneous(
+                    JobId(id),
+                    TenantId(0),
+                    JobKind::Training,
+                    GpuTypeId(0),
+                    replicas,
+                    8,
+                )
+                .with_times(now, 3_600_000);
+                id += 1;
+                qsch.submit(&mut store, spec);
+            }
+            let r = qsch.cycle(now, &mut store, &mut state, &mut rsch);
+            now += 1_000;
+            for jid in r.scheduled {
+                state.release_job(jid).unwrap();
+            }
+        },
+    );
+    eprintln!(
+        "   [{label}] adapt_ticks={} adapt_shifts={}",
+        rsch.stats.adapt_ticks, rsch.stats.adapt_shifts
+    );
+}
+
 /// §3.1 multi-instance parallel planning throughput.
 fn bench_parallel(b: &mut Bench, threads: usize) {
     let mut state = make_state(32);
@@ -326,6 +406,12 @@ fn main() {
     for threads in [1usize, 4, 8] {
         bench_sharded_cycle(&mut b, threads);
     }
+
+    // Adaptive scoring loop: frozen static tables vs controller-on at the
+    // xlarge (10k-GPU) preset — the per-cycle overhead of `--adapt`.
+    println!("== adaptive weight controller: xlarge preset ==");
+    bench_adapt_cycle(&mut b, false);
+    bench_adapt_cycle(&mut b, true);
 
     // Seed/refresh a perf baseline when requested. From the package root:
     //   BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench sched_cycle

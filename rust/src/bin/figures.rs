@@ -5,7 +5,8 @@
 //!   figures [--scale small|paper|xlarge|xxlarge] [--seed N] [--out results/] <id>...
 //!   ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15
 //!        table1 ablation-espread ablation-defrag ablation-index
-//!        elastic-inference fault-tolerance topology-stress all
+//!        elastic-inference fault-tolerance topology-stress
+//!        weight-adaptation all
 //!   (fig10 covers 10-12; fig13 covers 13-14; snapshot/two-level ablations
 //!    live in `cargo bench`.)
 
@@ -52,6 +53,7 @@ fn main() -> anyhow::Result<()> {
             "fig2", "fig3", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
             "fig10", "fig13", "fig15", "ablation-espread", "ablation-defrag",
             "ablation-index", "elastic-inference", "fault-tolerance", "topology-stress",
+            "weight-adaptation",
         ]
         .into_iter()
         .map(String::from)
@@ -100,6 +102,7 @@ fn main() -> anyhow::Result<()> {
             "elastic-inference" => exp::elastic_inference(seed),
             "fault-tolerance" => exp::fault_tolerance(seed),
             "topology-stress" => exp::topology_stress(scale, seed),
+            "weight-adaptation" => exp::weight_adaptation(seed),
             other => {
                 eprintln!("unknown figure id: {other}");
                 continue;
@@ -118,4 +121,4 @@ figures — regenerate the paper's tables and figures
 usage: figures [--scale small|paper|xlarge|xxlarge] [--seed N] [--out DIR] <id>... | all
 ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15 table1 \
 ablation-espread ablation-defrag ablation-index elastic-inference fault-tolerance \
-topology-stress";
+topology-stress weight-adaptation";

@@ -59,6 +59,10 @@ pub enum OptionsError {
     /// PJRT client is not `Send`), so combining the XLA scorer with
     /// `shards >= 1` would silently ignore the requested backend.
     XlaScorerWithShards { shards: usize },
+    /// The adaptive weight controller shifts the native scorer's weight
+    /// tables at runtime; the AOT-compiled XLA artifact bakes the static
+    /// rows in, so `--xla-scorer` would silently ignore `--adapt`.
+    XlaScorerWithAdapt,
 }
 
 impl fmt::Display for OptionsError {
@@ -69,6 +73,13 @@ impl fmt::Display for OptionsError {
                 "--xla-scorer cannot be combined with --shards {shards}: sharded \
                  prefetch workers always score on the native backend (the PJRT \
                  client is not Send); drop --shards or the XLA scorer"
+            ),
+            OptionsError::XlaScorerWithAdapt => write!(
+                f,
+                "--xla-scorer cannot be combined with --adapt: the adaptive \
+                 controller shifts the native scorer's weight tables at \
+                 runtime, while the AOT XLA artifact bakes the static rows \
+                 in; drop --adapt or the XLA scorer"
             ),
         }
     }
@@ -109,6 +120,8 @@ pub struct SimOptions {
     checkpoint_min: u64,
     shards: usize,
     xla_scorer: bool,
+    adapt: bool,
+    jwtd_bound_ms: u64,
 }
 
 impl SimOptions {
@@ -133,6 +146,8 @@ impl SimOptions {
             checkpoint_min: 30,
             shards: 0,
             xla_scorer: false,
+            adapt: false,
+            jwtd_bound_ms: 0,
         }
     }
 
@@ -228,6 +243,25 @@ impl SimOptions {
         self
     }
 
+    /// Seeded adaptive weight controller (`--adapt`): shift the native
+    /// scorer's packing/spreading/fairness mix once per QSCH cycle from
+    /// rolling GAR/GFR/JWTD windows. Off (the default) keeps the frozen
+    /// static tables. Invalid with [`SimOptions::xla_scorer`] — see
+    /// [`OptionsError::XlaScorerWithAdapt`].
+    pub fn adapt(mut self, adapt: bool) -> Self {
+        self.adapt = adapt;
+        self
+    }
+
+    /// Hard anti-starvation bound (`--jwtd-bound`, here in ms): cap every
+    /// base-priority class's rolling p99 queue wait. Feeds both QSCH's
+    /// starvation rescue/reservation pass and — when [`SimOptions::adapt`]
+    /// is on — the controller's fairness axis. 0 (default) disables.
+    pub fn jwtd_bound_ms(mut self, bound_ms: u64) -> Self {
+        self.jwtd_bound_ms = bound_ms;
+        self
+    }
+
     pub fn wants_xla(&self) -> bool {
         self.xla_scorer
     }
@@ -250,6 +284,9 @@ impl SimOptions {
                 shards: self.shards,
             });
         }
+        if self.xla_scorer && self.adapt {
+            return Err(OptionsError::XlaScorerWithAdapt);
+        }
         let faults = self.has_faults();
         let qsch = QschConfig {
             policy: self.policy,
@@ -261,9 +298,22 @@ impl SimOptions {
                 0
             },
             batch_shards: self.shards,
+            // One shared wait ceiling for every base-priority class; 0
+            // keeps the starvation pass disabled.
+            max_jwtd_p99_ms: [self.jwtd_bound_ms;
+                crate::job::spec::Priority::NUM_CLASSES],
             ..QschConfig::default()
         };
         let mut rsch = RschConfig::default();
+        if self.adapt {
+            rsch.adapt = crate::rsch::adapt::AdaptConfig {
+                enabled: true,
+                seed: self.seed,
+                jwtd_bound_ms: [self.jwtd_bound_ms;
+                    crate::job::spec::Priority::NUM_CLASSES],
+                ..crate::rsch::adapt::AdaptConfig::default()
+            };
+        }
         if let Some(strat) = self.strategy {
             rsch.training_strategy = strat;
             rsch.inference_strategy = strat;
@@ -443,6 +493,51 @@ mod tests {
             .xla_scorer(true)
             .configs()
             .is_ok());
+    }
+
+    #[test]
+    fn adapt_knobs_map_onto_configs() {
+        use crate::job::spec::Priority;
+        // Defaults: controller disabled, no bounds.
+        let (qsch, rsch, _) = SimOptions::for_scale(Scale::Small).configs().unwrap();
+        assert_eq!(qsch.max_jwtd_p99_ms, [0; Priority::NUM_CLASSES]);
+        assert!(!rsch.adapt.enabled);
+        // --adapt --jwtd-bound: controller seeded from the run seed, the
+        // shared bound fanned out to every class on both sides.
+        let (qsch, rsch, _) = SimOptions::for_scale(Scale::Small)
+            .seed(9)
+            .adapt(true)
+            .jwtd_bound_ms(360 * 60_000)
+            .configs()
+            .unwrap();
+        assert_eq!(qsch.max_jwtd_p99_ms, [360 * 60_000; Priority::NUM_CLASSES]);
+        assert!(rsch.adapt.enabled);
+        assert_eq!(rsch.adapt.seed, 9);
+        assert_eq!(rsch.adapt.jwtd_bound_ms, [360 * 60_000; Priority::NUM_CLASSES]);
+        // --jwtd-bound alone: hard bound without the controller.
+        let (qsch, rsch, _) = SimOptions::for_scale(Scale::Small)
+            .jwtd_bound_ms(60_000)
+            .configs()
+            .unwrap();
+        assert_eq!(qsch.max_jwtd_p99_ms, [60_000; Priority::NUM_CLASSES]);
+        assert!(!rsch.adapt.enabled);
+        // --adapt composes with --shards (single-threaded controller tick).
+        assert!(SimOptions::for_scale(Scale::Small)
+            .adapt(true)
+            .shards(8)
+            .configs()
+            .is_ok());
+    }
+
+    #[test]
+    fn xla_scorer_excludes_adapt() {
+        let err = SimOptions::for_scale(Scale::Small)
+            .xla_scorer(true)
+            .adapt(true)
+            .configs()
+            .unwrap_err();
+        assert_eq!(err, OptionsError::XlaScorerWithAdapt);
+        assert!(err.to_string().contains("--adapt"));
     }
 
     #[test]

@@ -43,6 +43,36 @@ impl Priority {
     pub const LOW: Priority = Priority(0);
     pub const NORMAL: Priority = Priority(4);
     pub const HIGH: Priority = Priority(8);
+
+    /// Number of base priority classes (LOW / NORMAL / HIGH) — the
+    /// granularity of the per-class anti-starvation bounds and the
+    /// adaptive controller's JWTD signals.
+    pub const NUM_CLASSES: usize = 3;
+
+    /// Base class this priority falls in: 0 = LOW, 1 = NORMAL, 2 = HIGH.
+    /// Requeue aging may raise the raw value within a class but never
+    /// across one (see [`Priority::aged`]).
+    pub fn class_index(self) -> usize {
+        match self.0 {
+            0..=3 => 0,
+            4..=7 => 1,
+            _ => 2,
+        }
+    }
+
+    /// Apply a requeue-aging boost, clamped below the next class base so
+    /// aging can reorder jobs *within* a class but never promote one
+    /// across class boundaries (LOW caps at 3, NORMAL at 7; HIGH has no
+    /// class above it and saturates on `u8`).
+    pub fn aged(self, boost: u8) -> Priority {
+        let raised = self.0.saturating_add(boost);
+        let ceiling = match self.class_index() {
+            0 => 3,
+            1 => 7,
+            _ => u8::MAX,
+        };
+        Priority(raised.min(ceiling))
+    }
 }
 
 /// Placement strategy requested for (or assigned to) a job (§3.3).
@@ -365,6 +395,19 @@ mod tests {
     fn priority_ordering() {
         assert!(Priority::HIGH > Priority::NORMAL);
         assert!(Priority::NORMAL > Priority::LOW);
+    }
+
+    #[test]
+    fn aging_never_crosses_a_class_boundary() {
+        for boost in 0..=u8::MAX {
+            assert_eq!(Priority::LOW.aged(boost).class_index(), 0);
+            assert_eq!(Priority::NORMAL.aged(boost).class_index(), 1);
+            assert_eq!(Priority::HIGH.aged(boost).class_index(), 2);
+        }
+        assert_eq!(Priority::LOW.aged(200), Priority(3));
+        assert_eq!(Priority::NORMAL.aged(200), Priority(7));
+        assert_eq!(Priority::HIGH.aged(200), Priority(208));
+        assert_eq!(Priority::HIGH.aged(255), Priority(255));
     }
 
     #[test]

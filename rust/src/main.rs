@@ -45,7 +45,8 @@ usage:
                 [--strategy native|binpack|e-binpack|spread|e-spread]
                 [--trace FILE] [--xla-scorer] [--flat] [--deep-snapshot]
                 [--no-index] [--topo-blind] [--elastic] [--faults]
-                [--checkpoint-min N] [--shards N] [--digest FILE]
+                [--checkpoint-min N] [--shards N] [--adapt]
+                [--jwtd-bound MIN] [--digest FILE]
   kant gen-trace [--seed N] [--jobs N] [--mix training|inference] --out FILE
   kant validate [--artifacts DIR]
 
@@ -75,6 +76,17 @@ flags:
                    threads (0 = legacy sequential core). The shard
                    structure is fixed by the topology, so every N >= 1 is
                    digest-identical; incompatible with --xla-scorer
+  --adapt          seeded adaptive weight controller: once per cycle, shift
+                   the native scorer's packing/spreading/fairness mix from
+                   rolling GAR/GFR/JWTD windows (hysteresis + step clamps
+                   keep same-seed digests byte-identical, for any --shards);
+                   off = the frozen static tables; incompatible with
+                   --xla-scorer
+  --jwtd-bound MIN hard anti-starvation bound (minutes): cap every priority
+                   class's rolling p99 queue wait; a class over its bound
+                   gets a starvation-preemption pass and reserved capacity
+                   (quota is never bypassed). Also drives the --adapt
+                   fairness axis. 0 = off
   --digest FILE    write the deterministic run digest (JSON) to FILE — the
                    golden-gate CI job diffs two same-seed digests
 ";
@@ -125,6 +137,13 @@ fn simulate(args: &[String]) -> Result<()> {
     })
     .checkpoint_min(flag_value(args, "--checkpoint-min").unwrap_or("30").parse()?)
     .shards(flag_value(args, "--shards").unwrap_or("0").parse()?)
+    .adapt(has_flag(args, "--adapt"))
+    .jwtd_bound_ms(
+        flag_value(args, "--jwtd-bound")
+            .unwrap_or("0")
+            .parse::<u64>()?
+            * 60_000,
+    )
     .xla_scorer(has_flag(args, "--xla-scorer"));
 
     let SimSetup {
@@ -142,7 +161,7 @@ fn simulate(args: &[String]) -> Result<()> {
 
     println!(
         "cluster={} gpus={} jobs={} policy={} two_level={} snapshot={:?} indexed={} \
-         scorer={} shards={}",
+         scorer={} shards={} adapt={} jwtd_bound_ms={}",
         env.label,
         env.state.total_gpus(),
         jobs.len(),
@@ -152,6 +171,8 @@ fn simulate(args: &[String]) -> Result<()> {
         rsch_cfg.indexed_candidates,
         if opts.wants_xla() { "xla" } else { "native" },
         qsch_cfg.batch_shards,
+        rsch_cfg.adapt.enabled,
+        qsch_cfg.max_jwtd_p99_ms[0],
     );
 
     let elastic = opts.is_elastic();

@@ -4,6 +4,7 @@
 pub mod report;
 
 use crate::cluster::state::ClusterState;
+use crate::job::spec::Priority;
 use crate::job::state::Job;
 use crate::util::stats::{SizeBuckets, Summary, TimeWeighted};
 
@@ -171,6 +172,10 @@ pub struct Metrics {
     gfr: TimeWeighted,
     /// Waiting time (ms) by job size (§4.4).
     jwtd: SizeBuckets,
+    /// Waiting time (ms) by base-priority class, timestamped at schedule
+    /// time — the rolling-window JWTD signal the adaptive weight
+    /// controller reads ([`Metrics::class_wait_samples_between`]).
+    class_waits: [Vec<(u64, f64)>; Priority::NUM_CLASSES],
     /// Node-count deviation ratio by job size (§4.5).
     jtted_node: SizeBuckets,
     /// NodeNetGroup deviation ratio by job size (§4.5).
@@ -203,6 +208,7 @@ impl Metrics {
             gar: TimeWeighted::new(),
             gfr: TimeWeighted::new(),
             jwtd: SizeBuckets::paper_default(),
+            class_waits: Default::default(),
             jtted_node: SizeBuckets::paper_default(),
             jtted_group: SizeBuckets::paper_default(),
             jtted_spine: SizeBuckets::paper_default(),
@@ -233,7 +239,9 @@ impl Metrics {
     pub fn on_scheduled(&mut self, now: u64, state: &ClusterState, job: &Job) {
         self.jobs_scheduled += 1;
         let gpus = job.spec.total_gpus();
-        self.jwtd.record(gpus, job.waiting_ms(now) as f64);
+        let wait = job.waiting_ms(now) as f64;
+        self.jwtd.record(gpus, wait);
+        self.class_waits[job.spec.priority.class_index()].push((now, wait));
 
         // JTTED (§4.5): deviation from the optimal packing.
         let nodes = state.nodes_of(job.id());
@@ -504,6 +512,19 @@ impl Metrics {
         self.jwtd.summaries()
     }
 
+    /// Waits (ms) of jobs in base-priority class `class` scheduled in
+    /// `(t0, t1]` — the rolling-window slice the adaptive controller
+    /// folds with censored still-waiting samples before taking a p99
+    /// (see [`crate::rsch::adapt::collect_signals`]). Samples arrive in
+    /// schedule order, so the slice is deterministic.
+    pub fn class_wait_samples_between(&self, class: usize, t0: u64, t1: u64) -> Vec<f64> {
+        self.class_waits[class]
+            .iter()
+            .filter(|&&(t, _)| t > t0 && t <= t1)
+            .map(|&(_, w)| w)
+            .collect()
+    }
+
     /// **JTTED** node deviation (Job Training Time Estimation Distribution,
     /// §4.5): actual node count / optimal node count per size bucket — 1.0
     /// is a perfect packing, higher means the job was scattered across
@@ -713,6 +734,42 @@ mod tests {
         assert!((ss[2].1.mean - 2.0).abs() < 1e-9, "{}", ss[2].1.mean);
         assert!((Metrics::weighted_mean(&ss) - 2.0).abs() < 1e-9);
         assert_eq!(Metrics::weighted_mean(&m.jtted_spine_summaries()), 2.0);
+    }
+
+    #[test]
+    fn class_wait_samples_window_by_schedule_time() {
+        use crate::job::spec::Priority;
+        let state = ClusterBuilder::build(&ClusterSpec::homogeneous("t", 1, 1, 2));
+        let mut m = Metrics::new(&state, 0);
+        let schedule = |m: &mut Metrics, id: u64, prio: Priority, submit: u64, at: u64| {
+            let spec = JobSpec::homogeneous(
+                JobId(id),
+                TenantId(0),
+                JobKind::Training,
+                GpuTypeId(0),
+                1,
+                8,
+            )
+            .with_times(submit, 1000)
+            .with_priority(prio);
+            let mut job = Job::new(spec);
+            job.mark_admitted();
+            job.mark_scheduled(at);
+            m.on_scheduled(at, &state, &job);
+        };
+        schedule(&mut m, 1, Priority::LOW, 0, 500);
+        schedule(&mut m, 2, Priority::LOW, 100, 2_000);
+        schedule(&mut m, 3, Priority::HIGH, 0, 1_500);
+        // Half-open window (1000, 2000]: only the second LOW sample.
+        assert_eq!(m.class_wait_samples_between(0, 1_000, 2_000), vec![1_900.0]);
+        // Full window: both LOW waits, in schedule order.
+        assert_eq!(
+            m.class_wait_samples_between(0, 0, 2_000),
+            vec![500.0, 1_900.0]
+        );
+        // HIGH goes to its own class; NORMAL stays empty.
+        assert_eq!(m.class_wait_samples_between(2, 0, 2_000), vec![1_500.0]);
+        assert!(m.class_wait_samples_between(1, 0, 2_000).is_empty());
     }
 
     #[test]

@@ -17,6 +17,7 @@ use crate::cluster::tenant::QuotaLedger;
 use crate::job::spec::{JobSpec, Priority};
 use crate::job::state::Phase;
 use crate::job::store::JobStore;
+use crate::util::stats::percentile_sorted;
 
 use admission::{demand_by_type, dynamic_admission, static_admission};
 use policy::{QschConfig, QueuePolicy};
@@ -77,6 +78,13 @@ pub struct QschStats {
     pub requeues: u64,
     /// Jobs cancelled before natural completion (elastic scale-down).
     pub cancellations: u64,
+    /// Starved class heads placed via starvation preemption.
+    pub starvation_rescues: u64,
+    /// Backfilled victims evicted by starvation preemption.
+    pub starvation_preemptions: u64,
+    /// Candidates skipped mid-cycle to hold reserved capacity for a
+    /// starved class head that could not be placed.
+    pub starvation_reservations: u64,
 }
 
 /// The queue-based scheduler.
@@ -119,7 +127,10 @@ impl Qsch {
     ///
     /// With `requeue_aging_cap > 0`, each preemption the job has suffered
     /// raises its queue priority one step (capped) — repeatedly-hit gangs
-    /// climb the queue instead of starving behind fresher arrivals.
+    /// climb the queue instead of starving behind fresher arrivals. The
+    /// boost clamps at the class ceiling ([`Priority::aged`]) so an aged
+    /// job reorders within its base-priority class but never crosses into
+    /// the class above.
     pub fn requeue(&mut self, store: &JobStore, job: JobId) {
         let j = store.expect(job);
         debug_assert_eq!(j.phase, Phase::Queued, "requeue expects a Queued job");
@@ -130,7 +141,7 @@ impl Qsch {
             self.queues.push(QueueEntry {
                 job,
                 tenant: j.spec.tenant,
-                priority: Priority(j.spec.priority.0.saturating_add(boost)),
+                priority: j.spec.priority.aged(boost),
                 submit_ms: j.submit_ms, // Keep original position.
                 total_gpus: j.spec.total_gpus(),
             });
@@ -217,6 +228,30 @@ impl Qsch {
                 placer.prefetch(state, &specs, self.cfg.batch_shards);
             }
         }
+
+        // ---- Anti-starvation bound (hard per-class p99 wait ceiling) ----
+        // Deterministic: computed over this cycle's candidate snapshot in
+        // the single-threaded phase, so `--shards N` digests are unaffected.
+        let bounds = self.cfg.max_jwtd_p99_ms;
+        let mut starved = [false; Priority::NUM_CLASSES];
+        if bounds.iter().any(|&b| b > 0) {
+            let mut waits: [Vec<f64>; Priority::NUM_CLASSES] = Default::default();
+            for e in &candidates {
+                if store.expect(e.job).phase == Phase::Queued {
+                    waits[e.priority.class_index()]
+                        .push(now.saturating_sub(e.submit_ms) as f64);
+                }
+            }
+            for (c, w) in waits.iter_mut().enumerate() {
+                if bounds[c] == 0 || w.is_empty() {
+                    continue;
+                }
+                w.sort_by(|a, b| a.partial_cmp(b).expect("waits are finite"));
+                starved[c] = percentile_sorted(w, 0.99) > bounds[c] as f64;
+            }
+        }
+        let mut class_head_seen = [false; Priority::NUM_CLASSES];
+        let mut reserved_class: Option<usize> = None;
         let mut head_failed = false;
 
         for (i, entry) in candidates.iter().enumerate() {
@@ -226,6 +261,20 @@ impl Qsch {
             // scheduled job is removed). Only Queued jobs are attempted.
             if store.expect(entry.job).phase != Phase::Queued {
                 continue;
+            }
+            let class = entry.priority.class_index();
+            let class_head = !class_head_seen[class];
+            class_head_seen[class] = true;
+            // Reserved-capacity pass: once a starved class head failed to
+            // place even via starvation preemption, capacity is held for
+            // it — same-or-lower-class candidates stop competing for the
+            // rest of this cycle (quota admission is never bypassed; the
+            // held capacity simply is not re-backfilled from under it).
+            if let Some(rc) = reserved_class {
+                if class <= rc {
+                    self.stats.starvation_reservations += 1;
+                    continue;
+                }
             }
 
             // ---- Tier 1: static quota admission ----
@@ -310,6 +359,30 @@ impl Qsch {
                     PreemptKind::SloPressure,
                     &mut report,
                 );
+            }
+            // Anti-starvation rescue: the head of a class whose rolling
+            // p99 wait broke its bound — once its own wait is at least
+            // half the bound — evicts backfilled peers immediately. If
+            // even that cannot place it, hold capacity for it instead.
+            if !rescued
+                && starved[class]
+                && class_head
+                && now.saturating_sub(entry.submit_ms) >= bounds[class] / 2
+            {
+                rescued = self.try_preempt_and_place(
+                    now,
+                    store,
+                    state,
+                    placer,
+                    entry.job,
+                    PreemptKind::Starvation,
+                    &mut report,
+                );
+                if rescued {
+                    self.stats.starvation_rescues += 1;
+                } else {
+                    reserved_class = Some(class);
+                }
             }
             if rescued {
                 report.scheduled.push(entry.job);
@@ -416,6 +489,23 @@ impl Qsch {
             PreemptKind::Priority => {
                 select_victims(state, store, &need, |j| j.spec.priority < prio)
             }
+            // Starvation mirrors Backfill's victim rule (backfilled jobs
+            // of no higher base priority) but is triggered by the p99
+            // bound, not the head timeout — an aged job's preemption
+            // rights still read its base priority.
+            PreemptKind::Starvation => {
+                let shortage = select_victims(state, store, &need, |j| {
+                    j.backfilled && j.spec.priority <= prio
+                });
+                match shortage {
+                    Some(v) if v.is_empty() => {
+                        preemption::select_defrag_victims(state, store, &need, |j| {
+                            j.backfilled && j.spec.priority <= prio
+                        })
+                    }
+                    other => other,
+                }
+            }
             PreemptKind::SloPressure => {
                 let shortage = select_victims(state, store, &need, |j| j.spec.tidal);
                 match shortage {
@@ -448,6 +538,9 @@ impl Qsch {
             PreemptKind::Priority => self.stats.priority_preemptions += victims.len() as u64,
             PreemptKind::SloPressure => {
                 self.stats.slo_pressure_preemptions += victims.len() as u64
+            }
+            PreemptKind::Starvation => {
+                self.stats.starvation_preemptions += victims.len() as u64
             }
             PreemptKind::QuotaReclaim => {}
         }
@@ -852,6 +945,91 @@ mod tests {
         assert_eq!(run_order(4), vec![3, 2]);
         // Aging disabled: submit order rules; the evicted job waits.
         assert_eq!(run_order(0), vec![2, 3]);
+    }
+
+    #[test]
+    fn starvation_bound_rescues_starved_class_head() {
+        let mut cfg = QschConfig::default();
+        cfg.backfill_timeout_ms = 1_000_000_000; // Isolate the starvation path.
+        cfg.enable_priority_preemption = false;
+        cfg.max_jwtd_p99_ms = [60_000, 0, 0]; // LOW class bounded at 60 s.
+        let (mut q, mut store, mut state) = setup(cfg);
+        // Nodes 0-1 pinned by long NORMAL work; nodes 2-3 by LOW jobs
+        // that bypassed a blocked head earlier (marked backfilled
+        // directly to keep the setup small).
+        q.submit(&mut store, job(1, 8, 2).with_times(0, 10_000_000));
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        q.submit(
+            &mut store,
+            job(3, 8, 1).with_times(10, 10_000_000).with_priority(Priority::LOW),
+        );
+        q.submit(
+            &mut store,
+            job(4, 8, 1).with_times(11, 10_000_000).with_priority(Priority::LOW),
+        );
+        q.cycle(100, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(state.allocated_gpus(), 32);
+        store.expect_mut(JobId(3)).backfilled = true;
+        store.expect_mut(JobId(4)).backfilled = true;
+        // The starving LOW gang: wants 16 GPUs behind a full cluster.
+        q.submit(
+            &mut store,
+            job(2, 8, 2).with_times(200, 10_000_000).with_priority(Priority::LOW),
+        );
+        // Below the bound: placement fails, nothing is evicted.
+        let r = q.cycle(30_000, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.placement_failures, vec![JobId(2)]);
+        assert!(r.preempted.is_empty());
+        assert_eq!(q.stats.starvation_rescues, 0);
+        // Past the bound: the class head evicts the backfilled pair
+        // without waiting out the (huge) backfill timeout.
+        let r = q.cycle(100_000, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.preempted.len(), 2);
+        assert_eq!(r.scheduled, vec![JobId(2)]);
+        assert_eq!(q.stats.starvation_rescues, 1);
+        assert_eq!(q.stats.starvation_preemptions, 2);
+        // Victims are requeued, not lost.
+        assert!(q.queues.contains(JobId(3)));
+        assert!(q.queues.contains(JobId(4)));
+    }
+
+    #[test]
+    fn starvation_reservation_holds_capacity_for_starved_head() {
+        let run = |bound: u64| -> (CycleReport, QschStats, u32) {
+            let mut cfg = QschConfig::default();
+            cfg.backfill_timeout_ms = 1_000_000_000;
+            cfg.enable_priority_preemption = false;
+            cfg.max_jwtd_p99_ms = [bound, 0, 0];
+            let (mut q, mut store, mut state) = setup(cfg);
+            // 24 of 32 GPUs pinned by non-backfilled work: starvation
+            // preemption has no eligible victims.
+            q.submit(&mut store, job(1, 8, 3).with_times(0, 10_000_000));
+            q.cycle(0, &mut store, &mut state, &mut FirstFit);
+            // The starved head wants 16; a later LOW job would fit in
+            // the one free node.
+            q.submit(
+                &mut store,
+                job(2, 8, 2).with_times(10, 10_000_000).with_priority(Priority::LOW),
+            );
+            q.submit(
+                &mut store,
+                job(3, 8, 1).with_times(20, 10_000_000).with_priority(Priority::LOW),
+            );
+            let r = q.cycle(100_000, &mut store, &mut state, &mut FirstFit);
+            (r, q.stats, state.allocated_gpus())
+        };
+        // Bound off: the small LOW job backfills into the free node.
+        let (r, stats, used) = run(0);
+        assert_eq!(r.scheduled, vec![JobId(3)]);
+        assert_eq!(stats.starvation_reservations, 0);
+        assert_eq!(used, 32);
+        // Bound broken and no backfilled victims: the would-be
+        // backfiller is skipped, leaving the free node held for job 2.
+        let (r, stats, used) = run(60_000);
+        assert!(r.scheduled.is_empty());
+        assert_eq!(stats.starvation_reservations, 1);
+        assert_eq!(stats.starvation_rescues, 0);
+        assert_eq!(used, 24);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Queueing policies (§3.2.2, Table 1) and QSCH configuration.
 
+use crate::job::spec::Priority;
+
 /// Table 1's three queueing policies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum QueuePolicy {
@@ -72,6 +74,17 @@ pub struct QschConfig {
     /// byte-identical digests; 0 (the default) disables prefetch and
     /// keeps the legacy strictly-sequential plan-per-place path.
     pub batch_shards: usize,
+    /// Hard per-class anti-starvation bound: `max_jwtd_p99_ms[c]` bounds
+    /// the rolling p99 queue wait of base-priority class `c` (see
+    /// [`Priority::class_index`]). When a class's p99 over the queued
+    /// candidates exceeds its bound, the head of that class gains a
+    /// starvation-preemption pass (evicting backfilled peers, like
+    /// backfill preemption) and — if it still cannot place — a
+    /// reserved-capacity hold that stops same-or-lower-class candidates
+    /// from consuming freed capacity for the rest of the cycle. Static
+    /// quota admission is never bypassed. 0 disables a class's bound
+    /// (the default for every class).
+    pub max_jwtd_p99_ms: [u64; Priority::NUM_CLASSES],
 }
 
 impl Default for QschConfig {
@@ -85,6 +98,7 @@ impl Default for QschConfig {
             enable_slo_reclaim: true,
             requeue_aging_cap: 0,
             batch_shards: 0,
+            max_jwtd_p99_ms: [0; Priority::NUM_CLASSES],
         }
     }
 }

@@ -23,6 +23,11 @@ pub enum PreemptKind {
     /// SLO-pressure reclamation: an elastic inference scale-up evicts
     /// tidally-backfilled training to win its capacity back.
     SloPressure,
+    /// Anti-starvation rescue: a class head whose rolling p99 wait broke
+    /// its `max_jwtd_p99_ms` bound evicts backfilled peers (same victim
+    /// rule as backfill preemption) without waiting out the backfill
+    /// timeout.
+    Starvation,
 }
 
 /// Select a minimal-cost victim set among resource-holding jobs matching

@@ -1,0 +1,444 @@
+//! Adaptive multi-objective weight control (the dynamic counterpart of
+//! the hand-tuned [`score`](super::score) tables).
+//!
+//! The static E-Binpack/E-Spread rows balance utilization (GAR),
+//! fragmentation (GFR) and waiting time (JWTD) with constants retuned by
+//! hand; under mixed tenant pressure a fixed mix either over-packs
+//! (fragmenting large gangs) or over-spreads (starving low-priority tidal
+//! work). Following the dynamic multi-objective scheduling line of work,
+//! [`WeightController`] turns the mix into a deterministic feedback loop:
+//! once per QSCH cycle it reads rolling-window GFR/GAR/per-class JWTD
+//! signals and shifts a *bounded, quantized* [`WeightOverlay`] between
+//! packing, spreading, and a fairness term — with hysteresis dead bands
+//! and a ±1-step-per-tick clamp so same-seed runs replay byte-identical
+//! digests, and the hand-tuned table untouched as the frozen `--no-adapt`
+//! baseline.
+//!
+//! Determinism contract: the controller state is two small integers
+//! (`pack_steps`, `fairness_steps`); overlay floats are derived from them
+//! by constant multiplication, never accumulated, so there is no
+//! float-drift path. Ticks happen only in the single-threaded QSCH phase
+//! (`sim::runner`), and shard workers see the overlay through a cloned
+//! [`RschConfig`](super::RschConfig) — which is why `--shards N` digests
+//! stay byte-identical for every N.
+
+use crate::job::spec::Priority;
+use crate::job::state::Phase as JobPhase;
+use crate::job::store::JobStore;
+use crate::metrics::Metrics;
+use crate::util::stats::percentile_sorted;
+
+use super::score::{GROUP_COMPONENTS, NUM_COMPONENTS};
+
+/// Rolling observation window for the controller's signals (2 h): long
+/// enough to smooth cycle-level noise, short enough to track tidal shifts.
+pub const ADAPT_WINDOW_MS: u64 = 2 * 3_600_000;
+
+/// Packing-axis quantum: one `pack_steps` unit moves `fill` up and
+/// `spread` down by this much (symmetric, so the axis is packing↔spread).
+const PACK_STEP: f32 = 0.05;
+
+/// Fairness-axis quantum per `fairness_steps` unit.
+const FAIR_STEP: f32 = 0.125;
+
+/// FNV-1a offset/prime — the same hash family as the digest fingerprint.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Controller tunables. `Default` is **disabled**: the scorer runs the
+/// frozen hand-tuned table bitwise-unchanged unless `--adapt` opts in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptConfig {
+    /// Master switch. Off = the PR-5 frozen table, byte-for-byte.
+    pub enabled: bool,
+    /// Seeds the telemetry fingerprint so adaptive runs are attributable
+    /// to their workload seed in the digest.
+    pub seed: u64,
+    /// GFR setpoint the packing axis regulates around.
+    pub gfr_target: f64,
+    /// Hysteresis dead band around the setpoint: no packing-axis movement
+    /// while `|gfr - gfr_target| <= gfr_band`.
+    pub gfr_band: f64,
+    /// Packing-axis clamp: `pack_steps` stays in `[-max, +max]`.
+    pub max_pack_steps: i16,
+    /// Fairness-axis clamp: `fairness_steps` stays in `[0, max]`.
+    pub max_fairness_steps: i16,
+    /// Per-priority-class (LOW/NORMAL/HIGH) hard anti-starvation bound on
+    /// rolling JWTD p99; 0 disables the bound for that class. Mirrors
+    /// `QschConfig::max_jwtd_p99_ms` — here it drives the fairness axis,
+    /// there it drives the reserved-capacity escalation.
+    pub jwtd_bound_ms: [u64; Priority::NUM_CLASSES],
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        AdaptConfig {
+            enabled: false,
+            seed: 0,
+            gfr_target: 0.06,
+            gfr_band: 0.02,
+            max_pack_steps: 5,
+            max_fairness_steps: 8,
+            jwtd_bound_ms: [0; Priority::NUM_CLASSES],
+        }
+    }
+}
+
+/// Bounded additive shift applied on top of the static weight tables.
+/// Derived from quantized controller state by constant multiplication —
+/// never accumulated in float space.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WeightOverlay {
+    /// Packing↔spreading bias: positive packs harder (`fill` up, `spread`
+    /// down), negative spreads harder. In `[-max_pack_steps·PACK_STEP,
+    /// +max_pack_steps·PACK_STEP]`.
+    pub pack_bias: f32,
+    /// The fairness term: consolidation pressure that keeps contiguous
+    /// group capacity whole so aged large gangs can still place. In
+    /// `[0, max_fairness_steps·FAIR_STEP]`.
+    pub fairness: f32,
+}
+
+impl WeightOverlay {
+    /// True when the overlay is the identity (the frozen-table case).
+    pub fn is_zero(&self) -> bool {
+        self.pack_bias == 0.0 && self.fairness == 0.0
+    }
+
+    /// Shift a node-weight row: packing bias moves fill↔spread; the
+    /// fairness term raises `group_pack` and damps `group_empty` so
+    /// small work consolidates into already-used groups instead of
+    /// nibbling the empty ones starving gangs need. The topology
+    /// component (`W_TOPO`) is never touched — the pooled-gang gate and
+    /// tier semantics stay exactly the static table's.
+    pub fn apply_node(&self, w: &mut [f32; NUM_COMPONENTS]) {
+        w[0] += self.pack_bias; // fill
+        w[1] -= self.pack_bias; // spread
+        w[2] += self.fairness; // group_pack
+        w[3] -= 0.5 * self.fairness; // group_empty
+    }
+
+    /// Shift a group-weight row (same fairness semantics at group
+    /// granularity: prefer packed groups, spare the empty ones).
+    pub fn apply_group(&self, w: &mut [f32; GROUP_COMPONENTS]) {
+        w[0] += self.fairness; // pack
+        w[1] -= 0.5 * self.fairness; // empty
+    }
+}
+
+/// Rolling-window observations the controller consumes each tick. Plain
+/// data so shard workers and benches can synthesize them.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AdaptSignals {
+    /// Time-weighted GPU allocation ratio over the window.
+    pub gar: f64,
+    /// Time-weighted GPU fragmentation ratio over the window.
+    pub gfr: f64,
+    /// Rolling JWTD p99 per priority class (LOW/NORMAL/HIGH), censored:
+    /// still-queued jobs count their wait up to `now`.
+    pub class_p99_wait_ms: [f64; Priority::NUM_CLASSES],
+}
+
+/// Controller telemetry — surfaced in the sim digest so adaptive runs are
+/// distinguishable (and replayable) at a glance.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdaptStats {
+    pub ticks: u64,
+    /// Packing-axis movements (either direction).
+    pub pack_shifts: u64,
+    /// Fairness escalations (a bounded class's rolling p99 over bound).
+    pub escalations: u64,
+    /// Fairness releases (every bounded class back under half its bound).
+    pub releases: u64,
+    /// FNV-1a over the seed and every tick's quantized state: two runs
+    /// with equal fingerprints replayed the same control trajectory.
+    pub fingerprint: u64,
+}
+
+/// The seeded deterministic weight controller (see module docs).
+#[derive(Debug, Clone)]
+pub struct WeightController {
+    cfg: AdaptConfig,
+    /// Quantized packing axis in `[-max_pack_steps, +max_pack_steps]`.
+    pack_steps: i16,
+    /// Quantized fairness axis in `[0, max_fairness_steps]`.
+    fairness_steps: i16,
+    pub stats: AdaptStats,
+}
+
+impl WeightController {
+    pub fn new(cfg: AdaptConfig) -> WeightController {
+        let fingerprint = FNV_OFFSET ^ cfg.seed;
+        WeightController {
+            cfg,
+            pack_steps: 0,
+            fairness_steps: 0,
+            stats: AdaptStats {
+                fingerprint,
+                ..AdaptStats::default()
+            },
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Current overlay (identity until the first tick moves an axis).
+    pub fn overlay(&self) -> WeightOverlay {
+        WeightOverlay {
+            pack_bias: f32::from(self.pack_steps) * PACK_STEP,
+            fairness: f32::from(self.fairness_steps) * FAIR_STEP,
+        }
+    }
+
+    /// One controller tick (call once per QSCH cycle, single-threaded).
+    /// Each axis moves at most one quantum per tick (step clamping), and
+    /// only outside its hysteresis band — so the trajectory is a pure
+    /// function of the signal sequence.
+    pub fn tick(&mut self, s: &AdaptSignals) -> WeightOverlay {
+        self.stats.ticks += 1;
+
+        // Packing axis: negative feedback on fragmentation. Above the
+        // band, pack harder (consolidation reduces GFR); below it, relax
+        // toward — and on a busy cluster (GAR >= 0.5) beyond — the
+        // baseline into spreading. An idle cluster's near-zero GFR must
+        // not drive a spread bias, so the negative half is utilization-
+        // gated.
+        if s.gfr > self.cfg.gfr_target + self.cfg.gfr_band {
+            if self.pack_steps < self.cfg.max_pack_steps {
+                self.pack_steps += 1;
+                self.stats.pack_shifts += 1;
+            }
+        } else if s.gfr < self.cfg.gfr_target - self.cfg.gfr_band {
+            let floor = if s.gar >= 0.5 {
+                -self.cfg.max_pack_steps
+            } else {
+                0
+            };
+            if self.pack_steps > floor {
+                self.pack_steps -= 1;
+                self.stats.pack_shifts += 1;
+            }
+        }
+
+        // Fairness axis: escalate while any bounded class's rolling p99
+        // wait exceeds its bound; release only when every bounded class
+        // is back under half its bound (the hysteresis band between
+        // bound/2 and bound holds the current level).
+        let mut over = false;
+        let mut all_clear = true;
+        for (c, &bound) in self.cfg.jwtd_bound_ms.iter().enumerate() {
+            if bound == 0 {
+                continue;
+            }
+            let p99 = s.class_p99_wait_ms[c];
+            if p99 > bound as f64 {
+                over = true;
+            }
+            if 2.0 * p99 > bound as f64 {
+                all_clear = false;
+            }
+        }
+        if over {
+            if self.fairness_steps < self.cfg.max_fairness_steps {
+                self.fairness_steps += 1;
+                self.stats.escalations += 1;
+            }
+        } else if all_clear && self.fairness_steps > 0 {
+            self.fairness_steps -= 1;
+            self.stats.releases += 1;
+        }
+
+        // Fold the post-tick quantized state into the fingerprint.
+        let mut h = self.stats.fingerprint;
+        h = (h ^ (self.pack_steps as u16 as u64)).wrapping_mul(FNV_PRIME);
+        h = (h ^ (self.fairness_steps as u16 as u64)).wrapping_mul(FNV_PRIME);
+        self.stats.fingerprint = h;
+
+        self.overlay()
+    }
+}
+
+/// Assemble the controller's rolling-window signals from the metrics'
+/// accessors plus a censored scan of still-waiting jobs. Queued and
+/// preempted jobs contribute their wait-so-far, so a starving class is
+/// visible *before* its jobs ever schedule — the property the hard
+/// anti-starvation bound depends on. Samples are sorted before the
+/// percentile, so the store's hash-order iteration cannot perturb the
+/// result.
+pub fn collect_signals(now: u64, metrics: &Metrics, store: &JobStore) -> AdaptSignals {
+    let t0 = now.saturating_sub(ADAPT_WINDOW_MS);
+    let mut waits: [Vec<f64>; Priority::NUM_CLASSES] = Default::default();
+    for (c, w) in waits.iter_mut().enumerate() {
+        *w = metrics.class_wait_samples_between(c, t0, now);
+    }
+    for j in store.iter() {
+        if matches!(j.phase, JobPhase::Queued | JobPhase::Preempted) {
+            waits[j.spec.priority.class_index()].push(j.waiting_ms(now) as f64);
+        }
+    }
+    let mut class_p99_wait_ms = [0.0; Priority::NUM_CLASSES];
+    for (c, w) in waits.iter_mut().enumerate() {
+        w.sort_by(|a, b| a.partial_cmp(b).expect("waits are finite"));
+        class_p99_wait_ms[c] = percentile_sorted(w, 0.99);
+    }
+    AdaptSignals {
+        gar: metrics.gar_avg_between(t0, now),
+        gfr: metrics.gfr_avg_between(t0, now),
+        class_p99_wait_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled_cfg() -> AdaptConfig {
+        AdaptConfig {
+            enabled: true,
+            seed: 7,
+            jwtd_bound_ms: [6 * 3_600_000; Priority::NUM_CLASSES],
+            ..AdaptConfig::default()
+        }
+    }
+
+    fn sig(gar: f64, gfr: f64, p99_h: f64) -> AdaptSignals {
+        AdaptSignals {
+            gar,
+            gfr,
+            class_p99_wait_ms: [p99_h * 3_600_000.0; Priority::NUM_CLASSES],
+        }
+    }
+
+    #[test]
+    fn default_is_disabled_identity() {
+        let c = WeightController::new(AdaptConfig::default());
+        assert!(!c.enabled());
+        assert!(c.overlay().is_zero());
+    }
+
+    #[test]
+    fn packing_axis_steps_and_clamps() {
+        let mut c = WeightController::new(enabled_cfg());
+        // High fragmentation: one quantum per tick up to the clamp.
+        for i in 1..=7 {
+            c.tick(&sig(0.9, 0.5, 0.0));
+            let expect = i.min(5);
+            assert_eq!(c.overlay().pack_bias, expect as f32 * PACK_STEP);
+        }
+        assert_eq!(c.stats.pack_shifts, 5);
+        // Low fragmentation on a busy cluster: walk down past zero.
+        for _ in 0..12 {
+            c.tick(&sig(0.9, 0.0, 0.0));
+        }
+        assert_eq!(c.overlay().pack_bias, -5.0 * PACK_STEP);
+    }
+
+    #[test]
+    fn idle_cluster_never_gets_spread_bias() {
+        let mut c = WeightController::new(enabled_cfg());
+        for _ in 0..10 {
+            c.tick(&sig(0.1, 0.0, 0.0));
+        }
+        assert_eq!(c.overlay().pack_bias, 0.0);
+    }
+
+    #[test]
+    fn dead_band_holds_the_axis() {
+        let mut c = WeightController::new(enabled_cfg());
+        c.tick(&sig(0.9, 0.5, 0.0));
+        let level = c.overlay().pack_bias;
+        assert!(level > 0.0);
+        // Inside the band: no movement either way.
+        for _ in 0..5 {
+            c.tick(&sig(0.9, 0.06, 0.0));
+        }
+        assert_eq!(c.overlay().pack_bias, level);
+    }
+
+    #[test]
+    fn fairness_escalates_on_bound_breach_and_releases_under_half() {
+        let mut c = WeightController::new(enabled_cfg());
+        // p99 of 7h > 6h bound: escalate.
+        c.tick(&sig(0.9, 0.06, 7.0));
+        assert_eq!(c.overlay().fairness, FAIR_STEP);
+        assert_eq!(c.stats.escalations, 1);
+        // 4h is inside the (3h, 6h] hysteresis band: hold.
+        c.tick(&sig(0.9, 0.06, 4.0));
+        assert_eq!(c.overlay().fairness, FAIR_STEP);
+        // 2h < bound/2: release back to zero.
+        c.tick(&sig(0.9, 0.06, 2.0));
+        assert_eq!(c.overlay().fairness, 0.0);
+        assert_eq!(c.stats.releases, 1);
+    }
+
+    #[test]
+    fn unbounded_classes_are_ignored() {
+        let mut c = WeightController::new(AdaptConfig {
+            jwtd_bound_ms: [0; Priority::NUM_CLASSES],
+            ..enabled_cfg()
+        });
+        c.tick(&sig(0.9, 0.06, 100.0));
+        assert_eq!(c.overlay().fairness, 0.0);
+        assert_eq!(c.stats.escalations, 0);
+    }
+
+    #[test]
+    fn fairness_clamps_at_max() {
+        let mut c = WeightController::new(enabled_cfg());
+        for _ in 0..20 {
+            c.tick(&sig(0.9, 0.06, 100.0));
+        }
+        assert_eq!(c.overlay().fairness, 8.0 * FAIR_STEP);
+        assert_eq!(c.stats.escalations, 8);
+    }
+
+    #[test]
+    fn same_signal_sequence_replays_the_same_trajectory() {
+        let seq: Vec<AdaptSignals> = (0..50)
+            .map(|i| sig(0.5 + 0.4 * ((i % 3) as f64 / 2.0), (i % 7) as f64 * 0.04, (i % 11) as f64))
+            .collect();
+        let run = || {
+            let mut c = WeightController::new(enabled_cfg());
+            let overlays: Vec<WeightOverlay> = seq.iter().map(|s| c.tick(s)).collect();
+            (overlays, c.stats)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn fingerprint_tracks_seed_and_trajectory() {
+        let mut a = WeightController::new(enabled_cfg());
+        let mut b = WeightController::new(AdaptConfig {
+            seed: 8,
+            ..enabled_cfg()
+        });
+        for _ in 0..3 {
+            a.tick(&sig(0.9, 0.5, 0.0));
+            b.tick(&sig(0.9, 0.5, 0.0));
+        }
+        assert_ne!(a.stats.fingerprint, b.stats.fingerprint);
+    }
+
+    #[test]
+    fn overlay_moves_only_the_documented_components() {
+        let o = WeightOverlay {
+            pack_bias: 0.2,
+            fairness: 0.5,
+        };
+        let mut w = [0.0f32; NUM_COMPONENTS];
+        o.apply_node(&mut w);
+        assert_eq!(w[0], 0.2);
+        assert_eq!(w[1], -0.2);
+        assert_eq!(w[2], 0.5);
+        assert_eq!(w[3], -0.25);
+        // Topology, colocation, zone and NVLink are never shifted.
+        assert_eq!(&w[4..], &[0.0; 4]);
+        let mut g = [0.0f32; GROUP_COMPONENTS];
+        o.apply_group(&mut g);
+        assert_eq!(g[0], 0.5);
+        assert_eq!(g[1], -0.25);
+        assert_eq!(&g[2..], &[0.0; 4]);
+    }
+}

@@ -7,6 +7,7 @@
 //! the pure-Rust [`NativeBackend`] or the AOT-compiled XLA artifact
 //! (`runtime::XlaBackend`) — both consume identical feature matrices.
 
+pub mod adapt;
 pub mod defrag;
 pub mod device_alloc;
 pub mod features;
@@ -23,6 +24,7 @@ use crate::cluster::state::{ClusterState, PodPlacement};
 use crate::job::spec::{JobKind, JobSpec, PlacementStrategy, TypedDemand};
 use crate::qsch::{PlaceFailure, Placer};
 
+use adapt::{AdaptConfig, AdaptSignals, WeightController, WeightOverlay};
 use features::{group_features, job_descriptor, node_features, NODE_F};
 use plan::PlanBuilder;
 use score::{
@@ -84,6 +86,15 @@ pub struct RschConfig {
     /// crossings. Topology-agnostic strategies (zero `w[W_TOPO]`) are
     /// digest-invariant to this flag.
     pub topo_blind: bool,
+    /// Adaptive weight-controller tunables (`--adapt`). Disabled by
+    /// default: the scorer reads the frozen hand-tuned tables untouched.
+    pub adapt: AdaptConfig,
+    /// Current controller output, applied on top of the static tables by
+    /// [`RschConfig::node_w`] / [`RschConfig::group_w`]. Written only by
+    /// [`Rsch::adapt_tick`] in the single-threaded QSCH phase; shard and
+    /// parallel workers inherit it through their cloned config, so every
+    /// worker scores with the same vector.
+    pub overlay: WeightOverlay,
 }
 
 impl Default for RschConfig {
@@ -98,6 +109,8 @@ impl Default for RschConfig {
             indexed_candidates: true,
             gang_scoring: GangScoring::PooledIncremental,
             topo_blind: false,
+            adapt: AdaptConfig::default(),
+            overlay: WeightOverlay::default(),
         }
     }
 }
@@ -119,6 +132,8 @@ impl RschConfig {
             indexed_candidates: false,
             gang_scoring: GangScoring::PerPodRescan,
             topo_blind: false,
+            adapt: AdaptConfig::default(),
+            overlay: WeightOverlay::default(),
         }
     }
 
@@ -134,7 +149,47 @@ impl RschConfig {
             indexed_candidates: false,
             gang_scoring: GangScoring::PerPodRescan,
             topo_blind: false,
+            adapt: AdaptConfig::default(),
+            overlay: WeightOverlay::default(),
         }
+    }
+
+    /// Node weight row for a strategy/phase: the frozen hand-tuned table,
+    /// plus the controller overlay when adaptation is live. First-fit is
+    /// exempt — its all-zero row *is* its semantics (lowest feasible
+    /// node id), and a packing bias would silently turn it into a scorer.
+    pub fn node_w(
+        &self,
+        strategy: PlacementStrategy,
+        phase: Phase,
+        large: bool,
+    ) -> [f32; score::NUM_COMPONENTS] {
+        let mut w = node_weights(strategy, phase, large);
+        if self.adapt.enabled
+            && !self.overlay.is_zero()
+            && strategy != PlacementStrategy::NativeFirstFit
+        {
+            self.overlay.apply_node(&mut w);
+        }
+        w
+    }
+
+    /// Group weight row with the controller overlay (see
+    /// [`RschConfig::node_w`] for the exemptions).
+    pub fn group_w(
+        &self,
+        strategy: PlacementStrategy,
+        phase: Phase,
+        large: bool,
+    ) -> [f32; score::GROUP_COMPONENTS] {
+        let mut w = group_weights(strategy, phase, large);
+        if self.adapt.enabled
+            && !self.overlay.is_zero()
+            && strategy != PlacementStrategy::NativeFirstFit
+        {
+            self.overlay.apply_group(&mut w);
+        }
+        w
     }
 }
 
@@ -150,6 +205,11 @@ pub struct RschStats {
     pub nodes_scored: u64,
     pub groups_scored: u64,
     pub snapshot_refreshes: u64,
+    /// Weight-controller telemetry (zero in non-adaptive runs), mirrored
+    /// into the sim digest so adaptive trajectories are replay-checkable.
+    pub adapt_ticks: u64,
+    pub adapt_shifts: u64,
+    pub adapt_fingerprint: u64,
 }
 
 /// Candidate zone filter for E-Spread phases.
@@ -173,6 +233,8 @@ pub struct Rsch {
     /// Plans built by the sharded prefetch, consumed by [`Placer::place`]
     /// in QSCH's single-threaded queue order (the deterministic merge).
     plan_cache: HashMap<JobId, Vec<PodPlacement>>,
+    /// The adaptive weight controller (`--adapt`); dormant when disabled.
+    controller: WeightController,
     pub stats: RschStats,
 }
 
@@ -189,6 +251,7 @@ impl Rsch {
         let pool_groups = state.pool_groups();
         Rsch {
             snapshot: Snapshot::with_index(cfg.snapshot_mode, cfg.indexed_candidates),
+            controller: WeightController::new(cfg.adapt.clone()),
             cfg,
             backend,
             pool_groups,
@@ -196,6 +259,28 @@ impl Rsch {
             plan_cache: HashMap::new(),
             stats: RschStats::default(),
         }
+    }
+
+    /// Is the adaptive weight controller live (`--adapt`)?
+    pub fn wants_adapt(&self) -> bool {
+        self.controller.enabled()
+    }
+
+    /// One controller tick: fold the rolling-window signals into the
+    /// quantized controller state and publish the resulting overlay to
+    /// the config every worker clones. Call once per QSCH cycle from the
+    /// single-threaded simulator loop *before* `Qsch::cycle` — never from
+    /// shard workers — so sharded digests stay byte-identical for any
+    /// `--shards N`.
+    pub fn adapt_tick(&mut self, signals: &AdaptSignals) {
+        if !self.controller.enabled() {
+            return;
+        }
+        self.cfg.overlay = self.controller.tick(signals);
+        let s = self.controller.stats;
+        self.stats.adapt_ticks = s.ticks;
+        self.stats.adapt_shifts = s.pack_shifts + s.escalations + s.releases;
+        self.stats.adapt_fingerprint = s.fingerprint;
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -324,7 +409,7 @@ impl Planner<'_> {
             return None;
         }
         let gfeat = group_features(self.snapshot, pb, groups);
-        let gw = group_weights(strategy, phase, large);
+        let gw = self.cfg.group_w(strategy, phase, large);
         let gscores = self
             .backend
             .score_groups(&gfeat, groups.len(), job, &gw);
@@ -525,6 +610,9 @@ impl Planner<'_> {
             // legacy per-pod walk, byte-identical to the pre-refactor
             // path.
             let phases = Rsch::phases(strategy, d.gpus_per_pod);
+            // The gate reads the *base* table: the adapt overlay never
+            // touches W_TOPO, so pooled-path eligibility is identical
+            // with and without `--adapt`.
             let pooled = self.cfg.gang_scoring != GangScoring::PerPodRescan
                 && !spec.needs_hbd
                 && phases.len() == 1
@@ -566,7 +654,7 @@ impl Planner<'_> {
         pool_idx: usize,
     ) -> bool {
         let job = job_descriptor(spec, demand.gpus_per_pod);
-        let w = node_weights(strategy, phase, large);
+        let w = self.cfg.node_w(strategy, phase, large);
         let incremental = self.cfg.gang_scoring == GangScoring::PooledIncremental;
 
         let mut cache: Option<GangCache> = None;
@@ -648,7 +736,7 @@ impl Planner<'_> {
             let mut region: Vec<NodeId> = Vec::new();
             if !groups.is_empty() {
                 let gfeat = group_features(self.snapshot, pb, groups);
-                let gw = group_weights(strategy, phase, large);
+                let gw = self.cfg.group_w(strategy, phase, large);
                 let gscores = self.backend.score_groups(&gfeat, groups.len(), job, &gw);
                 self.stats.groups_scored += groups.len() as u64;
                 let mut order: Vec<usize> = (0..groups.len()).collect();
@@ -768,7 +856,7 @@ impl Planner<'_> {
             return None;
         }
         let feat = node_features(self.snapshot, pb, candidates);
-        let w = node_weights(strategy, phase, large);
+        let w = self.cfg.node_w(strategy, phase, large);
         let scores = self
             .backend
             .score_nodes(&feat, candidates.len(), job, &w);
@@ -854,6 +942,19 @@ impl Placer for Rsch {
             })
             .collect();
         let mut routed: Vec<Vec<usize>> = vec![Vec::new(); num_shards];
+        // Largest free HBD per shard: a `needs_hbd` gang is only feasible
+        // on a shard with one domain big enough for the *whole* job. Pool
+        // headroom alone over-admits, and the lowest-shard-id tie-break
+        // then parks the job on a shard whose planner can never place it
+        // — instead of a shard (or the global phase) that could.
+        let mut hbd_max: Vec<u32> = vec![0; num_shards];
+        for h in &state.fabric.hbds {
+            let Some(&first) = h.nodes.first() else {
+                continue;
+            };
+            let s = self.shards.shard_of_group(state.fabric.group_of(first));
+            hbd_max[s] = hbd_max[s].max(state.hbd_free(h.id));
+        }
         for (i, spec) in specs.iter().enumerate() {
             // Aggregate the demand per pool; unknown pools go to the
             // global phase (the sequential path reports Unsatisfiable).
@@ -879,6 +980,9 @@ impl Placer for Rsch {
             }
             let mut best: Option<(usize, i64)> = None;
             for (s, rem) in remaining.iter().enumerate() {
+                if spec.needs_hbd && hbd_max[s] < spec.total_gpus() {
+                    continue;
+                }
                 if need.iter().all(|&(p, amt)| rem[p] >= amt) {
                     let headroom: i64 = rem.iter().sum();
                     let better = match best {
@@ -893,6 +997,13 @@ impl Placer for Rsch {
             if let Some((s, _)) = best {
                 for &(p, amt) in &need {
                     remaining[s][p] -= amt;
+                }
+                if spec.needs_hbd {
+                    // Conservative debit: the routed gang will consume one
+                    // domain's capacity; without this, a second HBD gang
+                    // could route onto a shard that just spent its only
+                    // adequate domain.
+                    hbd_max[s] = hbd_max[s].saturating_sub(spec.total_gpus());
                 }
                 routed[s].push(i);
             }
@@ -1630,6 +1741,127 @@ mod tests {
         // One refresh for the prefetch, none for the cached commit.
         assert_eq!(rsch.stats.snapshot_refreshes, 1);
         assert!(rsch.plan_cache.is_empty());
+    }
+
+    /// Hand-place `gpus` devices on one node (bigger sibling of `filler`
+    /// for shaping per-shard headroom exactly).
+    fn fill_node(state: &mut ClusterState, id: u64, node: u32, gpus: u8) {
+        use crate::cluster::ids::PodId;
+        use crate::cluster::state::PodPlacement;
+        state
+            .commit_placements(
+                JobId(id),
+                vec![PodPlacement {
+                    pod: PodId::new(JobId(id), 0),
+                    node: NodeId(node),
+                    devices: (0..gpus).collect(),
+                    nic: 0,
+                }],
+            )
+            .unwrap();
+    }
+
+    #[test]
+    fn prefetch_routes_hbd_jobs_to_shards_with_adequate_domains() {
+        // Two superspines with 2-node (16-GPU) HBDs. Both shards hold 56
+        // free GPUs, but shard 0's domains are all nibbled (2 GPUs on one
+        // node of each), so its best free HBD is 14 GPUs — shard 1 keeps
+        // whole domains. The old routing compared pool headroom only:
+        // the tie broke to shard 0, whose planner can never place the
+        // gang, and the job fell through to the serialized global phase.
+        let mut spec = ClusterSpec::homogeneous("ss", 4, 1, 4);
+        spec.spines_per_superspine = 2;
+        spec.hbd_size = 2;
+        let mut state = ClusterBuilder::build(&spec);
+        for (k, node) in [0u32, 2, 4, 6].into_iter().enumerate() {
+            filler(&mut state, 90 + k as u64, node); // Shard 0: -2 × 4.
+        }
+        fill_node(&mut state, 94, 8, 8); // Shard 1: -8, one domain spent.
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        let mut job = train(1, 2, 8);
+        job.needs_hbd = true;
+        rsch.prefetch(&state, &[&job], 2);
+        assert!(
+            rsch.plan_cache.contains_key(&JobId(1)),
+            "the HBD-feasible shard must get the plan"
+        );
+        rsch.place(&mut state, &job).unwrap();
+        let nodes = state.nodes_of(JobId(1));
+        assert!(
+            nodes.iter().all(|&n| n.index() >= 8),
+            "gang must land in superspine 1's free domain: {nodes:?}"
+        );
+        // And the cached plan committed without a global replan.
+        assert_eq!(rsch.stats.snapshot_refreshes, 1);
+    }
+
+    #[test]
+    fn adapt_tick_publishes_overlay_and_telemetry() {
+        let state = state_2x4();
+        let cfg = RschConfig {
+            adapt: adapt::AdaptConfig {
+                enabled: true,
+                seed: 7,
+                ..adapt::AdaptConfig::default()
+            },
+            ..RschConfig::default()
+        };
+        let mut rsch = Rsch::new(cfg, &state);
+        assert!(rsch.wants_adapt());
+        // High fragmentation on a busy cluster: the packing axis moves.
+        rsch.adapt_tick(&AdaptSignals {
+            gar: 0.9,
+            gfr: 0.5,
+            ..AdaptSignals::default()
+        });
+        assert!(rsch.cfg.overlay.pack_bias > 0.0);
+        assert_eq!(rsch.stats.adapt_ticks, 1);
+        assert_eq!(rsch.stats.adapt_shifts, 1);
+        assert_ne!(rsch.stats.adapt_fingerprint, 0);
+        // The published overlay reaches the scoring rows...
+        let base = node_weights(PlacementStrategy::EBinpack, Phase::Primary, false);
+        let adapted = rsch.cfg.node_w(PlacementStrategy::EBinpack, Phase::Primary, false);
+        assert!(adapted[0] > base[0]);
+        // ...but never the topology component or first-fit semantics.
+        assert_eq!(adapted[W_TOPO], base[W_TOPO]);
+        assert_eq!(
+            rsch.cfg.node_w(PlacementStrategy::NativeFirstFit, Phase::Primary, false),
+            [0.0; score::NUM_COMPONENTS]
+        );
+    }
+
+    #[test]
+    fn disabled_controller_is_bitwise_frozen() {
+        let state = state_2x4();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        assert!(!rsch.wants_adapt());
+        rsch.adapt_tick(&AdaptSignals {
+            gar: 0.9,
+            gfr: 0.5,
+            ..AdaptSignals::default()
+        });
+        assert!(rsch.cfg.overlay.is_zero());
+        assert_eq!(rsch.stats.adapt_ticks, 0);
+        for strat in [
+            PlacementStrategy::NativeFirstFit,
+            PlacementStrategy::Binpack,
+            PlacementStrategy::EBinpack,
+            PlacementStrategy::Spread,
+            PlacementStrategy::ESpread,
+        ] {
+            for phase in [Phase::Primary, Phase::Fallback] {
+                for large in [false, true] {
+                    assert_eq!(
+                        rsch.cfg.node_w(strat, phase, large),
+                        node_weights(strat, phase, large)
+                    );
+                    assert_eq!(
+                        rsch.cfg.group_w(strat, phase, large),
+                        group_weights(strat, phase, large)
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -2,6 +2,14 @@
 //! backend. The math mirrors `python/compile/kernels/ref.py` exactly, in
 //! f32, so the native and XLA backends are interchangeable and
 //! parity-testable.
+//!
+//! The tables in [`node_weights`] / [`group_weights`] are the *frozen*
+//! hand-tuned baseline: the adaptive controller
+//! ([`adapt`](super::adapt)) never edits them — it adds a bounded
+//! [`WeightOverlay`](super::adapt::WeightOverlay) on top via
+//! [`RschConfig`](super::RschConfig)'s weight accessors, and only when
+//! `--adapt` is on. `--no-adapt` runs read these rows bitwise-unchanged
+//! (regression-pinned in the tests below and in `tests/adaptation.rs`).
 
 use crate::job::spec::PlacementStrategy;
 
@@ -403,6 +411,27 @@ mod tests {
             s[0] > s[1],
             "same-superspine must beat a core crossing despite a half-empty group: {s:?}"
         );
+    }
+
+    #[test]
+    fn frozen_table_regression() {
+        // The hand-tuned PR-5 rows are the `--no-adapt` contract: any
+        // retune must be deliberate and update this pin (and the digest
+        // goldens) in the same change.
+        use PlacementStrategy::*;
+        assert_eq!(node_weights(EBinpack, Phase::Primary, true),
+                   [1.0, 0.0, 0.0, 0.6, 1.6, 0.4, -0.5, 0.2]);
+        assert_eq!(node_weights(EBinpack, Phase::Primary, false),
+                   [1.0, 0.0, 0.6, 0.0, 0.6, 0.8, -0.3, 0.2]);
+        assert_eq!(node_weights(ESpread, Phase::Primary, false),
+                   [0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 2.0, 0.1]);
+        assert_eq!(node_weights(ESpread, Phase::Fallback, false),
+                   [1.0, 0.0, 0.6, 0.0, 0.6, 0.8, -0.5, 0.2]);
+        assert_eq!(group_weights(EBinpack, Phase::Primary, true),
+                   [0.0, 0.6, 16.0, -0.5, 0.3, 1.0]);
+        assert_eq!(group_weights(EBinpack, Phase::Primary, false),
+                   [1.0, 0.0, 0.8, -0.5, 0.3, 0.0]);
+        assert_eq!(node_weights(NativeFirstFit, Phase::Primary, true), [0.0; NUM_COMPONENTS]);
     }
 
     #[test]

@@ -141,10 +141,22 @@ impl SimOutcome {
             .set("qsch_preempt_priority", self.qsch_stats.priority_preemptions)
             .set("qsch_preempt_quota", self.qsch_stats.quota_reclaim_preemptions)
             .set("qsch_preempt_slo", self.qsch_stats.slo_pressure_preemptions)
+            .set("qsch_preempt_starvation", self.qsch_stats.starvation_preemptions)
+            .set("qsch_starvation_rescues", self.qsch_stats.starvation_rescues)
+            .set(
+                "qsch_starvation_reservations",
+                self.qsch_stats.starvation_reservations,
+            )
             .set("qsch_cancellations", self.qsch_stats.cancellations)
             .set("rsch_pods_placed", self.rsch_stats.pods_placed)
             .set("rsch_nodes_examined", self.rsch_stats.nodes_examined)
             .set("rsch_nodes_scored", self.rsch_stats.nodes_scored)
+            .set("rsch_adapt_ticks", self.rsch_stats.adapt_ticks)
+            .set("rsch_adapt_shifts", self.rsch_stats.adapt_shifts)
+            .set(
+                "rsch_adapt_fingerprint",
+                format!("{:016x}", self.rsch_stats.adapt_fingerprint),
+            )
             .set(
                 "jtted_spine_dev_mean",
                 Metrics::weighted_mean(&self.metrics.jtted_spine_summaries()),
@@ -295,6 +307,15 @@ pub fn run_with_events(
                 qsch.submit(&mut store, *spec);
             }
             Event::Cycle => {
+                // Adaptive scoring tick (single-threaded phase, before the
+                // queue walk): the controller reads rolling GAR/GFR/JWTD
+                // windows and publishes the weight overlay the sharded
+                // planners will inherit — identical for every `--shards N`.
+                if rsch.wants_adapt() {
+                    let signals =
+                        crate::rsch::adapt::collect_signals(now, &metrics, &store);
+                    rsch.adapt_tick(&signals);
+                }
                 let report = qsch.cycle(now, &mut store, state, rsch);
                 let progressed = !report.scheduled.is_empty() || !report.preempted.is_empty();
                 for &job in &report.scheduled {

@@ -1,0 +1,96 @@
+//! Integration tests for the adaptive weight controller: digest
+//! determinism across seeds and shard counts, the hard anti-starvation
+//! bound end-to-end, and the frozen `--no-adapt` baseline.
+
+use kant::config::Scale;
+use kant::experiments::{class_jwtd_p99, weight_adaptation_arm, ADAPT_JWTD_BOUND_MS};
+use kant::job::spec::{PlacementStrategy, Priority};
+use kant::rsch::score::{group_weights, node_weights, Phase};
+use kant::rsch::RschConfig;
+
+const ARRIVAL_MS: u64 = 2 * 3_600_000;
+
+fn digest(seed: u64, adapt: bool, bound_ms: u64, shards: usize) -> String {
+    weight_adaptation_arm(Scale::Small, seed, ARRIVAL_MS, adapt, bound_ms, shards)
+        .digest_json()
+        .to_string_compact()
+}
+
+#[test]
+fn adaptive_digests_deterministic_across_seeds_and_shards() {
+    // The controller updates in the single-threaded QSCH phase, so
+    // same-seed adaptive runs must be byte-identical for --shards
+    // {0, 1, 8}; different seeds must diverge (the digest is live).
+    let mut per_seed = Vec::new();
+    for seed in [3u64, 7, 11] {
+        let base = digest(seed, true, ADAPT_JWTD_BOUND_MS, 0);
+        for shards in [1usize, 8] {
+            assert_eq!(
+                base,
+                digest(seed, true, ADAPT_JWTD_BOUND_MS, shards),
+                "adaptive digest moved with thread count: seed={seed} shards={shards}"
+            );
+        }
+        per_seed.push(base);
+    }
+    assert_ne!(per_seed[0], per_seed[1], "seeds 3 and 7 must diverge");
+    assert_ne!(per_seed[1], per_seed[2], "seeds 7 and 11 must diverge");
+}
+
+#[test]
+fn anti_starvation_bound_holds_end_to_end() {
+    let out = weight_adaptation_arm(Scale::Small, 7, ARRIVAL_MS, true, ADAPT_JWTD_BOUND_MS, 0);
+    for class in 0..Priority::NUM_CLASSES {
+        let p99 = class_jwtd_p99(&out.store, out.end_ms, class);
+        assert!(
+            p99 <= ADAPT_JWTD_BOUND_MS as f64,
+            "class {class} censored p99 wait {p99} broke the {ADAPT_JWTD_BOUND_MS} ms bound"
+        );
+    }
+    assert!(out.rsch_stats.adapt_ticks > 0, "controller never ticked");
+    // The adaptive trajectory and starvation pass are both part of the
+    // digest, so divergent trajectories cannot hide behind matching
+    // job rows.
+    let d = out.digest_json().to_string_compact();
+    assert!(d.contains("rsch_adapt_fingerprint"), "{d}");
+    assert!(d.contains("qsch_starvation_rescues"), "{d}");
+}
+
+#[test]
+fn no_adapt_baseline_keeps_the_frozen_tables_and_digest() {
+    // `--no-adapt` (the default) freezes the static weight tables: a
+    // dormant controller contributes nothing to the run...
+    let out = weight_adaptation_arm(Scale::Small, 7, ARRIVAL_MS, false, 0, 0);
+    assert_eq!(out.rsch_stats.adapt_ticks, 0);
+    assert_eq!(out.rsch_stats.adapt_shifts, 0);
+    let d = out.digest_json().to_string_compact();
+    assert!(
+        d.contains("0000000000000000"),
+        "dormant controller left a fingerprint: {d}"
+    );
+    // ... and the effective weight rows are exactly the frozen statics
+    // for every strategy × phase × size combination.
+    let cfg = RschConfig::default();
+    for strat in [
+        PlacementStrategy::NativeFirstFit,
+        PlacementStrategy::Binpack,
+        PlacementStrategy::EBinpack,
+        PlacementStrategy::Spread,
+        PlacementStrategy::ESpread,
+    ] {
+        for phase in [Phase::Primary, Phase::Fallback] {
+            for large in [false, true] {
+                assert_eq!(
+                    cfg.node_w(strat, phase, large),
+                    node_weights(strat, phase, large),
+                    "{strat:?}/{phase:?}/large={large} node row drifted off the frozen table"
+                );
+                assert_eq!(
+                    cfg.group_w(strat, phase, large),
+                    group_weights(strat, phase, large),
+                    "{strat:?}/{phase:?}/large={large} group row drifted off the frozen table"
+                );
+            }
+        }
+    }
+}

@@ -684,6 +684,50 @@ fn preemption_never_loses_jobs() {
 }
 
 #[test]
+fn requeue_aging_never_reorders_across_base_priority_classes() {
+    // Requeue aging boosts a job inside its base class only
+    // (`Priority::aged` clamps at the class ceiling), so however many
+    // evict/requeue rounds a job survives — with arbitrary accumulated
+    // boosts, far past any cap the scheduler would apply — the global
+    // queue order must still serve every HIGH-class entry before any
+    // NORMAL-class entry before any LOW-class entry.
+    use kant::qsch::queue::{QueueEntry, TenantQueues};
+
+    prop::check(40, |rng| {
+        let mut queues = TenantQueues::new();
+        let n = rng.range_inclusive(1, 60);
+        for id in 1..=n {
+            let base = *rng
+                .choose(&[Priority::LOW, Priority::NORMAL, Priority::HIGH])
+                .unwrap();
+            let boost = rng.below(32) as u8;
+            let aged = base.aged(boost);
+            prop_assert!(
+                aged.class_index() == base.class_index(),
+                "aged({boost}) moved {base:?} across a class boundary to {aged:?}"
+            );
+            queues.push(QueueEntry {
+                job: JobId(id),
+                tenant: TenantId(rng.below(4) as u32),
+                priority: aged,
+                submit_ms: rng.below(3_600_000),
+                total_gpus: rng.range_inclusive(1, 64) as u32,
+            });
+        }
+        let order = queues.global_order();
+        for w in order.windows(2) {
+            prop_assert!(
+                w[0].priority.class_index() >= w[1].priority.class_index(),
+                "aged entry reordered across classes: {:?} served before {:?}",
+                w[0].priority,
+                w[1].priority
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn strict_fifo_never_reorders_same_priority() {
     // Under Strict FIFO, same-priority jobs must be *scheduled* in
     // submission order.

@@ -12,15 +12,15 @@ use kant::rsch::Rsch;
 use kant::sim::run;
 
 /// One full simulate run through the unified builder, horizon truncated
-/// for test runtime, digested to the golden-gate JSON string.
-fn digest(
+/// for test runtime.
+fn outcome(
     scale: Scale,
     seed: u64,
     elastic: bool,
     faults: FaultPreset,
     shards: usize,
     arrival_ms: u64,
-) -> String {
+) -> kant::sim::SimOutcome {
     let opts = SimOptions::for_scale(scale)
         .seed(seed)
         .elastic(elastic)
@@ -40,6 +40,18 @@ fn digest(
     let mut qsch = Qsch::new(qsch, env.ledger);
     let mut rsch = Rsch::new(rsch, &state);
     run(&mut state, &mut qsch, &mut rsch, jobs, &sim)
+}
+
+/// Same, digested to the golden-gate JSON string.
+fn digest(
+    scale: Scale,
+    seed: u64,
+    elastic: bool,
+    faults: FaultPreset,
+    shards: usize,
+    arrival_ms: u64,
+) -> String {
+    outcome(scale, seed, elastic, faults, shards, arrival_ms)
         .digest_json()
         .to_string_compact()
 }
@@ -78,6 +90,32 @@ fn small_sharded_digests_track_the_seed() {
     let a = digest(Scale::Small, 3, false, FaultPreset::None, 8, SMALL_ARRIVAL_MS);
     let b = digest(Scale::Small, 4, false, FaultPreset::None, 8, SMALL_ARRIVAL_MS);
     assert_ne!(a, b, "different seeds must diverge");
+}
+
+#[test]
+fn fault_requeue_meets_prefetch_in_flight_thread_invariantly() {
+    // The interleaving the blanket storm arms never pinned down: a
+    // fault-storm eviction requeues aged gangs into the same cycles
+    // whose candidate batches the sharded prefetch is routing. First
+    // prove the scenario is real on the shards = 1 arm (prefetch is on
+    // for every shards >= 1): evictions happened AND jobs were requeued
+    // into prefetching cycles. Then shards = 8 must replay it
+    // byte-for-byte.
+    let base = outcome(Scale::Small, 13, false, FaultPreset::Storm, 1, SMALL_ARRIVAL_MS);
+    assert!(
+        base.metrics.reliability.fault_evictions > 0,
+        "storm arm never evicted — the scenario is vacuous"
+    );
+    assert!(
+        base.qsch_stats.requeues > 0,
+        "no eviction requeue ever landed in a prefetching cycle"
+    );
+    let sharded = outcome(Scale::Small, 13, false, FaultPreset::Storm, 8, SMALL_ARRIVAL_MS);
+    assert_eq!(
+        base.digest_json().to_string_compact(),
+        sharded.digest_json().to_string_compact(),
+        "fault-requeue + prefetch interleaving moved with thread count"
+    );
 }
 
 #[test]
