@@ -306,6 +306,84 @@ fn bench_adapt_cycle(b: &mut Bench, adaptive: bool) {
     );
 }
 
+/// Moldable admission pass: the same 64-job QSCH cycle at the xlarge
+/// (10k-GPU) preset with every multi-pod gang declaring a 3-rung shape
+/// ladder and `enable_moldable` on — the per-cycle cost of the
+/// O(shapes) pool-headroom probes the mold pass runs in front of
+/// placement. On an empty fabric every gang keeps its full shape, so
+/// the delta vs the adapt-static row is pure probe overhead.
+fn bench_moldable_cycle(b: &mut Bench) {
+    use kant::cluster::tenant::{QuotaLedger, QuotaMode};
+    use kant::job::spec::GangShape;
+    use kant::job::store::JobStore;
+    use kant::qsch::policy::QschConfig;
+    use kant::qsch::Qsch;
+
+    let mut state = ClusterBuilder::build(&ClusterSpec::train10000());
+    let mut ledger = QuotaLedger::new(1, 1, QuotaMode::Shared);
+    ledger.set_limit(TenantId(0), GpuTypeId(0), state.total_gpus());
+    let mut qsch = Qsch::new(
+        QschConfig {
+            enable_moldable: true,
+            enable_shrink: true,
+            ..QschConfig::default()
+        },
+        ledger,
+    );
+    let mut store = JobStore::new();
+    let mut rsch = Rsch::new(RschConfig::default(), &state);
+    let n = state.nodes.len();
+    let batch = 64usize;
+    let mut id = 1u64;
+    let mut now = 0u64;
+    b.run_throughput(
+        &format!("qsch-cycle-batch64/moldable/{n}nodes"),
+        batch as f64,
+        || {
+            for k in 0..batch {
+                let replicas = match k % 8 {
+                    0 => 16, // 128-GPU gang.
+                    1 | 2 => 4,
+                    _ => 1,
+                };
+                let mut spec = JobSpec::homogeneous(
+                    JobId(id),
+                    TenantId(0),
+                    JobKind::Training,
+                    GpuTypeId(0),
+                    replicas,
+                    8,
+                )
+                .with_times(now, 3_600_000);
+                if replicas > 1 {
+                    spec = spec.with_shapes(vec![
+                        GangShape {
+                            replicas,
+                            throughput: 1.0,
+                        },
+                        GangShape {
+                            replicas: replicas / 2,
+                            throughput: 0.45,
+                        },
+                        GangShape {
+                            replicas: (replicas / 4).max(1),
+                            throughput: 0.2,
+                        },
+                    ]);
+                }
+                id += 1;
+                qsch.submit(&mut store, spec);
+            }
+            let r = qsch.cycle(now, &mut store, &mut state, &mut rsch);
+            now += 1_000;
+            for jid in r.scheduled {
+                state.release_job(jid).unwrap();
+            }
+        },
+    );
+    eprintln!("   [moldable] shape_molds={}", qsch.stats.shape_molds);
+}
+
 /// §3.1 multi-instance parallel planning throughput.
 fn bench_parallel(b: &mut Bench, threads: usize) {
     let mut state = make_state(32);
@@ -412,6 +490,11 @@ fn main() {
     println!("== adaptive weight controller: xlarge preset ==");
     bench_adapt_cycle(&mut b, false);
     bench_adapt_cycle(&mut b, true);
+
+    // Moldable admission pass: O(shapes) headroom probes in front of
+    // placement, on laddered versions of the same 64-job batch.
+    println!("== moldable shape-selection pass: xlarge preset ==");
+    bench_moldable_cycle(&mut b);
 
     // Seed/refresh a perf baseline when requested. From the package root:
     //   BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench sched_cycle

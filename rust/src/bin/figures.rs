@@ -6,7 +6,7 @@
 //!   ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15
 //!        table1 ablation-espread ablation-defrag ablation-index
 //!        elastic-inference fault-tolerance topology-stress
-//!        weight-adaptation all
+//!        weight-adaptation moldable-gangs all
 //!   (fig10 covers 10-12; fig13 covers 13-14; snapshot/two-level ablations
 //!    live in `cargo bench`.)
 
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
             "fig2", "fig3", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
             "fig10", "fig13", "fig15", "ablation-espread", "ablation-defrag",
             "ablation-index", "elastic-inference", "fault-tolerance", "topology-stress",
-            "weight-adaptation",
+            "weight-adaptation", "moldable-gangs",
         ]
         .into_iter()
         .map(String::from)
@@ -103,6 +103,7 @@ fn main() -> anyhow::Result<()> {
             "fault-tolerance" => exp::fault_tolerance(seed),
             "topology-stress" => exp::topology_stress(scale, seed),
             "weight-adaptation" => exp::weight_adaptation(seed),
+            "moldable-gangs" => exp::moldable_gangs(seed),
             other => {
                 eprintln!("unknown figure id: {other}");
                 continue;
@@ -121,4 +122,4 @@ figures — regenerate the paper's tables and figures
 usage: figures [--scale small|paper|xlarge|xxlarge] [--seed N] [--out DIR] <id>... | all
 ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15 table1 \
 ablation-espread ablation-defrag ablation-index elastic-inference fault-tolerance \
-topology-stress weight-adaptation";
+topology-stress weight-adaptation moldable-gangs";

@@ -122,6 +122,7 @@ pub struct SimOptions {
     xla_scorer: bool,
     adapt: bool,
     jwtd_bound_ms: u64,
+    moldable: bool,
 }
 
 impl SimOptions {
@@ -148,6 +149,7 @@ impl SimOptions {
             xla_scorer: false,
             adapt: false,
             jwtd_bound_ms: 0,
+            moldable: false,
         }
     }
 
@@ -262,6 +264,18 @@ impl SimOptions {
         self
     }
 
+    /// Moldable & malleable gangs (`--moldable`): half the generated
+    /// multi-replica training gangs declare a shape ladder, RSCH's
+    /// shape-selection pass may re-shape them at admission, and
+    /// SLO-pressure / fault victims with a spare rung shrink instead of
+    /// being evicted. Off (the default) no job carries shapes, no extra
+    /// workload RNG draws happen, and every pre-moldable run replays
+    /// byte-identically.
+    pub fn moldable(mut self, moldable: bool) -> Self {
+        self.moldable = moldable;
+        self
+    }
+
     pub fn wants_xla(&self) -> bool {
         self.xla_scorer
     }
@@ -302,6 +316,8 @@ impl SimOptions {
             // keeps the starvation pass disabled.
             max_jwtd_p99_ms: [self.jwtd_bound_ms;
                 crate::job::spec::Priority::NUM_CLASSES],
+            enable_moldable: self.moldable,
+            enable_shrink: self.moldable,
             ..QschConfig::default()
         };
         let mut rsch = RschConfig::default();
@@ -359,6 +375,9 @@ impl SimOptions {
         };
         if self.elastic {
             env.workload.elastic_frac = 0.7;
+        }
+        if self.moldable {
+            env.workload.moldable_frac = 0.5;
         }
         // Generous grace past the arrival horizon so in-flight jobs drain.
         sim.horizon_ms = env.horizon_ms + 24 * 3_600_000;
@@ -525,6 +544,30 @@ mod tests {
         assert!(SimOptions::for_scale(Scale::Small)
             .adapt(true)
             .shards(8)
+            .configs()
+            .is_ok());
+    }
+
+    #[test]
+    fn moldable_knob_maps_onto_qsch_and_workload() {
+        // Defaults: both passes off, no ladder generation.
+        let setup = SimOptions::for_scale(Scale::Small).build().unwrap();
+        assert!(!setup.qsch.enable_moldable);
+        assert!(!setup.qsch.enable_shrink);
+        assert_eq!(setup.env.workload.moldable_frac, 0.0);
+        // --moldable: mold pass + malleable shrink + ladder generation.
+        let setup = SimOptions::for_scale(Scale::Small)
+            .moldable(true)
+            .build()
+            .unwrap();
+        assert!(setup.qsch.enable_moldable);
+        assert!(setup.qsch.enable_shrink);
+        assert!((setup.env.workload.moldable_frac - 0.5).abs() < 1e-9);
+        // Composes with the sharded core and fault injection.
+        assert!(SimOptions::for_scale(Scale::Small)
+            .moldable(true)
+            .shards(8)
+            .faults(FaultPreset::Storm)
             .configs()
             .is_ok());
     }

@@ -1451,6 +1451,215 @@ pub fn weight_adaptation(seed: u64) -> String {
     s
 }
 
+// ---------------------------------------------------------------------
+// Moldable & malleable gangs: the SAME oversubscribed fragmented mix —
+// diurnal inference services (the SLO-pressure source) plus LOW tidal
+// training gangs that all declare a shape ladder and checkpoint nothing
+// — run under three flag products. Only the scheduler flags differ, so
+// the fixed arm is a true control: a fixed-arm eviction restarts a gang
+// from scratch, while the malleable arm shrinks it one rung and keeps
+// its progress.
+// ---------------------------------------------------------------------
+pub struct MoldableComparison {
+    /// Ladders present in the specs, both passes off.
+    pub fixed: SimOutcome,
+    /// Admission-time shape selection only.
+    pub moldable: SimOutcome,
+    /// Shape selection + malleable shrink under SLO/fault pressure.
+    pub malleable: SimOutcome,
+}
+
+/// Which moldable/malleable flag product an arm runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MoldableMode {
+    Fixed,
+    Moldable,
+    Malleable,
+}
+
+/// One arm of the moldable comparison. Public so the integration tests
+/// can replay a single arm at different `--shards` values and compare
+/// digests byte-for-byte (the mold/shrink decisions live in QSCH's
+/// single-threaded phase, so every worker count must agree).
+pub fn moldable_gangs_arm(
+    seed: u64,
+    days: f64,
+    mode: MoldableMode,
+    shards: usize,
+) -> SimOutcome {
+    use crate::cluster::builder::{ClusterBuilder, ClusterSpec};
+    use crate::cluster::ids::{JobId, TenantId};
+    use crate::cluster::tenant::{QuotaLedger, QuotaMode};
+    use crate::job::spec::{CheckpointPolicy, ElasticService, GangShape, JobKind, JobSpec};
+    use crate::job::workload::tidal_training_stream;
+    use crate::sim::elastic::ElasticConfig;
+    use crate::util::rng::Pcg32;
+
+    let horizon = (days * 24.0 * 3_600_000.0) as u64;
+    let day = ElasticService::DAY_MS;
+
+    // Diurnal SLO-pressure source: the same curve family as the elastic
+    // experiment — morning scale-ups must reclaim capacity from the
+    // tidal backlog, which is exactly when victims shrink (or, in the
+    // control, are evicted).
+    let mut rng = Pcg32::seed_from_u64(seed ^ 0x301d);
+    let mut jobs: Vec<JobSpec> = (0..12u64)
+        .map(|k| {
+            let max = 8 + (k % 3) as u32 * 4; // Peaks of 8 / 12 / 16.
+            let min = (max / 4).max(1);
+            let curve = ElasticService {
+                min_replicas: min,
+                max_replicas: max,
+                phase_ms: rng.below(4 * 3_600_000),
+                amplitude: rng.uniform(0.8, 1.0),
+                period_ms: day,
+            };
+            let submit = rng.below(30 * 60_000);
+            JobSpec::homogeneous(
+                JobId(k + 1),
+                TenantId(0),
+                JobKind::Inference,
+                GpuTypeId(0),
+                max,
+                1,
+            )
+            .with_times(submit, horizon.saturating_sub(submit))
+            .with_elastic(curve)
+        })
+        .collect();
+
+    // Oversubscribed tidal mix: LOW 4-pod × 8-GPU gangs with NO
+    // checkpoints, every spec carrying the same sub-linear ladder in
+    // every arm. Rung throughputs sit below the linear fraction, so a
+    // shrunk gang pays a real efficiency premium (more GPU-time for the
+    // same work) — the experiment's claim is that this premium still
+    // beats restarting from scratch.
+    jobs.extend(
+        tidal_training_stream(
+            seed,
+            1_000,
+            TenantId(1),
+            GpuTypeId(0),
+            (days * 32.0).max(1.0) as usize,
+            4,
+            8,
+            horizon.saturating_sub(3 * 3_600_000).max(1),
+            6 * 3_600_000,
+        )
+        .into_iter()
+        .map(|mut j| {
+            j.checkpoint = CheckpointPolicy::None;
+            j.with_shapes(vec![
+                GangShape {
+                    replicas: 4,
+                    throughput: 1.0,
+                },
+                GangShape {
+                    replicas: 2,
+                    throughput: 0.45,
+                },
+                GangShape {
+                    replicas: 1,
+                    throughput: 0.20,
+                },
+            ])
+        }),
+    );
+    jobs.sort_by_key(|j| j.submit_ms);
+
+    let mut spec = ClusterSpec::homogeneous("moldable", 2, 4, 4); // 32 nodes.
+    spec.inference_zone_frac = 0.25;
+    let mut state = ClusterBuilder::build(&spec);
+    let mut ledger = QuotaLedger::new(2, 1, QuotaMode::Shared);
+    ledger.set_limit(TenantId(0), GpuTypeId(0), state.total_gpus());
+    ledger.set_limit(TenantId(1), GpuTypeId(0), state.total_gpus());
+    let qsch_cfg = QschConfig {
+        enable_moldable: mode != MoldableMode::Fixed,
+        enable_shrink: mode == MoldableMode::Malleable,
+        batch_shards: shards,
+        ..QschConfig::default()
+    };
+    let mut qsch = Qsch::new(qsch_cfg, ledger);
+    let mut rsch = Rsch::new(RschConfig::default(), &state);
+    let cfg = SimConfig {
+        horizon_ms: horizon + 12 * 3_600_000, // Drain window.
+        elastic: ElasticConfig::enabled(),
+        ..SimConfig::default()
+    };
+    run(&mut state, &mut qsch, &mut rsch, jobs, &cfg)
+}
+
+/// Run the three arms over `days` simulated days (deterministic per
+/// seed).
+pub fn run_moldable_gangs(seed: u64, days: f64) -> MoldableComparison {
+    MoldableComparison {
+        fixed: moldable_gangs_arm(seed, days, MoldableMode::Fixed, 0),
+        moldable: moldable_gangs_arm(seed, days, MoldableMode::Moldable, 0),
+        malleable: moldable_gangs_arm(seed, days, MoldableMode::Malleable, 0),
+    }
+}
+
+/// The `figures moldable-gangs` report.
+pub fn moldable_gangs(seed: u64) -> String {
+    let c = run_moldable_gangs(seed, 2.0);
+    // Discarded work across ALL eviction paths (SLO pressure included),
+    // in GPU-hours — what the reliability counter only tracks for
+    // faults.
+    let lost_gpu_h = |o: &SimOutcome| -> f64 {
+        o.store
+            .iter()
+            .map(|j| j.lost_work_ms.saturating_mul(j.spec.total_gpus() as u64))
+            .sum::<u64>() as f64
+            / 3_600_000.0
+    };
+    let row = |name: &str, o: &SimOutcome| -> Vec<String> {
+        vec![
+            name.to_string(),
+            pct(o.metrics.gar_avg()),
+            pct(o.metrics.goodput_fraction()),
+            fmt_ms(class_jwtd_p99(&o.store, o.end_ms, 0)),
+            o.qsch_stats.shape_molds.to_string(),
+            o.qsch_stats.shape_shrinks.to_string(),
+            o.qsch_stats.slo_pressure_preemptions.to_string(),
+            format!("{:.0}", lost_gpu_h(o)),
+            format!("{}/{}", o.metrics.jobs_finished, o.metrics.jobs_submitted),
+        ]
+    };
+    let rows = vec![
+        row("fixed", &c.fixed),
+        row("moldable", &c.moldable),
+        row("moldable+malleable", &c.malleable),
+    ];
+    let mut s = table(
+        "Moldable & malleable gangs — fixed vs moldable vs moldable+malleable",
+        &[
+            "arm",
+            "GAR",
+            "goodput-frac",
+            "p99-wait LOW",
+            "molds",
+            "shrinks",
+            "slo-evict",
+            "lost-GPU-h",
+            "done/sub",
+        ],
+        &rows,
+    );
+    s.push_str(&format!(
+        "\nmoldable+malleable vs fixed: goodput fraction {:+.2}%, LOW p99 wait \
+         {:+.1} h, GAR {:+.2}%\n(admission molding slides queued gangs down their \
+         ladder only as far as fragmentation forces; under morning SLO pressure \
+         malleable victims give up one rung — keeping their progress — where the \
+         control restarts them from scratch)\n",
+        (c.malleable.metrics.goodput_fraction() - c.fixed.metrics.goodput_fraction()) * 100.0,
+        (class_jwtd_p99(&c.malleable.store, c.malleable.end_ms, 0)
+            - class_jwtd_p99(&c.fixed.store, c.fixed.end_ms, 0))
+            / 3_600_000.0,
+        (c.malleable.metrics.gar_avg() - c.fixed.metrics.gar_avg()) * 100.0,
+    ));
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1751,5 +1960,76 @@ mod tests {
         let b = jwtd_buckets(&store, 10_000);
         assert_eq!(b.summaries()[1].1.count, 1);
         assert_eq!(b.summaries()[1].1.mean, 10_000.0);
+    }
+
+    #[test]
+    fn moldable_malleable_beats_fixed_on_goodput_at_no_gar_cost() {
+        let c = run_moldable_gangs(7, 1.0);
+        let gf = |o: &SimOutcome| o.metrics.goodput_fraction();
+        let p99 = |o: &SimOutcome| class_jwtd_p99(&o.store, o.end_ms, 0);
+        // The control never molds or shrinks even though every spec
+        // carries a ladder.
+        assert_eq!(c.fixed.qsch_stats.shape_molds, 0);
+        assert_eq!(c.fixed.qsch_stats.shape_shrinks, 0);
+        // Admission molding fires under fragmentation; shrink only in
+        // the malleable arm.
+        assert!(c.moldable.qsch_stats.shape_molds > 0);
+        assert_eq!(c.moldable.qsch_stats.shape_shrinks, 0);
+        assert!(
+            c.malleable.qsch_stats.shape_shrinks > 0,
+            "morning SLO pressure should shrink at least one tidal gang"
+        );
+        // The acceptance bar: moldable+malleable beats fixed on
+        // realized-throughput-weighted goodput and LOW-class JWTD p99,
+        // at no GAR cost.
+        assert!(
+            gf(&c.malleable) > gf(&c.fixed),
+            "malleable goodput fraction {} must beat fixed {}",
+            gf(&c.malleable),
+            gf(&c.fixed)
+        );
+        assert!(
+            p99(&c.malleable) < p99(&c.fixed),
+            "malleable LOW p99 wait {} must beat fixed {}",
+            p99(&c.malleable),
+            p99(&c.fixed)
+        );
+        assert!(
+            c.malleable.metrics.gar_avg() >= c.fixed.metrics.gar_avg() - 0.02,
+            "malleable GAR {} must not cost vs fixed {}",
+            c.malleable.metrics.gar_avg(),
+            c.fixed.metrics.gar_avg()
+        );
+    }
+
+    #[test]
+    fn moldable_gangs_deterministic_per_seed() {
+        let digest = |c: &MoldableComparison| {
+            [&c.fixed, &c.moldable, &c.malleable]
+                .iter()
+                .map(|o| o.digest_json().to_string_compact())
+                .collect::<Vec<_>>()
+        };
+        let a = run_moldable_gangs(11, 0.5);
+        let b = run_moldable_gangs(11, 0.5);
+        assert_eq!(digest(&a), digest(&b));
+        let c = run_moldable_gangs(12, 0.5);
+        assert_ne!(digest(&a), digest(&c));
+    }
+
+    #[test]
+    fn moldable_digests_shard_invariant() {
+        // Shape selection and shrink both live in the single-threaded
+        // QSCH phase (mold pass runs before the prefetch fan-out), so
+        // every worker count must produce the identical schedule: same
+        // seed => byte-identical digests for --shards {0, 1, 8}.
+        let digest = |shards: usize| {
+            moldable_gangs_arm(7, 0.5, MoldableMode::Malleable, shards)
+                .digest_json()
+                .to_string_compact()
+        };
+        let d0 = digest(0);
+        assert_eq!(d0, digest(1), "--shards 1 digest diverged with molding on");
+        assert_eq!(d0, digest(8), "--shards 8 digest diverged with molding on");
     }
 }

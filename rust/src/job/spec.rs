@@ -173,6 +173,21 @@ pub enum CheckpointPolicy {
     None,
 }
 
+/// One feasible parallelism shape of a moldable gang: a replica count and
+/// the job throughput realized at that count, relative to the full shape
+/// (shape 0, throughput 1.0). The scheduler may admit the job at any
+/// declared shape (moldable admission) and shrink a running tidal/LOW job
+/// down the ladder instead of evicting it (malleable runtime). Shapes are
+/// declared in strictly decreasing replica order; wall-clock duration at
+/// shape `k` is `duration_ms / throughput`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GangShape {
+    /// Pod replicas at this shape (GPUs = replicas × gpus_per_pod).
+    pub replicas: u32,
+    /// Job throughput relative to shape 0, in (0, 1].
+    pub throughput: f64,
+}
+
 /// Resource demand for one GPU model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TypedDemand {
@@ -227,6 +242,12 @@ pub struct JobSpec {
     /// Progress persistence across restarts (fault evictions and
     /// preemptions): what an eviction costs in redone work.
     pub checkpoint: CheckpointPolicy,
+    /// Feasible parallelism shapes of a moldable gang, in strictly
+    /// decreasing replica order; `shapes[0]` is the full (preferred)
+    /// shape with throughput 1.0 and must match the submitted `demands`.
+    /// Empty (the default) = fixed-shape job; the moldable/malleable
+    /// machinery never touches it.
+    pub shapes: Vec<GangShape>,
 }
 
 impl JobSpec {
@@ -276,6 +297,7 @@ impl JobSpec {
             service: None,
             tidal: false,
             checkpoint: CheckpointPolicy::Continuous,
+            shapes: Vec::new(),
         }
     }
 
@@ -325,6 +347,62 @@ impl JobSpec {
     /// GPUs per replica of an elastic service (sole-demand services).
     pub fn gpus_per_replica(&self) -> u32 {
         self.demands.first().map(|d| d.gpus_per_pod).unwrap_or(0)
+    }
+
+    /// Declare the moldable shape ladder and pin the demands to the full
+    /// shape (`shapes[0]`). Only meaningful on sole-demand gang jobs; the
+    /// ladder must be strictly decreasing in replicas with shape 0 at
+    /// throughput 1.0.
+    pub fn with_shapes(mut self, shapes: Vec<GangShape>) -> JobSpec {
+        debug_assert!(
+            shapes.windows(2).all(|w| w[0].replicas > w[1].replicas),
+            "shape ladder must be strictly decreasing"
+        );
+        if let (Some(first), [d]) = (shapes.first(), self.demands.as_mut_slice()) {
+            d.replicas = first.replicas;
+        }
+        self.shapes = shapes;
+        self
+    }
+
+    /// A moldable job declares at least two feasible shapes.
+    pub fn moldable(&self) -> bool {
+        self.shapes.len() > 1
+    }
+
+    /// Index of the shape the demands currently realize (replica-count
+    /// match); `None` for fixed-shape jobs. Replica counts are strictly
+    /// decreasing, so the match is unique.
+    pub fn active_shape(&self) -> Option<usize> {
+        let r = self.total_replicas();
+        self.shapes.iter().position(|s| s.replicas == r)
+    }
+
+    /// Throughput of the active shape relative to the full shape (1.0 for
+    /// fixed-shape jobs and for the full shape itself).
+    pub fn active_throughput(&self) -> f64 {
+        self.active_shape()
+            .map(|k| self.shapes[k].throughput)
+            .unwrap_or(1.0)
+    }
+
+    /// Total GPUs of the *full* shape — the job's work content measured in
+    /// full-shape GPU-time. Equals `total_gpus()` for fixed-shape jobs.
+    pub fn base_total_gpus(&self) -> u32 {
+        match (self.shapes.first(), self.demands.first()) {
+            (Some(s), Some(d)) => s.replicas * d.gpus_per_pod,
+            _ => self.total_gpus(),
+        }
+    }
+
+    /// Rewrite the demands to shape `k` of the ladder. Sole-demand jobs
+    /// only (the generator never declares shapes on multi-type jobs).
+    pub fn apply_shape(&mut self, k: usize) {
+        debug_assert!(k < self.shapes.len());
+        let replicas = self.shapes[k].replicas;
+        if let [d] = self.demands.as_mut_slice() {
+            d.replicas = replicas;
+        }
     }
 }
 
@@ -431,6 +509,46 @@ mod tests {
         for t in [0, ElasticService::DAY_MS / 2] {
             assert_eq!(flat.demand_replicas(t), 6);
         }
+    }
+
+    #[test]
+    fn shape_ladder_pins_demands_and_tracks_active_shape() {
+        let ladder = vec![
+            GangShape {
+                replicas: 4,
+                throughput: 1.0,
+            },
+            GangShape {
+                replicas: 2,
+                throughput: 0.55,
+            },
+            GangShape {
+                replicas: 1,
+                throughput: 0.3,
+            },
+        ];
+        let mut j = spec().with_shapes(ladder);
+        assert!(j.moldable());
+        assert_eq!(j.total_replicas(), 4);
+        assert_eq!(j.active_shape(), Some(0));
+        assert_eq!(j.base_total_gpus(), 32);
+        assert!((j.active_throughput() - 1.0).abs() < 1e-12);
+        j.apply_shape(1);
+        assert_eq!(j.total_replicas(), 2);
+        assert_eq!(j.total_gpus(), 16);
+        assert_eq!(j.active_shape(), Some(1));
+        assert!((j.active_throughput() - 0.55).abs() < 1e-12);
+        // Work content stays measured at the full shape.
+        assert_eq!(j.base_total_gpus(), 32);
+    }
+
+    #[test]
+    fn fixed_shape_jobs_report_no_shape_state() {
+        let j = spec();
+        assert!(!j.moldable());
+        assert_eq!(j.active_shape(), None);
+        assert!((j.active_throughput() - 1.0).abs() < 1e-12);
+        assert_eq!(j.base_total_gpus(), j.total_gpus());
     }
 
     #[test]

@@ -51,6 +51,9 @@ pub struct Job {
     pub epoch: u32,
     /// Number of requeue events (scheduling failures).
     pub requeues: u32,
+    /// Number of malleable shape changes (moldable admission downgrades
+    /// plus runtime shrinks) this job has gone through.
+    pub shape_changes: u32,
     /// Remaining work (ms of runtime still owed); preemption pauses it.
     pub remaining_ms: u64,
     /// Completed work (ms) persisted by the last checkpoint — what an
@@ -81,6 +84,7 @@ impl Job {
             migrations: 0,
             epoch: 0,
             requeues: 0,
+            shape_changes: 0,
             remaining_ms,
             checkpointed_ms: 0,
             lost_work_ms: 0,
@@ -179,6 +183,31 @@ impl Job {
         self.epoch += 1;
         self.phase = Phase::Preempted;
         self.running_ms = None;
+    }
+
+    /// Moldable/malleable shape change from throughput `thr_old` to
+    /// `thr_new` — a coordinated re-shard, NOT an eviction. Progress of a
+    /// running segment is credited first, then the remaining wall-clock
+    /// is rescaled to the new shape's relative throughput (half the
+    /// throughput = twice the wall-clock still owed). Unlike
+    /// [`Job::mark_preempted`], no checkpoint rollback applies and
+    /// `lost_work_ms` does not grow: malleable frameworks re-shard from
+    /// live state. A resource-holding job moves to `Preempted` so the
+    /// caller can release + requeue it at the new shape; a queued job
+    /// (moldable admission) just has its owed wall-clock rescaled.
+    pub fn mark_reshaped(&mut self, now: u64, thr_old: f64, thr_new: f64) {
+        if let Some(start) = self.running_ms {
+            let ran = now.saturating_sub(start);
+            self.remaining_ms = self.remaining_ms.saturating_sub(ran);
+        }
+        let scale = thr_old.max(1e-9) / thr_new.max(1e-9);
+        self.remaining_ms = ((self.remaining_ms as f64) * scale).ceil() as u64;
+        self.shape_changes += 1;
+        if self.holds_resources() {
+            self.epoch += 1;
+            self.phase = Phase::Preempted;
+            self.running_ms = None;
+        }
     }
 
     /// Defragmentation migration (§3.3.3): the pod restarts elsewhere with
@@ -298,6 +327,36 @@ mod tests {
         j.mark_preempted(400); // Another 100ms ran, paying down penalty.
         assert_eq!(j.remaining_ms, 6_800);
         assert_eq!(j.lost_work_ms, 0);
+    }
+
+    #[test]
+    fn reshape_rescales_wall_clock_without_losing_work() {
+        // Queued job molded at admission to a half-throughput shape: the
+        // owed wall-clock doubles, nothing else changes.
+        let mut q = job();
+        q.mark_reshaped(0, 1.0, 0.5);
+        assert_eq!(q.phase, Phase::Queued);
+        assert_eq!(q.remaining_ms, 10_000);
+        assert_eq!(q.shape_changes, 1);
+        assert_eq!(q.lost_work_ms, 0);
+
+        // Running job shrunk mid-flight: the 2s already run are credited,
+        // the remaining 3s rescale to 6s at half throughput, and the job
+        // is handed back for requeue — with zero lost work (contrast
+        // `naive_restart_loses_all_progress`).
+        let mut j = job();
+        j.spec = j.spec.clone().with_checkpoint(crate::job::spec::CheckpointPolicy::None);
+        j.mark_admitted();
+        j.mark_scheduled(200);
+        j.mark_running(200);
+        j.mark_reshaped(2_200, 1.0, 0.5);
+        assert_eq!(j.remaining_ms, 6_000);
+        assert_eq!(j.phase, Phase::Preempted);
+        assert_eq!(j.lost_work_ms, 0);
+        assert_eq!(j.preemptions, 0);
+        assert_eq!(j.shape_changes, 1);
+        j.mark_requeued();
+        assert_eq!(j.phase, Phase::Queued);
     }
 
     #[test]

@@ -11,7 +11,8 @@ use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
 use crate::util::json::Json;
 
 use super::spec::{
-    CheckpointPolicy, ElasticService, JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand,
+    CheckpointPolicy, ElasticService, GangShape, JobKind, JobSpec, PlacementStrategy, Priority,
+    TypedDemand,
 };
 
 /// Serialize one job to a JSON object.
@@ -51,6 +52,18 @@ pub fn job_to_json(j: &JobSpec) -> Json {
         CheckpointPolicy::None => {
             o.set("checkpoint", "none");
         }
+    }
+    if !j.shapes.is_empty() {
+        let shapes: Vec<Json> = j
+            .shapes
+            .iter()
+            .map(|s| {
+                let mut m = Json::obj();
+                m.set("replicas", s.replicas).set("throughput", s.throughput);
+                m
+            })
+            .collect();
+        o.set("shapes", shapes);
     }
     let demands: Vec<Json> = j
         .demands
@@ -125,6 +138,28 @@ pub fn job_from_json(v: &Json) -> Result<JobSpec> {
         }),
         None => None,
     };
+    let shapes = match v.get("shapes").and_then(Json::as_arr) {
+        Some(arr) => {
+            let mut shapes = Vec::with_capacity(arr.len());
+            for s in arr {
+                shapes.push(GangShape {
+                    replicas: s
+                        .get("replicas")
+                        .and_then(Json::as_u64)
+                        .context("shape.replicas")? as u32,
+                    throughput: s
+                        .get("throughput")
+                        .and_then(Json::as_f64)
+                        .context("shape.throughput")?,
+                });
+            }
+            if !shapes.windows(2).all(|w| w[0].replicas > w[1].replicas) {
+                bail!("shape ladder must be strictly decreasing in replicas");
+            }
+            shapes
+        }
+        None => Vec::new(),
+    };
     Ok(JobSpec {
         id: JobId(get("id")?.as_u64().context("id")?),
         tenant: TenantId(get("tenant")?.as_u64().context("tenant")? as u32),
@@ -146,6 +181,7 @@ pub fn job_from_json(v: &Json) -> Result<JobSpec> {
             }
             None => CheckpointPolicy::Continuous,
         },
+        shapes,
     })
 }
 
@@ -253,6 +289,80 @@ mod tests {
             let j = base.clone().with_checkpoint(policy);
             assert_eq!(job_from_json(&job_to_json(&j)).unwrap(), j);
         }
+    }
+
+    #[test]
+    fn json_roundtrip_shapes() {
+        let moldable = JobSpec::homogeneous(
+            JobId(30),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            4,
+            8,
+        )
+        .with_tidal()
+        .with_shapes(vec![
+            GangShape {
+                replicas: 4,
+                throughput: 1.0,
+            },
+            GangShape {
+                replicas: 2,
+                throughput: 0.55,
+            },
+            GangShape {
+                replicas: 1,
+                throughput: 0.3,
+            },
+        ]);
+        let back = job_from_json(&job_to_json(&moldable)).unwrap();
+        assert_eq!(back, moldable);
+        assert!(back.moldable());
+        // Fixed-shape jobs omit the field entirely — old traces parse
+        // unchanged and new traces of fixed jobs stay byte-identical.
+        let fixed =
+            JobSpec::homogeneous(JobId(31), TenantId(0), JobKind::Training, GpuTypeId(0), 2, 8);
+        assert!(!job_to_json(&fixed).to_string_compact().contains("shapes"));
+        assert_eq!(job_from_json(&job_to_json(&fixed)).unwrap(), fixed);
+    }
+
+    #[test]
+    fn non_decreasing_shape_ladder_rejected() {
+        let moldable = JobSpec::homogeneous(
+            JobId(32),
+            TenantId(0),
+            JobKind::Training,
+            GpuTypeId(0),
+            4,
+            8,
+        )
+        .with_shapes(vec![
+            GangShape {
+                replicas: 4,
+                throughput: 1.0,
+            },
+            GangShape {
+                replicas: 2,
+                throughput: 0.55,
+            },
+        ]);
+        let mut j = job_to_json(&moldable);
+        // Corrupt the ladder so it is no longer strictly decreasing.
+        let shapes: Vec<Json> = vec![
+            {
+                let mut m = Json::obj();
+                m.set("replicas", 2u32).set("throughput", 0.55);
+                m
+            },
+            {
+                let mut m = Json::obj();
+                m.set("replicas", 4u32).set("throughput", 1.0);
+                m
+            },
+        ];
+        j.set("shapes", shapes);
+        assert!(job_from_json(&j).is_err());
     }
 
     #[test]

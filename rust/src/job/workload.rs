@@ -9,7 +9,9 @@
 use crate::cluster::ids::{GpuTypeId, JobId, TenantId};
 use crate::util::rng::Pcg32;
 
-use super::spec::{ElasticService, JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand};
+use super::spec::{
+    ElasticService, GangShape, JobKind, JobSpec, PlacementStrategy, Priority, TypedDemand,
+};
 
 /// One size class of the Figure-2 distribution.
 #[derive(Debug, Clone, Copy)]
@@ -59,6 +61,12 @@ pub struct WorkloadConfig {
     /// phase/amplitude drawn from the seeded RNG). 0 = classic static
     /// services (all pre-elastic presets are unchanged).
     pub elastic_frac: f64,
+    /// Fraction of multi-replica training gangs that declare a *moldable*
+    /// shape ladder (halving replica counts with sub-linear per-step
+    /// throughput, drawn from the seeded RNG). 0 = every job is
+    /// fixed-shape and **no extra RNG draws happen**, so all pre-moldable
+    /// presets replay byte-identically per seed.
+    pub moldable_frac: f64,
 }
 
 impl WorkloadConfig {
@@ -92,6 +100,7 @@ impl WorkloadConfig {
             high_priority_frac: 0.05,
             max_gpus: 0,
             elastic_frac: 0.0,
+            moldable_frac: 0.0,
         }
     }
 
@@ -118,6 +127,7 @@ impl WorkloadConfig {
             high_priority_frac: 0.1,
             max_gpus: 8,
             elastic_frac: 0.0,
+            moldable_frac: 0.0,
         }
     }
 
@@ -128,6 +138,16 @@ impl WorkloadConfig {
         WorkloadConfig {
             elastic_frac: 0.7,
             ..WorkloadConfig::paper_inference(seed)
+        }
+    }
+
+    /// Moldable training mix: the `paper_training` jobs, but half of the
+    /// multi-replica gangs declare a shrink ladder (the Arena-style
+    /// adaptive-parallelism workload behind `--moldable`).
+    pub fn paper_moldable_training(seed: u64) -> WorkloadConfig {
+        WorkloadConfig {
+            moldable_frac: 0.5,
+            ..WorkloadConfig::paper_training(seed)
         }
     }
 
@@ -281,6 +301,36 @@ impl WorkloadGen {
         let id = JobId(self.next_id);
         self.next_id += 1;
 
+        // Moldable shape ladder: a slice of multi-replica training gangs
+        // declares halving fallback shapes with sub-linear per-GPU
+        // efficiency (shrinking is never free). Drawn last, and only when
+        // the mix enables moldability — zero RNG draws otherwise, keeping
+        // every pre-moldable preset byte-identical per seed.
+        let shapes = if self.cfg.moldable_frac > 0.0
+            && kind == JobKind::Training
+            && replicas >= 2
+            && self.rng.chance(self.cfg.moldable_frac)
+        {
+            let mut ladder = vec![GangShape {
+                replicas,
+                throughput: 1.0,
+            }];
+            let mut r = replicas;
+            let mut thr = 1.0;
+            while ladder.len() < 3 && r >= 2 {
+                let next = r / 2;
+                thr *= (next as f64 / r as f64) * self.rng.uniform(0.85, 0.95);
+                ladder.push(GangShape {
+                    replicas: next,
+                    throughput: thr,
+                });
+                r = next;
+            }
+            ladder
+        } else {
+            Vec::new()
+        };
+
         JobSpec {
             id,
             tenant,
@@ -300,6 +350,7 @@ impl WorkloadGen {
             service: None,
             checkpoint: crate::job::spec::CheckpointPolicy::Continuous,
             tidal: false,
+            shapes,
         }
     }
 
@@ -549,6 +600,39 @@ mod tests {
         let phases: std::collections::HashSet<u64> =
             elastic.iter().map(|j| j.elastic.unwrap().phase_ms).collect();
         assert!(phases.len() > 1);
+    }
+
+    #[test]
+    fn moldable_mix_generates_strictly_decreasing_ladders() {
+        let a = WorkloadGen::new(WorkloadConfig::paper_moldable_training(37)).generate(4_000);
+        let b = WorkloadGen::new(WorkloadConfig::paper_moldable_training(37)).generate(4_000);
+        assert_eq!(a, b, "moldable generation must replay per seed");
+        let moldable: Vec<&JobSpec> = a.iter().filter(|j| j.moldable()).collect();
+        assert!(!moldable.is_empty());
+        for j in &moldable {
+            assert!(j.gang && j.kind == JobKind::Training);
+            assert_eq!(j.shapes[0].replicas, j.total_replicas(), "shape 0 is the full gang");
+            assert!((j.shapes[0].throughput - 1.0).abs() < 1e-12);
+            for w in j.shapes.windows(2) {
+                assert!(w[0].replicas > w[1].replicas, "ladder strictly decreasing");
+                assert!(w[0].throughput > w[1].throughput);
+                // Sub-linear scaling: shrinking always costs efficiency.
+                let linear = w[1].replicas as f64 / w[0].replicas as f64;
+                assert!(w[1].throughput / w[0].throughput < linear);
+            }
+        }
+        // Roughly half of the eligible (multi-replica training) gangs opt in.
+        let candidates = a
+            .iter()
+            .filter(|j| j.kind == JobKind::Training && j.total_replicas() >= 2)
+            .count();
+        let frac = moldable.len() as f64 / candidates.max(1) as f64;
+        assert!((frac - 0.5).abs() < 0.1, "moldable frac {frac}");
+        // Nothing else ever carries shapes.
+        assert!(a
+            .iter()
+            .filter(|j| !(j.kind == JobKind::Training && j.total_replicas() >= 2))
+            .all(|j| j.shapes.is_empty()));
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! `kant` — the leader entrypoint / CLI.
 //!
 //! Subcommands:
-//!   simulate   run a workload (generated or trace) on a cluster preset
-//!   gen-trace  generate and save a workload trace (JSONL)
-//!   validate   smoke-check the AOT artifacts through the PJRT runtime
+//!   simulate     run a workload (generated or trace) on a cluster preset
+//!   gen-trace    generate and save a workload trace (JSONL)
+//!   validate     smoke-check the AOT artifacts through the PJRT runtime
+//!   bench-check  validate / diff benchkit baseline documents (the CI
+//!                bench-regression gate, also runnable locally)
 //!
 //! The figures harness lives in the separate `figures` binary.
 
@@ -28,6 +30,7 @@ fn main() -> Result<()> {
         Some("simulate") => simulate(&args[1..]),
         Some("gen-trace") => gen_trace(&args[1..]),
         Some("validate") => validate(&args[1..]),
+        Some("bench-check") => bench_check(&args[1..]),
         Some("-h" | "--help") | None => {
             println!("{HELP}");
             Ok(())
@@ -46,9 +49,11 @@ usage:
                 [--trace FILE] [--xla-scorer] [--flat] [--deep-snapshot]
                 [--no-index] [--topo-blind] [--elastic] [--faults]
                 [--checkpoint-min N] [--shards N] [--adapt]
-                [--jwtd-bound MIN] [--digest FILE]
+                [--jwtd-bound MIN] [--moldable] [--digest FILE]
   kant gen-trace [--seed N] [--jobs N] [--mix training|inference] --out FILE
   kant validate [--artifacts DIR]
+  kant bench-check validate FILE
+  kant bench-check diff BASELINE FRESH [--tolerance X]
 
 Every flag is a thin adapter onto the typed `SimOptions` builder
 (kant::config::SimOptions) — the single constructor of the scheduler and
@@ -87,8 +92,25 @@ flags:
                    gets a starvation-preemption pass and reserved capacity
                    (quota is never bypassed). Also drives the --adapt
                    fairness axis. 0 = off
+  --moldable       moldable & malleable gangs: half the generated
+                   multi-replica training gangs declare a shape ladder
+                   (e.g. 512 pods @ 1.0x -> 256 @ 0.55x), RSCH picks the
+                   largest rung the current fragmentation can hold before
+                   each placement walk, and SLO-pressure / fault victims
+                   with a spare rung shrink in place of eviction. Shape
+                   choice and shrinks are seeded and digest-identical for
+                   any --shards; off = no job carries shapes and legacy
+                   runs replay byte-identically
   --digest FILE    write the deterministic run digest (JSON) to FILE — the
                    golden-gate CI job diffs two same-seed digests
+
+bench-check (the CI bench-regression gate):
+  validate FILE    hard-check a benchkit-v1 document: schema tag, non-empty
+                   results, non-empty unique scenario names, positive
+                   mean_ns and iters
+  diff BASE FRESH  validate both, then compare per scenario name: missing
+                   or renamed scenarios fail, and a fresh mean_ns beyond
+                   --tolerance (default 3.0) x baseline fails
 ";
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
@@ -138,6 +160,7 @@ fn simulate(args: &[String]) -> Result<()> {
     .checkpoint_min(flag_value(args, "--checkpoint-min").unwrap_or("30").parse()?)
     .shards(flag_value(args, "--shards").unwrap_or("0").parse()?)
     .adapt(has_flag(args, "--adapt"))
+    .moldable(has_flag(args, "--moldable"))
     .jwtd_bound_ms(
         flag_value(args, "--jwtd-bound")
             .unwrap_or("0")
@@ -268,6 +291,113 @@ fn build_rsch(
         bail!("this build has no XLA runtime; rebuild with `--features xla`");
     }
     Ok(Rsch::new(cfg, state))
+}
+
+/// `kant bench-check` — the CI bench-regression gate, also runnable
+/// locally. `validate` hard-checks one benchkit-v1 document; `diff`
+/// compares a fresh `BENCH_SCALE=small` run against the committed
+/// baseline per scenario name. The wide default tolerance (3×) absorbs
+/// shared-runner noise: the gate exists to catch order-of-magnitude
+/// regressions and lost scenarios, not jitter.
+fn bench_check(args: &[String]) -> Result<()> {
+    const USAGE: &str = "usage: kant bench-check validate FILE | \
+                         diff BASELINE FRESH [--tolerance X]";
+    match args.first().map(String::as_str) {
+        Some("validate") => {
+            let path = args.get(1).context(USAGE)?;
+            let scenarios = load_bench_doc(path)?;
+            println!("bench-check: {path} OK ({} scenarios)", scenarios.len());
+            Ok(())
+        }
+        Some("diff") => {
+            let base_path = args.get(1).context(USAGE)?;
+            let fresh_path = args.get(2).context(USAGE)?;
+            let tolerance: f64 = flag_value(args, "--tolerance").unwrap_or("3.0").parse()?;
+            anyhow::ensure!(tolerance >= 1.0, "--tolerance must be >= 1.0");
+            let base = load_bench_doc(base_path)?;
+            let fresh = load_bench_doc(fresh_path)?;
+            let mut failures: Vec<String> = Vec::new();
+            for (name, base_mean) in &base {
+                match fresh.iter().find(|(n, _)| n == name) {
+                    None => failures.push(format!(
+                        "scenario '{name}' missing from {fresh_path} — renamed or \
+                         dropped? regenerate the committed baseline"
+                    )),
+                    Some((_, fresh_mean)) => {
+                        let ratio = fresh_mean / base_mean;
+                        println!(
+                            "bench-check: {name}: {base_mean:.0} ns -> \
+                             {fresh_mean:.0} ns ({ratio:.2}x)"
+                        );
+                        if ratio > tolerance {
+                            failures.push(format!(
+                                "scenario '{name}' regressed {ratio:.2}x \
+                                 (limit {tolerance:.1}x): {base_mean:.0} ns -> \
+                                 {fresh_mean:.0} ns"
+                            ));
+                        }
+                    }
+                }
+            }
+            for (name, _) in &fresh {
+                if !base.iter().any(|(n, _)| n == name) {
+                    failures.push(format!(
+                        "scenario '{name}' is not in {base_path} — new scenarios \
+                         must land with a regenerated baseline"
+                    ));
+                }
+            }
+            if !failures.is_empty() {
+                bail!("bench-check failed:\n  {}", failures.join("\n  "));
+            }
+            println!(
+                "bench-check: {} scenarios within {tolerance:.1}x of baseline",
+                base.len()
+            );
+            Ok(())
+        }
+        _ => bail!(USAGE),
+    }
+}
+
+/// Parse and validate one benchkit-v1 document, returning each
+/// scenario's `(name, mean_ns)`.
+fn load_bench_doc(path: &str) -> Result<Vec<(String, f64)>> {
+    use kant::util::json::Json;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    match doc.get("schema").and_then(Json::as_str) {
+        Some("benchkit-v1") => {}
+        other => bail!("{path}: schema must be \"benchkit-v1\", found {other:?}"),
+    }
+    let results = doc
+        .get("results")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{path}: missing `results` array"))?;
+    if results.is_empty() {
+        bail!("{path}: empty `results` — the bench produced no scenarios");
+    }
+    let mut out: Vec<(String, f64)> = Vec::with_capacity(results.len());
+    for (i, e) in results.iter().enumerate() {
+        let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+        if name.is_empty() {
+            bail!("{path}: results[{i}] has an empty or missing `name`");
+        }
+        if out.iter().any(|(n, _)| n == name) {
+            bail!("{path}: duplicate scenario name '{name}'");
+        }
+        let mean = e.get("mean_ns").and_then(Json::as_f64).unwrap_or(-1.0);
+        if !mean.is_finite() || mean <= 0.0 {
+            bail!("{path}: scenario '{name}' needs a positive finite mean_ns");
+        }
+        let iters = e.get("iters").and_then(Json::as_f64).unwrap_or(0.0);
+        if !iters.is_finite() || iters < 1.0 {
+            bail!("{path}: scenario '{name}' needs positive iters");
+        }
+        out.push((name.to_string(), mean));
+    }
+    Ok(out)
 }
 
 fn gen_trace(args: &[String]) -> Result<()> {

@@ -80,7 +80,13 @@ impl ElasticTelemetry {
 ///
 /// * **Goodput** — GPU-time that produced surviving work: Σ over finished
 ///   jobs of `duration × GPUs`. Redone (lost) work, binding overhead and
-///   early-cancelled replicas allocate GPUs without adding goodput.
+///   early-cancelled replicas allocate GPUs without adding goodput. For
+///   moldable gangs the credit is the *base-shape* footprint
+///   (`duration × base_total_gpus`): the job's work content is fixed, so
+///   a job that ran shrunk occupies more allocated GPU-time for the same
+///   credit and [`Metrics::goodput_fraction`] becomes the
+///   realized-throughput-weighted goodput of the ISSUE — sub-linear
+///   ladder rungs show up as efficiency loss, not free capacity.
 /// * **Effective GAR** — goodput over the window's total GPU-time: the
 ///   fraction of the fleet that produced durable work
 ///   ([`Metrics::effective_gar`]).
@@ -102,6 +108,10 @@ pub struct ReliabilityTelemetry {
     pub repairs: u64,
     /// Jobs that lost their resources to a fault or health flip.
     pub fault_evictions: u64,
+    /// Fault victims that gave up a shape rung (malleable shrink) instead
+    /// of restarting — they keep their progress, so they charge no
+    /// `lost_gpu_ms` and no eviction.
+    pub fault_shrinks: u64,
     /// Work discarded by evictions, in GPU-milliseconds (what the
     /// checkpoint policy could not save).
     pub lost_gpu_ms: u64,
@@ -116,6 +126,12 @@ impl ReliabilityTelemetry {
     pub fn on_eviction(&mut self, gpus: u64, lost_ms: u64) {
         self.fault_evictions += 1;
         self.lost_gpu_ms += gpus.saturating_mul(lost_ms);
+    }
+
+    /// A fault victim shrank instead of restarting: no work lost, no
+    /// eviction — just the downgrade count for the reliability report.
+    pub fn on_shrink(&mut self) {
+        self.fault_shrinks += 1;
     }
 
     /// A job finished: credit its useful GPU-time and record how much

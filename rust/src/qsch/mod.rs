@@ -50,6 +50,17 @@ pub trait Placer {
     /// single-threaded queue order, which *is* the deterministic merge.
     /// The default does nothing (sequential placers need no warm-up).
     fn prefetch(&mut self, _state: &ClusterState, _specs: &[&JobSpec], _threads: usize) {}
+
+    /// Moldable shape selection: for each queued gang that declares a
+    /// shape ladder, pick the ladder index it should assume this cycle
+    /// (`None` = keep the current shape) given the cluster's current
+    /// fragmentation. Called in QSCH's single-threaded phase *before*
+    /// [`Placer::prefetch`], so sharded planners inherit the final shapes
+    /// and `--shards N` digests stay byte-identical. The default keeps
+    /// every shape (fixed-shape placers need no opinion).
+    fn mold_shapes(&mut self, _state: &ClusterState, specs: &[&JobSpec]) -> Vec<Option<usize>> {
+        vec![None; specs.len()]
+    }
 }
 
 /// Outcome of one scheduling cycle.
@@ -57,6 +68,9 @@ pub trait Placer {
 pub struct CycleReport {
     pub scheduled: Vec<JobId>,
     pub preempted: Vec<JobId>,
+    /// Malleable victims that shrank a shape rung instead of being
+    /// evicted — *not* preemptions: no checkpoint rollback, no lost work.
+    pub reshaped: Vec<JobId>,
     pub admission_failures: Vec<(JobId, String)>,
     pub placement_failures: Vec<JobId>,
     pub head_blocked: Option<JobId>,
@@ -85,6 +99,12 @@ pub struct QschStats {
     /// Candidates skipped mid-cycle to hold reserved capacity for a
     /// starved class head that could not be placed.
     pub starvation_reservations: u64,
+    /// Moldable queued gangs re-shaped by the admission shape-selection
+    /// pass (up or down the ladder).
+    pub shape_molds: u64,
+    /// Malleable victims that shrank one shape rung instead of being
+    /// evicted (SLO/fault pressure).
+    pub shape_shrinks: u64,
 }
 
 /// The queue-based scheduler.
@@ -212,6 +232,15 @@ impl Qsch {
     ) -> CycleReport {
         self.stats.cycles += 1;
         let mut report = CycleReport::default();
+        // ---- Moldable shape selection (single-threaded, pre-snapshot) ----
+        // The placer re-shapes queued moldable gangs against the current
+        // fragmentation picture. Runs before the candidate snapshot (so
+        // molded entries are ordered by their new footprint this cycle)
+        // and before prefetch (so sharded planners see final shapes —
+        // `--shards N` digests stay byte-identical).
+        if self.cfg.enable_moldable {
+            self.mold_pass(now, store, state, placer);
+        }
         let candidates = self.queues.global_order();
         if self.cfg.batch_shards > 0 {
             // Sharded prefetch: hand the queued batch to the placer so it
@@ -410,6 +439,120 @@ impl Qsch {
         report
     }
 
+    /// The admission shape-selection pass: hand every queued moldable
+    /// gang (in global queue order — deterministic) to the placer and
+    /// apply its picks. Re-shaped jobs rescale their owed wall-clock by
+    /// the throughput ratio and re-enter the queue ordering with their
+    /// new footprint.
+    fn mold_pass(
+        &mut self,
+        now: u64,
+        store: &mut JobStore,
+        state: &ClusterState,
+        placer: &mut dyn Placer,
+    ) {
+        let entries: Vec<QueueEntry> = self
+            .queues
+            .global_order()
+            .into_iter()
+            .filter(|e| {
+                let j = store.expect(e.job);
+                j.phase == Phase::Queued && j.spec.moldable()
+            })
+            .collect();
+        if entries.is_empty() {
+            return;
+        }
+        let specs: Vec<JobSpec> = entries
+            .iter()
+            .map(|e| store.expect(e.job).spec.clone())
+            .collect();
+        let refs: Vec<&JobSpec> = specs.iter().collect();
+        let picks = placer.mold_shapes(state, &refs);
+        debug_assert_eq!(picks.len(), refs.len(), "one pick per moldable spec");
+        for (e, pick) in entries.iter().zip(picks) {
+            let Some(k) = pick else { continue };
+            let j = store.expect_mut(e.job);
+            let old = j.spec.active_shape().unwrap_or(0);
+            if k == old || k >= j.spec.shapes.len() {
+                continue;
+            }
+            let thr_old = j.spec.active_throughput();
+            let thr_new = j.spec.shapes[k].throughput;
+            j.spec.apply_shape(k);
+            j.mark_reshaped(now, thr_old, thr_new);
+            self.stats.shape_molds += 1;
+            // The queue key includes the gang size: re-insert with the
+            // molded footprint (priority/submit keep their slot).
+            self.queues.remove(e.job);
+            self.queues.push(QueueEntry {
+                total_gpus: store.expect(e.job).spec.total_gpus(),
+                ..*e
+            });
+        }
+    }
+
+    /// Shrink a malleable victim one rung down its shape ladder instead
+    /// of evicting it: the full old footprint is released and refunded
+    /// (the capacity a beneficiary needs either way), the owed wall-clock
+    /// rescales by the throughput ratio, and the job requeues at the
+    /// smaller shape — **no checkpoint rollback, no lost work**: this
+    /// models a coordinated re-shard, not a kill. Only moldable
+    /// tidal/LOW-class resource holders with a rung left are eligible;
+    /// returns `false` (caller should evict) otherwise.
+    fn shrink_victim(
+        &mut self,
+        store: &mut JobStore,
+        state: &mut ClusterState,
+        job: JobId,
+        now: u64,
+    ) -> bool {
+        if !self.cfg.enable_shrink {
+            return false;
+        }
+        let j = store.expect(job);
+        let low_class = j.spec.priority.class_index() == 0;
+        if !(j.spec.moldable() && (j.spec.tidal || low_class) && j.holds_resources()) {
+            return false;
+        }
+        let Some(k) = j.spec.active_shape() else {
+            return false; // Off-ladder size (elastic drift): evict normally.
+        };
+        if k + 1 >= j.spec.shapes.len() {
+            return false; // Ladder exhausted.
+        }
+        state
+            .release_job(job)
+            .expect("shrink victim holds resources");
+        self.ledger.refund(job).expect("shrink victim was charged");
+        let j = store.expect_mut(job);
+        let thr_old = j.spec.shapes[k].throughput;
+        let thr_new = j.spec.shapes[k + 1].throughput;
+        j.mark_reshaped(now, thr_old, thr_new);
+        j.spec.apply_shape(k + 1);
+        j.mark_requeued();
+        self.stats.shape_shrinks += 1;
+        self.requeue(store, job);
+        true
+    }
+
+    /// Fault-pressure victim entry point (the simulator's path): shrink a
+    /// malleable victim if eligible, otherwise evict + requeue. Returns
+    /// whether the job was shrunk (`false` ⇒ a real eviction happened).
+    pub fn shrink_or_evict_and_requeue(
+        &mut self,
+        store: &mut JobStore,
+        state: &mut ClusterState,
+        job: JobId,
+        now: u64,
+    ) -> bool {
+        if self.shrink_victim(store, state, job, now) {
+            return true;
+        }
+        self.evict_and_requeue(store, state, job, now);
+        false
+    }
+
     /// Record/refresh head blockage; returns the blocked-since timestamp.
     fn note_head_blocked(&mut self, job: JobId, now: u64) -> u64 {
         match self.head_blocked {
@@ -528,19 +671,31 @@ impl Qsch {
             return false; // Resources exist; placement failed for another
                           // reason (fragmentation) — preemption won't help.
         }
-        evict(state, store, &mut self.ledger, &victims, now);
+        // Malleable victims shrink one rung instead of dying (SLO
+        // pressure only — the reclamation that targets tidal training).
+        // The full old footprint is freed either way, so the
+        // beneficiary's capacity math is untouched.
+        let mut evicted: Vec<JobId> = Vec::new();
         for &v in &victims {
+            if kind == PreemptKind::SloPressure && self.shrink_victim(store, state, v, now) {
+                report.reshaped.push(v);
+            } else {
+                evicted.push(v);
+            }
+        }
+        evict(state, store, &mut self.ledger, &evicted, now);
+        for &v in &evicted {
             self.requeue(store, v);
             report.preempted.push(v);
         }
         match kind {
-            PreemptKind::Backfill => self.stats.backfill_preemptions += victims.len() as u64,
-            PreemptKind::Priority => self.stats.priority_preemptions += victims.len() as u64,
+            PreemptKind::Backfill => self.stats.backfill_preemptions += evicted.len() as u64,
+            PreemptKind::Priority => self.stats.priority_preemptions += evicted.len() as u64,
             PreemptKind::SloPressure => {
-                self.stats.slo_pressure_preemptions += victims.len() as u64
+                self.stats.slo_pressure_preemptions += evicted.len() as u64
             }
             PreemptKind::Starvation => {
-                self.stats.starvation_preemptions += victims.len() as u64
+                self.stats.starvation_preemptions += evicted.len() as u64
             }
             PreemptKind::QuotaReclaim => {}
         }
@@ -612,7 +767,7 @@ mod tests {
     use crate::cluster::ids::{GpuTypeId, NodeId, PodId, TenantId};
     use crate::cluster::state::PodPlacement;
     use crate::cluster::tenant::QuotaMode;
-    use crate::job::spec::JobKind;
+    use crate::job::spec::{GangShape, JobKind};
 
     const G: GpuTypeId = GpuTypeId(0);
 
@@ -1030,6 +1185,180 @@ mod tests {
         assert_eq!(stats.starvation_reservations, 1);
         assert_eq!(stats.starvation_rescues, 0);
         assert_eq!(used, 24);
+    }
+
+    /// First-fit placer whose shape-selection pass always proposes the
+    /// same ladder index for every moldable spec.
+    struct MoldFirstFit {
+        pick: Option<usize>,
+    }
+
+    impl Placer for MoldFirstFit {
+        fn place(
+            &mut self,
+            state: &mut ClusterState,
+            spec: &JobSpec,
+        ) -> Result<(), PlaceFailure> {
+            FirstFit.place(state, spec)
+        }
+
+        fn mold_shapes(
+            &mut self,
+            _state: &ClusterState,
+            specs: &[&JobSpec],
+        ) -> Vec<Option<usize>> {
+            vec![self.pick; specs.len()]
+        }
+    }
+
+    fn ladder_2_to_1() -> Vec<GangShape> {
+        vec![
+            GangShape {
+                replicas: 2,
+                throughput: 1.0,
+            },
+            GangShape {
+                replicas: 1,
+                throughput: 0.55,
+            },
+        ]
+    }
+
+    #[test]
+    fn mold_pass_reshapes_queued_gangs_before_placement() {
+        let cfg = QschConfig {
+            enable_moldable: true,
+            ..QschConfig::default()
+        };
+        let (mut q, mut store, mut state) = setup(cfg);
+        // 24 of 32 GPUs pinned: the full 4-pod shape cannot fit.
+        q.submit(&mut store, job(1, 8, 3).with_times(0, 1_000_000));
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        // A moldable 4-pod gang with a 1-pod fallback at 0.3× throughput.
+        q.submit(
+            &mut store,
+            job(2, 8, 4).with_times(10, 100_000).with_shapes(vec![
+                GangShape {
+                    replicas: 4,
+                    throughput: 1.0,
+                },
+                GangShape {
+                    replicas: 1,
+                    throughput: 0.3,
+                },
+            ]),
+        );
+        let mut p = MoldFirstFit { pick: Some(1) };
+        let r = q.cycle(100, &mut store, &mut state, &mut p);
+        assert_eq!(r.scheduled, vec![JobId(2)]);
+        assert_eq!(q.stats.shape_molds, 1);
+        let j = store.expect(JobId(2));
+        assert_eq!(j.spec.active_shape(), Some(1));
+        assert_eq!(j.spec.total_gpus(), 8, "molded to the 1-pod shape");
+        assert_eq!(j.spec.base_total_gpus(), 32, "work content unchanged");
+        assert_eq!(j.shape_changes, 1);
+        // Owed wall-clock rescales by thr_old / thr_new.
+        assert_eq!(j.remaining_ms, (100_000f64 * (1.0 / 0.3)).ceil() as u64);
+        assert_eq!(state.allocated_gpus(), 32);
+        // Moldable off: the same placer pick is never solicited.
+        let (mut q, mut store, mut state) = setup(QschConfig::default());
+        q.submit(
+            &mut store,
+            job(2, 8, 4).with_times(10, 100_000).with_shapes(vec![
+                GangShape {
+                    replicas: 4,
+                    throughput: 1.0,
+                },
+                GangShape {
+                    replicas: 1,
+                    throughput: 0.3,
+                },
+            ]),
+        );
+        let r = q.cycle(100, &mut store, &mut state, &mut MoldFirstFit { pick: Some(1) });
+        assert_eq!(r.scheduled, vec![JobId(2)]);
+        assert_eq!(q.stats.shape_molds, 0);
+        assert_eq!(store.expect(JobId(2)).spec.total_gpus(), 32);
+    }
+
+    #[test]
+    fn slo_pressure_shrinks_malleable_tidal_instead_of_evicting() {
+        let cfg = QschConfig {
+            enable_shrink: true,
+            ..QschConfig::default()
+        };
+        let (mut q, mut store, mut state) = setup(cfg);
+        // Fill the cluster with 4 malleable tidal LOW gangs (2 pods × 4).
+        for i in 1..=4 {
+            q.submit(
+                &mut store,
+                job(i, 4, 2)
+                    .with_times(0, 1_000_000)
+                    .with_priority(Priority::LOW)
+                    .with_tidal()
+                    .with_shapes(ladder_2_to_1()),
+            );
+        }
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(state.allocated_gpus(), 32);
+        // An elastic scale-up replica delta arrives: 2 single-GPU pods.
+        let mut child = job(5, 1, 2).with_times(10, 100_000);
+        child.kind = JobKind::Inference;
+        child.gang = false;
+        child.service = Some(JobId(900));
+        q.submit(&mut store, child);
+        let r = q.cycle(1_000, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.scheduled, vec![JobId(5)]);
+        // The tidal victim shrank instead of dying.
+        assert_eq!(r.reshaped.len(), 1);
+        assert!(r.preempted.is_empty());
+        assert_eq!(q.stats.shape_shrinks, 1);
+        assert_eq!(q.stats.slo_pressure_preemptions, 0);
+        let v = store.expect(r.reshaped[0]);
+        assert_eq!(v.spec.total_gpus(), 4, "one rung down the ladder");
+        assert_eq!(v.preemptions, 0, "a shrink is not a preemption");
+        assert_eq!(v.lost_work_ms, 0, "re-shard keeps all progress");
+        assert_eq!(v.shape_changes, 1);
+        assert!(q.queues.contains(v.id()));
+        // Books: victim footprint refunded, child charged.
+        assert_eq!(state.allocated_gpus(), 32 - 8 + 2);
+        // The shrunk gang re-places at its smaller shape next cycle.
+        let r = q.cycle(2_000, &mut store, &mut state, &mut FirstFit);
+        assert_eq!(r.scheduled.len(), 1);
+        assert_eq!(state.allocated_gpus(), 32 - 8 + 2 + 4);
+    }
+
+    #[test]
+    fn shrink_falls_back_to_eviction_when_ladder_exhausted() {
+        let cfg = QschConfig {
+            enable_shrink: true,
+            ..QschConfig::default()
+        };
+        let (mut q, mut store, mut state) = setup(cfg);
+        q.submit(
+            &mut store,
+            job(1, 4, 2)
+                .with_times(0, 1_000_000)
+                .with_priority(Priority::LOW)
+                .with_tidal()
+                .with_shapes(ladder_2_to_1()),
+        );
+        q.submit(&mut store, job(2, 8, 1).with_times(0, 1_000_000));
+        q.cycle(0, &mut store, &mut state, &mut FirstFit);
+        // Fault pressure: the malleable job shrinks, keeping progress.
+        assert!(q.shrink_or_evict_and_requeue(&mut store, &mut state, JobId(1), 1_000));
+        assert_eq!(store.expect(JobId(1)).spec.total_gpus(), 4);
+        assert_eq!(store.expect(JobId(1)).preemptions, 0);
+        // Re-place at the smaller shape, then hit it again: the ladder is
+        // exhausted, so this time it is a real eviction.
+        q.cycle(2_000, &mut store, &mut state, &mut FirstFit);
+        assert!(store.expect(JobId(1)).holds_resources());
+        assert!(!q.shrink_or_evict_and_requeue(&mut store, &mut state, JobId(1), 3_000));
+        assert_eq!(store.expect(JobId(1)).preemptions, 1);
+        // Fixed-shape jobs always take the eviction path.
+        assert!(!q.shrink_or_evict_and_requeue(&mut store, &mut state, JobId(2), 3_000));
+        assert_eq!(store.expect(JobId(2)).preemptions, 1);
+        assert_eq!(q.stats.shape_shrinks, 1);
     }
 
     #[test]

@@ -85,6 +85,18 @@ pub struct QschConfig {
     /// quota admission is never bypassed. 0 disables a class's bound
     /// (the default for every class).
     pub max_jwtd_p99_ms: [u64; Priority::NUM_CLASSES],
+    /// Moldable gangs (`kant simulate --moldable`): before each cycle's
+    /// placement walk, queued jobs that declare a shape ladder
+    /// ([`crate::job::spec::JobSpec::shapes`]) are handed to the placer's
+    /// shape-selection pass, which may re-shape them against the current
+    /// fragmentation picture. Off (the default) no job is ever re-shaped
+    /// and single-shape workloads replay byte-identically.
+    pub enable_moldable: bool,
+    /// Malleable shrink: SLO-pressure and fault victims that are moldable
+    /// *and* tidal/LOW-class give up one shape rung (keeping their
+    /// progress) instead of being evicted. Requires a remaining rung;
+    /// ladder-exhausted jobs fall back to ordinary eviction.
+    pub enable_shrink: bool,
 }
 
 impl Default for QschConfig {
@@ -99,6 +111,8 @@ impl Default for QschConfig {
             requeue_aging_cap: 0,
             batch_shards: 0,
             max_jwtd_p99_ms: [0; Priority::NUM_CLASSES],
+            enable_moldable: false,
+            enable_shrink: false,
         }
     }
 }

@@ -21,7 +21,11 @@ pub enum PreemptKind {
     Priority,
     QuotaReclaim,
     /// SLO-pressure reclamation: an elastic inference scale-up evicts
-    /// tidally-backfilled training to win its capacity back.
+    /// tidally-backfilled training to win its capacity back. With
+    /// `QschConfig::enable_shrink`, a moldable victim with a spare
+    /// ladder rung shrinks instead of dying (`Qsch::shrink_victim`) —
+    /// a shrink is a coordinated re-shard, not a preemption, so it is
+    /// excluded from the SLO-pressure counters.
     SloPressure,
     /// Anti-starvation rescue: a class head whose rolling p99 wait broke
     /// its `max_jwtd_p99_ms` bound evicts backfilled peers (same victim

@@ -16,7 +16,7 @@ pub mod score;
 
 use std::collections::HashMap;
 
-use crate::cluster::ids::{GroupId, JobId, NodeId};
+use crate::cluster::ids::{GpuTypeId, GroupId, JobId, NodeId};
 use crate::cluster::index::ZoneQuery;
 use crate::cluster::shard::ShardMap;
 use crate::cluster::snapshot::{Snapshot, SnapshotMode};
@@ -1080,9 +1080,119 @@ impl Placer for Rsch {
             }
         }
     }
+
+    /// Moldable shape selection (the admission half of moldable &
+    /// malleable gangs): for each queued gang with a shape ladder, pick
+    /// the *largest* rung whose footprint fits the current free-capacity
+    /// picture — maximal per-job throughput, sliding down the ladder
+    /// only as far as fragmentation forces ([`score::best_feasible_shape`]).
+    /// `None` keeps the current shape, both when the job already holds
+    /// its best rung and when not even the smallest rung fits (a
+    /// saturated cluster queues jobs at full size instead of thrashing
+    /// them to the floor).
+    ///
+    /// Cost is O(shapes) probes per job: each rung checks a virtual
+    /// pool-headroom ledger (debited in queue order, so earlier jobs
+    /// claim capacity first and the pass is batch-deterministic), a
+    /// [`plan::pod_slots`] count over the free-capacity
+    /// [`NodeIndex`](crate::cluster::index::NodeIndex) buckets (linear
+    /// snapshot scan when `indexed_candidates` is off), and — for
+    /// `needs_hbd` gangs — a whole-gang HBD-domain fit. The pick is
+    /// advisory: the E-Binpack / pooled gang scoring that follows this
+    /// pass re-verifies real feasibility, so an optimistic pick just
+    /// leaves the job queued for the next cycle.
+    ///
+    /// This runs in QSCH's single-threaded phase *before*
+    /// [`Placer::prefetch`], so shard routing and the concurrent
+    /// planners see the already-molded specs and `--shards N` digests
+    /// stay byte-identical.
+    fn mold_shapes(&mut self, state: &ClusterState, specs: &[&JobSpec]) -> Vec<Option<usize>> {
+        if specs.is_empty() {
+            return Vec::new();
+        }
+        self.snapshot.refresh(state);
+        self.stats.snapshot_refreshes += 1;
+        let mut claimed: HashMap<GpuTypeId, u64> = HashMap::new();
+        let mut picks = Vec::with_capacity(specs.len());
+        for spec in specs {
+            // Moldable gangs are sole-demand by construction
+            // (`JobSpec::with_shapes` pins the sole demand's replicas).
+            let pick = match spec.demands.as_slice() {
+                [d] if spec.moldable() => self.pick_shape(state, spec, d, &claimed),
+                _ => None,
+            };
+            if let Some(k) = pick {
+                let d = &spec.demands[0];
+                let gpus = spec.shapes[k].replicas as u64 * d.gpus_per_pod as u64;
+                *claimed.entry(d.gpu_type).or_default() += gpus;
+            } else if let [d] = spec.demands.as_slice() {
+                // Keeping the current shape still consumes headroom.
+                *claimed.entry(d.gpu_type).or_default() += spec.total_gpus() as u64;
+            }
+            picks.push(pick);
+        }
+        picks
+    }
 }
 
 impl Rsch {
+    /// One job's shape pick for [`Placer::mold_shapes`]: the first
+    /// ladder rung passing the three-part feasibility probe.
+    fn pick_shape(
+        &mut self,
+        state: &ClusterState,
+        spec: &JobSpec,
+        d: &TypedDemand,
+        claimed: &HashMap<GpuTypeId, u64>,
+    ) -> Option<usize> {
+        if d.gpus_per_pod == 0 {
+            return None;
+        }
+        let already = claimed.get(&d.gpu_type).copied().unwrap_or(0);
+        let free = (state.pool_free_for_type(d.gpu_type) as u64).saturating_sub(already);
+        let slots = self
+            .pool_pod_slots(state, d.gpu_type, d.gpus_per_pod)
+            .saturating_sub(already / d.gpus_per_pod as u64);
+        score::best_feasible_shape(&spec.shapes, |s| {
+            let gpus = s.replicas as u64 * d.gpus_per_pod as u64;
+            if gpus > free || s.replicas as u64 > slots {
+                return false;
+            }
+            if spec.needs_hbd {
+                // The whole gang must fit one HBD domain.
+                return state
+                    .fabric
+                    .hbds
+                    .iter()
+                    .any(|h| state.hbd_free(h.id) as u64 >= gpus + already);
+            }
+            true
+        })
+    }
+
+    /// How many `gpus_per_pod`-sized pod slots the pool for `gpu_type`
+    /// exposes right now. With `indexed_candidates` this walks only the
+    /// free-capacity index buckets at `free >= gpus_per_pod`; otherwise
+    /// it scans the pool's snapshot records linearly.
+    fn pool_pod_slots(&mut self, state: &ClusterState, gpu_type: GpuTypeId, gpus_per_pod: u32) -> u64 {
+        let Some(pool) = state.pools.pool_for_type(gpu_type) else {
+            return 0;
+        };
+        if self.cfg.indexed_candidates {
+            if let Some(ix) = self.snapshot.index() {
+                let mut candidates = Vec::new();
+                let mut examined = 0u64;
+                for &g in &self.pool_groups[pool.id.index()] {
+                    examined += ix.for_group(g, gpus_per_pod, ZoneQuery::Any, &mut candidates);
+                }
+                self.stats.nodes_examined += examined;
+                return plan::pod_slots(&self.snapshot, &candidates, gpus_per_pod);
+            }
+        }
+        self.stats.nodes_examined += pool.nodes.len() as u64;
+        plan::pod_slots(&self.snapshot, &pool.nodes, gpus_per_pod)
+    }
+
     /// Multi-instance parallel scheduling (§3.1 / §3.4.2 "parallel
     /// scheduling across groups"): plan many jobs concurrently against one
     /// consistent snapshot (each worker thread = one RSCH instance with
@@ -1331,6 +1441,65 @@ mod tests {
         rsch.place(&mut state, &train(2, 1, 8)).unwrap();
         // Node 0 has only 6 free → next node.
         assert_eq!(state.nodes_of(JobId(2)), vec![NodeId(1)]);
+    }
+
+    #[test]
+    fn mold_shapes_picks_largest_feasible_rung() {
+        use crate::job::spec::GangShape;
+        let mut state = state_2x4();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        let ladder = vec![
+            GangShape {
+                replicas: 8,
+                throughput: 1.0,
+            },
+            GangShape {
+                replicas: 4,
+                throughput: 0.55,
+            },
+            GangShape {
+                replicas: 2,
+                throughput: 0.3,
+            },
+        ];
+        let spec = train(1, 8, 8).with_shapes(ladder);
+        // Empty cluster: the full shape is feasible (QSCH treats a pick
+        // equal to the active shape as a no-op).
+        assert_eq!(rsch.mold_shapes(&state, &[&spec]), vec![Some(0)]);
+        // 5 of 8 nodes taken: 24 free / 3 whole-node slots — only the
+        // 2-replica rung fits.
+        rsch.place(&mut state, &train(9, 5, 8)).unwrap();
+        assert_eq!(rsch.mold_shapes(&state, &[&spec]), vec![Some(2)]);
+        // Saturated: not even the smallest rung fits → keep the shape.
+        rsch.place(&mut state, &train(10, 3, 8)).unwrap();
+        assert_eq!(rsch.mold_shapes(&state, &[&spec]), vec![None]);
+        // Fixed (ladder-less) jobs are never molded.
+        assert_eq!(rsch.mold_shapes(&state, &[&train(2, 4, 8)]), vec![None]);
+    }
+
+    #[test]
+    fn mold_ledger_serializes_the_batch_in_queue_order() {
+        use crate::job::spec::GangShape;
+        let mut state = state_2x4();
+        let mut rsch = Rsch::new(RschConfig::default(), &state);
+        let ladder = vec![
+            GangShape {
+                replicas: 4,
+                throughput: 1.0,
+            },
+            GangShape {
+                replicas: 2,
+                throughput: 0.55,
+            },
+        ];
+        let a = train(1, 4, 8).with_shapes(ladder.clone());
+        let b = train(2, 4, 8).with_shapes(ladder);
+        // 8 free nodes: both gangs keep their full 4-node shapes.
+        assert_eq!(rsch.mold_shapes(&state, &[&a, &b]), vec![Some(0), Some(0)]);
+        // 2 nodes taken → 6 slots. The earlier-queued gang claims 4 at
+        // full shape; the later one sees 2 left and slides a rung.
+        rsch.place(&mut state, &train(9, 2, 8)).unwrap();
+        assert_eq!(rsch.mold_shapes(&state, &[&a, &b]), vec![Some(0), Some(1)]);
     }
 
     #[test]

@@ -12,6 +12,26 @@ use crate::cluster::topology::{FootprintDelta, GangFootprint, Tier};
 use super::device_alloc::{select_devices, select_nic};
 use super::features::PlanView;
 
+/// How many `gpus_per_pod`-sized pod slots `nodes` currently expose under
+/// `snapshot` (healthy nodes only; a node with 8 free holds two 4-GPU
+/// pods) — the O(candidates) feasibility probe behind moldable shape
+/// selection ([`super::Rsch`]'s `mold_shapes`).
+pub fn pod_slots(
+    snapshot: &Snapshot,
+    nodes: &[NodeId],
+    gpus_per_pod: u32,
+) -> u64 {
+    if gpus_per_pod == 0 {
+        return 0;
+    }
+    nodes
+        .iter()
+        .map(|n| &snapshot.nodes[n.index()])
+        .filter(|rec| rec.healthy)
+        .map(|rec| (rec.free / gpus_per_pod) as u64)
+        .sum()
+}
+
 /// Builds a multi-pod placement incrementally.
 pub struct PlanBuilder<'a> {
     state: &'a ClusterState,
@@ -206,6 +226,24 @@ mod tests {
         assert_eq!(pb.footprint().nodes_spanned(), 1);
         // State untouched until commit.
         assert_eq!(state.node(NodeId(0)).free_gpus(), 8);
+    }
+
+    #[test]
+    fn pod_slots_counts_per_node_multiples() {
+        let (mut state, mut snap) = setup();
+        // 4 nodes × 8 GPUs: 8 slots of 4, 4 slots of 8, 0 slots of 9.
+        let nodes: Vec<NodeId> = (0..4).map(NodeId).collect();
+        assert_eq!(pod_slots(&snap, &nodes, 4), 8);
+        assert_eq!(pod_slots(&snap, &nodes, 8), 4);
+        assert_eq!(pod_slots(&snap, &nodes, 9), 0);
+        assert_eq!(pod_slots(&snap, &nodes, 0), 0);
+        // Partial allocation shrinks the count: 5 taken on node 0 leaves
+        // 3 free there — no 4-GPU slot.
+        let mut pb = PlanBuilder::new(&state, &snap, JobId(1), false);
+        assert!(pb.place_pod(NodeId(0), 5));
+        state.commit_placements(JobId(1), pb.into_plan()).unwrap();
+        snap.refresh(&state);
+        assert_eq!(pod_slots(&snap, &nodes, 4), 6);
     }
 
     #[test]

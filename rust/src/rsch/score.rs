@@ -263,6 +263,21 @@ pub fn feasible(score: f32) -> bool {
     score > -BIG / 2.0
 }
 
+/// The moldable-admission shape rule: a shape ladder is ordered by
+/// strictly decreasing replicas and (by [`crate::job::trace`]
+/// validation) decreasing throughput, so the *first* index the
+/// feasibility probe accepts is the goodput-maximizing pick — full
+/// shape when the cluster has room, sliding down the ladder only as far
+/// as fragmentation forces. `None` means not even the smallest rung
+/// fits right now; the caller keeps the current shape rather than
+/// thrash a saturated cluster to the floor.
+pub fn best_feasible_shape(
+    shapes: &[crate::job::spec::GangShape],
+    mut probe: impl FnMut(&crate::job::spec::GangShape) -> bool,
+) -> Option<usize> {
+    shapes.iter().position(|s| probe(s))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,6 +300,32 @@ mod tests {
         r[8] = 4.0; // WORST: nothing placed yet.
         r[11] = free;
         r
+    }
+
+    #[test]
+    fn best_feasible_shape_walks_down_the_ladder() {
+        use crate::job::spec::GangShape;
+        let ladder = [
+            GangShape {
+                replicas: 8,
+                throughput: 1.0,
+            },
+            GangShape {
+                replicas: 4,
+                throughput: 0.55,
+            },
+            GangShape {
+                replicas: 2,
+                throughput: 0.3,
+            },
+        ];
+        // Plenty of room: keep the full shape.
+        assert_eq!(best_feasible_shape(&ladder, |_| true), Some(0));
+        // Only 4 replicas fit: slide one rung.
+        assert_eq!(best_feasible_shape(&ladder, |s| s.replicas <= 4), Some(1));
+        // Nothing fits: keep the current shape (no pick).
+        assert_eq!(best_feasible_shape(&ladder, |_| false), None);
+        assert_eq!(best_feasible_shape(&[], |_| true), None);
     }
 
     #[test]

@@ -336,6 +336,7 @@ fn replica_delta_spec(
         service: Some(base.id),
         tidal: false,
         checkpoint: crate::job::spec::CheckpointPolicy::Continuous,
+        shapes: Vec::new(),
     }
 }
 

@@ -91,10 +91,11 @@ impl SimOutcome {
     /// produce byte-identical renderings of this document. Covers the
     /// headline metrics, every scheduler counter, and an
     /// order-independent FNV-1a fingerprint of each job's trajectory
-    /// (schedule/run/finish times, preemptions, requeues, migrations).
+    /// (schedule/run/finish times, preemptions, requeues, migrations,
+    /// shape changes).
     pub fn digest_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        let mut rows: Vec<[u64; 8]> = self
+        let mut rows: Vec<[u64; 9]> = self
             .store
             .iter()
             .map(|j| {
@@ -107,6 +108,7 @@ impl SimOutcome {
                     j.requeues as u64,
                     j.migrations as u64,
                     j.lost_work_ms,
+                    j.shape_changes as u64,
                 ]
             })
             .collect();
@@ -148,6 +150,8 @@ impl SimOutcome {
                 self.qsch_stats.starvation_reservations,
             )
             .set("qsch_cancellations", self.qsch_stats.cancellations)
+            .set("qsch_shape_molds", self.qsch_stats.shape_molds)
+            .set("qsch_shape_shrinks", self.qsch_stats.shape_shrinks)
             .set("rsch_pods_placed", self.rsch_stats.pods_placed)
             .set("rsch_nodes_examined", self.rsch_stats.nodes_examined)
             .set("rsch_nodes_scored", self.rsch_stats.nodes_scored)
@@ -179,9 +183,13 @@ impl SimOutcome {
 /// children are *cancelled* — devices released, quota refunded, the
 /// controller's books updated — because a dead replica is better
 /// re-provisioned fresh at the next load sample than requeued with a
-/// stale submit window. Everything else requeues (§3.2.4) with priority
-/// aging. Returns how many victims were cancelled (they leave the job
-/// population, so the runner's liveness accounting must see them).
+/// stale submit window. Malleable tidal/LOW gangs with a spare ladder
+/// rung *shrink* instead (`--moldable`): the surviving replicas
+/// re-shard and keep their progress, modelling an elastic trainer that
+/// tolerates replica loss, so no eviction or lost work is charged.
+/// Everything else requeues (§3.2.4) with priority aging. Returns how
+/// many victims were cancelled (they leave the job population, so the
+/// runner's liveness accounting must see them).
 fn evict_fault_victims(
     now: u64,
     victims: &[JobId],
@@ -207,8 +215,9 @@ fn evict_fault_victims(
             metrics.on_cancelled();
             metrics.reliability.on_eviction(gpus, 0);
             cancelled += 1;
+        } else if qsch.shrink_or_evict_and_requeue(store, state, v, now) {
+            metrics.reliability.on_shrink();
         } else {
-            qsch.evict_and_requeue(store, state, v, now);
             let lost = store.expect(v).lost_work_ms - lost_before;
             metrics.reliability.on_eviction(gpus, lost);
         }
@@ -368,9 +377,13 @@ pub fn run_with_events(
                 let j = store.expect(job);
                 if j.phase == Phase::Running && j.epoch == epoch {
                     // Goodput: the finished work survives; inflation is
-                    // bind→finish wall time over the fault-free ideal.
+                    // bind→finish wall time over the fault-free ideal. The
+                    // credit is the *base-shape* footprint — a moldable job's
+                    // work content is fixed, so finishing shrunk earns the
+                    // same credit over more allocated GPU-time (that gap IS
+                    // the throughput-weighted goodput loss).
                     let goodput =
-                        j.spec.duration_ms.saturating_mul(j.spec.total_gpus() as u64);
+                        j.spec.duration_ms.saturating_mul(j.spec.base_total_gpus() as u64);
                     let ideal = (j.spec.duration_ms + cfg.platform_overhead_ms).max(1);
                     let actual = now.saturating_sub(j.scheduled_ms.unwrap_or(j.submit_ms));
                     metrics

@@ -728,6 +728,220 @@ fn requeue_aging_never_reorders_across_base_priority_classes() {
 }
 
 #[test]
+fn moldable_shapes_stay_on_ladder_and_shrink_keeps_books_consistent() {
+    // Moldable/malleable invariants under random laddered workloads with
+    // fault-driven shrink pressure: a job's realized shape is always one
+    // of its declared rungs, holders' placements match the realized
+    // shape, no allocation leaks, the NodeIndex buckets agree with a
+    // device-level recount, and every shrink refunded its quota charge
+    // (ledger usage always equals what the holders occupy).
+    use kant::cluster::ids::GroupId;
+    use kant::cluster::index::{NodeIndex, ZoneQuery};
+    use kant::job::spec::GangShape;
+    use kant::sim::FaultConfig;
+
+    prop::check(15, |rng| {
+        let groups = rng.range_inclusive(1, 3) as u32;
+        let nodes = rng.range_inclusive(3, 6) as u32;
+        let mut state =
+            ClusterBuilder::build(&ClusterSpec::homogeneous("mold", 1, groups, nodes));
+        let mut ledger = QuotaLedger::new(3, 1, QuotaMode::Shared);
+        for t in 0..3 {
+            ledger.set_limit(TenantId(t), G, state.total_gpus());
+        }
+        let mut qsch = Qsch::new(
+            QschConfig {
+                enable_moldable: true,
+                enable_shrink: true,
+                ..QschConfig::default()
+            },
+            ledger,
+        );
+        let mut rsch = Rsch::new(
+            RschConfig {
+                indexed_candidates: rng.chance(0.5),
+                ..RschConfig::default()
+            },
+            &state,
+        );
+        let horizon = 2 * 3_600_000;
+        let n_jobs = rng.range_inclusive(8, 40);
+        let mut jobs: Vec<JobSpec> = (1..=n_jobs)
+            .map(|id| {
+                let mut j = random_job(rng, id, horizon);
+                // Attach a ladder to multi-pod training gangs (the only
+                // shape the mold/shrink passes act on).
+                if j.kind == JobKind::Training && j.total_replicas() >= 2 && rng.chance(0.7) {
+                    let full = j.total_replicas();
+                    let mut shapes = vec![GangShape {
+                        replicas: full,
+                        throughput: 1.0,
+                    }];
+                    let mut r = full / 2;
+                    let mut thr = 0.45;
+                    while r >= 1 && shapes.len() < 3 {
+                        shapes.push(GangShape {
+                            replicas: r,
+                            throughput: thr,
+                        });
+                        r /= 2;
+                        thr *= 0.45;
+                    }
+                    j = j.with_shapes(shapes);
+                }
+                j
+            })
+            .collect();
+        jobs.sort_by_key(|j| j.submit_ms);
+        let ladders: std::collections::HashMap<u64, Vec<u32>> = jobs
+            .iter()
+            .map(|j| (j.id.0, j.shapes.iter().map(|s| s.replicas).collect()))
+            .collect();
+        let cfg = SimConfig {
+            horizon_ms: horizon * 4,
+            stall_cycles: 500,
+            faults: FaultConfig {
+                seed: rng.below(1u64 << 32),
+                node_mtbf_ms: 6 * 3_600_000, // A handful of faults per run.
+                node_mttr_ms: 30 * 60_000,
+                ..FaultConfig::default()
+            },
+            ..SimConfig::default()
+        };
+        let out = run(&mut state, &mut qsch, &mut rsch, jobs, &cfg);
+
+        // 1. The realized shape is always one of the declared rungs, and
+        //    ladder-free jobs are never reshaped.
+        for j in out.store.iter() {
+            let ladder = &ladders[&j.id().0];
+            if ladder.is_empty() {
+                prop_assert!(
+                    j.shape_changes == 0,
+                    "fixed job {} was reshaped {} times",
+                    j.id(),
+                    j.shape_changes
+                );
+            } else {
+                prop_assert!(
+                    ladder.contains(&j.spec.total_replicas()),
+                    "job {} realized shape {} not on its ladder {ladder:?}",
+                    j.id(),
+                    j.spec.total_replicas()
+                );
+            }
+        }
+
+        // 2. Holders' placements match the realized (possibly shrunk)
+        //    shape and no device allocation leaks.
+        let holding: u32 = out
+            .store
+            .iter()
+            .filter(|j| j.holds_resources())
+            .map(|j| j.spec.total_gpus())
+            .sum();
+        prop_assert!(
+            state.allocated_gpus() == holding,
+            "allocation leak: state {} vs holders {holding}",
+            state.allocated_gpus()
+        );
+        for j in out.store.iter() {
+            if j.holds_resources() {
+                let placements = state.placements_of(j.id()).expect("holder has placement");
+                prop_assert!(
+                    placements.len() as u32 == j.spec.total_replicas(),
+                    "job {} holds {} of {} (reshaped) pods",
+                    j.id(),
+                    placements.len(),
+                    j.spec.total_replicas()
+                );
+            }
+        }
+
+        // 3. NodeIndex buckets rebuilt from state agree with a direct
+        //    per-node filter after all the mold/shrink churn.
+        let ix = NodeIndex::from_state(&state);
+        for g in 0..groups {
+            for min in [1u32, 4, 8] {
+                let mut got = Vec::new();
+                ix.for_group(GroupId(g), min, ZoneQuery::Any, &mut got);
+                got.sort_unstable();
+                let want: Vec<_> = state
+                    .nodes
+                    .iter()
+                    .filter(|n| {
+                        n.group == GroupId(g) && n.health.schedulable() && n.free_gpus() >= min
+                    })
+                    .map(|n| n.id)
+                    .collect();
+                prop_assert!(
+                    got == want,
+                    "index diverged after shrink churn (group {g}, min {min})"
+                );
+            }
+        }
+
+        // 4. Quota conservation: ledger usage equals exactly what the
+        //    holders occupy — i.e. every shrink's release refunded its
+        //    charge before the re-placement charged the smaller shape.
+        let used: u64 = (0..3)
+            .map(|t| {
+                let e = qsch.ledger.entry(TenantId(t), G);
+                (e.used_own + e.borrowed) as u64
+            })
+            .sum();
+        prop_assert!(
+            used == holding as u64,
+            "quota books off after shrink churn: charged {used} vs held {holding}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn moldable_pass_is_inert_for_ladder_free_workloads() {
+    // Regression: turning `--moldable` on must not perturb a workload in
+    // which no job declares a shape ladder — digests stay byte-identical
+    // to the flags-off run.
+    prop::check(10, |rng| {
+        let horizon = 2 * 3_600_000;
+        let n = rng.range_inclusive(5, 40);
+        let mut jobs: Vec<JobSpec> = (1..=n).map(|id| random_job(rng, id, horizon)).collect();
+        jobs.sort_by_key(|j| j.submit_ms);
+        let run_with = |moldable: bool, jobs: Vec<JobSpec>| {
+            let mut state = ClusterBuilder::build(&ClusterSpec::homogeneous("m", 1, 2, 4));
+            let mut ledger = QuotaLedger::new(3, 1, QuotaMode::Shared);
+            for t in 0..3 {
+                ledger.set_limit(TenantId(t), G, state.total_gpus());
+            }
+            let mut qsch = Qsch::new(
+                QschConfig {
+                    enable_moldable: moldable,
+                    enable_shrink: moldable,
+                    ..QschConfig::default()
+                },
+                ledger,
+            );
+            let mut rsch = Rsch::new(RschConfig::default(), &state);
+            let cfg = SimConfig {
+                horizon_ms: horizon * 4,
+                stall_cycles: 500,
+                ..SimConfig::default()
+            };
+            run(&mut state, &mut qsch, &mut rsch, jobs, &cfg)
+                .digest_json()
+                .to_string_compact()
+        };
+        let off = run_with(false, jobs.clone());
+        let on = run_with(true, jobs);
+        prop_assert!(
+            off == on,
+            "the mold/shrink passes perturbed a ladder-free workload"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn strict_fifo_never_reorders_same_priority() {
     // Under Strict FIFO, same-priority jobs must be *scheduled* in
     // submission order.
