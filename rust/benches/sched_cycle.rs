@@ -384,6 +384,79 @@ fn bench_moldable_cycle(b: &mut Bench) {
     eprintln!("   [moldable] shape_molds={}", qsch.stats.shape_molds);
 }
 
+/// Observability overhead: the same 64-job QSCH cycle at the xlarge
+/// (10k-GPU) preset through `cycle()` (disabled recorder, the default
+/// path every caller gets) vs `cycle_observed()` with a verbosity-2
+/// recorder streaming decision records into a null sink — the full
+/// span + trace cost of `--obs-out`. The acceptance target is an
+/// obs-on mean within ~5% of obs-off: observability must be cheap
+/// enough to leave on.
+fn bench_obs_cycle(b: &mut Bench, obs_on: bool) {
+    use kant::cluster::tenant::{QuotaLedger, QuotaMode};
+    use kant::job::store::JobStore;
+    use kant::obs::ObsRecorder;
+    use kant::qsch::policy::QschConfig;
+    use kant::qsch::Qsch;
+
+    let mut state = ClusterBuilder::build(&ClusterSpec::train10000());
+    let mut ledger = QuotaLedger::new(1, 1, QuotaMode::Shared);
+    ledger.set_limit(TenantId(0), GpuTypeId(0), state.total_gpus());
+    let mut qsch = Qsch::new(QschConfig::default(), ledger);
+    let mut store = JobStore::new();
+    let mut rsch = Rsch::new(RschConfig::default(), &state);
+    let mut obs = if obs_on {
+        ObsRecorder::enabled(2).with_sink(Box::new(std::io::sink()))
+    } else {
+        ObsRecorder::disabled()
+    };
+    let n = state.nodes.len();
+    let label = if obs_on { "obs-on" } else { "obs-off" };
+    let batch = 64usize;
+    let mut id = 1u64;
+    let mut now = 0u64;
+    b.run_throughput(
+        &format!("qsch-cycle-batch64/{label}/{n}nodes"),
+        batch as f64,
+        || {
+            for k in 0..batch {
+                let replicas = match k % 8 {
+                    0 => 16, // 128-GPU gang.
+                    1 | 2 => 4,
+                    _ => 1,
+                };
+                let spec = JobSpec::homogeneous(
+                    JobId(id),
+                    TenantId(0),
+                    JobKind::Training,
+                    GpuTypeId(0),
+                    replicas,
+                    8,
+                )
+                .with_times(now, 3_600_000);
+                id += 1;
+                qsch.submit(&mut store, spec);
+            }
+            obs.begin_cycle();
+            let r = qsch.cycle_observed(now, &mut store, &mut state, &mut rsch, &mut obs);
+            obs.end_cycle(
+                now,
+                qsch.queues.len() as u64,
+                r.scheduled.len() as u64,
+                r.preempted.len() as u64,
+            );
+            now += 1_000;
+            for jid in r.scheduled {
+                state.release_job(jid).unwrap();
+            }
+        },
+    );
+    eprintln!(
+        "   [{label}] cycles_profiled={} decisions={}",
+        obs.profiles().len(),
+        obs.decisions()
+    );
+}
+
 /// §3.1 multi-instance parallel planning throughput.
 fn bench_parallel(b: &mut Bench, threads: usize) {
     let mut state = make_state(32);
@@ -495,6 +568,15 @@ fn main() {
     // placement, on laddered versions of the same 64-job batch.
     println!("== moldable shape-selection pass: xlarge preset ==");
     bench_moldable_cycle(&mut b);
+
+    // Observability overhead: disabled recorder (the default path) vs a
+    // verbosity-2 recorder streaming into a null sink. The two rows in
+    // the committed baseline should stay within a few percent of each
+    // other — the digest-inert profiler's "cheap enough to leave on"
+    // claim, tracked per commit like every other scenario.
+    println!("== observability overhead: xlarge preset ==");
+    bench_obs_cycle(&mut b, false);
+    bench_obs_cycle(&mut b, true);
 
     // Seed/refresh a perf baseline when requested. From the package root:
     //   BENCH_BASELINE_OUT=BENCH_baseline.json cargo bench --bench sched_cycle

@@ -6,7 +6,7 @@
 //!   ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15
 //!        table1 ablation-espread ablation-defrag ablation-index
 //!        elastic-inference fault-tolerance topology-stress
-//!        weight-adaptation moldable-gangs all
+//!        weight-adaptation moldable-gangs obs-phases all
 //!   (fig10 covers 10-12; fig13 covers 13-14; snapshot/two-level ablations
 //!    live in `cargo bench`.)
 
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
             "fig2", "fig3", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
             "fig10", "fig13", "fig15", "ablation-espread", "ablation-defrag",
             "ablation-index", "elastic-inference", "fault-tolerance", "topology-stress",
-            "weight-adaptation", "moldable-gangs",
+            "weight-adaptation", "moldable-gangs", "obs-phases",
         ]
         .into_iter()
         .map(String::from)
@@ -104,6 +104,7 @@ fn main() -> anyhow::Result<()> {
             "topology-stress" => exp::topology_stress(scale, seed),
             "weight-adaptation" => exp::weight_adaptation(seed),
             "moldable-gangs" => exp::moldable_gangs(seed),
+            "obs-phases" => exp::obs_phases(scale, seed),
             other => {
                 eprintln!("unknown figure id: {other}");
                 continue;
@@ -122,4 +123,4 @@ figures — regenerate the paper's tables and figures
 usage: figures [--scale small|paper|xlarge|xxlarge] [--seed N] [--out DIR] <id>... | all
 ids: fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig13 fig15 table1 \
 ablation-espread ablation-defrag ablation-index elastic-inference fault-tolerance \
-topology-stress weight-adaptation moldable-gangs";
+topology-stress weight-adaptation moldable-gangs obs-phases";

@@ -695,7 +695,26 @@ pub fn ablation_espread(seed: u64) -> String {
 // GPUs). Warm the cluster first so the counters cover the loaded regime
 // where per-cycle O(pool) work is the §3.4 bottleneck.
 // ---------------------------------------------------------------------
-pub fn ablation_candidate_index(scale: Scale, seed: u64) -> String {
+/// Structured outcome of the candidate-index ablation — one labelled
+/// [`RschStats`] per arm plus the placement-identity verdict. The
+/// report string and the `kant harness` results JSON both render from
+/// this.
+pub struct AblationIndexResult {
+    pub label: String,
+    pub arms: Vec<(String, RschStats)>,
+    /// Per-job placements byte-identical across indexed/linear arms.
+    pub placements_identical: bool,
+}
+
+impl AblationIndexResult {
+    /// Nodes examined per pod placed for arm `i`.
+    pub fn examined_per_pod(&self, i: usize) -> f64 {
+        let s = &self.arms[i].1;
+        s.nodes_examined as f64 / s.pods_placed.max(1) as f64
+    }
+}
+
+pub fn run_ablation_index(scale: Scale, seed: u64) -> AblationIndexResult {
     let env = training_cluster(scale, seed, 0.95);
     let jobs = WorkloadGen::new(env.workload.clone()).generate(300);
     let warm = jobs.len() * 2 / 3;
@@ -729,36 +748,50 @@ pub fn ablation_candidate_index(scale: Scale, seed: u64) -> String {
             (label, stats, state)
         })
         .collect();
-    let per_pod = |s: &RschStats| s.nodes_examined as f64 / s.pods_placed.max(1) as f64;
-    let rows: Vec<Vec<String>> = results
+    // Identity means per-job placements, not just allocation totals — a
+    // node-choice divergence between the arms must show up here.
+    let identical = |a: &ClusterState, b: &ClusterState| {
+        jobs.iter().all(|j| a.placements_of(j.id) == b.placements_of(j.id))
+    };
+    AblationIndexResult {
+        label: env.label.to_string(),
+        placements_identical: identical(&results[0].2, &results[1].2)
+            && identical(&results[2].2, &results[3].2),
+        arms: results
+            .into_iter()
+            .map(|(label, stats, _)| (label.to_string(), stats))
+            .collect(),
+    }
+}
+
+pub fn ablation_candidate_index(scale: Scale, seed: u64) -> String {
+    let r = run_ablation_index(scale, seed);
+    let rows: Vec<Vec<String>> = r
+        .arms
         .iter()
-        .map(|(label, s, _)| {
+        .enumerate()
+        .map(|(i, (label, s))| {
             vec![
-                label.to_string(),
+                label.clone(),
                 s.nodes_examined.to_string(),
                 s.pods_placed.to_string(),
-                format!("{:.1}", per_pod(s)),
+                format!("{:.1}", r.examined_per_pod(i)),
             ]
         })
         .collect();
     let mut out = table(
         &format!(
             "Ablation — candidate selection: free-capacity index vs linear scan ({})",
-            env.label
+            r.label
         ),
         &["arm", "nodes examined", "pods placed", "examined/pod"],
         &rows,
     );
-    // Identity means per-job placements, not just allocation totals — a
-    // node-choice divergence between the arms must show up here.
-    let identical = |a: &ClusterState, b: &ClusterState| {
-        jobs.iter().all(|j| a.placements_of(j.id) == b.placements_of(j.id))
-    };
     out.push_str(&format!(
         "\nflat-scan reduction: {:.1}x fewer nodes examined per pod; \
          placements identical: {}\n",
-        per_pod(&results[0].1) / per_pod(&results[1].1).max(1e-9),
-        identical(&results[0].2, &results[1].2) && identical(&results[2].2, &results[3].2),
+        r.examined_per_pod(0) / r.examined_per_pod(1).max(1e-9),
+        r.placements_identical,
     ));
     out
 }
@@ -1657,6 +1690,43 @@ pub fn moldable_gangs(seed: u64) -> String {
             / 3_600_000.0,
         (c.malleable.metrics.gar_avg() - c.fixed.metrics.gar_avg()) * 100.0,
     ));
+    s
+}
+
+// ---------------------------------------------------------------------
+// Observability self-portrait: the digest-inert phase profiler watching
+// one standard run. Not a paper figure — the `figures obs-phases` id
+// regenerates the scheduler-overhead evidence (wall-clock per phase,
+// per-cycle overhead fraction) that PR 9's obs layer reports.
+// ---------------------------------------------------------------------
+pub fn obs_phases(scale: Scale, seed: u64) -> String {
+    use crate::metrics::report::phase_table;
+    use crate::obs::ObsRecorder;
+    use crate::sim::run_observed;
+
+    let setup = SimOptions::for_scale(scale)
+        .seed(seed)
+        .build()
+        .expect("scale presets are statically valid");
+    let mut env = setup.env;
+    let jobs = WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms);
+    let mut qsch = Qsch::new(setup.qsch, env.ledger.clone());
+    let mut rsch = Rsch::new(setup.rsch, &env.state);
+    let mut obs = ObsRecorder::enabled(1);
+    let out = run_observed(
+        &mut env.state,
+        &mut qsch,
+        &mut rsch,
+        jobs,
+        Vec::new(),
+        &setup.sim,
+        &mut obs,
+    );
+    let mut s = phase_table(&out.health, setup.sim.cycle_ms);
+    s.push_str(
+        "\n(digest-inert: the same seed with the recorder disabled reproduces \
+         the run digest byte-for-byte — `tests/obs.rs` holds that line)\n",
+    );
     s
 }
 

@@ -6,6 +6,9 @@
 //!   validate     smoke-check the AOT artifacts through the PJRT runtime
 //!   bench-check  validate / diff benchkit baseline documents (the CI
 //!                bench-regression gate, also runnable locally)
+//!   obs          summarize an observability JSONL stream (--obs-out)
+//!   explain      replay one job's decision records from a stream
+//!   harness      run the whole experiment zoo into one results JSON
 //!
 //! The figures harness lives in the separate `figures` binary.
 
@@ -18,11 +21,13 @@ use kant::experiments::jwtd_buckets;
 use kant::job::spec::PlacementStrategy;
 use kant::job::trace;
 use kant::job::workload::{WorkloadConfig, WorkloadGen};
-use kant::metrics::report::{bucket_comparison, fmt_ms, headline, pct};
+use kant::metrics::report::{bucket_comparison, fmt_ms, headline, pct, phase_table};
+use kant::obs::{DecisionRecord, ObsRecorder, SchedulerHealth};
 use kant::qsch::policy::QueuePolicy;
 use kant::qsch::Qsch;
 use kant::rsch::{Rsch, RschConfig};
-use kant::sim::run;
+use kant::sim::run_observed;
+use kant::util::json::Json;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -31,6 +36,9 @@ fn main() -> Result<()> {
         Some("gen-trace") => gen_trace(&args[1..]),
         Some("validate") => validate(&args[1..]),
         Some("bench-check") => bench_check(&args[1..]),
+        Some("obs") => obs_cmd(&args[1..]),
+        Some("explain") => explain(&args[1..]),
+        Some("harness") => harness(&args[1..]),
         Some("-h" | "--help") | None => {
             println!("{HELP}");
             Ok(())
@@ -50,10 +58,15 @@ usage:
                 [--no-index] [--topo-blind] [--elastic] [--faults]
                 [--checkpoint-min N] [--shards N] [--adapt]
                 [--jwtd-bound MIN] [--moldable] [--digest FILE]
+                [--obs-out FILE] [--obs-verbosity 0|1|2]
   kant gen-trace [--seed N] [--jobs N] [--mix training|inference] --out FILE
   kant validate [--artifacts DIR]
   kant bench-check validate FILE
   kant bench-check diff BASELINE FRESH [--tolerance X]
+  kant obs summarize FILE
+  kant explain --job ID FILE
+  kant harness [--scale small|paper|xlarge] [--seed N] [--out FILE]
+  kant harness validate FILE
 
 Every flag is a thin adapter onto the typed `SimOptions` builder
 (kant::config::SimOptions) — the single constructor of the scheduler and
@@ -103,6 +116,30 @@ flags:
                    runs replay byte-identically
   --digest FILE    write the deterministic run digest (JSON) to FILE — the
                    golden-gate CI job diffs two same-seed digests
+  --obs-out FILE   digest-inert observability: stream structured decision
+                   records (JSONL, one per scheduled/preempted/rejected/
+                   molded job: chosen region, feature vector + active
+                   weight overlay, shape rung, rejection reason) plus a
+                   trailing scheduler-health rollup (per-phase wall-clock
+                   p50/p95/p99, queue depth, plan-cache hit rate, shard
+                   imbalance, scheduler-overhead-per-cycle). Enabling this
+                   never changes a same-seed digest — the recorder is
+                   write-only for the scheduling core
+  --obs-verbosity  0 = phase profiles only, 1 = + scheduled/preempted/
+                   molded decisions, 2 = + admission & placement
+                   rejections (default 2; only read with --obs-out)
+
+obs / explain / harness (the observability readers + results harness):
+  obs summarize FILE    phase-timing table, overhead row and per-action
+                        decision counts from an --obs-out stream
+  explain --job ID FILE every decision record touching job ID, in order
+  harness [--scale S]   run the whole experiment zoo (ablation-index,
+                        elastic, fault-tolerance, topology-stress,
+                        weight-adaptation, moldable-gangs) and emit one
+                        timestamped kant-harness-v1 results JSON
+                        (--out, default harness_results.json)
+  harness validate FILE schema-check a results JSON the same way
+                        bench-check validate gates the bench baseline
 
 bench-check (the CI bench-regression gate):
   validate FILE    hard-check a benchkit-v1 document: schema tag, non-empty
@@ -202,13 +239,43 @@ fn simulate(args: &[String]) -> Result<()> {
     let faults = opts.has_faults();
     let mut qsch = Qsch::new(qsch_cfg, env.ledger.clone());
     let mut rsch = build_rsch(&opts, rsch_cfg, &env.state)?;
-    let out = run(&mut env.state, &mut qsch, &mut rsch, jobs, &sim_cfg);
+
+    // Observability is strictly additive: the recorder never feeds a
+    // scheduling branch, so --obs-out cannot move a same-seed digest.
+    let obs_out = flag_value(args, "--obs-out");
+    let obs_verbosity: u8 = flag_value(args, "--obs-verbosity").unwrap_or("2").parse()?;
+    let mut obs = match obs_out {
+        Some(path) => {
+            let file = std::fs::File::create(path)
+                .with_context(|| format!("creating obs stream {path}"))?;
+            ObsRecorder::enabled(obs_verbosity)
+                .with_sink(Box::new(std::io::BufWriter::new(file)))
+        }
+        None => ObsRecorder::disabled(),
+    };
+    let out = run_observed(
+        &mut env.state,
+        &mut qsch,
+        &mut rsch,
+        jobs,
+        Vec::new(),
+        &sim_cfg,
+        &mut obs,
+    );
 
     if let Some(path) = flag_value(args, "--digest") {
         let doc = out.digest_json().to_string_compact();
         std::fs::write(path, doc.clone() + "\n")
             .with_context(|| format!("writing digest to {path}"))?;
         println!("digest: {doc}");
+    }
+
+    if let Some(path) = obs_out {
+        println!("{}", phase_table(&out.health, sim_cfg.cycle_ms));
+        println!(
+            "obs: {} decision record(s) + health trailer -> {path}",
+            out.health.decisions
+        );
     }
 
     println!("{}", headline(env.label.as_str(), &out.metrics));
@@ -398,6 +465,328 @@ fn load_bench_doc(path: &str) -> Result<Vec<(String, f64)>> {
         out.push((name.to_string(), mean));
     }
     Ok(out)
+}
+
+/// Parse an `--obs-out` JSONL stream back into decision records plus
+/// the trailing scheduler-health rollup (absent if the run died before
+/// the trailer, or at `--obs-verbosity 0` with no decisions there may
+/// be only the health line).
+fn read_obs_stream(path: &str) -> Result<(Vec<DecisionRecord>, Option<SchedulerHealth>)> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut decisions = Vec::new();
+    let mut health = None;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{path}:{}: {e}", i + 1))?;
+        if let Some(rec) = DecisionRecord::from_json(&j) {
+            decisions.push(rec);
+        } else if let Some(h) = SchedulerHealth::from_json(&j) {
+            health = Some(h);
+        } else {
+            bail!("{path}:{}: neither a decision record nor a health rollup", i + 1);
+        }
+    }
+    Ok((decisions, health))
+}
+
+/// `kant obs summarize` — offline reader for an `--obs-out` stream:
+/// phase-timing table + overhead row from the health trailer, then
+/// per-action decision counts.
+fn obs_cmd(args: &[String]) -> Result<()> {
+    const USAGE: &str = "usage: kant obs summarize FILE [--cycle-ms N]";
+    match args.first().map(String::as_str) {
+        Some("summarize") => {
+            let path = args.get(1).context(USAGE)?;
+            // The stream does not carry the cycle period; default to the
+            // simulator's 5 s cycle for the overhead-fraction row.
+            let cycle_ms: u64 = flag_value(args, "--cycle-ms").unwrap_or("5000").parse()?;
+            let (decisions, health) = read_obs_stream(path)?;
+            match &health {
+                Some(h) => println!("{}", phase_table(h, cycle_ms)),
+                None => println!("{path}: no health trailer (run still in flight?)"),
+            }
+            let mut counts: std::collections::BTreeMap<&str, u64> =
+                std::collections::BTreeMap::new();
+            for d in &decisions {
+                *counts.entry(d.action.as_str()).or_default() += 1;
+            }
+            println!("{} decision record(s):", decisions.len());
+            for (action, n) in counts {
+                println!("  {action:<20} {n}");
+            }
+            Ok(())
+        }
+        _ => bail!(USAGE),
+    }
+}
+
+/// `kant explain --job ID FILE` — replay every decision record touching
+/// one job, in stream order, with the evidence behind each decision
+/// (features, weight overlay, region, rejection reason).
+fn explain(args: &[String]) -> Result<()> {
+    const USAGE: &str = "usage: kant explain --job ID FILE";
+    let job_pos = args.iter().position(|a| a == "--job").context(USAGE)?;
+    let id: u64 = args.get(job_pos + 1).context(USAGE)?.parse()?;
+    let path = args
+        .iter()
+        .enumerate()
+        .find(|&(i, a)| i != job_pos && i != job_pos + 1 && !a.starts_with("--"))
+        .map(|(_, a)| a.as_str())
+        .context(USAGE)?;
+    let (decisions, _) = read_obs_stream(path)?;
+    let hits: Vec<&DecisionRecord> = decisions.iter().filter(|d| d.job == id).collect();
+    if hits.is_empty() {
+        println!(
+            "no decision records for job {id} in {path} \
+             (job never reached a decision, or raise --obs-verbosity)"
+        );
+        return Ok(());
+    }
+    println!("job {id}: {} decision record(s)", hits.len());
+    for d in hits {
+        let mut line = format!("  t={:<8} {:<18}", fmt_ms(d.t_ms as f64), d.action);
+        if !d.reason.is_empty() {
+            line.push_str(&format!(" reason={}", d.reason));
+        }
+        if !d.region.is_empty() {
+            line.push_str(&format!(" region={} nodes={}", d.region, d.nodes));
+        }
+        if d.shape_rung >= 0 {
+            line.push_str(&format!(" rung={}", d.shape_rung));
+        }
+        line.push_str(&format!(
+            " overlay=({:+.3},{:+.3})",
+            d.overlay_pack_bias, d.overlay_fairness
+        ));
+        println!("{line}");
+        println!("    features: {:?}", d.features);
+    }
+    Ok(())
+}
+
+/// The six experiments `kant harness` must cover, in run order. The
+/// validator requires each exactly once — dropping one from the harness
+/// fails CI the same way a lost bench scenario does.
+const HARNESS_EXPERIMENTS: [&str; 6] = [
+    "ablation-index",
+    "elastic",
+    "fault-tolerance",
+    "topology-stress",
+    "weight-adaptation",
+    "moldable-gangs",
+];
+
+/// `kant harness` — run the whole experiment zoo into one timestamped
+/// results JSON; `harness validate FILE` is the CI gate (mirrors
+/// `bench-check validate`). Every arm payload is the run's digest
+/// object, so two same-seed harness runs differ only in timestamps.
+fn harness(args: &[String]) -> Result<()> {
+    use kant::experiments as exp;
+    const USAGE: &str = "usage: kant harness [--scale small|paper|xlarge] [--seed N] \
+                         [--out FILE] | kant harness validate FILE";
+    if args.first().map(String::as_str) == Some("validate") {
+        let path = args.get(1).context(USAGE)?;
+        let names = load_harness_doc(path)?;
+        println!("harness: {path} OK ({} experiments)", names.len());
+        return Ok(());
+    }
+    let scale_label = flag_value(args, "--scale").unwrap_or("small");
+    let scale = Scale::parse(scale_label).context("bad --scale")?;
+    let seed: u64 = flag_value(args, "--seed").unwrap_or("42").parse()?;
+    let out_path = flag_value(args, "--out").unwrap_or("harness_results.json");
+    // Simulated-time budget for the duration-driven experiments: half a
+    // day keeps the small preset CI-friendly; larger scales earn the
+    // paper's two-day window.
+    let days = if scale == Scale::Small { 0.5 } else { 2.0 };
+    let generated_unix_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0);
+
+    fn digest_arms(pairs: &[(&str, &kant::sim::SimOutcome)]) -> Json {
+        let mut arms = Json::obj();
+        for (label, out) in pairs {
+            arms.set(label, out.digest_json());
+        }
+        arms
+    }
+    fn push_exp(experiments: &mut Vec<Json>, name: &str, t0: std::time::Instant, arms: Json) {
+        let elapsed = t0.elapsed();
+        let mut e = Json::obj();
+        e.set("name", name)
+            .set("elapsed_ms", elapsed.as_millis() as u64)
+            .set("arms", arms);
+        experiments.push(e);
+        println!("harness: {name} done in {:.1}s", elapsed.as_secs_f64());
+    }
+
+    let mut experiments: Vec<Json> = Vec::new();
+
+    // ablation-index: arms carry RSCH scan counters, not digests — the
+    // experiment's claim is about work done, and the struct separately
+    // asserts the placements were byte-identical across arms.
+    let t0 = std::time::Instant::now();
+    let r = exp::run_ablation_index(scale, seed);
+    let mut arms = Json::obj();
+    for (i, (label, s)) in r.arms.iter().enumerate() {
+        let mut a = Json::obj();
+        a.set("nodes_examined", s.nodes_examined)
+            .set("nodes_scored", s.nodes_scored)
+            .set("pods_placed", s.pods_placed)
+            .set("examined_per_pod", r.examined_per_pod(i));
+        arms.set(label, a);
+    }
+    let elapsed = t0.elapsed();
+    let mut e = Json::obj();
+    e.set("name", "ablation-index")
+        .set("elapsed_ms", elapsed.as_millis() as u64)
+        .set("arms", arms)
+        .set("placements_identical", r.placements_identical);
+    experiments.push(e);
+    println!("harness: ablation-index done in {:.1}s", elapsed.as_secs_f64());
+
+    let t0 = std::time::Instant::now();
+    let r = exp::run_elastic_inference(seed, days);
+    push_exp(
+        &mut experiments,
+        "elastic",
+        t0,
+        digest_arms(&[
+            ("static", &r.static_arm),
+            ("elastic", &r.elastic),
+            ("tidal", &r.tidal),
+        ]),
+    );
+
+    let t0 = std::time::Instant::now();
+    let r = exp::run_fault_tolerance(seed, days);
+    let mut pairs: Vec<(String, &kant::sim::SimOutcome)> = vec![
+        ("no-faults".to_string(), &r.no_faults),
+        ("naive".to_string(), &r.naive),
+        ("hardened".to_string(), &r.hardened),
+    ];
+    for (interval_ms, out) in &r.checkpointed {
+        pairs.push((format!("checkpointed-{}m", interval_ms / 60_000), out));
+    }
+    let mut arms = Json::obj();
+    for (label, out) in &pairs {
+        arms.set(label, out.digest_json());
+    }
+    push_exp(&mut experiments, "fault-tolerance", t0, arms);
+
+    let t0 = std::time::Instant::now();
+    let r = exp::run_topology_stress(scale, seed);
+    push_exp(
+        &mut experiments,
+        "topology-stress",
+        t0,
+        digest_arms(&[("blind", &r.blind), ("truthful", &r.truthful)]),
+    );
+
+    let t0 = std::time::Instant::now();
+    let r = exp::run_weight_adaptation(scale, seed, 6 * 3_600_000);
+    let arms = digest_arms(&[
+        ("static", &r.static_arm),
+        ("adaptive", &r.adaptive),
+        ("adaptive-bound", &r.adaptive_bound),
+    ]);
+    // bound_ms is metadata, not an arm: hang it off the experiment.
+    let mut e = Json::obj();
+    let elapsed = t0.elapsed();
+    e.set("name", "weight-adaptation")
+        .set("elapsed_ms", elapsed.as_millis() as u64)
+        .set("arms", arms)
+        .set("bound_ms", r.bound_ms);
+    experiments.push(e);
+    println!(
+        "harness: weight-adaptation done in {:.1}s",
+        elapsed.as_secs_f64()
+    );
+
+    let t0 = std::time::Instant::now();
+    let r = exp::run_moldable_gangs(seed, days);
+    push_exp(
+        &mut experiments,
+        "moldable-gangs",
+        t0,
+        digest_arms(&[
+            ("fixed", &r.fixed),
+            ("moldable", &r.moldable),
+            ("malleable", &r.malleable),
+        ]),
+    );
+
+    let mut doc = Json::obj();
+    doc.set("schema", "kant-harness-v1")
+        .set("generated_unix_ms", generated_unix_ms)
+        .set("scale", scale_label)
+        .set("seed", seed)
+        .set("days", days)
+        .set("experiments", Json::Arr(experiments));
+    std::fs::write(out_path, doc.to_string_compact() + "\n")
+        .with_context(|| format!("writing {out_path}"))?;
+    // Self-check the document we just wrote through the same validator
+    // CI runs, so a schema drift fails at generation time too.
+    let names = load_harness_doc(out_path)?;
+    println!("harness: wrote {out_path} ({} experiments)", names.len());
+    Ok(())
+}
+
+/// Parse and validate one kant-harness-v1 document, returning the
+/// experiment names. Hard-fails on: wrong schema tag, missing/zero
+/// timestamp, an experiment missing from [`HARNESS_EXPERIMENTS`],
+/// duplicates, negative elapsed time, or empty/non-object arms.
+fn load_harness_doc(path: &str) -> Result<Vec<String>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    match doc.get("schema").and_then(Json::as_str) {
+        Some("kant-harness-v1") => {}
+        other => bail!("{path}: schema must be \"kant-harness-v1\", found {other:?}"),
+    }
+    if doc.get("generated_unix_ms").and_then(Json::as_u64).unwrap_or(0) == 0 {
+        bail!("{path}: missing or zero `generated_unix_ms`");
+    }
+    let exps = doc
+        .get("experiments")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{path}: missing `experiments` array"))?;
+    let mut names: Vec<String> = Vec::with_capacity(exps.len());
+    for (i, e) in exps.iter().enumerate() {
+        let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+        if name.is_empty() {
+            bail!("{path}: experiments[{i}] has an empty or missing `name`");
+        }
+        if names.iter().any(|n| n == name) {
+            bail!("{path}: duplicate experiment '{name}'");
+        }
+        let elapsed = e.get("elapsed_ms").and_then(Json::as_f64).unwrap_or(-1.0);
+        if !elapsed.is_finite() || elapsed < 0.0 {
+            bail!("{path}: experiment '{name}' needs a finite non-negative elapsed_ms");
+        }
+        match e.get("arms") {
+            Some(Json::Obj(map)) if !map.is_empty() => {
+                for (arm, v) in map {
+                    if !matches!(v, Json::Obj(m) if !m.is_empty()) {
+                        bail!(
+                            "{path}: arm '{arm}' of '{name}' must be a non-empty object"
+                        );
+                    }
+                }
+            }
+            _ => bail!("{path}: experiment '{name}' needs a non-empty `arms` object"),
+        }
+        names.push(name.to_string());
+    }
+    for required in HARNESS_EXPERIMENTS {
+        if !names.iter().any(|n| n == required) {
+            bail!("{path}: missing required experiment '{required}'");
+        }
+    }
+    Ok(names)
 }
 
 fn gen_trace(args: &[String]) -> Result<()> {

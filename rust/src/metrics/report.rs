@@ -1,5 +1,6 @@
 //! Rendering: aligned text tables and CSV export for the figures harness.
 
+use crate::obs::{SchedulerHealth, PHASE_NAMES};
 use crate::util::stats::Summary;
 
 use super::Metrics;
@@ -83,6 +84,64 @@ pub fn headline(name: &str, m: &Metrics) -> String {
     )
 }
 
+/// Format nanoseconds as a human duration (wall-clock phase spans).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.1}µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Per-phase wall-clock profile of a run, plus the scheduler-overhead
+/// row: mean scheduling wall-clock per simulated cycle and its fraction
+/// of the cycle period — the honest counterpart of the paper's SOR
+/// story (how much of each real-time cycle window the scheduler would
+/// spend deciding). Phase columns may overlap (a preemption's retry
+/// also counts under plan/commit), so only the overhead row is
+/// additive.
+pub fn phase_table(h: &SchedulerHealth, cycle_ms: u64) -> String {
+    let rows: Vec<Vec<String>> = PHASE_NAMES
+        .iter()
+        .enumerate()
+        .map(|(k, name)| {
+            let p = &h.phases[k];
+            vec![
+                name.to_string(),
+                fmt_ns(p.total_ns as f64),
+                fmt_ns(p.p50_ns),
+                fmt_ns(p.p95_ns),
+                fmt_ns(p.p99_ns),
+            ]
+        })
+        .collect();
+    let mut out = table(
+        &format!("scheduler phases ({} cycles profiled)", h.cycles),
+        &["phase", "total", "p50", "p95", "p99"],
+        &rows,
+    );
+    out.push_str(&format!(
+        "\nscheduler overhead: {}/cycle ({} of the {} cycle period) | \
+         queue depth mean {:.1} max {} | plan-cache hit rate {} | \
+         shard imbalance {:.2} | nodes examined {} scored {} | decisions {}\n",
+        fmt_ns(h.overhead_ns_per_cycle()),
+        pct(h.overhead_fraction(cycle_ms)),
+        fmt_ms(cycle_ms as f64),
+        h.queue_depth_mean,
+        h.queue_depth_max,
+        pct(h.plan_cache_hit_rate),
+        h.shard_imbalance,
+        h.nodes_examined,
+        h.nodes_scored,
+        h.decisions,
+    ));
+    out
+}
+
 /// Side-by-side per-bucket summaries, e.g. JWTD for two arms.
 pub fn bucket_comparison(
     title: &str,
@@ -145,6 +204,30 @@ mod tests {
     #[test]
     fn pct_formats() {
         assert_eq!(pct(0.9312), "93.12%");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1_500.0), "1.5µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50ms");
+        assert_eq!(fmt_ns(3e9), "3.00s");
+    }
+
+    #[test]
+    fn phase_table_renders_overhead_row() {
+        let h = SchedulerHealth {
+            cycles: 4,
+            sched_wall_ns: 4_000_000,
+            ..SchedulerHealth::default()
+        };
+        let t = phase_table(&h, 5_000);
+        assert!(t.contains("4 cycles profiled"), "{t}");
+        // 1 ms of scheduling per 5 s cycle = 0.02% overhead.
+        assert!(t.contains("scheduler overhead: 1.00ms/cycle (0.02%"), "{t}");
+        for name in PHASE_NAMES {
+            assert!(t.contains(name), "missing phase row {name}");
+        }
     }
 
     #[test]

@@ -1,0 +1,647 @@
+//! Digest-inert observability: per-cycle phase profiling, structured
+//! decision tracing, and the `SchedulerHealth` rollup.
+//!
+//! The hard invariant this module is built around: **observability must
+//! never perturb scheduling**. Every wall-clock measurement lives
+//! strictly outside the deterministic digest
+//! ([`SimOutcome::digest_json`](crate::sim::SimOutcome::digest_json)),
+//! and the recorder only *reads* scheduler state — it is handed into
+//! [`Qsch::cycle_observed`](crate::qsch::Qsch::cycle_observed) and the
+//! runner as `&mut ObsRecorder`, but no scheduling branch ever consults
+//! it. A disabled recorder ([`ObsRecorder::disabled`]) allocates nothing
+//! and reduces every span to one branch on a bool, so the legacy
+//! `Qsch::cycle` / `sim::run` entry points pay ~nothing.
+//!
+//! Three artifacts come out of a run:
+//! * [`CycleProfile`]s — monotonic wall-clock spans (`std::time::Instant`)
+//!   around each scheduling phase of a cycle, rolled up into
+//! * [`SchedulerHealth`] — p50/p95/p99 per phase, queue depth, plan-cache
+//!   hit rate, shard imbalance, and the scheduler-overhead row (wall-clock
+//!   scheduling time per simulated cycle); and
+//! * [`DecisionRecord`]s — why each job landed (or did not land) where it
+//!   did, streamed as JSONL through `kant simulate --obs-out FILE` and
+//!   read back by `kant obs summarize` / `kant explain`.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::time::Instant;
+
+use crate::cluster::ids::NodeId;
+use crate::cluster::state::ClusterState;
+use crate::job::spec::JobSpec;
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+
+/// Number of profiled scheduling phases.
+pub const PHASE_COUNT: usize = 8;
+
+/// Phase names, indexable by `ObsPhase as usize` (JSON/report keys).
+pub const PHASE_NAMES: [&str; PHASE_COUNT] = [
+    "adapt", "mold", "prefetch", "plan", "commit", "preempt", "defrag", "fault",
+];
+
+/// One profiled phase of the scheduling pipeline.
+///
+/// `Plan` covers dynamic admission + the placer's plan/score walk;
+/// `Commit` the quota charge + lifecycle transition on success. The
+/// `Preempt` span wraps a whole escalation (victim selection, eviction,
+/// and the retry placement), so its retry's `Plan`/`Commit` time is
+/// counted under both — phase columns may overlap; only the cycle
+/// wall-clock is additive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObsPhase {
+    /// Adaptive weight-controller tick (runner, pre-cycle).
+    Adapt,
+    /// Moldable shape-selection pass.
+    Mold,
+    /// Superspine-sharded batch prefetch.
+    Prefetch,
+    /// Dynamic admission + placement planning for one job.
+    Plan,
+    /// Successful placement commit (charge + lifecycle + dequeue).
+    Commit,
+    /// A preemption escalation (victims + eviction + retry).
+    Preempt,
+    /// A defrag round (runner event, folded into the next cycle profile).
+    Defrag,
+    /// Fault/health delivery (runner event, folded like `Defrag`).
+    Fault,
+}
+
+/// Wall-clock profile of one scheduling cycle (digest-inert).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CycleProfile {
+    /// Simulated time of the cycle.
+    pub t_ms: u64,
+    /// Per-phase wall-clock nanoseconds (see [`ObsPhase`] for overlap).
+    pub phase_ns: [u64; PHASE_COUNT],
+    /// Wall-clock nanoseconds of the whole cycle event (adapt + queue walk).
+    pub cycle_ns: u64,
+    /// Queue depth after the cycle.
+    pub queue_depth: u64,
+    /// Jobs scheduled this cycle.
+    pub scheduled: u64,
+    /// Jobs preempted this cycle.
+    pub preempted: u64,
+}
+
+/// One structured scheduling decision: why a job landed (or did not).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionRecord {
+    pub t_ms: u64,
+    pub job: u64,
+    /// `scheduled` | `admission-rejected` | `placement-failed` |
+    /// `preempted` | `reshaped` | `molded`.
+    pub action: String,
+    /// Rejection reason, escalation kind, or empty.
+    pub reason: String,
+    /// Chosen region (`ss2/sp5/g17` from the gang's first node, with a
+    /// `+Nn` suffix for the node count); empty when nothing was placed.
+    pub region: String,
+    /// Distinct nodes in the placement (0 when nothing was placed).
+    pub nodes: u64,
+    /// Shape-ladder rung in effect (-1 = fixed shape).
+    pub shape_rung: i64,
+    /// The scorer-facing job descriptor ([`features::job_descriptor`]).
+    ///
+    /// [`features::job_descriptor`]: crate::rsch::features::job_descriptor
+    pub features: Vec<f64>,
+    /// Active adaptive weight overlay when the decision was made.
+    pub overlay_pack_bias: f64,
+    pub overlay_fairness: f64,
+}
+
+impl DecisionRecord {
+    /// Base record for `spec`: job id, feature vector, shape rung, and
+    /// the active overlay. Caller fills `reason`/`region`/`nodes`.
+    pub fn for_spec(
+        t_ms: u64,
+        spec: &JobSpec,
+        action: &str,
+        overlay: (f64, f64),
+    ) -> DecisionRecord {
+        DecisionRecord {
+            t_ms,
+            job: spec.id.0,
+            action: action.to_string(),
+            reason: String::new(),
+            region: String::new(),
+            nodes: 0,
+            shape_rung: spec.active_shape().map(|k| k as i64).unwrap_or(-1),
+            features: job_features(spec),
+            overlay_pack_bias: overlay.0,
+            overlay_fairness: overlay.1,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut d = Json::obj();
+        d.set("kind", "decision")
+            .set("t_ms", self.t_ms)
+            .set("job", self.job)
+            .set("action", self.action.as_str())
+            .set("reason", self.reason.as_str())
+            .set("region", self.region.as_str())
+            .set("nodes", self.nodes)
+            .set("shape_rung", self.shape_rung)
+            .set("features", self.features.clone())
+            .set("overlay_pack_bias", self.overlay_pack_bias)
+            .set("overlay_fairness", self.overlay_fairness);
+        d
+    }
+
+    pub fn from_json(j: &Json) -> Option<DecisionRecord> {
+        if j.get("kind").and_then(Json::as_str) != Some("decision") {
+            return None;
+        }
+        Some(DecisionRecord {
+            t_ms: j.get("t_ms")?.as_u64()?,
+            job: j.get("job")?.as_u64()?,
+            action: j.get("action")?.as_str()?.to_string(),
+            reason: j.get("reason")?.as_str()?.to_string(),
+            region: j.get("region")?.as_str()?.to_string(),
+            nodes: j.get("nodes")?.as_u64()?,
+            shape_rung: j.get("shape_rung")?.as_f64()? as i64,
+            features: j
+                .get("features")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Option<Vec<f64>>>()?,
+            overlay_pack_bias: j.get("overlay_pack_bias")?.as_f64()?,
+            overlay_fairness: j.get("overlay_fairness")?.as_f64()?,
+        })
+    }
+}
+
+/// Wall-clock summary of one phase across a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseSummary {
+    pub total_ns: u64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+}
+
+/// The per-run scheduler health rollup (digest-inert by construction:
+/// every field is wall-clock- or counter-derived and none feeds back
+/// into a scheduling branch).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedulerHealth {
+    /// Profiled scheduling cycles.
+    pub cycles: u64,
+    /// Total wall-clock ns spent scheduling: cycle events plus the
+    /// defrag/fault spans delivered between cycles.
+    pub sched_wall_ns: u64,
+    /// Per-phase totals/percentiles, indexed like [`PHASE_NAMES`].
+    pub phases: [PhaseSummary; PHASE_COUNT],
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: u64,
+    /// Prefetched-plan commits over all `Rsch::place` calls (sharded runs;
+    /// 0 when the sequential core never prefetches).
+    pub plan_cache_hit_rate: f64,
+    /// Mean over prefetch batches of `max shard load / ideal shard load`
+    /// (1.0 = perfectly balanced routing; 0 when nothing was prefetched).
+    pub shard_imbalance: f64,
+    pub nodes_examined: u64,
+    pub nodes_scored: u64,
+    /// Decision records emitted (0 at verbosity 0).
+    pub decisions: u64,
+}
+
+impl SchedulerHealth {
+    /// Aggregate the raw per-cycle profiles; the RSCH-derived fields
+    /// (cache hit rate, imbalance, scoring volume) are filled by the
+    /// caller who holds the `RschStats`.
+    pub fn from_profiles(profiles: &[CycleProfile]) -> SchedulerHealth {
+        let mut h = SchedulerHealth {
+            cycles: profiles.len() as u64,
+            ..SchedulerHealth::default()
+        };
+        if profiles.is_empty() {
+            return h;
+        }
+        for p in profiles {
+            h.sched_wall_ns += p.cycle_ns
+                + p.phase_ns[ObsPhase::Defrag as usize]
+                + p.phase_ns[ObsPhase::Fault as usize];
+            h.queue_depth_max = h.queue_depth_max.max(p.queue_depth);
+            h.queue_depth_mean += p.queue_depth as f64;
+        }
+        h.queue_depth_mean /= profiles.len() as f64;
+        for k in 0..PHASE_COUNT {
+            let mut samples: Vec<f64> =
+                profiles.iter().map(|p| p.phase_ns[k] as f64).collect();
+            samples.sort_by(|a, b| a.partial_cmp(b).expect("ns are finite"));
+            h.phases[k] = PhaseSummary {
+                total_ns: profiles.iter().map(|p| p.phase_ns[k]).sum(),
+                p50_ns: percentile_sorted(&samples, 0.50),
+                p95_ns: percentile_sorted(&samples, 0.95),
+                p99_ns: percentile_sorted(&samples, 0.99),
+            };
+        }
+        h
+    }
+
+    /// Mean wall-clock scheduling nanoseconds per simulated cycle.
+    pub fn overhead_ns_per_cycle(&self) -> f64 {
+        self.sched_wall_ns as f64 / self.cycles.max(1) as f64
+    }
+
+    /// Scheduler-overhead fraction: wall-clock scheduling time per cycle
+    /// over the simulated cycle period — the honest counterpart of the
+    /// paper's SOR story (how much of each real-time cycle window a
+    /// production scheduler would spend deciding).
+    pub fn overhead_fraction(&self, cycle_ms: u64) -> f64 {
+        self.overhead_ns_per_cycle() / (cycle_ms.max(1) as f64 * 1e6)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut phases = Json::obj();
+        for (k, name) in PHASE_NAMES.iter().enumerate() {
+            let mut p = Json::obj();
+            p.set("total_ns", self.phases[k].total_ns)
+                .set("p50_ns", self.phases[k].p50_ns)
+                .set("p95_ns", self.phases[k].p95_ns)
+                .set("p99_ns", self.phases[k].p99_ns);
+            phases.set(name, p);
+        }
+        let mut d = Json::obj();
+        d.set("kind", "health")
+            .set("schema", "kant-obs-health-v1")
+            .set("cycles", self.cycles)
+            .set("sched_wall_ns", self.sched_wall_ns)
+            .set("phases", phases)
+            .set("queue_depth_mean", self.queue_depth_mean)
+            .set("queue_depth_max", self.queue_depth_max)
+            .set("plan_cache_hit_rate", self.plan_cache_hit_rate)
+            .set("shard_imbalance", self.shard_imbalance)
+            .set("nodes_examined", self.nodes_examined)
+            .set("nodes_scored", self.nodes_scored)
+            .set("decisions", self.decisions);
+        d
+    }
+
+    pub fn from_json(j: &Json) -> Option<SchedulerHealth> {
+        if j.get("kind").and_then(Json::as_str) != Some("health") {
+            return None;
+        }
+        let mut phases = [PhaseSummary::default(); PHASE_COUNT];
+        let pj = j.get("phases")?;
+        for (k, name) in PHASE_NAMES.iter().enumerate() {
+            let p = pj.get(name)?;
+            phases[k] = PhaseSummary {
+                total_ns: p.get("total_ns")?.as_u64()?,
+                p50_ns: p.get("p50_ns")?.as_f64()?,
+                p95_ns: p.get("p95_ns")?.as_f64()?,
+                p99_ns: p.get("p99_ns")?.as_f64()?,
+            };
+        }
+        Some(SchedulerHealth {
+            cycles: j.get("cycles")?.as_u64()?,
+            sched_wall_ns: j.get("sched_wall_ns")?.as_u64()?,
+            phases,
+            queue_depth_mean: j.get("queue_depth_mean")?.as_f64()?,
+            queue_depth_max: j.get("queue_depth_max")?.as_u64()?,
+            plan_cache_hit_rate: j.get("plan_cache_hit_rate")?.as_f64()?,
+            shard_imbalance: j.get("shard_imbalance")?.as_f64()?,
+            nodes_examined: j.get("nodes_examined")?.as_u64()?,
+            nodes_scored: j.get("nodes_scored")?.as_u64()?,
+            decisions: j.get("decisions")?.as_u64()?,
+        })
+    }
+}
+
+/// Recorder tunables.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    pub enabled: bool,
+    /// 0 = phase profiles only; 1 = + scheduled/preempted/molded
+    /// decisions; 2 = + admission/placement rejections.
+    pub verbosity: u8,
+    /// Ring-buffer capacity for the stall-diagnostic trace.
+    pub trace_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: false,
+            verbosity: 0,
+            trace_capacity: 32,
+        }
+    }
+}
+
+/// The observability recorder threaded through the scheduling core.
+pub struct ObsRecorder {
+    cfg: ObsConfig,
+    /// Phase accumulators for the cycle being profiled.
+    cur: [u64; PHASE_COUNT],
+    cycle_started: Option<Instant>,
+    profiles: Vec<CycleProfile>,
+    /// Last-N decisions for the stall diagnostic.
+    ring: VecDeque<DecisionRecord>,
+    /// Optional JSONL stream (`--obs-out`).
+    sink: Option<Box<dyn Write>>,
+    decisions: u64,
+    overlay: (f64, f64),
+}
+
+impl ObsRecorder {
+    /// The allocation-free no-op recorder every legacy entry point uses.
+    pub fn disabled() -> ObsRecorder {
+        ObsRecorder {
+            cfg: ObsConfig::default(),
+            cur: [0; PHASE_COUNT],
+            cycle_started: None,
+            profiles: Vec::new(),
+            ring: VecDeque::new(),
+            sink: None,
+            decisions: 0,
+            overlay: (0.0, 0.0),
+        }
+    }
+
+    pub fn enabled(verbosity: u8) -> ObsRecorder {
+        ObsRecorder {
+            cfg: ObsConfig {
+                enabled: true,
+                verbosity,
+                ..ObsConfig::default()
+            },
+            ..ObsRecorder::disabled()
+        }
+    }
+
+    /// Attach a JSONL sink; every decision streams out as one line and
+    /// the health rollup goes out as the trailer line.
+    pub fn with_sink(mut self, sink: Box<dyn Write>) -> ObsRecorder {
+        self.sink = Some(sink);
+        self
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Should a decision at `level` be recorded? Callers gate feature
+    /// extraction behind this so disabled runs pay one bool check.
+    #[inline]
+    pub fn wants(&self, level: u8) -> bool {
+        self.cfg.enabled && self.cfg.verbosity >= level
+    }
+
+    /// Publish the active weight overlay (runner, once per cycle) so
+    /// decision records can snapshot it.
+    pub fn set_overlay(&mut self, pack_bias: f64, fairness: f64) {
+        self.overlay = (pack_bias, fairness);
+    }
+
+    pub fn overlay(&self) -> (f64, f64) {
+        self.overlay
+    }
+
+    /// Open a span. Returns `None` when disabled — `span_end` then does
+    /// no work, so instrumentation sites stay branch-cheap.
+    #[inline]
+    pub fn span(&self) -> Option<Instant> {
+        if self.cfg.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span, folding its wall-clock time into the current cycle.
+    #[inline]
+    pub fn span_end(&mut self, phase: ObsPhase, started: Option<Instant>) {
+        if let Some(t) = started {
+            self.cur[phase as usize] += t.elapsed().as_nanos() as u64;
+        }
+    }
+
+    /// Start profiling a cycle event (runner, before the adapt tick).
+    pub fn begin_cycle(&mut self) {
+        if self.cfg.enabled {
+            self.cycle_started = Some(Instant::now());
+        }
+    }
+
+    /// Close the cycle profile. Defrag/fault spans delivered *between*
+    /// cycles accumulate in the same buffers and roll into the next
+    /// cycle's profile (their time is outside `cycle_ns` either way).
+    pub fn end_cycle(&mut self, t_ms: u64, queue_depth: u64, scheduled: u64, preempted: u64) {
+        let Some(started) = self.cycle_started.take() else {
+            return;
+        };
+        self.profiles.push(CycleProfile {
+            t_ms,
+            phase_ns: self.cur,
+            cycle_ns: started.elapsed().as_nanos() as u64,
+            queue_depth,
+            scheduled,
+            preempted,
+        });
+        self.cur = [0; PHASE_COUNT];
+    }
+
+    /// Record one decision at `level` (see [`ObsConfig::verbosity`]):
+    /// ring-buffered for the stall diagnostic and streamed to the JSONL
+    /// sink when one is attached.
+    pub fn record(&mut self, level: u8, rec: DecisionRecord) {
+        if !self.wants(level) {
+            return;
+        }
+        self.decisions += 1;
+        if let Some(sink) = self.sink.as_mut() {
+            let _ = writeln!(sink, "{}", rec.to_json().to_string_compact());
+        }
+        if self.ring.len() >= self.cfg.trace_capacity {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(rec);
+    }
+
+    /// The last-N decisions (oldest first) — the stall-diagnostic dump.
+    pub fn recent(&self) -> impl Iterator<Item = &DecisionRecord> {
+        self.ring.iter()
+    }
+
+    pub fn decisions(&self) -> u64 {
+        self.decisions
+    }
+
+    pub fn profiles(&self) -> &[CycleProfile] {
+        &self.profiles
+    }
+
+    /// Roll the profiles up; RSCH-derived fields are the caller's to fill.
+    pub fn health(&self) -> SchedulerHealth {
+        let mut h = SchedulerHealth::from_profiles(&self.profiles);
+        h.decisions = self.decisions;
+        h
+    }
+
+    /// Write the health rollup as the JSONL trailer line and flush.
+    pub fn write_trailer(&mut self, health: &SchedulerHealth) {
+        if let Some(sink) = self.sink.as_mut() {
+            let _ = writeln!(sink, "{}", health.to_json().to_string_compact());
+            let _ = sink.flush();
+        }
+    }
+}
+
+/// The scorer-facing feature vector for a decision record — the same
+/// descriptor RSCH hands its linear/XLA scorer, widened to f64 for JSON.
+pub fn job_features(spec: &JobSpec) -> Vec<f64> {
+    crate::rsch::features::job_descriptor(spec, spec.gpus_per_replica())
+        .iter()
+        .map(|&x| f64::from(x))
+        .collect()
+}
+
+/// Human-readable region label for a placement: superspine / spine /
+/// group of the first node, plus the distinct-node count.
+pub fn region_label(state: &ClusterState, nodes: &[NodeId]) -> String {
+    let Some(&first) = nodes.first() else {
+        return String::new();
+    };
+    let g = state.fabric.group_of(first);
+    format!(
+        "ss{}/sp{}/g{}+{}n",
+        state.fabric.superspine_of(first).0,
+        state.fabric.spine_of(first).0,
+        g.0,
+        nodes.len(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record() -> DecisionRecord {
+        DecisionRecord {
+            t_ms: 5_000,
+            job: 42,
+            action: "scheduled".to_string(),
+            reason: "backfill".to_string(),
+            region: "ss0/sp1/g2+4n".to_string(),
+            nodes: 4,
+            shape_rung: 1,
+            features: vec![2.0, 16.0, 1.0, 0.25],
+            overlay_pack_bias: 0.125,
+            overlay_fairness: -0.5,
+        }
+    }
+
+    #[test]
+    fn decision_record_roundtrips_through_jsonl() {
+        let rec = sample_record();
+        let line = rec.to_json().to_string_compact();
+        let back = DecisionRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(rec, back);
+        // A health line is not a decision.
+        let h = SchedulerHealth::default().to_json().to_string_compact();
+        assert!(DecisionRecord::from_json(&Json::parse(&h).unwrap()).is_none());
+    }
+
+    #[test]
+    fn health_roundtrips_through_jsonl() {
+        let mut profiles = Vec::new();
+        for i in 0..10u64 {
+            let mut phase_ns = [0u64; PHASE_COUNT];
+            phase_ns[ObsPhase::Plan as usize] = 1_000 * (i + 1);
+            phase_ns[ObsPhase::Defrag as usize] = 37;
+            profiles.push(CycleProfile {
+                t_ms: i * 5_000,
+                phase_ns,
+                cycle_ns: 2_000 * (i + 1),
+                queue_depth: i,
+                scheduled: 1,
+                preempted: 0,
+            });
+        }
+        let mut h = SchedulerHealth::from_profiles(&profiles);
+        h.plan_cache_hit_rate = 0.75;
+        h.shard_imbalance = 1.25;
+        h.nodes_examined = 9_001;
+        h.nodes_scored = 5_000;
+        h.decisions = 12;
+        let line = h.to_json().to_string_compact();
+        let back = SchedulerHealth::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(h, back);
+    }
+
+    #[test]
+    fn health_rollup_math() {
+        let mut phase_ns = [0u64; PHASE_COUNT];
+        phase_ns[ObsPhase::Fault as usize] = 10;
+        let profiles = [
+            CycleProfile {
+                t_ms: 0,
+                phase_ns,
+                cycle_ns: 100,
+                queue_depth: 4,
+                ..CycleProfile::default()
+            },
+            CycleProfile {
+                t_ms: 5_000,
+                phase_ns: [0; PHASE_COUNT],
+                cycle_ns: 300,
+                queue_depth: 8,
+                ..CycleProfile::default()
+            },
+        ];
+        let h = SchedulerHealth::from_profiles(&profiles);
+        assert_eq!(h.cycles, 2);
+        // Fault spans count toward the scheduling wall clock.
+        assert_eq!(h.sched_wall_ns, 100 + 300 + 10);
+        assert_eq!(h.queue_depth_max, 8);
+        assert!((h.queue_depth_mean - 6.0).abs() < 1e-9);
+        assert!((h.overhead_ns_per_cycle() - 205.0).abs() < 1e-9);
+        // 205 ns per 5 s simulated cycle.
+        assert!((h.overhead_fraction(5_000) - 205.0 / 5e9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut obs = ObsRecorder::disabled();
+        obs.begin_cycle();
+        let t = obs.span();
+        assert!(t.is_none());
+        obs.span_end(ObsPhase::Plan, t);
+        obs.end_cycle(0, 9, 1, 0);
+        obs.record(1, sample_record());
+        assert!(obs.profiles().is_empty());
+        assert_eq!(obs.decisions(), 0);
+        assert_eq!(obs.recent().count(), 0);
+    }
+
+    #[test]
+    fn verbosity_gates_decision_levels() {
+        let mut obs = ObsRecorder::enabled(1);
+        obs.record(1, sample_record());
+        obs.record(2, sample_record()); // Rejection detail: suppressed.
+        assert_eq!(obs.decisions(), 1);
+        assert!(obs.wants(1) && !obs.wants(2));
+    }
+
+    #[test]
+    fn ring_buffer_keeps_last_n() {
+        let mut obs = ObsRecorder::enabled(1);
+        for i in 0..100u64 {
+            let rec = DecisionRecord {
+                job: i,
+                ..sample_record()
+            };
+            obs.record(1, rec);
+        }
+        let jobs: Vec<u64> = obs.recent().map(|r| r.job).collect();
+        assert_eq!(jobs.len(), ObsConfig::default().trace_capacity);
+        assert_eq!(*jobs.last().unwrap(), 99);
+        assert_eq!(jobs[0], 100 - jobs.len() as u64);
+    }
+}

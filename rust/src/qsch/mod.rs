@@ -17,6 +17,7 @@ use crate::cluster::tenant::QuotaLedger;
 use crate::job::spec::{JobSpec, Priority};
 use crate::job::state::Phase;
 use crate::job::store::JobStore;
+use crate::obs::{region_label, DecisionRecord, ObsPhase, ObsRecorder};
 use crate::util::stats::percentile_sorted;
 
 use admission::{demand_by_type, dynamic_admission, static_admission};
@@ -230,6 +231,20 @@ impl Qsch {
         state: &mut ClusterState,
         placer: &mut dyn Placer,
     ) -> CycleReport {
+        self.cycle_observed(now, store, state, placer, &mut ObsRecorder::disabled())
+    }
+
+    /// [`Qsch::cycle`] with an observability recorder attached: identical
+    /// scheduling decisions (the recorder is write-only — no branch below
+    /// reads it), plus wall-clock phase spans and [`DecisionRecord`]s.
+    pub fn cycle_observed(
+        &mut self,
+        now: u64,
+        store: &mut JobStore,
+        state: &mut ClusterState,
+        placer: &mut dyn Placer,
+        obs: &mut ObsRecorder,
+    ) -> CycleReport {
         self.stats.cycles += 1;
         let mut report = CycleReport::default();
         // ---- Moldable shape selection (single-threaded, pre-snapshot) ----
@@ -239,7 +254,9 @@ impl Qsch {
         // and before prefetch (so sharded planners see final shapes —
         // `--shards N` digests stay byte-identical).
         if self.cfg.enable_moldable {
-            self.mold_pass(now, store, state, placer);
+            let t = obs.span();
+            self.mold_pass(now, store, state, placer, obs);
+            obs.span_end(ObsPhase::Mold, t);
         }
         let candidates = self.queues.global_order();
         if self.cfg.batch_shards > 0 {
@@ -254,7 +271,9 @@ impl Qsch {
                 })
                 .collect();
             if !specs.is_empty() {
+                let t = obs.span();
                 placer.prefetch(state, &specs, self.cfg.batch_shards);
+                obs.span_end(ObsPhase::Prefetch, t);
             }
         }
 
@@ -311,9 +330,22 @@ impl Qsch {
             if let Err(failure) = static_admission(&self.ledger, &spec) {
                 let mut resolved = false;
                 if self.cfg.enable_quota_reclaim {
-                    resolved = self.try_quota_reclaim(now, store, state, &spec, &mut report);
+                    let t = obs.span();
+                    resolved =
+                        self.try_quota_reclaim(now, store, state, &spec, &mut report, obs);
+                    obs.span_end(ObsPhase::Preempt, t);
                 }
                 if !resolved || static_admission(&self.ledger, &spec).is_err() {
+                    if obs.wants(2) {
+                        let mut rec = DecisionRecord::for_spec(
+                            now,
+                            &spec,
+                            "admission-rejected",
+                            obs.overlay(),
+                        );
+                        rec.reason = failure.to_string();
+                        obs.record(2, rec);
+                    }
                     report
                         .admission_failures
                         .push((entry.job, failure.to_string()));
@@ -331,7 +363,7 @@ impl Qsch {
 
             // ---- Tier 2: dynamic admission + placement ----
             let bypassing = head_failed && !is_head;
-            if self.attempt_place(now, store, state, placer, entry.job, bypassing) {
+            if self.attempt_place(now, store, state, placer, entry.job, bypassing, "", obs) {
                 report.scheduled.push(entry.job);
                 if is_head {
                     self.head_blocked = None;
@@ -357,6 +389,7 @@ impl Qsch {
                         entry.job,
                         PreemptKind::Backfill,
                         &mut report,
+                        obs,
                     );
                 }
             }
@@ -373,6 +406,7 @@ impl Qsch {
                     entry.job,
                     PreemptKind::Priority,
                     &mut report,
+                    obs,
                 );
             }
             // SLO pressure: a blocked scale-up replica delta reclaims
@@ -387,6 +421,7 @@ impl Qsch {
                     entry.job,
                     PreemptKind::SloPressure,
                     &mut report,
+                    obs,
                 );
             }
             // Anti-starvation rescue: the head of a class whose rolling
@@ -406,6 +441,7 @@ impl Qsch {
                     entry.job,
                     PreemptKind::Starvation,
                     &mut report,
+                    obs,
                 );
                 if rescued {
                     self.stats.starvation_rescues += 1;
@@ -450,6 +486,7 @@ impl Qsch {
         store: &mut JobStore,
         state: &ClusterState,
         placer: &mut dyn Placer,
+        obs: &mut ObsRecorder,
     ) {
         let entries: Vec<QueueEntry> = self
             .queues
@@ -482,6 +519,16 @@ impl Qsch {
             j.spec.apply_shape(k);
             j.mark_reshaped(now, thr_old, thr_new);
             self.stats.shape_molds += 1;
+            if obs.wants(1) {
+                let mut rec = DecisionRecord::for_spec(
+                    now,
+                    &store.expect(e.job).spec,
+                    "molded",
+                    obs.overlay(),
+                );
+                rec.reason = format!("rung {} -> {}", old, k);
+                obs.record(1, rec);
+            }
             // The queue key includes the gang size: re-insert with the
             // molded footprint (priority/submit keep their slot).
             self.queues.remove(e.job);
@@ -565,7 +612,10 @@ impl Qsch {
     }
 
     /// Dynamic admission + placer attempt + on success: quota charge and
-    /// lifecycle transition.
+    /// lifecycle transition. `via` labels how the attempt was reached
+    /// ("" = plain queue walk, otherwise the escalation kind) — it only
+    /// feeds the decision record, never a scheduling branch.
+    #[allow(clippy::too_many_arguments)]
     fn attempt_place(
         &mut self,
         now: u64,
@@ -574,13 +624,25 @@ impl Qsch {
         placer: &mut dyn Placer,
         job: JobId,
         bypassed_blocked_head: bool,
+        via: &str,
+        obs: &mut ObsRecorder,
     ) -> bool {
+        let plan_span = obs.span();
         let spec = store.expect(job).spec.clone();
         if dynamic_admission(state, &spec).is_err() {
+            obs.span_end(ObsPhase::Plan, plan_span);
+            if obs.wants(2) {
+                let mut rec =
+                    DecisionRecord::for_spec(now, &spec, "placement-failed", obs.overlay());
+                rec.reason = "dynamic-admission".to_string();
+                obs.record(2, rec);
+            }
             return false;
         }
         match placer.place(state, &spec) {
             Ok(()) => {
+                obs.span_end(ObsPhase::Plan, plan_span);
+                let commit_span = obs.span();
                 self.ledger
                     .charge(job, spec.tenant, &demand_by_type(&spec))
                     .expect("static admission verified headroom");
@@ -593,13 +655,45 @@ impl Qsch {
                 if bypassed_blocked_head {
                     self.stats.scheduled_backfilled += 1;
                 }
+                obs.span_end(ObsPhase::Commit, commit_span);
+                if obs.wants(1) {
+                    let nodes = state.nodes_of(job);
+                    let mut rec =
+                        DecisionRecord::for_spec(now, &spec, "scheduled", obs.overlay());
+                    rec.reason = if !via.is_empty() {
+                        via.to_string()
+                    } else if bypassed_blocked_head {
+                        "backfill-bypass".to_string()
+                    } else {
+                        String::new()
+                    };
+                    rec.region = region_label(state, &nodes);
+                    rec.nodes = nodes.len() as u64;
+                    obs.record(1, rec);
+                }
                 true
             }
-            Err(_) => false,
+            Err(e) => {
+                obs.span_end(ObsPhase::Plan, plan_span);
+                if obs.wants(2) {
+                    let mut rec =
+                        DecisionRecord::for_spec(now, &spec, "placement-failed", obs.overlay());
+                    rec.reason = match e {
+                        PlaceFailure::Resources => "no-feasible-plan".to_string(),
+                        PlaceFailure::Unsatisfiable => "unsatisfiable".to_string(),
+                    };
+                    obs.record(2, rec);
+                }
+                false
+            }
         }
     }
 
     /// Preempt eligible victims for `job`, then retry placement once.
+    ///
+    /// The whole escalation (victim selection, eviction, retry) runs
+    /// under one `Preempt` span; the retry's `Plan`/`Commit` time is
+    /// also counted by `attempt_place`, so phase columns may overlap.
     fn try_preempt_and_place(
         &mut self,
         now: u64,
@@ -609,7 +703,9 @@ impl Qsch {
         job: JobId,
         kind: PreemptKind,
         report: &mut CycleReport,
+        obs: &mut ObsRecorder,
     ) -> bool {
+        let span = obs.span();
         let spec = store.expect(job).spec.clone();
         let need = demand_by_type(&spec);
         let prio = spec.priority;
@@ -665,9 +761,11 @@ impl Qsch {
             PreemptKind::QuotaReclaim => unreachable!("handled in try_quota_reclaim"),
         };
         let Some(victims) = victims else {
+            obs.span_end(ObsPhase::Preempt, span);
             return false; // Conservative: no complete victim set.
         };
         if victims.is_empty() {
+            obs.span_end(ObsPhase::Preempt, span);
             return false; // Resources exist; placement failed for another
                           // reason (fragmentation) — preemption won't help.
         }
@@ -679,6 +777,17 @@ impl Qsch {
         for &v in &victims {
             if kind == PreemptKind::SloPressure && self.shrink_victim(store, state, v, now) {
                 report.reshaped.push(v);
+                if obs.wants(1) {
+                    // Spec already carries the shrunken rung here.
+                    let mut rec = DecisionRecord::for_spec(
+                        now,
+                        &store.expect(v).spec,
+                        "reshaped",
+                        obs.overlay(),
+                    );
+                    rec.reason = preempt_label(kind).to_string();
+                    obs.record(1, rec);
+                }
             } else {
                 evicted.push(v);
             }
@@ -687,6 +796,16 @@ impl Qsch {
         for &v in &evicted {
             self.requeue(store, v);
             report.preempted.push(v);
+            if obs.wants(1) {
+                let mut rec = DecisionRecord::for_spec(
+                    now,
+                    &store.expect(v).spec,
+                    "preempted",
+                    obs.overlay(),
+                );
+                rec.reason = preempt_label(kind).to_string();
+                obs.record(1, rec);
+            }
         }
         match kind {
             PreemptKind::Backfill => self.stats.backfill_preemptions += evicted.len() as u64,
@@ -699,7 +818,10 @@ impl Qsch {
             }
             PreemptKind::QuotaReclaim => {}
         }
-        self.attempt_place(now, store, state, placer, job, false)
+        let placed =
+            self.attempt_place(now, store, state, placer, job, false, preempt_label(kind), obs);
+        obs.span_end(ObsPhase::Preempt, span);
+        placed
     }
 
     /// Quota-reclamation preemption: evict jobs borrowing this tenant's
@@ -712,6 +834,7 @@ impl Qsch {
         state: &mut ClusterState,
         spec: &JobSpec,
         report: &mut CycleReport,
+        obs: &mut ObsRecorder,
     ) -> bool {
         let mut victims: Vec<JobId> = Vec::new();
         for (g, amount) in demand_by_type(spec) {
@@ -749,6 +872,16 @@ impl Qsch {
         for &v in &victims {
             self.requeue(store, v);
             report.preempted.push(v);
+            if obs.wants(1) {
+                let mut rec = DecisionRecord::for_spec(
+                    now,
+                    &store.expect(v).spec,
+                    "preempted",
+                    obs.overlay(),
+                );
+                rec.reason = preempt_label(PreemptKind::QuotaReclaim).to_string();
+                obs.record(1, rec);
+            }
         }
         true
     }
@@ -757,6 +890,17 @@ impl Qsch {
     pub fn head_blocked_for(&self, now: u64) -> Option<(JobId, u64)> {
         self.head_blocked
             .map(|(j, since)| (j, now.saturating_sub(since)))
+    }
+}
+
+/// Decision-record `reason` label for an escalation kind.
+fn preempt_label(kind: PreemptKind) -> &'static str {
+    match kind {
+        PreemptKind::Backfill => "backfill-timeout",
+        PreemptKind::Priority => "priority",
+        PreemptKind::SloPressure => "slo-pressure",
+        PreemptKind::Starvation => "starvation",
+        PreemptKind::QuotaReclaim => "quota-reclaim",
     }
 }
 

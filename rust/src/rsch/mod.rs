@@ -210,6 +210,17 @@ pub struct RschStats {
     pub adapt_ticks: u64,
     pub adapt_shifts: u64,
     pub adapt_fingerprint: u64,
+    /// `place` calls served from the sharded-prefetch plan cache vs
+    /// falling through to a fresh sequential plan. Observability-only:
+    /// feeds `SchedulerHealth`, **never** the sim digest.
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+    /// Prefetch batches routed, and the sum over batches of
+    /// `max shard load ÷ ideal shard load` (≥ 1.0; mean = the
+    /// `SchedulerHealth` shard-imbalance factor). Digest-inert like the
+    /// cache counters above.
+    pub prefetch_batches: u64,
+    pub prefetch_imbalance_sum: f64,
 }
 
 /// Candidate zone filter for E-Spread phases.
@@ -879,8 +890,15 @@ impl Placer for Rsch {
             if state.commit_placements(spec.id, plan).is_ok() {
                 self.stats.placements += 1;
                 self.stats.pods_placed += pods;
+                self.stats.plan_cache_hits += 1;
                 return Ok(());
             }
+        }
+        // Fall-through (no prefetched plan, or a stale one): a cache miss
+        // for the health rollup — counted only on sharded runs that
+        // actually prefetch, so the hit rate stays meaningful.
+        if self.stats.prefetch_batches > 0 {
+            self.stats.plan_cache_misses += 1;
         }
         self.snapshot.refresh(state);
         self.stats.snapshot_refreshes += 1;
@@ -1007,6 +1025,15 @@ impl Placer for Rsch {
                 }
                 routed[s].push(i);
             }
+        }
+        // Routing-balance telemetry (digest-inert): how far the fullest
+        // shard sits above the ideal even split of this batch.
+        let routed_total: usize = routed.iter().map(Vec::len).sum();
+        if routed_total > 0 {
+            let max_len = routed.iter().map(Vec::len).max().unwrap_or(0);
+            self.stats.prefetch_batches += 1;
+            self.stats.prefetch_imbalance_sum +=
+                max_len as f64 * num_shards as f64 / routed_total as f64;
         }
 
         // ---- 2. Plan shards concurrently (shard→worker round-robin). ----

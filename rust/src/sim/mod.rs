@@ -9,4 +9,4 @@ pub mod runner;
 pub use elastic::{ElasticConfig, ElasticController};
 pub use engine::{Engine, Event, SimTime};
 pub use faults::{FaultConfig, FaultInjector, FaultTarget};
-pub use runner::{run, run_with_events, SimConfig, SimOutcome};
+pub use runner::{run, run_observed, run_with_events, SimConfig, SimOutcome};

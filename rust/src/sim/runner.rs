@@ -9,6 +9,7 @@ use crate::job::state::Phase;
 use crate::job::store::JobStore;
 use crate::metrics::report::fmt_ms;
 use crate::metrics::Metrics;
+use crate::obs::{ObsPhase, ObsRecorder, SchedulerHealth};
 use crate::qsch::Qsch;
 use crate::rsch::Rsch;
 
@@ -83,6 +84,10 @@ pub struct SimOutcome {
     pub store: JobStore,
     /// Total defrag migrations executed.
     pub migrations: u64,
+    /// Wall-clock scheduler-health rollup (empty unless the run used
+    /// [`run_observed`] with an enabled recorder). Digest-inert: nothing
+    /// here feeds [`SimOutcome::digest_json`].
+    pub health: SchedulerHealth,
 }
 
 impl SimOutcome {
@@ -245,6 +250,30 @@ pub fn run_with_events(
     extra_events: Vec<(SimTime, Event)>,
     cfg: &SimConfig,
 ) -> SimOutcome {
+    run_observed(
+        state,
+        qsch,
+        rsch,
+        jobs,
+        extra_events,
+        cfg,
+        &mut ObsRecorder::disabled(),
+    )
+}
+
+/// Like [`run_with_events`], with an observability recorder attached.
+/// The recorder is strictly write-only for the scheduling stack — same
+/// seed + config produces byte-identical digests whether it is enabled,
+/// disabled, or absent.
+pub fn run_observed(
+    state: &mut ClusterState,
+    qsch: &mut Qsch,
+    rsch: &mut Rsch,
+    jobs: Vec<JobSpec>,
+    extra_events: Vec<(SimTime, Event)>,
+    cfg: &SimConfig,
+    obs: &mut ObsRecorder,
+) -> SimOutcome {
     let mut engine = Engine::new();
     for (t, e) in extra_events {
         engine.schedule(t, e);
@@ -316,16 +345,25 @@ pub fn run_with_events(
                 qsch.submit(&mut store, *spec);
             }
             Event::Cycle => {
+                obs.begin_cycle();
                 // Adaptive scoring tick (single-threaded phase, before the
                 // queue walk): the controller reads rolling GAR/GFR/JWTD
                 // windows and publishes the weight overlay the sharded
                 // planners will inherit — identical for every `--shards N`.
                 if rsch.wants_adapt() {
+                    let t = obs.span();
                     let signals =
                         crate::rsch::adapt::collect_signals(now, &metrics, &store);
                     rsch.adapt_tick(&signals);
+                    obs.span_end(ObsPhase::Adapt, t);
                 }
-                let report = qsch.cycle(now, &mut store, state, rsch);
+                if obs.is_enabled() {
+                    obs.set_overlay(
+                        f64::from(rsch.cfg.overlay.pack_bias),
+                        f64::from(rsch.cfg.overlay.fairness),
+                    );
+                }
+                let report = qsch.cycle_observed(now, &mut store, state, rsch, obs);
                 let progressed = !report.scheduled.is_empty() || !report.preempted.is_empty();
                 for &job in &report.scheduled {
                     let j = store.expect(job);
@@ -360,7 +398,47 @@ pub fn run_with_events(
                         qsch.queues.len(),
                         stall,
                     );
+                    // Stall diagnostic: who is stuck at the head, why this
+                    // cycle rejected what it rejected, and the last N
+                    // decisions the recorder saw before the stall tripped.
+                    if let Some(h) = qsch.queues.global_head() {
+                        eprintln!(
+                            "  queue head: job {} ({} GPUs, submitted {})",
+                            h.job.0,
+                            h.total_gpus,
+                            fmt_ms(h.submit_ms as f64),
+                        );
+                    }
+                    for (job, reason) in &report.admission_failures {
+                        eprintln!("  admission rejected: job {} — {}", job.0, reason);
+                    }
+                    if !report.placement_failures.is_empty() {
+                        let ids: Vec<u64> =
+                            report.placement_failures.iter().map(|j| j.0).collect();
+                        eprintln!("  placement failed: jobs {ids:?}");
+                    }
+                    let trace: Vec<String> = obs
+                        .recent()
+                        .map(|r| r.to_json().to_string_compact())
+                        .collect();
+                    if trace.is_empty() {
+                        eprintln!(
+                            "  (enable observability — e.g. `kant simulate \
+                             --obs-out FILE` — for a decision trace here)"
+                        );
+                    } else {
+                        eprintln!("  last {} decision record(s):", trace.len());
+                        for line in trace {
+                            eprintln!("    {line}");
+                        }
+                    }
                 }
+                obs.end_cycle(
+                    now,
+                    qsch.queues.len() as u64,
+                    report.scheduled.len() as u64,
+                    report.preempted.len() as u64,
+                );
             }
             Event::RunningStart { job, epoch } => {
                 let j = store.expect_mut(job);
@@ -428,6 +506,7 @@ pub fn run_with_events(
                 }
             }
             Event::Defrag => {
+                let span = obs.span();
                 let plan = crate::rsch::defrag::plan_round(state, &store, &cfg.defrag);
                 // Only migrate Running jobs (Scheduled ones are mid-start).
                 let plan: Vec<_> = plan
@@ -461,11 +540,13 @@ pub fn run_with_events(
                     }
                     metrics.observe_cluster(now, state);
                 }
+                obs.span_end(ObsPhase::Defrag, span);
                 if finished < total_jobs && !deadlocked {
                     engine.schedule_in(cfg.defrag_interval_ms, Event::Defrag);
                 }
             }
             Event::NodeHealth { node, healthy } => {
+                let span = obs.span();
                 // Evict any resident jobs first (they lose their devices),
                 // then flip health — the §3.2.4 requeue path. Elastic
                 // children are cancelled + re-provisioned instead (see
@@ -494,9 +575,11 @@ pub fn run_with_events(
                     if healthy { Health::Healthy } else { Health::Faulty },
                 );
                 metrics.observe_cluster(now, state);
+                obs.span_end(ObsPhase::Fault, span);
             }
             Event::FaultInject { target } => {
                 if let Some(fi) = faults.as_mut() {
+                    let span = obs.span();
                     let victims = fi.victims(state, target);
                     finished += evict_fault_victims(
                         now,
@@ -515,6 +598,7 @@ pub fn run_with_events(
                         FaultTarget::Drain { .. } => metrics.reliability.drains += 1,
                     }
                     metrics.observe_cluster(now, state);
+                    obs.span_end(ObsPhase::Fault, span);
                 }
             }
             Event::RepairDone { target } => {
@@ -530,6 +614,23 @@ pub fn run_with_events(
     let end_ms = engine.now();
     metrics.observe_cluster(end_ms, state);
     let unfinished = store.iter().filter(|j| !j.is_terminal()).count();
+
+    // Roll the wall-clock profiles into the health report and graft on
+    // the RSCH-side counters the recorder cannot see. All of this stays
+    // outside `digest_json` — the digest-inertness invariant.
+    let mut health = obs.health();
+    let plan_attempts = rsch.stats.plan_cache_hits + rsch.stats.plan_cache_misses;
+    if plan_attempts > 0 {
+        health.plan_cache_hit_rate = rsch.stats.plan_cache_hits as f64 / plan_attempts as f64;
+    }
+    if rsch.stats.prefetch_batches > 0 {
+        health.shard_imbalance =
+            rsch.stats.prefetch_imbalance_sum / rsch.stats.prefetch_batches as f64;
+    }
+    health.nodes_examined = rsch.stats.nodes_examined;
+    health.nodes_scored = rsch.stats.nodes_scored;
+    obs.write_trailer(&health);
+
     SimOutcome {
         metrics,
         qsch_stats: qsch.stats,
@@ -540,6 +641,7 @@ pub fn run_with_events(
         unfinished_jobs: unfinished,
         store,
         migrations: migrations_total,
+        health,
     }
 }
 

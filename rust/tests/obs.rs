@@ -1,0 +1,177 @@
+//! PR 9's hard invariant: observability never perturbs scheduling. The
+//! recorder is write-only for the scheduling core, so a same-seed run
+//! must produce a byte-identical `digest_json` with the recorder off,
+//! on at full verbosity, and at any `--shards` worker count — including
+//! the elastic and fault-storm arms where the preempt / defrag / fault
+//! spans all fire. Plus: the `--obs-out` JSONL stream itself must parse
+//! back through the same `DecisionRecord` / `SchedulerHealth` readers
+//! that `kant obs summarize` and `kant explain` use.
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use kant::config::{FaultPreset, Scale, SimOptions, SimSetup};
+use kant::job::workload::WorkloadGen;
+use kant::obs::{DecisionRecord, ObsRecorder, SchedulerHealth};
+use kant::qsch::Qsch;
+use kant::rsch::Rsch;
+use kant::sim::{run_observed, SimOutcome};
+use kant::util::json::Json;
+
+const ARRIVAL_MS: u64 = 12 * 3_600_000;
+
+/// In-memory JSONL sink: the recorder owns a `Box<dyn Write>` handle,
+/// the test keeps the other one.
+#[derive(Clone)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    fn new() -> SharedBuf {
+        SharedBuf(Arc::new(Mutex::new(Vec::new())))
+    }
+
+    fn contents(&self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).expect("stream is UTF-8")
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// One full simulate run through the unified builder (the same path
+/// `kant simulate` takes), horizon truncated for test runtime.
+fn run_arm(
+    seed: u64,
+    elastic: bool,
+    faults: FaultPreset,
+    shards: usize,
+    obs: &mut ObsRecorder,
+) -> SimOutcome {
+    let opts = SimOptions::for_scale(Scale::Small)
+        .seed(seed)
+        .elastic(elastic)
+        .faults(faults)
+        .shards(shards);
+    let SimSetup {
+        mut env,
+        qsch,
+        rsch,
+        mut sim,
+    } = opts.build().expect("options are valid");
+    env.horizon_ms = ARRIVAL_MS;
+    sim.horizon_ms = ARRIVAL_MS + 12 * 3_600_000; // Drain window.
+    let mut jobs = WorkloadGen::new(env.workload.clone()).generate_until(env.horizon_ms);
+    opts.apply_job_policies(&mut jobs);
+    let mut state = env.state;
+    let mut qsch = Qsch::new(qsch, env.ledger);
+    let mut rsch = Rsch::new(rsch, &state);
+    run_observed(&mut state, &mut qsch, &mut rsch, jobs, Vec::new(), &sim, obs)
+}
+
+#[test]
+fn obs_never_moves_a_digest() {
+    // obs off vs verbosity-2 streaming, across the sequential core
+    // (shards = 0), the single-worker sharded core and 8 workers, on the
+    // plain, elastic and fault-storm arms.
+    for (elastic, faults) in [
+        (false, FaultPreset::None),
+        (true, FaultPreset::None),
+        (false, FaultPreset::Storm),
+    ] {
+        for shards in [0usize, 1, 8] {
+            let off = run_arm(7, elastic, faults, shards, &mut ObsRecorder::disabled());
+            let buf = SharedBuf::new();
+            let mut obs = ObsRecorder::enabled(2).with_sink(Box::new(buf.clone()));
+            let on = run_arm(7, elastic, faults, shards, &mut obs);
+            assert_eq!(
+                off.digest_json().to_string_compact(),
+                on.digest_json().to_string_compact(),
+                "observability moved the digest: elastic={elastic} \
+                 faults={faults:?} shards={shards}"
+            );
+            // Non-vacuous: the profiled arm actually recorded work.
+            assert!(on.health.cycles > 0, "no cycles profiled");
+            assert!(
+                on.health.decisions > 0,
+                "no decisions recorded at verbosity 2"
+            );
+            // The disabled arm must stay empty — the default path pays
+            // no profiling cost and carries no health.
+            assert_eq!(off.health, SchedulerHealth::default());
+        }
+    }
+}
+
+#[test]
+fn obs_stream_roundtrips_and_ends_with_health() {
+    let buf = SharedBuf::new();
+    let mut obs = ObsRecorder::enabled(2).with_sink(Box::new(buf.clone()));
+    let out = run_arm(3, false, FaultPreset::Storm, 1, &mut obs);
+
+    let text = buf.contents();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(!lines.is_empty(), "stream is empty");
+
+    let mut decisions: Vec<DecisionRecord> = Vec::new();
+    let mut health: Option<SchedulerHealth> = None;
+    for line in &lines {
+        let j = Json::parse(line).expect("every stream line is JSON");
+        if let Some(rec) = DecisionRecord::from_json(&j) {
+            assert!(health.is_none(), "decision after the health trailer");
+            decisions.push(rec);
+        } else if let Some(h) = SchedulerHealth::from_json(&j) {
+            health = Some(h);
+        } else {
+            panic!("unparseable stream line: {line}");
+        }
+    }
+    let health = health.expect("stream ends with a health trailer");
+    assert_eq!(health, out.health, "trailer diverges from SimOutcome.health");
+    assert_eq!(
+        health.decisions,
+        decisions.len() as u64,
+        "decision count diverges from the stream"
+    );
+    assert!(
+        decisions.iter().any(|d| d.action == "scheduled"),
+        "no scheduled decision in a full run"
+    );
+    let sched = decisions
+        .iter()
+        .find(|d| d.action == "scheduled")
+        .expect("checked above");
+    assert!(!sched.region.is_empty(), "scheduled decision lacks a region");
+    assert!(sched.nodes > 0, "scheduled decision lacks node count");
+    assert!(!sched.features.is_empty(), "scheduled decision lacks features");
+
+    // Exact JSONL roundtrip for every record, and for the trailer.
+    for d in &decisions {
+        let j = Json::parse(&d.to_json().to_string_compact()).expect("valid JSON");
+        assert_eq!(DecisionRecord::from_json(&j).as_ref(), Some(d));
+    }
+    let hj = Json::parse(&health.to_json().to_string_compact()).expect("valid JSON");
+    assert_eq!(SchedulerHealth::from_json(&hj), Some(health));
+}
+
+#[test]
+fn verbosity_zero_profiles_without_decisions() {
+    let buf = SharedBuf::new();
+    let mut obs = ObsRecorder::enabled(0).with_sink(Box::new(buf.clone()));
+    let out = run_arm(3, false, FaultPreset::None, 0, &mut obs);
+    assert!(out.health.cycles > 0, "phase profiles must still roll up");
+    assert_eq!(out.health.decisions, 0, "verbosity 0 must trace nothing");
+    // The stream carries exactly the health trailer.
+    let text = buf.contents();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(lines.len(), 1, "verbosity-0 stream should be trailer-only");
+    let j = Json::parse(lines[0]).expect("trailer is JSON");
+    assert_eq!(SchedulerHealth::from_json(&j), Some(out.health));
+}
