@@ -8,6 +8,10 @@
 //!
 //! Run with: `cargo bench --bench candidate_index`
 
+// Bench harness configuration comes from the environment by design
+// (BENCH_SCALE / BENCH_BASELINE_OUT are CI plumbing, not scheduler state).
+#![allow(clippy::disallowed_methods)]
+
 use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
 use kant::cluster::ids::{GpuTypeId, JobId, NodeId, PodId, TenantId};
 use kant::cluster::state::{ClusterState, PodPlacement};

@@ -5,6 +5,10 @@
 //!
 //! Run with: `cargo bench --bench sched_cycle`
 
+// Bench harness configuration comes from the environment by design
+// (BENCH_SCALE / BENCH_BASELINE_OUT are CI plumbing, not scheduler state).
+#![allow(clippy::disallowed_methods)]
+
 use kant::cluster::builder::{ClusterBuilder, ClusterSpec};
 use kant::cluster::gpu::Health;
 use kant::cluster::ids::{GpuTypeId, JobId, NodeId, TenantId};

@@ -109,7 +109,10 @@ mod tests {
         assert_eq!(shards.free_by_pool(&state, 1), vec![64]);
     }
 
+    // 12,500-node build: skipped under Miri (interpreter cost, no
+    // unsafe surface) — the 4-spine cases above cover the partition.
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn hundred_thousand_gpu_preset_has_ten_shards() {
         let state = ClusterBuilder::build(&ClusterSpec::train100000());
         let shards = ShardMap::new(&state);

@@ -3,7 +3,7 @@
 //! aggregates (per-group / per-pool / per-HBD free counts) and a mutation
 //! log that feeds incremental snapshots (§3.4.3).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::fmt;
 
 use super::gpu::{GpuType, Health};
@@ -77,7 +77,9 @@ pub struct ClusterState {
     allocated_gpus: u32,
 
     // Allocation index.
-    placements: HashMap<JobId, Vec<PodPlacement>>,
+    // BTreeMap for defence in depth: the index is point-lookup-only
+    // today, but any future traversal must come out in stable id order.
+    placements: BTreeMap<JobId, Vec<PodPlacement>>,
 
     // Mutation log for incremental snapshots: monotonically growing list of
     // touched node ids; `log_base` is the absolute offset of entry 0 so the
@@ -104,7 +106,7 @@ impl ClusterState {
             hbd_free: vec![0; fabric.hbds.len()],
             total_gpus: 0,
             allocated_gpus: 0,
-            placements: HashMap::new(),
+            placements: BTreeMap::new(),
             mutation_log: Vec::new(),
             log_base: 0,
             node_pool,

@@ -8,7 +8,7 @@
 //!   borrowing is recorded per job so quota-reclamation preemption (§3.2.3)
 //!   can find exactly which jobs to evict when a lender wants capacity back.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::fmt;
 
 use super::ids::{GpuTypeId, JobId, TenantId};
@@ -111,10 +111,12 @@ pub struct QuotaLedger {
     num_types: usize,
     /// Dense [tenant][type] entries.
     entries: Vec<QuotaEntry>,
-    /// Active borrow records, by job (a job may borrow from several lenders).
-    borrows: HashMap<JobId, Vec<BorrowRecord>>,
+    /// Active borrow records, by job (a job may borrow from several
+    /// lenders). Ordered maps for defence in depth: point-lookup-only
+    /// today, but a future traversal must be in stable id order.
+    borrows: BTreeMap<JobId, Vec<BorrowRecord>>,
     /// Own-quota charges by job: (tenant, type, amount).
-    charges: HashMap<JobId, Vec<(TenantId, GpuTypeId, u32)>>,
+    charges: BTreeMap<JobId, Vec<(TenantId, GpuTypeId, u32)>>,
 }
 
 impl QuotaLedger {
@@ -123,8 +125,8 @@ impl QuotaLedger {
             mode,
             num_types,
             entries: vec![QuotaEntry::default(); num_tenants * num_types],
-            borrows: HashMap::new(),
-            charges: HashMap::new(),
+            borrows: BTreeMap::new(),
+            charges: BTreeMap::new(),
         }
     }
 

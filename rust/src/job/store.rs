@@ -1,15 +1,21 @@
 //! In-memory job table shared by QSCH, RSCH and the simulator.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::ids::JobId;
 
 use super::state::{Job, Phase};
 
 /// All jobs known to the system, keyed by id.
+///
+/// A `BTreeMap` rather than a `HashMap`: [`JobStore::iter`] and
+/// [`JobStore::holding_resources`] feed digest-affecting consumers
+/// (preemption candidate collection, elastic tidal sums, the runner's
+/// liveness accounting), so traversal must be in stable id order —
+/// hash order would leak `RandomState` into scheduling decisions.
 #[derive(Debug, Default)]
 pub struct JobStore {
-    jobs: HashMap<JobId, Job>,
+    jobs: BTreeMap<JobId, Job>,
 }
 
 impl JobStore {
@@ -48,11 +54,13 @@ impl JobStore {
         self.jobs.is_empty()
     }
 
+    /// All jobs, in ascending id order (deterministic traversal).
     pub fn iter(&self) -> impl Iterator<Item = &Job> {
         self.jobs.values()
     }
 
-    /// Jobs currently holding resources (Scheduled or Running).
+    /// Jobs currently holding resources (Scheduled or Running), in
+    /// ascending id order.
     pub fn holding_resources(&self) -> impl Iterator<Item = &Job> {
         self.jobs.values().filter(|j| j.holds_resources())
     }

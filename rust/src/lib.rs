@@ -19,6 +19,7 @@ pub mod cluster;
 pub mod config;
 pub mod experiments;
 pub mod job;
+pub mod lint;
 pub mod obs;
 pub mod qsch;
 pub mod rsch;

@@ -1,0 +1,296 @@
+//! The `digest-coverage` rule: every counter field on `QschStats` and
+//! `RschStats` must either be read by `SimOutcome::digest_json` or be
+//! listed — with a reason — in the `DIGEST_INERT` manifest next to it
+//! (`sim/runner.rs`). New counters therefore cannot silently dodge the
+//! determinism gate: a field in neither place is a finding, as is a
+//! stale manifest entry or one that contradicts the digest body.
+
+use super::scan::Stripper;
+use super::{Finding, RULE_DIGEST};
+
+const QSCH_FILE: &str = "qsch/mod.rs";
+const RSCH_FILE: &str = "rsch/mod.rs";
+const RUNNER_FILE: &str = "sim/runner.rs";
+
+/// Run the rule over an in-memory corpus of `(rel_path, text)` files.
+/// Returns how many stats fields were checked (0 when the corpus does
+/// not carry the stats structs at all, e.g. source-rule fixture trees).
+pub(crate) fn check(files: &[(String, String)], findings: &mut Vec<Finding>) -> usize {
+    let qsch = lookup(files, QSCH_FILE);
+    let rsch = lookup(files, RSCH_FILE);
+    if qsch.is_none() && rsch.is_none() {
+        return 0;
+    }
+    let Some(runner) = lookup(files, RUNNER_FILE) else {
+        findings.push(finding(
+            RUNNER_FILE,
+            1,
+            "sim/runner.rs",
+            "digest-coverage cannot run: sim/runner.rs (digest_json + DIGEST_INERT) \
+             is missing from the scanned tree",
+        ));
+        return 0;
+    };
+
+    let body = fn_body(runner, "fn digest_json");
+    if body.is_empty() {
+        findings.push(finding(
+            RUNNER_FILE,
+            1,
+            "digest_json",
+            "digest-coverage cannot run: no `fn digest_json` found in sim/runner.rs",
+        ));
+        return 0;
+    }
+    let inert = parse_inert(runner, findings);
+
+    let mut checked = 0;
+    let mut known: Vec<String> = Vec::new();
+    for (prefix, strukt, file, text) in [
+        ("qsch", "QschStats", QSCH_FILE, qsch),
+        ("rsch", "RschStats", RSCH_FILE, rsch),
+    ] {
+        let Some(text) = text else { continue };
+        let fields = struct_fields(text, strukt);
+        if fields.is_empty() {
+            findings.push(finding(
+                file,
+                1,
+                strukt,
+                "digest-coverage: stats struct not found or has no fields",
+            ));
+            continue;
+        }
+        for (name, line) in fields {
+            checked += 1;
+            let key = format!("{prefix}.{name}");
+            let in_digest = body_reads(&body, prefix, &name);
+            let in_manifest = inert.iter().any(|(k, _)| *k == key);
+            if in_digest && in_manifest {
+                let mline = inert.iter().find(|(k, _)| *k == key).map(|(_, l)| *l).unwrap_or(1);
+                findings.push(finding(
+                    RUNNER_FILE,
+                    mline,
+                    &key,
+                    "digest-coverage: counter is listed in DIGEST_INERT but digest_json \
+                     reads it; drop the stale manifest entry",
+                ));
+            } else if !in_digest && !in_manifest {
+                findings.push(finding(
+                    file,
+                    line,
+                    &key,
+                    "digest-coverage: counter is neither read by digest_json nor listed \
+                     in DIGEST_INERT (sim/runner.rs); cover it or declare it inert with \
+                     a reason",
+                ));
+            }
+            known.push(key);
+        }
+    }
+    for (key, line) in &inert {
+        if !known.iter().any(|k| k == key) {
+            findings.push(finding(
+                RUNNER_FILE,
+                *line,
+                key,
+                "digest-coverage: DIGEST_INERT names a counter that no stats struct \
+                 declares; remove the stale entry",
+            ));
+        }
+    }
+    checked
+}
+
+fn finding(file: &str, line: usize, what: &str, msg: &str) -> Finding {
+    Finding {
+        rule: RULE_DIGEST,
+        file: file.to_string(),
+        line,
+        what: what.to_string(),
+        msg: msg.to_string(),
+    }
+}
+
+fn lookup<'a>(files: &'a [(String, String)], rel: &str) -> Option<&'a str> {
+    files.iter().find(|(r, _)| r == rel).map(|(_, t)| t.as_str())
+}
+
+/// `true` when the digest body contains `<prefix>_stats.<field>` at an
+/// identifier boundary (the digest reads counters as
+/// `self.qsch_stats.scheduled` etc.; string keys are stripped away, so
+/// a matching JSON label alone cannot fake coverage).
+fn body_reads(body: &str, prefix: &str, field: &str) -> bool {
+    let tok = format!("{prefix}_stats.{field}");
+    let b = body.as_bytes();
+    let mut from = 0;
+    while let Some(p) = body[from..].find(&tok) {
+        let abs = from + p;
+        from = abs + tok.len();
+        let before_ok = abs == 0 || !(b[abs - 1].is_ascii_alphanumeric() || b[abs - 1] == b'_');
+        let end = abs + tok.len();
+        let after_ok =
+            end >= b.len() || !(b[end].is_ascii_alphanumeric() || b[end] == b'_');
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Collect the stripped body of the first `needle` fn in `text`.
+fn fn_body(text: &str, needle: &str) -> String {
+    let mut stripper = Stripper::new();
+    let mut body = String::new();
+    let mut depth = 0i32;
+    let mut in_fn = false;
+    let mut opened = false;
+    for raw in text.lines() {
+        let line = stripper.strip(raw);
+        if !in_fn {
+            if line.contains(needle) {
+                in_fn = true;
+            } else {
+                continue;
+            }
+        }
+        body.push_str(&line);
+        body.push('\n');
+        for b in line.bytes() {
+            match b {
+                b'{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                b'}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    if opened {
+        body
+    } else {
+        String::new()
+    }
+}
+
+/// Named fields of `strukt` in `text`, with their 1-based lines.
+fn struct_fields(text: &str, strukt: &str) -> Vec<(String, usize)> {
+    let mut stripper = Stripper::new();
+    let decl = format!("struct {strukt} {{");
+    let mut fields = Vec::new();
+    let mut depth = 0i32;
+    let mut inside: Option<i32> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = stripper.strip(raw);
+        let t = line.trim();
+        if let Some(d0) = inside {
+            if depth == d0 + 1 && !t.starts_with("#[") {
+                if let Some(name) = field_name(t) {
+                    fields.push((name, idx + 1));
+                }
+            }
+        } else if t.contains(&decl) {
+            inside = Some(depth);
+        }
+        for b in line.bytes() {
+            match b {
+                b'{' => depth += 1,
+                b'}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if let Some(d0) = inside {
+            if depth <= d0 && t.contains('}') {
+                break;
+            }
+        }
+    }
+    fields
+}
+
+fn field_name(t: &str) -> Option<String> {
+    let mut rest = t;
+    for pre in ["pub(crate) ", "pub(super) ", "pub "] {
+        if let Some(r) = rest.strip_prefix(pre) {
+            rest = r;
+            break;
+        }
+    }
+    let end = rest
+        .bytes()
+        .position(|c| !(c.is_ascii_alphanumeric() || c == b'_'))
+        .unwrap_or(rest.len());
+    let name = &rest[..end];
+    if name.is_empty() || !name.starts_with(|c: char| c.is_lowercase() || c == '_') {
+        return None;
+    }
+    let after = rest[end..].trim_start();
+    if after.starts_with(':') && !after.starts_with("::") {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// Parse `DIGEST_INERT` entries `("<group>.<field>", "<reason>")` from
+/// `sim/runner.rs`, tolerating rustfmt wrapping. Empty reasons are
+/// findings — the manifest's whole point is the recorded justification.
+fn parse_inert(runner: &str, findings: &mut Vec<Finding>) -> Vec<(String, usize)> {
+    let mut entries = Vec::new();
+    let mut in_const = false;
+    let mut literals: Vec<(String, usize)> = Vec::new();
+    for (idx, raw) in runner.lines().enumerate() {
+        if !in_const {
+            if raw.contains("const DIGEST_INERT") {
+                in_const = true;
+            }
+            continue;
+        }
+        for lit in string_literals(raw) {
+            literals.push((lit, idx + 1));
+        }
+        if raw.contains("];") {
+            break;
+        }
+    }
+    if !in_const {
+        findings.push(finding(
+            RUNNER_FILE,
+            1,
+            "DIGEST_INERT",
+            "digest-coverage: no `const DIGEST_INERT` manifest found in sim/runner.rs",
+        ));
+        return entries;
+    }
+    let mut it = literals.into_iter();
+    while let Some((name, line)) = it.next() {
+        match it.next() {
+            Some((reason, _)) if !reason.trim().is_empty() => entries.push((name, line)),
+            _ => findings.push(finding(
+                RUNNER_FILE,
+                line,
+                &name,
+                "digest-coverage: DIGEST_INERT entry needs a non-empty reason string",
+            )),
+        }
+    }
+    entries
+}
+
+/// Plain string literals on one raw line (no escape handling needed for
+/// the manifest's simple names and reasons).
+fn string_literals(raw: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = raw;
+    while let Some(start) = rest.find('"') {
+        let after = &rest[start + 1..];
+        let Some(end) = after.find('"') else { break };
+        out.push(after[..end].to_string());
+        rest = &after[end + 1..];
+    }
+    out
+}

@@ -1,0 +1,270 @@
+//! `kant lint` — the project's determinism & concurrency static
+//! analysis (a zero-dependency, line-oriented scanner over `src/**`).
+//!
+//! Every claim the reproduction makes — golden-gate digests, `--shards
+//! N` byte-identical replay, the digest-inert observability plane —
+//! rests on the scheduler core being deterministic *by construction*.
+//! This pass enforces that contract at the source level with four
+//! rules:
+//!
+//! | rule | what it bans |
+//! |------|--------------|
+//! | `ordered-iteration` | iterating a `HashMap`/`HashSet` in a digest-affecting module (`cluster/`, `qsch/`, `rsch/`, `sim/`, `job/`) unless the traversal feeds a same-line commutative fold |
+//! | `wall-clock` | `Instant::now` / `SystemTime` outside `obs/`, `util/benchkit.rs`, `main.rs` |
+//! | `ambient-nondeterminism` | thread identity, unseeded RNG, random hash state, and `env::var` inside the core |
+//! | `digest-coverage` | a `QschStats`/`RschStats` counter that neither `digest_json` reads nor the `DIGEST_INERT` manifest declares inert |
+//!
+//! A site that is genuinely order-insensitive can carry a line comment
+//! of the exact form `kant-lint: allow(<rule>) — <reason>` (same line
+//! or the line above); the reason is mandatory, unknown
+//! rules and unused allows are themselves findings, and
+//! `digest-coverage` cannot be allowed inline — the manifest is its
+//! escape hatch. `kant lint --json` emits a `kant-lint-v1` document;
+//! CI fails on any finding.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+mod digest;
+mod scan;
+
+pub const RULE_ORDERED: &str = "ordered-iteration";
+pub const RULE_WALLCLOCK: &str = "wall-clock";
+pub const RULE_AMBIENT: &str = "ambient-nondeterminism";
+pub const RULE_DIGEST: &str = "digest-coverage";
+/// Meta-rule: malformed / unknown / unused allow annotations.
+pub const RULE_ANNOTATION: &str = "annotation";
+
+pub const RULES: [&str; 5] = [
+    RULE_ORDERED,
+    RULE_WALLCLOCK,
+    RULE_AMBIENT,
+    RULE_DIGEST,
+    RULE_ANNOTATION,
+];
+
+/// One lint finding, anchored to a `file:line` in the scanned tree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    pub line: usize,
+    /// The offending token / expression, e.g. `self.jobs.values()`.
+    pub what: String,
+    pub msg: String,
+}
+
+/// The outcome of one lint run.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Allow annotations that suppressed a finding.
+    pub allows_used: usize,
+    /// Stats counters checked by the digest-coverage rule.
+    pub digest_fields_checked: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// The machine-readable `kant-lint-v1` document CI diffs against an
+    /// empty-findings baseline (`Json::Obj` is a `BTreeMap`, so the
+    /// rendering is stable).
+    pub fn to_json(&self) -> Json {
+        let mut counts = Json::obj();
+        for rule in RULES {
+            let n = self.findings.iter().filter(|f| f.rule == rule).count();
+            counts.set(rule, n as u64);
+        }
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = Json::obj();
+                o.set("rule", f.rule)
+                    .set("file", f.file.as_str())
+                    .set("line", f.line as u64)
+                    .set("what", f.what.as_str())
+                    .set("msg", f.msg.as_str());
+                o
+            })
+            .collect();
+        let mut doc = Json::obj();
+        doc.set("schema", "kant-lint-v1")
+            .set("files_scanned", self.files_scanned as u64)
+            .set("allows_used", self.allows_used as u64)
+            .set("digest_fields_checked", self.digest_fields_checked as u64)
+            .set("counts", counts)
+            .set("findings", Json::Arr(findings));
+        doc
+    }
+
+    /// GitHub Actions workflow annotations (`::error file=…`): the CI
+    /// lint job prints these so findings land on the PR diff.
+    pub fn github_annotations(&self, path_prefix: &str) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "::error file={}{},line={}::[{}] {}: {}\n",
+                path_prefix, f.file, f.line, f.rule, f.what, f.msg
+            ));
+        }
+        out
+    }
+
+    /// Human-readable rendering for the terminal.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}:{}: [{}] {}\n    {}\n",
+                f.file, f.line, f.rule, f.what, f.msg
+            ));
+        }
+        out.push_str(&format!(
+            "kant lint: {} finding(s) in {} file(s); {} allow(s) used, {} digest field(s)\n",
+            self.findings.len(),
+            self.files_scanned,
+            self.allows_used,
+            self.digest_fields_checked
+        ));
+        out
+    }
+}
+
+/// Lint an in-memory corpus of `(rel_path, text)` files. This is the
+/// whole analysis — `lint_tree` is just a filesystem loader around it —
+/// so the self-tests can lint fixture trees and surgically mutated
+/// copies of the real sources without touching disk.
+pub fn lint_corpus(files: &[(String, String)]) -> LintReport {
+    let mut sorted: Vec<&(String, String)> = files.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut report = LintReport::default();
+    for (rel, text) in sorted {
+        report.allows_used += scan::SourceScan::new(rel).run(text, &mut report.findings);
+        report.files_scanned += 1;
+    }
+    report.digest_fields_checked = digest::check(files, &mut report.findings);
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    report
+}
+
+/// Lint every `.rs` file under `root` (normally `src/`).
+pub fn lint_tree(root: &Path) -> std::io::Result<LintReport> {
+    let mut files: Vec<(String, String)> = Vec::new();
+    collect_rs(root, root, &mut files)?;
+    Ok(lint_corpus(&files))
+}
+
+fn collect_rs(
+    root: &Path,
+    dir: &Path,
+    files: &mut Vec<(String, String)>,
+) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(root, &path, files)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            files.push((rel, std::fs::read_to_string(&path)?));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus(files: &[(&str, &str)]) -> Vec<(String, String)> {
+        files
+            .iter()
+            .map(|(r, t)| (r.to_string(), t.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn clean_file_yields_no_findings() {
+        let r = lint_corpus(&corpus(&[(
+            "qsch/mod.rs",
+            "use std::collections::BTreeMap;\n\
+             pub struct Q {\n    jobs: BTreeMap<u64, u64>,\n}\n\
+             impl Q {\n    fn all(&self) -> Vec<u64> {\n        \
+             self.jobs.values().copied().collect()\n    }\n}\n",
+        )]));
+        assert!(r.is_clean(), "unexpected findings: {:?}", r.findings);
+        assert_eq!(r.files_scanned, 1);
+    }
+
+    #[test]
+    fn hash_iteration_in_core_is_a_finding() {
+        let r = lint_corpus(&corpus(&[(
+            "rsch/mod.rs",
+            "use std::collections::HashMap;\n\
+             pub struct R {\n    cache: HashMap<u64, u64>,\n}\n\
+             impl R {\n    fn all(&self) -> Vec<u64> {\n        \
+             self.cache.values().copied().collect()\n    }\n}\n",
+        )]));
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].rule, RULE_ORDERED);
+        assert_eq!(r.findings[0].line, 7);
+    }
+
+    #[test]
+    fn same_iteration_outside_core_is_fine() {
+        let r = lint_corpus(&corpus(&[(
+            "metrics/mod.rs",
+            "use std::collections::HashMap;\n\
+             pub struct R {\n    cache: HashMap<u64, u64>,\n}\n\
+             impl R {\n    fn all(&self) -> Vec<u64> {\n        \
+             self.cache.values().copied().collect()\n    }\n}\n",
+        )]));
+        assert!(r.is_clean(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn commutative_sinks_are_exempt() {
+        let r = lint_corpus(&corpus(&[(
+            "cluster/x.rs",
+            "use std::collections::HashSet;\n\
+             fn f(seen: &HashSet<u64>) -> usize {\n    \
+             seen.iter().filter(|x| **x > 3).count()\n}\n",
+        )]));
+        assert!(r.is_clean(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn wall_clock_placement_is_policed() {
+        let hit = ("sim/t.rs", "fn f() {\n    let t = std::time::Instant::now();\n}\n");
+        let ok = ("obs/t.rs", "fn f() {\n    let t = std::time::Instant::now();\n}\n");
+        let r = lint_corpus(&corpus(&[hit, ok]));
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].rule, RULE_WALLCLOCK);
+        assert_eq!(r.findings[0].file, "sim/t.rs");
+    }
+
+    #[test]
+    fn json_document_has_the_schema_tag() {
+        let doc = LintReport::default().to_json();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some("kant-lint-v1"));
+        let text = doc.to_string_compact();
+        let reparsed = Json::parse(&text).expect("round-trip");
+        assert_eq!(reparsed.get("files_scanned").and_then(Json::as_u64), Some(0));
+    }
+}

@@ -1,0 +1,894 @@
+//! Line-oriented source scanner: the three source-level determinism
+//! rules (`ordered-iteration`, `wall-clock`, `ambient-nondeterminism`)
+//! plus the allow-annotation bookkeeping they share.
+//!
+//! The scanner is deliberately simple — stripped lines and hand-rolled
+//! token matching, no parser dependency — but it is string- and
+//! comment-aware (so this module's own pattern tables never self-flag),
+//! records struct fields per struct, and resolves `self.field`
+//! receivers against the enclosing `impl` block. That scoping is what
+//! tells `Fabric.spines` (a `Vec`, iteration fine) apart from
+//! `GangFootprint`'s hash sets in the same file.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{Finding, RULE_AMBIENT, RULE_ANNOTATION, RULE_ORDERED, RULE_WALLCLOCK};
+
+/// Modules whose code feeds the run digest: iteration order there is
+/// observable, so hash-container iteration is banned.
+pub(crate) const DIGEST_MODULES: &[&str] = &["cluster/", "qsch/", "rsch/", "sim/", "job/"];
+
+/// Files allowed to read wall clocks: the digest-inert observability
+/// plane, the bench harness, and the CLI shell.
+pub(crate) const WALLCLOCK_SANCTUARIES: &[&str] = &["obs/", "util/benchkit.rs", "main.rs"];
+
+/// Hash-container methods that expose iteration order.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// Same-line sinks that make an unordered traversal order-insensitive.
+const COMMUTATIVE_SINKS: &[&str] = &[
+    ".count()",
+    ".sum()",
+    ".sum::<",
+    ".any(",
+    ".all(",
+    ".min()",
+    ".max()",
+    ".is_empty()",
+    ".len()",
+];
+
+const WALLCLOCK_TOKENS: &[&str] = &["Instant::now", "SystemTime"];
+
+/// Ambient-nondeterminism tokens banned everywhere in `src/`; RNG must
+/// come from the seeded `util::rng` generators instead.
+const AMBIENT_TOKENS: &[&str] = &[
+    "thread::current",
+    "thread_rng",
+    "from_entropy",
+    "OsRng",
+    "RandomState",
+    "DefaultHasher",
+];
+
+/// Strips comments and string/char literals from source lines, keeping
+/// state across lines (block comments, multi-line and raw strings).
+/// Stripped regions collapse to a single space so tokens never fuse.
+pub(crate) struct Stripper {
+    state: State,
+}
+
+enum State {
+    Code,
+    Block(u32),
+    Str,
+    RawStr(usize),
+}
+
+impl Stripper {
+    pub(crate) fn new() -> Stripper {
+        Stripper { state: State::Code }
+    }
+
+    pub(crate) fn strip(&mut self, line: &str) -> String {
+        let b = line.as_bytes();
+        let mut out: Vec<u8> = Vec::with_capacity(b.len());
+        let mut i = 0;
+        while i < b.len() {
+            match self.state {
+                State::Block(depth) => {
+                    if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        i += 2;
+                        if depth == 1 {
+                            self.state = State::Code;
+                            out.push(b' ');
+                        } else {
+                            self.state = State::Block(depth - 1);
+                        }
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        self.state = State::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if b[i] == b'\\' {
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        self.state = State::Code;
+                        out.push(b' ');
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if b[i] == b'"' {
+                        let mut n = 0;
+                        while n < hashes && b.get(i + 1 + n) == Some(&b'#') {
+                            n += 1;
+                        }
+                        if n == hashes {
+                            self.state = State::Code;
+                            out.push(b' ');
+                            i += 1 + n;
+                        } else {
+                            i += 1;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::Code => {
+                    let c = b[i];
+                    if c == b'/' && b.get(i + 1) == Some(&b'/') {
+                        break; // line comment: drop the rest
+                    } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                        self.state = State::Block(1);
+                        i += 2;
+                    } else if c == b'"' {
+                        self.state = State::Str;
+                        i += 1;
+                    } else if (c == b'r' || c == b'b') && !prev_is_ident(b, i) {
+                        match raw_string_open(b, i) {
+                            Some((skip, Some(hashes))) => {
+                                self.state = State::RawStr(hashes);
+                                i += skip;
+                            }
+                            Some((skip, None)) => {
+                                self.state = State::Str;
+                                i += skip;
+                            }
+                            None => {
+                                out.push(c);
+                                i += 1;
+                            }
+                        }
+                    } else if c == b'\'' {
+                        // Char literal vs lifetime.
+                        if b.get(i + 1) == Some(&b'\\') {
+                            let close = b[i + 2..].iter().position(|&x| x == b'\'');
+                            i = close.map(|p| i + 3 + p).unwrap_or(b.len());
+                            out.push(b' ');
+                        } else if b.get(i + 2) == Some(&b'\'') {
+                            i += 3;
+                            out.push(b' ');
+                        } else {
+                            out.push(c); // lifetime, keep
+                            i += 1;
+                        }
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        String::from_utf8_lossy(&out).into_owned()
+    }
+}
+
+fn prev_is_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_')
+}
+
+/// If `b[i..]` opens a raw/byte string (`r"`, `r#"`, `b"`, `br#"` …),
+/// return how many bytes the opener spans and `Some(hashes)` for raw
+/// forms (`None` = plain byte string, escapes apply).
+fn raw_string_open(b: &[u8], i: usize) -> Option<(usize, Option<usize>)> {
+    let mut j = i + 1;
+    let mut raw = b[i] == b'r';
+    if b[i] == b'b' {
+        if b.get(j) == Some(&b'r') {
+            raw = true;
+            j += 1;
+        } else if b.get(j) == Some(&b'"') {
+            return Some((j + 1 - i, None));
+        } else {
+            return None;
+        }
+    }
+    if !raw {
+        return None;
+    }
+    let mut hashes = 0;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((j + 1 - i, Some(hashes)))
+    } else {
+        None
+    }
+}
+
+fn is_path_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_' || c == b'.'
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Find `tok` in `s` at an identifier boundary (the byte before the
+/// match, if any, is not an identifier byte).
+fn find_boundary(s: &str, tok: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(p) = s[from..].find(tok) {
+        let abs = from + p;
+        if !prev_is_ident(s.as_bytes(), abs) {
+            return Some(abs);
+        }
+        from = abs + 1;
+    }
+    None
+}
+
+fn leading_ident(s: &str) -> &str {
+    let end = s
+        .bytes()
+        .position(|c| !is_ident_byte(c))
+        .unwrap_or(s.len());
+    &s[..end]
+}
+
+// ---------------------------------------------------------------------
+// Allow annotations
+// ---------------------------------------------------------------------
+
+/// One parsed allow annotation. The comment must read exactly
+/// `kant-lint: allow(<rule>) — <reason>` right after its `//` marker;
+/// it suppresses a finding of that rule on the same or the next line.
+pub(crate) struct Allow {
+    pub line: usize,
+    pub rule: String,
+    pub used: bool,
+}
+
+// Spelled in two pieces so the scanner does not read its own
+// definition as an (always malformed) annotation.
+const ANNOTATION_MARK: &str = concat!("// kant-", "lint:");
+
+pub(crate) fn collect_allows(
+    rel: &str,
+    raw_lines: &[&str],
+    findings: &mut Vec<Finding>,
+) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for (idx, raw) in raw_lines.iter().enumerate() {
+        let line = idx + 1;
+        let Some(p) = raw.find(ANNOTATION_MARK) else {
+            continue;
+        };
+        let rest = raw[p + ANNOTATION_MARK.len()..].trim_start();
+        let bad = |findings: &mut Vec<Finding>, msg: &str| {
+            findings.push(Finding {
+                rule: RULE_ANNOTATION,
+                file: rel.to_string(),
+                line,
+                what: rest.chars().take(40).collect(),
+                msg: msg.to_string(),
+            });
+        };
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            bad(findings, "malformed annotation: expected `allow(<rule>)`");
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            bad(findings, "malformed annotation: missing `)`");
+            continue;
+        };
+        let rule = &inner[..close];
+        let tail = inner[close + 1..].trim();
+        let reason = tail
+            .trim_start_matches(['\u{2014}', '-', ' '])
+            .trim();
+        match rule {
+            RULE_ORDERED | RULE_WALLCLOCK | RULE_AMBIENT => {
+                if !(tail.starts_with('\u{2014}') || tail.starts_with('-')) || reason.is_empty() {
+                    bad(
+                        findings,
+                        "allow annotation needs a justification: `allow(<rule>) \u{2014} <reason>`",
+                    );
+                } else {
+                    allows.push(Allow {
+                        line,
+                        rule: rule.to_string(),
+                        used: false,
+                    });
+                }
+            }
+            super::RULE_DIGEST => bad(
+                findings,
+                "digest-coverage cannot be allowed inline; list the counter in \
+                 DIGEST_INERT (sim/runner.rs) with a reason instead",
+            ),
+            _ => bad(findings, "unknown rule in allow annotation"),
+        }
+    }
+    allows
+}
+
+fn consume_allow(allows: &mut [Allow], line: usize, rule: &str) -> bool {
+    for a in allows.iter_mut() {
+        if a.rule == rule && (a.line == line || a.line + 1 == line) {
+            a.used = true;
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// Struct-field table (pass 1)
+// ---------------------------------------------------------------------
+
+/// Which named fields each struct in a file declares, and whether the
+/// field's type is a hash container.
+#[derive(Default)]
+struct StructTable {
+    by_struct: BTreeMap<String, BTreeMap<String, bool>>,
+}
+
+impl StructTable {
+    fn field_in(&self, strukt: &str, field: &str) -> Option<bool> {
+        self.by_struct.get(strukt)?.get(field).copied()
+    }
+
+    /// Unambiguous file-wide hashness of a field name: `Some(true)` only
+    /// when at least one struct declares it hash-typed and none declares
+    /// it otherwise.
+    fn field_global(&self, field: &str) -> Option<bool> {
+        let mut hash = false;
+        let mut other = false;
+        for fields in self.by_struct.values() {
+            match fields.get(field) {
+                Some(true) => hash = true,
+                Some(false) => other = true,
+                None => {}
+            }
+        }
+        match (hash, other) {
+            (true, false) => Some(true),
+            (false, false) => None,
+            _ => Some(false),
+        }
+    }
+}
+
+fn is_hash_type(ty: &str) -> bool {
+    ty.contains("HashMap<") || ty.contains("HashSet<") || ty.contains("HashMap::")
+        || ty.contains("HashSet::")
+}
+
+fn strip_visibility(t: &str) -> &str {
+    for pre in ["pub(crate) ", "pub(super) ", "pub "] {
+        if let Some(rest) = t.strip_prefix(pre) {
+            return rest;
+        }
+    }
+    t
+}
+
+fn struct_decl(t: &str) -> Option<String> {
+    let rest = strip_visibility(t).strip_prefix("struct ")?;
+    let name = leading_ident(rest);
+    if name.is_empty() {
+        None
+    } else {
+        Some(name.to_string())
+    }
+}
+
+fn field_decl(t: &str) -> Option<(String, bool)> {
+    let rest = strip_visibility(t);
+    let name = leading_ident(rest);
+    if name.is_empty() || !name.chars().next().is_some_and(|c| c.is_lowercase() || c == '_') {
+        return None;
+    }
+    let after = rest[name.len()..].trim_start();
+    let ty = after.strip_prefix(':')?;
+    if ty.starts_with(':') {
+        return None; // `::` path, not a field
+    }
+    Some((name.to_string(), is_hash_type(ty)))
+}
+
+fn collect_structs(stripped: &[String]) -> StructTable {
+    let mut table = StructTable::default();
+    let mut depth: i32 = 0;
+    let mut cur: Option<(String, i32)> = None;
+    for line in stripped {
+        let t = line.trim();
+        if let Some((name, d0)) = cur.clone() {
+            if depth == d0 + 1 && !t.starts_with("#[") {
+                if let Some((field, hash)) = field_decl(t) {
+                    table
+                        .by_struct
+                        .entry(name.clone())
+                        .or_default()
+                        .insert(field, hash);
+                }
+            }
+        } else if let Some(name) = struct_decl(t) {
+            if t.contains('{') {
+                cur = Some((name.clone(), depth));
+                table.by_struct.entry(name).or_default();
+            }
+        }
+        depth += brace_delta(line);
+        if let Some((_, d0)) = &cur {
+            if depth <= *d0 {
+                cur = None;
+            }
+        }
+    }
+    table
+}
+
+fn brace_delta(line: &str) -> i32 {
+    let mut d = 0;
+    for b in line.bytes() {
+        match b {
+            b'{' => d += 1,
+            b'}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+// ---------------------------------------------------------------------
+// Main scan (pass 2)
+// ---------------------------------------------------------------------
+
+fn impl_target(t: &str) -> Option<String> {
+    let rest = t.strip_prefix("impl")?;
+    if !rest.starts_with([' ', '<']) {
+        return None;
+    }
+    let mut rest = rest.trim_start();
+    if rest.starts_with('<') {
+        let mut depth = 0i32;
+        let mut end = rest.len();
+        for (i, c) in rest.char_indices() {
+            match c {
+                '<' => depth += 1,
+                '>' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        rest = rest[end..].trim_start();
+    }
+    if let Some(p) = rest.find(" for ") {
+        rest = rest[p + 5..].trim_start();
+    }
+    let end = rest
+        .find(|c: char| c == '<' || c == ' ' || c == '{')
+        .unwrap_or(rest.len());
+    let name = rest[..end].rsplit("::").next().unwrap_or("");
+    if name.is_empty() {
+        None
+    } else {
+        Some(name.to_string())
+    }
+}
+
+/// Record hash-typed params from a fn-signature line into `locals`.
+fn harvest_params(line: &str, locals: &mut BTreeSet<String>) {
+    for pat in ["HashMap<", "HashSet<"] {
+        let mut from = 0;
+        while let Some(p) = line[from..].find(pat) {
+            let abs = from + p;
+            from = abs + pat.len();
+            let b = line.as_bytes();
+            let mut j = abs;
+            while j > 0 && (is_ident_byte(b[j - 1]) || b[j - 1] == b':') {
+                j -= 1;
+            }
+            let mut before = line[..j].trim_end();
+            if let Some(s) = before.strip_suffix("mut") {
+                before = s.trim_end();
+            }
+            before = before.trim_end_matches('&').trim_end();
+            let Some(before) = before.strip_suffix(':') else {
+                continue;
+            };
+            if before.ends_with(':') {
+                continue;
+            }
+            let before = before.trim_end();
+            let bb = before.as_bytes();
+            let mut k = before.len();
+            while k > 0 && is_ident_byte(bb[k - 1]) {
+                k -= 1;
+            }
+            let name = &before[k..];
+            if !name.is_empty() && name != "self" {
+                locals.insert(name.to_string());
+            }
+        }
+    }
+}
+
+fn let_binding(line: &str) -> Option<(String, bool)> {
+    let p = find_boundary(line, "let ")?;
+    let rest = line[p + 4..].trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let name = leading_ident(rest);
+    if name.is_empty() {
+        return None;
+    }
+    Some((name.to_string(), is_hash_type(line)))
+}
+
+pub(crate) struct SourceScan<'a> {
+    rel: &'a str,
+    digest_mod: bool,
+    wallclock_ok: bool,
+    table: StructTable,
+}
+
+impl<'a> SourceScan<'a> {
+    pub(crate) fn new(rel: &'a str) -> SourceScan<'a> {
+        SourceScan {
+            rel,
+            digest_mod: DIGEST_MODULES.iter().any(|m| rel.starts_with(m)),
+            wallclock_ok: WALLCLOCK_SANCTUARIES
+                .iter()
+                .any(|m| rel.starts_with(m) || rel == *m),
+            table: StructTable::default(),
+        }
+    }
+
+    /// Scan one file's text. Returns the number of allow annotations
+    /// that actually suppressed a finding.
+    pub(crate) fn run(mut self, text: &str, findings: &mut Vec<Finding>) -> usize {
+        let raw_lines: Vec<&str> = text.lines().collect();
+        let mut allows = collect_allows(self.rel, &raw_lines, findings);
+
+        let mut stripper = Stripper::new();
+        let stripped: Vec<String> = raw_lines.iter().map(|l| stripper.strip(l)).collect();
+        self.table = collect_structs(&stripped);
+
+        let mut depth: i32 = 0;
+        let mut impls: Vec<(String, i32, bool)> = Vec::new(); // (struct, depth, body open)
+        let mut locals: BTreeSet<String> = BTreeSet::new();
+        let mut sig = false;
+        let mut skip_until: Option<i32> = None;
+        let mut pending_cfg_test = false;
+        let mut prev_tail = String::new();
+
+        for (idx, line) in stripped.iter().enumerate() {
+            let line_no = idx + 1;
+            let t = line.trim();
+
+            if let Some(d0) = skip_until {
+                depth += brace_delta(line);
+                if depth <= d0 {
+                    skip_until = None;
+                }
+                continue;
+            }
+            if t.contains("#[cfg(test)]") {
+                pending_cfg_test = true;
+                continue;
+            }
+            if pending_cfg_test {
+                if t.starts_with("mod ") || t.starts_with("pub mod ") {
+                    let d0 = depth;
+                    depth += brace_delta(line);
+                    if depth > d0 {
+                        skip_until = Some(d0);
+                    }
+                    pending_cfg_test = false;
+                    continue;
+                }
+                if !t.is_empty() && !t.starts_with("#[") {
+                    pending_cfg_test = false;
+                }
+            }
+
+            // --- rule checks (against the pre-update context) ---
+            let impl_name = impls.last().map(|(n, _, _)| n.as_str());
+            if self.digest_mod {
+                self.check_iteration(
+                    line,
+                    &prev_tail,
+                    &locals,
+                    impl_name,
+                    line_no,
+                    &mut allows,
+                    findings,
+                );
+            }
+            if !self.wallclock_ok {
+                self.check_tokens(
+                    line,
+                    WALLCLOCK_TOKENS,
+                    RULE_WALLCLOCK,
+                    "wall-clock read outside obs/, util/benchkit.rs, main.rs",
+                    line_no,
+                    &mut allows,
+                    findings,
+                );
+            }
+            self.check_ambient(line, line_no, &mut allows, findings);
+
+            // --- context updates ---
+            if let Some(p) = find_boundary(line, "fn ") {
+                if !leading_ident(&line[p + 3..]).is_empty() {
+                    locals.clear();
+                    sig = true;
+                }
+            }
+            if sig {
+                harvest_params(line, &mut locals);
+                if line.contains('{') {
+                    sig = false;
+                }
+            }
+            if let Some((name, hash)) = let_binding(line) {
+                if hash {
+                    locals.insert(name);
+                } else {
+                    locals.remove(&name);
+                }
+            }
+            if t.starts_with("impl") {
+                if let Some(target) = impl_target(t) {
+                    impls.push((target, depth, line.contains('{')));
+                }
+            }
+            depth += brace_delta(line);
+            if let Some(last) = impls.last_mut() {
+                if !last.2 && line.contains('{') {
+                    last.2 = true;
+                }
+            }
+            while matches!(impls.last(), Some((_, d0, true)) if depth <= *d0) {
+                impls.pop();
+            }
+
+            if !t.is_empty() {
+                let b = line.trim_end();
+                let bb = b.as_bytes();
+                let mut k = b.len();
+                while k > 0 && is_path_byte(bb[k - 1]) {
+                    k -= 1;
+                }
+                prev_tail = b[k..].to_string();
+            }
+        }
+
+        for a in &allows {
+            if !a.used {
+                findings.push(Finding {
+                    rule: RULE_ANNOTATION,
+                    file: self.rel.to_string(),
+                    line: a.line,
+                    what: format!("allow({})", a.rule),
+                    msg: "unused allow annotation (nothing to suppress here)".to_string(),
+                });
+            }
+        }
+        allows.iter().filter(|a| a.used).count()
+    }
+
+    fn classify(&self, path: &str, locals: &BTreeSet<String>, impl_name: Option<&str>) -> bool {
+        let segs: Vec<&str> = path.split('.').filter(|s| !s.is_empty()).collect();
+        match segs.as_slice() {
+            [one] => locals.contains(*one),
+            ["self", f] => match impl_name.and_then(|s| self.table.field_in(s, f)) {
+                Some(h) => h,
+                None => self.table.field_global(f) == Some(true),
+            },
+            [.., f] => self.table.field_global(f) == Some(true),
+            [] => false,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn check_iteration(
+        &self,
+        line: &str,
+        prev_tail: &str,
+        locals: &BTreeSet<String>,
+        impl_name: Option<&str>,
+        line_no: usize,
+        allows: &mut [Allow],
+        findings: &mut Vec<Finding>,
+    ) {
+        let mut emit = |what: String, findings: &mut Vec<Finding>, allows: &mut [Allow]| {
+            if COMMUTATIVE_SINKS.iter().any(|s| line.contains(s)) {
+                return; // provably order-insensitive on this line
+            }
+            if consume_allow(allows, line_no, RULE_ORDERED) {
+                return;
+            }
+            findings.push(Finding {
+                rule: RULE_ORDERED,
+                file: self.rel.to_string(),
+                line: line_no,
+                what,
+                msg: "iteration over a hash container in a digest-affecting module; \
+                      use BTreeMap/BTreeSet or sorted keys, feed a commutative fold, \
+                      or annotate `kant-lint: allow(ordered-iteration) \u{2014} <reason>`"
+                    .to_string(),
+            });
+        };
+
+        for m in ITER_METHODS {
+            let pat = format!(".{m}()");
+            let mut from = 0;
+            while let Some(p) = line[from..].find(&pat) {
+                let abs = from + p;
+                from = abs + pat.len();
+                let b = line.as_bytes();
+                let mut j = abs;
+                while j > 0 && is_path_byte(b[j - 1]) {
+                    j -= 1;
+                }
+                let receiver = if j == abs {
+                    if line[..abs].trim().is_empty() {
+                        prev_tail // continuation of a wrapped method chain
+                    } else {
+                        continue; // e.g. a call result: not classifiable
+                    }
+                } else {
+                    &line[j..abs]
+                };
+                if self.classify(receiver, locals, impl_name) {
+                    emit(format!("{receiver}.{m}()"), findings, allows);
+                }
+            }
+        }
+
+        if let Some(fp) = find_boundary(line, "for ") {
+            if let Some(ip) = line[fp..].find(" in ") {
+                let after = &line[fp + ip + 4..];
+                let end = after.find('{').unwrap_or(after.len());
+                let mut it = after[..end].trim();
+                it = it.strip_prefix('&').unwrap_or(it);
+                it = it.strip_prefix("mut ").unwrap_or(it).trim();
+                if !it.is_empty()
+                    && it.bytes().all(is_path_byte)
+                    && self.classify(it, locals, impl_name)
+                {
+                    emit(format!("for \u{2026} in {it}"), findings, allows);
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn check_tokens(
+        &self,
+        line: &str,
+        tokens: &[&str],
+        rule: &'static str,
+        msg: &str,
+        line_no: usize,
+        allows: &mut [Allow],
+        findings: &mut Vec<Finding>,
+    ) {
+        for tok in tokens {
+            if find_boundary(line, tok).is_some() {
+                if consume_allow(allows, line_no, rule) {
+                    return;
+                }
+                findings.push(Finding {
+                    rule,
+                    file: self.rel.to_string(),
+                    line: line_no,
+                    what: tok.to_string(),
+                    msg: msg.to_string(),
+                });
+                return; // one finding per line is enough
+            }
+        }
+    }
+
+    fn check_ambient(
+        &self,
+        line: &str,
+        line_no: usize,
+        allows: &mut [Allow],
+        findings: &mut Vec<Finding>,
+    ) {
+        self.check_tokens(
+            line,
+            AMBIENT_TOKENS,
+            RULE_AMBIENT,
+            "ambient nondeterminism (thread identity / unseeded RNG / random hash \
+             state); derive randomness from the seeded util::rng generators",
+            line_no,
+            allows,
+            findings,
+        );
+        if self.digest_mod && find_boundary(line, "env::var").is_some() {
+            if consume_allow(allows, line_no, RULE_AMBIENT) {
+                return;
+            }
+            findings.push(Finding {
+                rule: RULE_AMBIENT,
+                file: self.rel.to_string(),
+                line: line_no,
+                what: "env::var".to_string(),
+                msg: "environment reads inside the scheduler core make behaviour \
+                      host-dependent; thread configuration through SimOptions instead"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip_all(text: &str) -> Vec<String> {
+        let mut s = Stripper::new();
+        text.lines().map(|l| s.strip(l)).collect()
+    }
+
+    #[test]
+    fn stripper_removes_strings_comments_and_chars() {
+        let out = strip_all("let x = \"Instant::now\"; // Instant::now\nlet c = 'x';");
+        assert_eq!(out[0].trim_end(), "let x =  ;");
+        assert_eq!(out[1], "let c =  ;");
+    }
+
+    #[test]
+    fn stripper_tracks_block_comments_and_raw_strings() {
+        let out = strip_all("a /* x\ny */ b\nlet r = r#\"keys()\n.values()\"#; c");
+        assert_eq!(out[0], "a ");
+        assert_eq!(out[1].trim(), "b");
+        assert_eq!(out[2], "let r = ");
+        assert_eq!(out[3].trim(), "; c");
+    }
+
+    #[test]
+    fn stripper_keeps_lifetimes() {
+        let out = strip_all("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert_eq!(out[0], "fn f<'a>(x: &'a str) -> &'a str { x }");
+    }
+
+    #[test]
+    fn struct_table_scopes_fields_per_struct() {
+        let stripped = strip_all(
+            "pub struct A {\n    pub nodes: HashSet<u64>,\n}\n\
+             pub struct B {\n    pub nodes: Vec<u64>,\n    map: HashMap<u64, u64>,\n}\n",
+        );
+        let t = collect_structs(&stripped);
+        assert_eq!(t.field_in("A", "nodes"), Some(true));
+        assert_eq!(t.field_in("B", "nodes"), Some(false));
+        assert_eq!(t.field_global("nodes"), Some(false)); // ambiguous
+        assert_eq!(t.field_global("map"), Some(true));
+    }
+
+    #[test]
+    fn impl_target_handles_generics_and_traits() {
+        assert_eq!(impl_target("impl Foo {"), Some("Foo".to_string()));
+        assert_eq!(impl_target("impl<'a> Iterator for Bar<'a> {"), Some("Bar".to_string()));
+        assert_eq!(impl_target("implicit {"), None);
+    }
+}

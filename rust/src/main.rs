@@ -9,6 +9,7 @@
 //!   obs          summarize an observability JSONL stream (--obs-out)
 //!   explain      replay one job's decision records from a stream
 //!   harness      run the whole experiment zoo into one results JSON
+//!   lint         determinism & concurrency static analysis over src/**
 //!
 //! The figures harness lives in the separate `figures` binary.
 
@@ -39,6 +40,7 @@ fn main() -> Result<()> {
         Some("obs") => obs_cmd(&args[1..]),
         Some("explain") => explain(&args[1..]),
         Some("harness") => harness(&args[1..]),
+        Some("lint") => lint_cmd(&args[1..]),
         Some("-h" | "--help") | None => {
             println!("{HELP}");
             Ok(())
@@ -67,6 +69,7 @@ usage:
   kant explain --job ID FILE
   kant harness [--scale small|paper|xlarge] [--seed N] [--out FILE]
   kant harness validate FILE
+  kant lint [--root DIR] [--json] [--github] [--out FILE]
 
 Every flag is a thin adapter onto the typed `SimOptions` builder
 (kant::config::SimOptions) — the single constructor of the scheduler and
@@ -135,11 +138,29 @@ obs / explain / harness (the observability readers + results harness):
   explain --job ID FILE every decision record touching job ID, in order
   harness [--scale S]   run the whole experiment zoo (ablation-index,
                         elastic, fault-tolerance, topology-stress,
-                        weight-adaptation, moldable-gangs) and emit one
-                        timestamped kant-harness-v1 results JSON
+                        weight-adaptation, moldable-gangs, kant-lint) and
+                        emit one timestamped kant-harness-v1 results JSON
                         (--out, default harness_results.json)
   harness validate FILE schema-check a results JSON the same way
                         bench-check validate gates the bench baseline
+
+lint (the determinism & concurrency static-analysis pass):
+  lint             scan the source tree for determinism-contract
+                   violations: hash-container iteration in the
+                   digest-affecting modules (cluster/ qsch/ rsch/ sim/
+                   job/), wall-clock reads outside obs/ / util/benchkit.rs
+                   / main.rs, ambient nondeterminism (thread identity,
+                   unseeded RNG, env reads in the core), and stats
+                   counters missing from both digest_json and the
+                   DIGEST_INERT manifest. Exits non-zero on any finding.
+                   A justified site carries a line comment
+                   `kant-lint: allow(<rule>) — <reason>`
+  --root DIR       source root to scan (default src/, falling back to the
+                   crate's own src/ when run from elsewhere)
+  --json           print the kant-lint-v1 JSON document instead of text
+  --github         also print GitHub Actions ::error annotations
+  --path-prefix P  file prefix for --github annotations (default rust/src/)
+  --out FILE       also write the kant-lint-v1 JSON document to FILE
 
 bench-check (the CI bench-regression gate):
   validate FILE    hard-check a benchkit-v1 document: schema tag, non-empty
@@ -567,22 +588,28 @@ fn explain(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// The six experiments `kant harness` must cover, in run order. The
+/// The seven experiments `kant harness` must cover, in run order. The
 /// validator requires each exactly once — dropping one from the harness
-/// fails CI the same way a lost bench scenario does.
-const HARNESS_EXPERIMENTS: [&str; 6] = [
+/// fails CI the same way a lost bench scenario does. `kant-lint` rides
+/// along so one artifact carries both the perf claims and the
+/// static-analysis status they depend on.
+const HARNESS_EXPERIMENTS: [&str; 7] = [
     "ablation-index",
     "elastic",
     "fault-tolerance",
     "topology-stress",
     "weight-adaptation",
     "moldable-gangs",
+    "kant-lint",
 ];
 
 /// `kant harness` — run the whole experiment zoo into one timestamped
 /// results JSON; `harness validate FILE` is the CI gate (mirrors
 /// `bench-check validate`). Every arm payload is the run's digest
 /// object, so two same-seed harness runs differ only in timestamps.
+// Wall-clock reads here time the experiment sections of the results
+// document — sanctioned: nothing feeds back into scheduling.
+#[allow(clippy::disallowed_methods, clippy::disallowed_types)]
 fn harness(args: &[String]) -> Result<()> {
     use kant::experiments as exp;
     const USAGE: &str = "usage: kant harness [--scale small|paper|xlarge] [--seed N] \
@@ -719,6 +746,24 @@ fn harness(args: &[String]) -> Result<()> {
         ]),
     );
 
+    // The kant-lint status rides in the same results document as the
+    // perf claims that depend on it.
+    let t0 = std::time::Instant::now();
+    let report = kant::lint::lint_tree(&lint_root(None))?;
+    let mut arm = Json::obj();
+    arm.set("files_scanned", report.files_scanned as u64)
+        .set("findings", report.findings.len() as u64)
+        .set("allows_used", report.allows_used as u64)
+        .set("digest_fields_checked", report.digest_fields_checked as u64)
+        .set("clean", report.is_clean());
+    let mut arms = Json::obj();
+    arms.set("src", arm);
+    push_exp(&mut experiments, "kant-lint", t0, arms);
+    if !report.is_clean() {
+        eprint!("{}", report.render_text());
+        bail!("kant harness: the kant-lint section found violations");
+    }
+
     let mut doc = Json::obj();
     doc.set("schema", "kant-harness-v1")
         .set("generated_unix_ms", generated_unix_ms)
@@ -787,6 +832,51 @@ fn load_harness_doc(path: &str) -> Result<Vec<String>> {
         }
     }
     Ok(names)
+}
+
+/// Source root for `kant lint`: an explicit `--root`, else `src/` in
+/// the working directory (the CI jobs run from `rust/`), else this
+/// crate's own `src/` so the harness works from any directory.
+fn lint_root(explicit: Option<&str>) -> PathBuf {
+    if let Some(dir) = explicit {
+        return PathBuf::from(dir);
+    }
+    let local = PathBuf::from("src");
+    if local.is_dir() {
+        local
+    } else {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"))
+    }
+}
+
+/// `kant lint` — run the determinism & concurrency static analysis
+/// over the source tree. Exits non-zero on any finding, so both CI and
+/// a plain local run gate the same way.
+fn lint_cmd(args: &[String]) -> Result<()> {
+    let root = lint_root(flag_value(args, "--root"));
+    let report = kant::lint::lint_tree(&root)
+        .with_context(|| format!("scanning {}", root.display()))?;
+    if has_flag(args, "--github") {
+        print!(
+            "{}",
+            report.github_annotations(flag_value(args, "--path-prefix").unwrap_or("rust/src/"))
+        );
+    }
+    let doc = report.to_json().to_string_compact();
+    if let Some(path) = flag_value(args, "--out") {
+        std::fs::write(path, doc.clone() + "\n")
+            .with_context(|| format!("writing lint report to {path}"))?;
+    }
+    if has_flag(args, "--json") {
+        println!("{doc}");
+    } else {
+        print!("{}", report.render_text());
+    }
+    if report.is_clean() {
+        Ok(())
+    } else {
+        bail!("kant lint: {} finding(s)", report.findings.len())
+    }
 }
 
 fn gen_trace(args: &[String]) -> Result<()> {

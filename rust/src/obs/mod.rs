@@ -22,6 +22,10 @@
 //!   did, streamed as JSONL through `kant simulate --obs-out FILE` and
 //!   read back by `kant obs summarize` / `kant explain`.
 
+// Sanctioned wall-clock island: the whole module exists to measure
+// scheduler overhead, and nothing here feeds back into scheduling.
+#![allow(clippy::disallowed_methods)]
+
 use std::collections::VecDeque;
 use std::io::Write;
 use std::time::Instant;

@@ -111,13 +111,13 @@ pub fn plan_round(
     // Track planned deltas so one round's plans don't conflict, and keep
     // sources/destinations disjoint (otherwise two fragmented nodes just
     // swap pods and nothing is freed).
-    let mut planned_free: std::collections::HashMap<NodeId, Vec<u8>> =
-        std::collections::HashMap::new();
-    let mut planned_dests: std::collections::HashSet<NodeId> = std::collections::HashSet::new();
-    let mut planned_sources: std::collections::HashSet<NodeId> =
-        std::collections::HashSet::new();
+    let mut planned_free: std::collections::BTreeMap<NodeId, Vec<u8>> =
+        std::collections::BTreeMap::new();
+    let mut planned_dests: std::collections::BTreeSet<NodeId> = std::collections::BTreeSet::new();
+    let mut planned_sources: std::collections::BTreeSet<NodeId> =
+        std::collections::BTreeSet::new();
     let free_of = |state: &ClusterState,
-                   planned: &std::collections::HashMap<NodeId, Vec<u8>>,
+                   planned: &std::collections::BTreeMap<NodeId, Vec<u8>>,
                    n: NodeId|
      -> Vec<u8> {
         planned

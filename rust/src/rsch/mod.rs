@@ -14,7 +14,7 @@ pub mod features;
 pub mod plan;
 pub mod score;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::ids::{GpuTypeId, GroupId, JobId, NodeId};
 use crate::cluster::index::ZoneQuery;
@@ -243,7 +243,9 @@ pub struct Rsch {
     shards: ShardMap,
     /// Plans built by the sharded prefetch, consumed by [`Placer::place`]
     /// in QSCH's single-threaded queue order (the deterministic merge).
-    plan_cache: HashMap<JobId, Vec<PodPlacement>>,
+    /// Ordered map for defence in depth: consumed by point lookup in
+    /// queue order, but stable order keeps any traversal deterministic.
+    plan_cache: BTreeMap<JobId, Vec<PodPlacement>>,
     /// The adaptive weight controller (`--adapt`); dormant when disabled.
     controller: WeightController,
     pub stats: RschStats,
@@ -267,7 +269,7 @@ impl Rsch {
             backend,
             pool_groups,
             shards: ShardMap::new(state),
-            plan_cache: HashMap::new(),
+            plan_cache: BTreeMap::new(),
             stats: RschStats::default(),
         }
     }
@@ -1139,7 +1141,7 @@ impl Placer for Rsch {
         }
         self.snapshot.refresh(state);
         self.stats.snapshot_refreshes += 1;
-        let mut claimed: HashMap<GpuTypeId, u64> = HashMap::new();
+        let mut claimed: BTreeMap<GpuTypeId, u64> = BTreeMap::new();
         let mut picks = Vec::with_capacity(specs.len());
         for spec in specs {
             // Moldable gangs are sole-demand by construction
@@ -1170,7 +1172,7 @@ impl Rsch {
         state: &ClusterState,
         spec: &JobSpec,
         d: &TypedDemand,
-        claimed: &HashMap<GpuTypeId, u64>,
+        claimed: &BTreeMap<GpuTypeId, u64>,
     ) -> Option<usize> {
         if d.gpus_per_pod == 0 {
             return None;

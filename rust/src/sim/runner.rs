@@ -90,6 +90,27 @@ pub struct SimOutcome {
     pub health: SchedulerHealth,
 }
 
+/// Scheduler counters deliberately NOT covered by
+/// [`SimOutcome::digest_json`].
+///
+/// Every field on `QschStats`/`RschStats` must either be read by
+/// `digest_json` or be listed here with a reason — the `kant lint`
+/// digest-coverage rule checks the partition in both directions, so a
+/// new counter cannot silently dodge the determinism gate. Only
+/// counters that are *not* invariant across `--shards` worker counts
+/// belong here: the digest must stay byte-identical for any N >= 1,
+/// while these measure work performed, which legitimately varies with
+/// the prefetch fan-out (and between the sequential and sharded cores).
+pub const DIGEST_INERT: &[(&str, &str)] = &[
+    ("rsch.failures", "workers and the sequential fallback both count a failed plan"),
+    ("rsch.groups_scored", "per-worker planning effort; varies with the prefetch fan-out"),
+    ("rsch.snapshot_refreshes", "per-batch under prefetch, per-placement sequentially"),
+    ("rsch.plan_cache_hits", "observability counter; hit/miss split varies with fan-out"),
+    ("rsch.plan_cache_misses", "observability counter; failed worker plans replan sequentially"),
+    ("rsch.prefetch_batches", "counts prefetch rounds, not scheduling outcomes"),
+    ("rsch.prefetch_imbalance_sum", "shard-skew telemetry; depends on worker count"),
+];
+
 impl SimOutcome {
     /// Deterministic digest of the whole run for the golden-gate
     /// determinism CI job: two runs with the same seed and config must
@@ -142,6 +163,8 @@ impl SimOutcome {
             .set("gfr_avg", self.metrics.gfr_avg())
             .set("slo_violation_rate", self.metrics.elastic.slo_violation_rate())
             .set("replica_churn", self.metrics.elastic.replica_churn())
+            .set("qsch_cycles", self.qsch_stats.cycles)
+            .set("qsch_submitted", self.qsch_stats.submitted)
             .set("qsch_scheduled", self.qsch_stats.scheduled)
             .set("qsch_backfilled", self.qsch_stats.scheduled_backfilled)
             .set("qsch_preempt_backfill", self.qsch_stats.backfill_preemptions)
@@ -155,8 +178,11 @@ impl SimOutcome {
                 self.qsch_stats.starvation_reservations,
             )
             .set("qsch_cancellations", self.qsch_stats.cancellations)
+            .set("qsch_placement_failures", self.qsch_stats.placement_failures)
+            .set("qsch_requeues", self.qsch_stats.requeues)
             .set("qsch_shape_molds", self.qsch_stats.shape_molds)
             .set("qsch_shape_shrinks", self.qsch_stats.shape_shrinks)
+            .set("rsch_placements", self.rsch_stats.placements)
             .set("rsch_pods_placed", self.rsch_stats.pods_placed)
             .set("rsch_nodes_examined", self.rsch_stats.nodes_examined)
             .set("rsch_nodes_scored", self.rsch_stats.nodes_scored)

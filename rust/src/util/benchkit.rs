@@ -6,6 +6,9 @@
 //! (`BENCH\t<name>\t<mean_ns>\t<p50_ns>\t<p99_ns>\t<iters>`), which the
 //! perf pass in EXPERIMENTS.md §Perf scrapes.
 
+// Sanctioned wall-clock island: timing loops are this module's job.
+#![allow(clippy::disallowed_methods)]
+
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 

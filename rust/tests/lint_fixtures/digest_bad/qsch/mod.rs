@@ -1,0 +1,6 @@
+//! Fixture: minimal QSCH stats mirror.
+
+pub struct QschStats {
+    pub cycles: u64,
+    pub scheduled: u64,
+}

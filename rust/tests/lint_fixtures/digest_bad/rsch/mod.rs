@@ -1,0 +1,7 @@
+//! Fixture: RSCH stats mirror with a counter covered by nothing.
+
+pub struct RschStats {
+    pub placements: u64,
+    pub prefetch_batches: u64,
+    pub orphan_counter: u64,
+}

@@ -1,0 +1,24 @@
+//! Fixture: manifest drift — stale, contradictory and reason-less
+//! entries, each a distinct digest-coverage finding.
+
+pub const DIGEST_INERT: &[(&str, &str)] = &[
+    ("rsch.prefetch_batches", "counts fan-out rounds, not outcomes"),
+    ("rsch.ghost", "counter that no longer exists"),
+    ("qsch.cycles", "claimed inert but the digest reads it"),
+    ("qsch.scheduled", ""),
+];
+
+pub struct SimOutcome {
+    pub qsch_stats: QschStats,
+    pub rsch_stats: RschStats,
+}
+
+impl SimOutcome {
+    pub fn digest_json(&self) -> (u64, u64, u64) {
+        (
+            self.qsch_stats.cycles,
+            self.qsch_stats.scheduled,
+            self.rsch_stats.placements,
+        )
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture: minimal RSCH stats mirror.
+
+pub struct RschStats {
+    pub placements: u64,
+    pub prefetch_batches: u64,
+}

@@ -1,0 +1,20 @@
+//! Fixture: digest + inert manifest covering every counter.
+
+pub const DIGEST_INERT: &[(&str, &str)] = &[
+    ("rsch.prefetch_batches", "counts fan-out rounds, not outcomes"),
+];
+
+pub struct SimOutcome {
+    pub qsch_stats: QschStats,
+    pub rsch_stats: RschStats,
+}
+
+impl SimOutcome {
+    pub fn digest_json(&self) -> (u64, u64, u64) {
+        (
+            self.qsch_stats.cycles,
+            self.qsch_stats.scheduled,
+            self.rsch_stats.placements,
+        )
+    }
+}

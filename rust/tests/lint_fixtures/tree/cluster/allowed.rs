@@ -1,0 +1,22 @@
+//! Fixture: the allow-annotation contract, round-tripped.
+
+use std::collections::HashMap;
+
+pub fn merge_counts(m: &HashMap<u64, u64>) -> u64 {
+    let mut total = 0;
+    // kant-lint: allow(ordered-iteration) — commutative sum over disjoint keys
+    for (_k, v) in m {
+        total += v;
+    }
+    total
+}
+
+// kant-lint: allow(ordered-iteration) — suppresses nothing below
+pub fn noop() {}
+
+// kant-lint: allow(hash-order) — no such rule
+pub fn noop2() {}
+
+pub fn peek(m: &HashMap<u64, u64>) -> u64 {
+    m.values().copied().next().unwrap_or(0) // kant-lint: allow(ordered-iteration)
+}

@@ -1,0 +1,11 @@
+//! Fixture: wall-clock reads — policed by path (this copy is outside
+//! the sanctuaries, so every site below is a finding).
+
+pub fn stamp_ms() -> u128 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_millis()
+}
+
+pub fn epoch() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}

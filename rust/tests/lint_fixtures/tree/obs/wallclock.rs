@@ -1,0 +1,11 @@
+//! Fixture: the same wall-clock reads as metrics/wallclock.rs, but
+//! under `obs/` — a sanctioned island, so this copy is clean.
+
+pub fn stamp_ms() -> u128 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_millis()
+}
+
+pub fn epoch() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}

@@ -1,0 +1,13 @@
+//! Fixture: ambient nondeterminism inside the scheduler core.
+
+pub fn worker_tag() -> String {
+    format!("{:?}", std::thread::current().id())
+}
+
+pub fn tuning() -> Option<String> {
+    std::env::var("KANT_TUNING").ok()
+}
+
+pub fn hasher() -> impl std::hash::BuildHasher {
+    std::collections::hash_map::RandomState::new()
+}

@@ -1,0 +1,25 @@
+//! Fixture: hash-container iteration in a digest-affecting module.
+
+use std::collections::{HashMap, HashSet};
+
+pub struct Cache {
+    plans: HashMap<u64, Vec<u64>>,
+    seen: HashSet<u64>,
+}
+
+impl Cache {
+    pub fn all_plans(&self) -> Vec<u64> {
+        self.plans.values().flatten().copied().collect()
+    }
+
+    pub fn first_seen(&self) -> Option<u64> {
+        for s in &self.seen {
+            return Some(*s);
+        }
+        None
+    }
+}
+
+pub fn drain_pairs(m: &mut HashMap<u64, u64>) -> Vec<(u64, u64)> {
+    m.drain().collect()
+}

@@ -1,0 +1,41 @@
+//! Fixture: stable or provably commutative traversals — all clean.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+pub struct Sorted {
+    plans: BTreeMap<u64, Vec<u64>>,
+}
+
+pub struct Footprint {
+    nodes: HashSet<u64>,
+}
+
+pub struct Group {
+    nodes: Vec<u64>,
+}
+
+impl Sorted {
+    pub fn all(&self) -> Vec<u64> {
+        self.plans.values().flatten().copied().collect()
+    }
+}
+
+impl Footprint {
+    pub fn contains(&self, n: u64) -> bool {
+        self.nodes.contains(&n)
+    }
+
+    pub fn width(&self) -> usize {
+        self.nodes.iter().count()
+    }
+}
+
+impl Group {
+    pub fn first(&self) -> Option<u64> {
+        self.nodes.iter().copied().next()
+    }
+}
+
+pub fn total(m: &HashMap<u64, u64>) -> u64 {
+    m.values().sum()
+}

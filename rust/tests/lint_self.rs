@@ -1,0 +1,158 @@
+//! Self-tests for `kant lint`: fixture trees with exact expected
+//! `file:line` findings, the allow-annotation round trip, a
+//! digest-coverage regression probe over the real sources, and the
+//! real-tree gate the CI lint job enforces.
+
+use std::path::{Path, PathBuf};
+
+use kant::lint::{
+    self, LintReport, RULE_AMBIENT, RULE_ANNOTATION, RULE_DIGEST, RULE_ORDERED, RULE_WALLCLOCK,
+};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name)
+}
+
+fn src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+fn read_src(rel: &str) -> String {
+    std::fs::read_to_string(src_root().join(rel)).expect(rel)
+}
+
+/// `(rule, file, line)` triples in report order (already sorted by
+/// file, line, rule).
+fn triples(r: &LintReport) -> Vec<(&'static str, &str, usize)> {
+    r.findings.iter().map(|f| (f.rule, f.file.as_str(), f.line)).collect()
+}
+
+#[test]
+fn source_rule_fixtures_yield_exact_findings() {
+    let r = lint::lint_tree(&fixture("tree")).expect("fixture tree");
+    assert_eq!(r.files_scanned, 6);
+    assert_eq!(r.digest_fields_checked, 0, "no stats structs in this corpus");
+    assert_eq!(
+        triples(&r),
+        vec![
+            (RULE_ANNOTATION, "cluster/allowed.rs", 14), // unused allow
+            (RULE_ANNOTATION, "cluster/allowed.rs", 17), // unknown rule
+            (RULE_ANNOTATION, "cluster/allowed.rs", 21), // missing reason
+            (RULE_ORDERED, "cluster/allowed.rs", 21),    // ...so nothing suppressed
+            (RULE_WALLCLOCK, "metrics/wallclock.rs", 5),
+            (RULE_WALLCLOCK, "metrics/wallclock.rs", 9),
+            (RULE_WALLCLOCK, "metrics/wallclock.rs", 10),
+            (RULE_AMBIENT, "qsch/ambient.rs", 4),
+            (RULE_AMBIENT, "qsch/ambient.rs", 8),
+            (RULE_AMBIENT, "qsch/ambient.rs", 12),
+            (RULE_ORDERED, "rsch/ordered_bad.rs", 12),
+            (RULE_ORDERED, "rsch/ordered_bad.rs", 16),
+            (RULE_ORDERED, "rsch/ordered_bad.rs", 24),
+        ],
+        "full report:\n{}",
+        r.render_text()
+    );
+    // Spot-check the offending tokens the scanner attributes.
+    let what = |file: &str, line: usize| {
+        r.findings
+            .iter()
+            .find(|f| f.file == file && f.line == line)
+            .map(|f| f.what.clone())
+            .unwrap_or_default()
+    };
+    assert_eq!(what("rsch/ordered_bad.rs", 12), "self.plans.values()");
+    assert_eq!(what("rsch/ordered_bad.rs", 24), "m.drain()");
+    assert_eq!(what("qsch/ambient.rs", 4), "thread::current");
+    assert_eq!(what("qsch/ambient.rs", 8), "env::var");
+    assert_eq!(what("metrics/wallclock.rs", 5), "Instant::now");
+}
+
+#[test]
+fn allow_annotation_round_trip() {
+    let text = std::fs::read_to_string(fixture("tree/cluster/allowed.rs")).unwrap();
+    let r = lint::lint_corpus(&[("cluster/allowed.rs".to_string(), text)]);
+    // The justified allow on line 7 suppresses the hash iteration on
+    // line 8 and is counted as used...
+    assert_eq!(r.allows_used, 1);
+    assert!(
+        !r.findings.iter().any(|f| f.line == 8),
+        "suppressed site resurfaced: {}",
+        r.render_text()
+    );
+    // ...while the unused, unknown-rule and reason-less annotations are
+    // findings themselves, and the reason-less one suppresses nothing.
+    assert_eq!(
+        triples(&r),
+        vec![
+            (RULE_ANNOTATION, "cluster/allowed.rs", 14),
+            (RULE_ANNOTATION, "cluster/allowed.rs", 17),
+            (RULE_ANNOTATION, "cluster/allowed.rs", 21),
+            (RULE_ORDERED, "cluster/allowed.rs", 21),
+        ]
+    );
+}
+
+#[test]
+fn digest_coverage_clean_corpus() {
+    let r = lint::lint_tree(&fixture("digest_ok")).expect("fixture tree");
+    assert!(r.is_clean(), "{}", r.render_text());
+    assert_eq!(r.digest_fields_checked, 4);
+}
+
+#[test]
+fn digest_coverage_flags_drift() {
+    let r = lint::lint_tree(&fixture("digest_bad")).expect("fixture tree");
+    assert_eq!(r.digest_fields_checked, 5);
+    assert_eq!(
+        triples(&r),
+        vec![
+            (RULE_DIGEST, "rsch/mod.rs", 6),   // counter covered by nothing
+            (RULE_DIGEST, "sim/runner.rs", 6), // manifest names a ghost counter
+            (RULE_DIGEST, "sim/runner.rs", 7), // manifest contradicts digest_json
+            (RULE_DIGEST, "sim/runner.rs", 8), // empty reason string
+        ],
+        "full report:\n{}",
+        r.render_text()
+    );
+    let whats: Vec<&str> = r.findings.iter().map(|f| f.what.as_str()).collect();
+    assert_eq!(
+        whats,
+        vec!["rsch.orphan_counter", "rsch.ghost", "qsch.cycles", "qsch.scheduled"]
+    );
+}
+
+/// Regression probe: adding a counter to the *real* `QschStats` without
+/// covering it must produce exactly one digest-coverage finding. This is
+/// the failure a contributor sees if a new stats counter dodges both
+/// `digest_json` and `DIGEST_INERT`.
+#[test]
+fn new_counter_on_real_sources_is_caught() {
+    let qsch = read_src("qsch/mod.rs").replace(
+        "pub struct QschStats {",
+        "pub struct QschStats {\n    pub lint_probe_counter: u64,",
+    );
+    assert!(qsch.contains("lint_probe_counter"), "surgery target moved");
+    let corpus = vec![
+        ("qsch/mod.rs".to_string(), qsch),
+        ("rsch/mod.rs".to_string(), read_src("rsch/mod.rs")),
+        ("sim/runner.rs".to_string(), read_src("sim/runner.rs")),
+    ];
+    let r = lint::lint_corpus(&corpus);
+    assert_eq!(r.findings.len(), 1, "{}", r.render_text());
+    assert_eq!(r.findings[0].rule, RULE_DIGEST);
+    assert_eq!(r.findings[0].file, "qsch/mod.rs");
+    assert_eq!(r.findings[0].what, "qsch.lint_probe_counter");
+}
+
+/// The gate itself: the shipped tree is clean, and the digest-coverage
+/// rule really engages over all 30 stats counters (16 QSCH + 14 RSCH).
+/// If this fails after you add code, run `kant lint` for the findings.
+#[test]
+fn real_tree_is_clean_and_fully_covered() {
+    let r = lint::lint_tree(&src_root()).expect("lint src/");
+    assert!(r.is_clean(), "kant lint findings in src/:\n{}", r.render_text());
+    assert_eq!(r.digest_fields_checked, 30);
+    assert!(r.files_scanned >= 50, "src/ shrank? {} files", r.files_scanned);
+}

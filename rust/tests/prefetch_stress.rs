@@ -1,0 +1,114 @@
+//! Deliberately contended superspine-sharded prefetch: the CI
+//! `sanitize` job runs this whole file under ThreadSanitizer.
+//!
+//! The cluster spans 8 superspines (one shard each) but confines the
+//! hot GPU type to superspine 0, and 4 of every 5 jobs want that type —
+//! so shard 0's worker is saturated while seven others spin on small
+//! batches, maximising cross-thread traffic on the shared snapshot and
+//! the plan-merge path. The digest must still be byte-identical for
+//! every worker count, and TSan must see no data race getting there.
+
+use kant::cluster::{ClusterBuilder, ClusterSpec, GpuModel, GpuTypeProfile};
+use kant::cluster::{GpuTypeId, JobId, QuotaLedger, QuotaMode, TenantId};
+use kant::job::spec::{JobKind, JobSpec};
+use kant::qsch::policy::QschConfig;
+use kant::qsch::Qsch;
+use kant::rsch::{Rsch, RschConfig};
+use kant::sim::{run, SimConfig, SimOutcome};
+
+/// 8 superspines × 1 spine × 2 groups × 4 nodes × 8 GPUs = 512 GPUs.
+/// The first profile covers exactly superspine 0's two groups, so
+/// `GpuTypeId(0)` demand can route to one shard and nowhere else.
+fn skewed_cluster() -> ClusterSpec {
+    ClusterSpec {
+        name: "stress8".to_string(),
+        gpu_types: vec![
+            GpuTypeProfile {
+                model: GpuModel::TypeH,
+                groups: 2,
+            },
+            GpuTypeProfile {
+                model: GpuModel::TypeA,
+                groups: 14,
+            },
+        ],
+        groups_per_spine: 2,
+        spines_per_superspine: 1,
+        nodes_per_group: 4,
+        hbd_size: 0,
+        inference_zone_frac: 0.0,
+    }
+}
+
+/// 140 training gangs over ~105 s of arrivals; 112 of them chase the
+/// 64-GPU hot superspine (sustained queueing and eviction-free
+/// contention), 28 spread over the 448 cold GPUs.
+fn skewed_jobs() -> Vec<JobSpec> {
+    (0..140u64)
+        .map(|i| {
+            let hot = i % 5 != 0;
+            let gpu = if hot { GpuTypeId(0) } else { GpuTypeId(1) };
+            let replicas = 1 + (i % 3) as u32;
+            let gpus_per_pod = if i % 2 == 0 { 8 } else { 4 };
+            let duration_ms = 45_000 + (i % 7) * 15_000;
+            JobSpec::homogeneous(
+                JobId(i),
+                TenantId((i % 2) as u32),
+                JobKind::Training,
+                gpu,
+                replicas,
+                gpus_per_pod,
+            )
+            .with_times(i * 750, duration_ms)
+        })
+        .collect()
+}
+
+fn outcome(batch_shards: usize) -> SimOutcome {
+    let mut state = ClusterBuilder::build(&skewed_cluster());
+    let mut ledger = QuotaLedger::new(2, 2, QuotaMode::Shared);
+    for t in 0..2u32 {
+        ledger.set_limit(TenantId(t), GpuTypeId(0), 512);
+        ledger.set_limit(TenantId(t), GpuTypeId(1), 512);
+    }
+    let qcfg = QschConfig {
+        batch_shards,
+        ..QschConfig::default()
+    };
+    let mut qsch = Qsch::new(qcfg, ledger);
+    let mut rsch = Rsch::new(RschConfig::default(), &state);
+    run(&mut state, &mut qsch, &mut rsch, skewed_jobs(), &SimConfig::default())
+}
+
+#[test]
+fn stress_digest_invariant_across_worker_counts() {
+    let base = outcome(1).digest_json().to_string_compact();
+    for workers in [2usize, 3, 5, 8] {
+        let got = outcome(workers).digest_json().to_string_compact();
+        assert_eq!(
+            base, got,
+            "skewed prefetch digest moved with worker count {workers}"
+        );
+    }
+}
+
+#[test]
+fn stress_scenario_actually_contends() {
+    // Guard against the stress test rotting into a no-op: prove the
+    // adversarial shape engaged the prefetch path.
+    let o = outcome(8);
+    assert!(o.rsch_stats.placements > 0, "nothing placed");
+    assert!(o.rsch_stats.prefetch_batches > 0, "prefetch never ran");
+    // Every counted batch contributes >= 1.0 (fullest shard / even
+    // split); equality would mean perfectly balanced routing, which the
+    // hot-type skew makes impossible over the whole run.
+    assert!(
+        o.rsch_stats.prefetch_imbalance_sum >= o.rsch_stats.prefetch_batches as f64,
+        "imbalance telemetry broke its lower bound"
+    );
+    // The hot type outnumbers its 64-GPU island: queueing must happen.
+    assert!(
+        o.qsch_stats.placement_failures > 0 || o.qsch_stats.requeues > 0,
+        "hot superspine never saturated — the skew is gone"
+    );
+}
